@@ -1,0 +1,65 @@
+//! Full NBL pipeline on one model: calibrate -> rank -> substitute at
+//! several m -> evaluate all 8 reasoning tasks + perplexity, printing a
+//! Table-2-style summary. Compare with `NBL_FAST=1` for a quick pass.
+//!
+//!     cargo run --release --example calibrate_and_eval [-- --model main --ms 1,2,3]
+
+use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::eval::perplexity;
+use nbl::nbl::criteria::Criterion;
+use nbl::report::Table;
+use nbl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let model = args.get_or("model", "main");
+    let ms = args.get_usize_list("ms", &[1, 2, 3])?;
+    let cfg = ExpConfig::from_env();
+
+    let wb = Workbench::new(model, cfg.clone()).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "calibrated {} on {} ({} seqs x {} tokens)\n",
+        model,
+        wb.calib.id.name(),
+        cfg.calib_seqs,
+        cfg.calib_len
+    );
+
+    let mut table = Table::new(
+        &format!("calibrate_and_eval ({model})"),
+        &["Method", "avg_acc", "pooled_se", "ppl", "prefill_x", "tput_x", "kv"],
+    );
+    let base_speed = wb.speed(&wb.engine).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut plans = vec![nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers)];
+    for &m in &ms {
+        plans.push(
+            wb.report
+                .plan_attn_nbl(m, Criterion::CcaBound)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+        plans.push(wb.report.plan_attn_drop(m, Criterion::CosineDistance));
+    }
+
+    for plan in plans {
+        let label = plan.kind.label();
+        let kv = plan.kv_fraction();
+        let engine = wb.engine.with_plan(plan).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let acc = wb.accuracy(&engine).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let ppl = perplexity(&engine, &wb.val, cfg.ppl_windows, 128)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let speed = wb.speed(&engine).map_err(|e| anyhow::anyhow!("{e}"))?;
+        table.row(vec![
+            label,
+            format!("{:.1}", acc.avg_accuracy * 100.0),
+            format!("{:.2}", acc.pooled_se * 100.0),
+            format!("{ppl:.3}"),
+            format!("{:.2}", speed.prefill_tok_s / base_speed.prefill_tok_s),
+            format!("{:.2}", speed.decode_tok_s / base_speed.decode_tok_s),
+            format!("{kv:.2}"),
+        ]);
+    }
+    println!("{}", table.render());
+    table.save("example_calibrate_and_eval").ok();
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load the trained model, apply NBL to 2 attention layers,
+//! and generate text — the 60-second tour of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use nbl::data::corpus::{Corpus, CorpusId};
+use nbl::data::ByteTokenizer;
+use nbl::executor::{CaptureSource, Engine};
+use nbl::model::Artifacts;
+use nbl::nbl::calibrate::Calibrator;
+use nbl::nbl::criteria::Criterion;
+use nbl::runtime::Runtime;
+use nbl::spec::greedy_generate;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load artifacts (HLO grid + trained weights) and build the engine
+    let artifacts = Artifacts::discover()?;
+    let runtime = Runtime::new(artifacts.clone())?;
+    let engine = Engine::load(runtime, "main")?;
+    println!(
+        "loaded '{}': {} layers, d={}, {} params",
+        engine.config().name,
+        engine.config().n_layers,
+        engine.config().d_model,
+        engine.weights.param_count()
+    );
+
+    // 2. calibrate: stream activations, compute CCA bounds + LMMSE fits
+    let calib = Corpus::load(&artifacts, CorpusId::TinyC4, "train")?;
+    let mut source = CaptureSource::new(&engine, &calib.tokens, 16, 128);
+    let report = Calibrator::run(&mut source)?;
+    println!("\nper-layer CCA NMSE bound (Thm 3.2; lower = more linearizable):");
+    for lc in &report.layers {
+        println!("  layer {}: {:.4}", lc.layer, lc.cca.nmse_bound);
+    }
+
+    // 3. substitute the 2 most linearizable attention layers (Alg. 1)
+    let plan = report.plan_attn_nbl(2, Criterion::CcaBound)?;
+    println!("\nplan: {}  (KV kept: {:.0}%)", plan.describe(), plan.kv_fraction() * 100.0);
+    let compressed = engine.with_plan(plan)?;
+
+    // 4. generate from both models
+    let tok = ByteTokenizer::new();
+    let prompt = "the small robot ";
+    let ids = tok.encode(prompt);
+    let base_out = greedy_generate(&engine, &ids, 48)?;
+    let nbl_out = greedy_generate(&compressed, &ids, 48)?;
+    println!("\nprompt:    {prompt:?}");
+    println!("baseline:  {:?}", tok.decode(&base_out));
+    println!("attn-nbl2: {:?}", tok.decode(&nbl_out));
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! END-TO-END serving driver (the brief's required E2E example): bring up
+//! the full stack — engine + batcher + worker + TCP front-end — under an
+//! NBL-compressed model, fire a batched workload of real requests over
+//! TCP, and report latency/throughput. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve_bench [-- --m 2 --requests 24 --max-tokens 48]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::nbl::criteria::Criterion;
+use nbl::server::service::{Server, ServerConfig};
+use nbl::server::tcp::TcpFrontend;
+use nbl::util::cli::Args;
+use nbl::util::timer::Timer;
+use nbl::util::{mean, percentile};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let m = args.get_usize("m", 2)?;
+    let n_requests = args.get_usize("requests", 24)?;
+    let max_tokens = args.get_usize("max-tokens", 48)?;
+    let cfg = ExpConfig::from_env();
+
+    // --- build the NBL-compressed engine
+    let wb = Workbench::new("main", cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let plan = if m == 0 {
+        nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers)
+    } else {
+        wb.report
+            .plan_attn_nbl(m, Criterion::CcaBound)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+    };
+    println!("serving plan: {} [{}]", plan.kind.label(), plan.describe());
+    let engine = Arc::new(wb.engine.with_plan(plan).map_err(|e| anyhow::anyhow!("{e}"))?);
+
+    // --- full stack: server worker + TCP front-end
+    let server = Arc::new(Server::new(engine, ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("listening on {}", front.addr);
+
+    // --- client load: 4 concurrent connections, prompts from the corpus
+    let prompts: Vec<String> = (0..n_requests)
+        .map(|i| {
+            let start = (i * 997) % (wb.calib.tokens.len() - 64);
+            let bytes: Vec<u8> = wb.calib.tokens[start..start + 48]
+                .iter()
+                .map(|&t| t as u8)
+                .collect();
+            String::from_utf8_lossy(&bytes).replace(['"', '\\', '\n'], " ")
+        })
+        .collect();
+
+    let t_all = Timer::start();
+    let mut client_threads = Vec::new();
+    for (c, chunk) in prompts.chunks(n_requests.div_ceil(4)).enumerate() {
+        let chunk: Vec<String> = chunk.to_vec();
+        let addr = front.addr;
+        client_threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut latencies = Vec::new();
+            let stream = TcpStream::connect(addr)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            for (i, p) in chunk.iter().enumerate() {
+                let id = c * 1000 + i;
+                let t = Timer::start();
+                writeln!(
+                    writer,
+                    r#"{{"id": {id}, "prompt": "{p}", "max_tokens": {max_tokens}}}"#
+                )?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                latencies.push(t.elapsed_s());
+                let j = nbl::util::json::Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+                if j.opt("error").is_some() {
+                    anyhow::bail!("server error: {line}");
+                }
+            }
+            Ok(latencies)
+        }));
+    }
+    let mut latencies = Vec::new();
+    for t in client_threads {
+        latencies.extend(t.join().unwrap()?);
+    }
+    let wall = t_all.elapsed_s();
+    front.shutdown();
+
+    // --- report
+    let s = metrics.summary();
+    println!("\n=== serve_bench results (Attn NBL-{m}) ===");
+    println!("requests                 {}", s.requests);
+    println!("generated tokens         {}", s.generated_tokens);
+    println!("wall time                {wall:.2} s");
+    println!("request throughput       {:.2} req/s", s.requests as f64 / wall);
+    println!("token throughput         {:.1} tok/s", s.generated_tokens as f64 / wall);
+    println!("mean TTFT                {:.1} ms", s.mean_ttft_s * 1e3);
+    println!("p90 TTFT                 {:.1} ms", s.p90_ttft_s * 1e3);
+    println!("prefill speed            {:.0} tok/s", s.mean_prefill_tok_s);
+    println!("median decode speed      {:.0} tok/s", s.median_decode_tok_s);
+    println!("mean e2e latency         {:.1} ms", mean(&latencies) * 1e3);
+    println!("p90 e2e latency          {:.1} ms", percentile(&latencies, 90.0) * 1e3);
+    assert_eq!(s.requests, n_requests, "all requests must be served");
+    println!("\nserve_bench OK");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Speculative decoding + NBL (Table 6 scenario as a runnable example):
+//! draft-and-verify with the 2-layer draft model against baseline and
+//! NBL-compressed verifiers, printing compounding speed-ups.
+//!
+//!     cargo run --release --example speculative [-- --tokens 96]
+
+use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::data::ByteTokenizer;
+use nbl::executor::Engine;
+use nbl::nbl::criteria::Criterion;
+use nbl::runtime::Runtime;
+use nbl::spec::{greedy_generate, SpeculativeDecoder};
+use nbl::util::cli::Args;
+use nbl::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let tokens = args.get_usize("tokens", 96)?;
+    let cfg = ExpConfig::from_env();
+    let wb = Workbench::new("main", cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let artifacts = nbl::model::Artifacts::discover().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let runtime = Runtime::new(artifacts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let draft = Engine::load(runtime, "draft").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode("the bright engine near the data hall ");
+
+    // baseline plain decoding
+    let t0 = Timer::start();
+    let base_out = greedy_generate(&wb.engine, &prompt, tokens).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base_t = t0.elapsed_s();
+    println!("plain greedy: {:.2} tok/s", tokens as f64 / base_t);
+    println!("  text: {:?}\n", tok.decode(&base_out[..32.min(base_out.len())]));
+
+    for m in [0usize, 1, 2, 3] {
+        let target = if m == 0 {
+            wb.engine
+                .with_plan(nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers))
+        } else {
+            wb.engine
+                .with_plan(wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap())
+        }
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let dec = SpeculativeDecoder::new(&target, &draft, 4);
+        let t = Timer::start();
+        let (out, stats) = dec.generate(&prompt, tokens).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let secs = t.elapsed_s();
+        let label = if m == 0 { "spec".into() } else { format!("NBL-{m}+spec") };
+        println!(
+            "{label:<12} {:>6.2} tok/s  speedup x{:.2}  acceptance {:.2}  tok/target-pass {:.2}",
+            tokens as f64 / secs,
+            base_t / secs,
+            stats.acceptance_rate(),
+            stats.tokens_per_target_pass(),
+        );
+        if m == 0 {
+            assert_eq!(out, base_out, "spec must match greedy");
+        }
+    }
+    Ok(())
+}

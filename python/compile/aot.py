@@ -1,0 +1,273 @@
+"""AOT pipeline: corpora -> train -> lower HLO grid -> goldens -> manifest.
+
+Run as ``python -m compile.aot`` from python/ (the Makefile `artifacts`
+target). Idempotent: each stage is skipped when its outputs already exist
+(delete artifacts/ to force a rebuild).
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpora
+from .configs import GRID, MAIN, MODELS, TRAIN, manifest_dict
+from .kernels import ref
+from .kernels.attention import attn_prefill_pallas
+from .kernels.gram import gram_pallas
+from .kernels.linear_block import linear_block_pallas
+from .kernels.swiglu import mlp_block_pallas
+from .model import capture_attn_io, forward, init_params, load_weights, save_weights
+from .train import load_corpus_bytes, train_lm
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32scalar():
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# op definitions — the (name, fn, example_args) grid
+
+
+def build_ops():
+    """Yield (filename_stem, fn, example_args) for every executable.
+
+    All models share (D, H, Hkv, dh, F, V, Tmax) so the grid serves every
+    model; only n_layers differs and that lives in Rust's layer loop.
+    """
+    cfg = MAIN
+    D, F, V, Tmax = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_ctx
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              head_dim=cfg.head_dim, theta=cfg.rope_theta, eps=cfg.norm_eps)
+    dq, dkv, hkv, dh = cfg.d_q, cfg.d_kv, cfg.n_kv_heads, cfg.head_dim
+    ops = []
+
+    def attn_fn(x, nw, wq, wk, wv, wo):
+        return ref.attn_prefill(x, nw, wq, wk, wv, wo, **kw)
+
+    def attn_pallas_fn(x, nw, wq, wk, wv, wo):
+        return attn_prefill_pallas(x, nw, wq, wk, wv, wo, **kw)
+
+    def cached_fn(x, nw, wq, wk, wv, wo, kc, vc, pos):
+        return ref.attn_cached(x, nw, wq, wk, wv, wo, kc, vc, pos, **kw)
+
+    def mlp_fn(x, nw, w1, w3, w2):
+        return (ref.mlp_block(x, nw, w1, w3, w2, eps=cfg.norm_eps),)
+
+    def mlp_pallas_fn(x, nw, w1, w3, w2):
+        return (mlp_block_pallas(x, nw, w1, w3, w2, eps=cfg.norm_eps),)
+
+    def linear_fn(x, w, b):
+        return (ref.linear_block(x, w, b),)
+
+    def linear_pallas_fn(x, w, b):
+        return (linear_block_pallas(x, w, b),)
+
+    def head_fn(x, nw, wh):
+        return (ref.head(x, nw, wh, eps=cfg.norm_eps),)
+
+    def gram_fn(x, y):
+        return ref.gram(x, y)
+
+    def gram_pallas_fn(x, y):
+        return gram_pallas(x, y)
+
+    attn_w = (f32(D), f32(D, dq), f32(D, dkv), f32(D, dkv), f32(dq, D))
+    for B in GRID.batches:
+        for T in GRID.prefill_lens:
+            ops.append((f"attn_prefill_b{B}_t{T}", attn_fn, (f32(B, T, D), *attn_w)))
+            ops.append((
+                f"cache_init_b{B}_t{T}",
+                lambda k, v: ref.cache_init(k, v, Tmax),
+                (f32(B, T, hkv, dh), f32(B, T, hkv, dh)),
+            ))
+        for S in GRID.cached_lens:
+            ops.append((
+                f"attn_cached_b{B}_s{S}", cached_fn,
+                (f32(B, S, D), *attn_w, f32(B, Tmax, hkv, dh),
+                 f32(B, Tmax, hkv, dh), i32scalar()),
+            ))
+        for T in GRID.pointwise_lens:
+            ops.append((f"linear_block_b{B}_t{T}", linear_fn,
+                        (f32(B, T, D), f32(D, D), f32(D))))
+            ops.append((f"mlp_b{B}_t{T}", mlp_fn,
+                        (f32(B, T, D), f32(D), f32(D, F), f32(D, F), f32(F, D))))
+            ops.append((f"head_b{B}_t{T}", head_fn,
+                        (f32(B, T, D), f32(D), f32(D, V))))
+    # pallas parity variants (small shapes; see DESIGN.md §Perf)
+    for B, T in GRID.pallas_shapes:
+        ops.append((f"attn_prefill_pallas_b{B}_t{T}", attn_pallas_fn,
+                    (f32(B, T, D), *attn_w)))
+        ops.append((f"linear_block_pallas_b{B}_t{T}", linear_pallas_fn,
+                    (f32(B, T, D), f32(D, D), f32(D))))
+        ops.append((f"mlp_pallas_b{B}_t{T}", mlp_pallas_fn,
+                    (f32(B, T, D), f32(D), f32(D, F), f32(D, F), f32(F, D))))
+    # calibration gram: pallas is the default executable, jnp as fallback
+    N, Dg = GRID.gram_n, GRID.gram_d
+    ops.append((f"gram_n{N}_d{Dg}", gram_pallas_fn, (f32(N, Dg), f32(N, Dg))))
+    ops.append((f"gram_jnp_n{N}_d{Dg}", gram_fn, (f32(N, Dg), f32(N, Dg))))
+    return ops
+
+
+def lower_all(out_dir: str, force=False):
+    os.makedirs(out_dir, exist_ok=True)
+    index = {}
+    for name, fn, args in build_ops():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        index[name] = os.path.relpath(path, ART)
+        if os.path.exists(path) and not force:
+            continue
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(path + ".tmp", "w") as f:
+            f.write(text)
+        os.replace(path + ".tmp", path)
+        print(f"  lowered {name} ({len(text)//1024} KiB, {time.time()-t0:.1f}s)",
+              flush=True)
+    return index
+
+
+# ---------------------------------------------------------------------------
+# training stage
+
+
+def train_all():
+    os.makedirs(ART, exist_ok=True)
+    corpus_dir = os.path.join(ART, "corpora")
+    if not os.path.exists(os.path.join(corpus_dir, "tinyc4_train.txt")):
+        print("generating corpora ...", flush=True)
+        corpora.write_all(corpus_dir)
+
+    c4 = load_corpus_bytes(os.path.join(corpus_dir, "tinyc4_train.txt"))
+    wiki = load_corpus_bytes(os.path.join(corpus_dir, "tinywiki_train.txt"))
+    mix = np.concatenate([c4, wiki])
+
+    def wpath(name):
+        return (os.path.join(ART, f"weights_{name}.bin"),
+                os.path.join(ART, f"weights_{name}.json"))
+
+    params = {}
+    # all models see the c4+wiki mix: the eval tasks draw on both grammars
+    # and the calibration ablation (F.1) swaps corpora
+    jobs = [
+        ("main", MODELS["main"], TRAIN.steps, mix, None),
+        ("alt", MODELS["alt"], TRAIN.alt_steps, mix, None),
+        # the draft is distilled from `main` (EAGLE-style: the draft must
+        # mirror the verifier's distribution for high acceptance)
+        ("draft", MODELS["draft"], TRAIN.draft_steps, mix, "main"),
+        ("distill", MODELS["distill"], TRAIN.distill_steps, mix, "main"),
+    ]
+    for name, cfg, steps, data, teacher_name in jobs:
+        bin_path, json_path = wpath(name)
+        if os.path.exists(bin_path):
+            print(f"[{name}] cached weights found, skipping train", flush=True)
+            continue
+        teacher = teacher_cfg = None
+        if teacher_name is not None:
+            tb, _ = wpath(teacher_name)
+            teacher_cfg = MODELS[teacher_name]
+            teacher = params.get(teacher_name) or load_weights(teacher_cfg, tb)
+        p = train_lm(cfg, TRAIN, data, steps,
+                     os.path.join(ART, f"train_log_{name}.json"),
+                     teacher=teacher, teacher_cfg=teacher_cfg)
+        save_weights(p, cfg, bin_path, json_path)
+        params[name] = p
+
+
+# ---------------------------------------------------------------------------
+# goldens for rust parity tests
+
+
+def write_goldens(path: str):
+    """Fixed-prompt logits + per-layer attention I/O stats for the Rust
+    integration tests (executor parity + calibration-capture parity)."""
+    corpus = load_corpus_bytes(os.path.join(ART, "corpora", "tinyc4_val.txt"))
+    prompt = corpus[:32].astype(np.int32)[None, :]  # [1,32]
+    goldens = {"prompt": prompt[0].tolist()}
+    for name in ("main", "alt", "distill", "draft"):
+        cfg = MODELS[name]
+        params = load_weights(cfg, os.path.join(ART, f"weights_{name}.bin"))
+        ids = jnp.asarray(prompt)
+        logits = np.asarray(forward(params, ids, cfg))[0]  # [32,V]
+        caps = capture_attn_io(params, ids, cfg)
+        goldens[name] = {
+            "logits_last": logits[-1].tolist(),
+            "logits_mean": float(logits.mean()),
+            "logits_std": float(logits.std()),
+            "argmax_per_pos": logits.argmax(-1).tolist(),
+            "attn_io": [
+                {
+                    "x_mean": float(np.asarray(x).mean()),
+                    "x_std": float(np.asarray(x).std()),
+                    "y_mean": float(np.asarray(y).mean()),
+                    "y_std": float(np.asarray(y).std()),
+                }
+                for x, y in caps
+            ],
+        }
+    with open(path, "w") as f:
+        json.dump(goldens, f)
+    print(f"wrote goldens to {path}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-train", action="store_true")
+    ap.add_argument("--force-lower", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(ART, exist_ok=True)
+    if not args.skip_train:
+        train_all()
+    print("lowering HLO grid ...", flush=True)
+    hlo_index = lower_all(os.path.join(ART, "hlo"), force=args.force_lower)
+    goldens_path = os.path.join(ART, "goldens.json")
+    if not os.path.exists(goldens_path) and not args.skip_train:
+        write_goldens(goldens_path)
+
+    manifest = manifest_dict()
+    manifest["hlo"] = hlo_index
+    manifest["weights"] = {
+        name: {"bin": f"weights_{name}.bin", "manifest": f"weights_{name}.json"}
+        for name in MODELS
+    }
+    manifest["corpora"] = {
+        f"{name}_{split}": f"corpora/{name}_{split}.txt"
+        for name, _, _, _ in corpora.CORPORA
+        for split in ("train", "val")
+    }
+    manifest["goldens"] = "goldens.json"
+    with open(os.path.join(ART, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("manifest written; artifacts complete.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Model and AOT-grid configuration shared by the whole build pipeline.
+
+The repo trains several tiny Llama-style models at build time (see
+DESIGN.md §2 for why these stand in for the paper's 7B/8B/70B models):
+
+- ``main``    — the primary 8-layer model (paper's Mistral-7B slot)
+- ``alt``     — a 10-layer variant, different seed (Llama-3.1-8B slot)
+- ``distill`` — 8 layers, distilled from ``main`` via logit matching
+                (DeepSeek-R1-Distill slot)
+- ``draft``   — 2-layer draft model for speculative decoding (EAGLE slot)
+
+All variants share (vocab, d_model, heads, head_dim, ff) so one AOT
+executable grid serves every model: the executables take weights as
+runtime arguments, only (batch, seqlen) are baked in.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Sized for the single-core CPU build environment (DESIGN.md §2):
+    same architecture family as the paper's models, scaled down so that
+    build-time training + calibration + the full bench grid fit the
+    session budget. All NBL math is dimension-generic."""
+
+    name: str
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 128
+    n_layers: int = 6
+    n_heads: int = 4
+    n_kv_heads: int = 2       # grouped-query attention
+    head_dim: int = 32
+    d_ff: int = 256           # SwiGLU hidden size
+    max_ctx: int = 512        # Tmax: KV-cache capacity
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    seed: int = 0
+
+    @property
+    def d_q(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = (
+            d * self.d_q + 2 * d * self.d_kv + self.d_q * d  # wq wk wv wo
+            + 3 * d * f                                       # w1 w3 w2
+            + 2 * d                                           # two norms
+        )
+        return v * d + self.n_layers * per_layer + d + d * v  # emb + final norm + head
+
+
+MAIN = ModelConfig(name="main", n_layers=6, seed=1001)
+ALT = ModelConfig(name="alt", n_layers=8, seed=2002)
+DISTILL = ModelConfig(name="distill", n_layers=6, seed=3003)
+DRAFT = ModelConfig(name="draft", n_layers=2, seed=4004)
+
+MODELS = {m.name: m for m in (MAIN, ALT, DISTILL, DRAFT)}
+
+
+@dataclass(frozen=True)
+class AotGrid:
+    """Static shape grid lowered by aot.py.
+
+    Every (op, batch, seqlen) pair becomes one HLO-text artifact; weights
+    are runtime arguments so executables are shared across layers/models.
+    """
+
+    batches: tuple = (1, 8)
+    prefill_lens: tuple = (32, 128, 512)          # attn_prefill / cache_init
+    cached_lens: tuple = (1, 4)                   # attn_cached: decode / spec-verify
+    pointwise_lens: tuple = (1, 4, 32, 128, 512)  # linear_block / mlp / head
+    gram_n: int = 4096                            # calibration chunk rows
+    gram_d: int = 128
+    # pallas-lowered parity variants (small shapes; jnp lowering is the
+    # default serving path — see DESIGN.md §Perf for the rationale)
+    pallas_shapes: tuple = ((1, 32), (1, 128))
+
+
+GRID = AotGrid()
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 400
+    batch_size: int = 8
+    seq_len: int = 128
+    lr: float = 3e-3
+    warmup: int = 40
+    weight_decay: float = 0.01
+    log_every: int = 20
+    distill_steps: int = 250
+    draft_steps: int = 250
+    alt_steps: int = 350
+
+
+TRAIN = TrainConfig()
+
+
+def manifest_dict():
+    return {
+        "models": {k: asdict(v) for k, v in MODELS.items()},
+        "grid": {
+            "batches": list(GRID.batches),
+            "prefill_lens": list(GRID.prefill_lens),
+            "cached_lens": list(GRID.cached_lens),
+            "pointwise_lens": list(GRID.pointwise_lens),
+            "gram_n": GRID.gram_n,
+            "gram_d": GRID.gram_d,
+            "pallas_shapes": [list(s) for s in GRID.pallas_shapes],
+        },
+    }

@@ -1,0 +1,135 @@
+"""Synthetic calibration / training corpora.
+
+The paper calibrates on C4 and WikiText-2 (256 samples each) and uses the
+calibration-set choice as an ablation axis (App. F.1). We have no network
+access, so we generate two deterministic synthetic corpora with clearly
+*different* statistics (DESIGN.md §2):
+
+- ``tiny-c4``   — templated prose from a small PCFG: subject/verb/object
+                  sentences, relative clauses, numbers, quotes.
+- ``tiny-wiki`` — structured encyclopedia-style text: `== headings ==`,
+                  definition sentences, bulleted lists, infobox-ish
+                  `key: value` lines.
+
+Both are plain ASCII so the byte-level tokenizer (vocab 256) covers them.
+The grammars are intentionally learnable by a ~6M-param model in a few
+hundred steps, while still having enough entropy that compression damage
+shows up in perplexity and task accuracy.
+
+The Rust side re-reads the generated .txt files; generation happens only
+here (build time) so both languages see byte-identical data.
+"""
+
+import random
+
+NOUNS = [
+    "robot", "garden", "river", "engine", "signal", "cache", "kernel",
+    "matrix", "tensor", "packet", "planet", "crystal", "circuit", "library",
+    "model", "window", "market", "forest", "valley", "beacon",
+]
+ADJS = [
+    "small", "bright", "hidden", "rapid", "quiet", "linear", "sparse",
+    "dense", "ancient", "modern", "stable", "fragile", "deep", "shallow",
+]
+VERBS_T = [
+    "moves", "computes", "stores", "routes", "compresses", "observes",
+    "updates", "encodes", "decodes", "balances", "measures", "predicts",
+]
+ADVS = ["quickly", "slowly", "carefully", "rarely", "often", "silently"]
+PLACES = ["the north field", "the old town", "the data hall", "the lab",
+          "the harbor", "the archive"]
+NAMES = ["arin", "bela", "cato", "dara", "evin", "fara", "goran", "hale"]
+
+WIKI_TOPICS = [
+    "linear estimator", "canonical analysis", "block cipher", "query cache",
+    "token router", "systolic array", "prefix tree", "ring buffer",
+    "hash table", "state machine", "packet filter", "page allocator",
+]
+WIKI_FIELDS = ["type", "origin", "status", "class", "order", "family"]
+WIKI_VALUES = ["primary", "secondary", "derived", "classical", "modern",
+               "composite", "atomic", "stable", "deprecated"]
+
+
+def _c4_sentence(rng: random.Random) -> str:
+    r = rng.random()
+    n1, n2 = rng.choice(NOUNS), rng.choice(NOUNS)
+    a1, a2 = rng.choice(ADJS), rng.choice(ADJS)
+    v = rng.choice(VERBS_T)
+    if r < 0.35:
+        return f"the {a1} {n1} {v} the {n2} {rng.choice(ADVS)}."
+    if r < 0.6:
+        return (f"{rng.choice(NAMES)} said that the {n1} near {rng.choice(PLACES)}"
+                f" {v} every {a2} {n2}.")
+    if r < 0.8:
+        k = rng.randint(2, 99)
+        return f"there are {k} {a1} {n1}s in {rng.choice(PLACES)}."
+    return (f"when the {n1} {v} the {n2}, the {a1} {rng.choice(NOUNS)}"
+            f" {rng.choice(VERBS_T)} {rng.choice(ADVS)}.")
+
+
+def gen_tiny_c4(n_chars: int, seed: int) -> str:
+    rng = random.Random(seed)
+    parts = []
+    total = 0
+    while total < n_chars:
+        para = " ".join(_c4_sentence(rng) for _ in range(rng.randint(3, 7)))
+        parts.append(para)
+        total += len(para) + 1
+    return "\n".join(parts)[:n_chars]
+
+
+def _wiki_article(rng: random.Random) -> str:
+    topic = rng.choice(WIKI_TOPICS)
+    lines = [f"== {topic} =="]
+    lines.append(
+        f"a {topic} is a {rng.choice(ADJS)} {rng.choice(NOUNS)} that "
+        f"{rng.choice(VERBS_T)} {rng.choice(['data', 'state', 'tokens', 'blocks'])}."
+    )
+    for _ in range(rng.randint(2, 4)):
+        lines.append(f"{rng.choice(WIKI_FIELDS)}: {rng.choice(WIKI_VALUES)}")
+    lines.append("properties:")
+    for _ in range(rng.randint(2, 5)):
+        lines.append(f"* {rng.choice(ADJS)} {rng.choice(NOUNS)}"
+                     f" ({rng.randint(1, 9)})")
+    return "\n".join(lines)
+
+
+def gen_tiny_wiki(n_chars: int, seed: int) -> str:
+    rng = random.Random(seed)
+    parts = []
+    total = 0
+    while total < n_chars:
+        art = _wiki_article(rng)
+        parts.append(art)
+        total += len(art) + 2
+    return "\n\n".join(parts)[:n_chars]
+
+
+# (name, generator, train_seed, val_seed)
+CORPORA = [
+    ("tinyc4", gen_tiny_c4, 11, 12),
+    ("tinywiki", gen_tiny_wiki, 21, 22),
+]
+
+TRAIN_CHARS = 400_000
+VAL_CHARS = 40_000
+
+
+def write_all(out_dir: str) -> dict:
+    """Generate every corpus split into out_dir; returns file index."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    index = {}
+    for name, gen, s_tr, s_va in CORPORA:
+        for split, seed, chars in (
+            ("train", s_tr, TRAIN_CHARS),
+            ("val", s_va, VAL_CHARS),
+        ):
+            text = gen(chars, seed)
+            assert all(ord(c) < 256 for c in text)
+            path = os.path.join(out_dir, f"{name}_{split}.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            index[f"{name}_{split}"] = {"path": path, "chars": len(text)}
+    return index

@@ -1,0 +1,120 @@
+"""Pallas flash-attention kernel (causal, grouped-query).
+
+This is the paper's O(n^2 d) hot spot — the cost NBL removes when a layer
+is linearized. The kernel follows the standard flash/online-softmax
+structure, re-thought for TPU per DESIGN.md §Hardware-Adaptation:
+
+- the grid is (batch, q_head, q_tile); each step holds one q tile of
+  ``block_q`` rows plus the full K/V stripe for its kv-head in VMEM
+  (T<=512, dh=32 -> 64 KiB per stripe, comfortably VMEM-resident), and
+  streams kv tiles of ``block_k`` rows through the MXU with a running
+  (max, denominator, accumulator) triple;
+- grouped-query attention is expressed in the BlockSpec index maps
+  (q head h reads kv head h // group), not by materializing repeated K/V
+  as the jnp reference does — that repeat is pure HBM waste on TPU;
+- the causal mask is applied per kv tile from absolute indices.
+
+Lowered with ``interpret=True`` everywhere (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against kernels.ref by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, causal):
+    # q_ref [1,1,block_q,dh]; k_ref/v_ref [1,1,T,dh]; o_ref like q_ref.
+    iq = pl.program_id(2)
+    t_kv = k_ref.shape[2]
+    dh = q_ref.shape[3]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    q = q_ref[0, 0] * scale                       # [bq, dh]
+    k_all = k_ref[0, 0]                           # [T, dh]
+    v_all = v_ref[0, 0]
+
+    q_pos = iq * block_q + jnp.arange(block_q)    # absolute q indices
+    n_kv = t_kv // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_all, (j * block_k, 0), (block_k, dh))
+        v = jax.lax.dynamic_slice(v_all, (j * block_k, 0), (block_k, dh))
+        s = q @ k.T                               # [bq, bk]
+        if causal:
+            k_pos = j * block_k + jnp.arange(block_k)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    a0 = jnp.zeros((block_q, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[0, 0] = acc / l
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=64, block_k=64):
+    """q [B,H,T,dh]; k,v [B,Hkv,T,dh] -> o [B,H,T,dh]."""
+    B, H, T, dh = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0
+    group = H // Hkv
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    assert T % block_q == 0 and T % block_k == 0
+
+    grid = (B, H, T // block_q)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, T, dh), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, T, dh), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def attn_prefill_pallas(x, normw, wq, wk, wv, wo, *, n_heads, n_kv_heads,
+                        head_dim, theta=10000.0, eps=1e-5,
+                        block_q=64, block_k=64):
+    """Full attention block with the SDPA inner loop on the Pallas kernel.
+
+    Matches kernels.ref.attn_prefill bit-for-bit structure: RMSNorm, QKV
+    projections and RoPE are plain XLA ops (single fused matmuls), the
+    quadratic part runs in the flash kernel. Returns (y, k_roped, v).
+    """
+    from . import ref
+
+    B, T, D = x.shape
+    xn = ref.rms_norm(x, normw, eps)
+    q, k, v = ref._proj_qkv(xn, wq, wk, wv, n_heads, n_kv_heads, head_dim)
+    cos, sin = ref.rope_angles(jnp.arange(T), head_dim, theta)
+    q = ref.apply_rope(q, cos, sin)
+    k = ref.apply_rope(k, cos, sin)
+    # [B,T,H,dh] -> [B,H,T,dh] kernel layout
+    o = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        block_q=block_q, block_k=block_k,
+    )
+    out = o.transpose(0, 2, 1, 3).reshape(B, T, n_heads * head_dim)
+    y = x + out @ wo
+    return y, k, v

@@ -1,0 +1,63 @@
+"""Pallas kernel for calibration Gram accumulation.
+
+Computes (X^T X, X^T Y, sum X, sum Y) over a [N, D] activation chunk —
+the O(s*t*d^2) term of the paper's calibration cost (App. D.1). The grid
+walks N in tiles and accumulates into D x D output blocks that every grid
+step maps to the same block (the TPU analogue of split-K reduction: the
+accumulator lives in VMEM for the whole pass instead of round-tripping
+partial sums through HBM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, y_ref, gxx_ref, gxy_ref, sx_ref, sy_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gxx_ref[...] = jnp.zeros_like(gxx_ref)
+        gxy_ref[...] = jnp.zeros_like(gxy_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sy_ref[...] = jnp.zeros_like(sy_ref)
+
+    x = x_ref[...]                                 # [block_n, D]
+    y = y_ref[...]
+    gxx_ref[...] += x.T @ x
+    gxy_ref[...] += x.T @ y
+    sx_ref[...] += jnp.sum(x, axis=0, keepdims=True)
+    sy_ref[...] += jnp.sum(y, axis=0, keepdims=True)
+
+
+def gram_pallas(x, y, *, block_n=256):
+    """x, y [N,D] -> (X^T X [D,D], X^T Y [D,D], sum X [D], sum Y [D])."""
+    N, D = x.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0
+    grid = (N // block_n,)
+    gxx, gxy, sx, sy = pl.pallas_call(
+        functools.partial(_gram_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((D, D), lambda i: (0, 0)),
+            pl.BlockSpec((D, D), lambda i: (0, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((D, D), jnp.float32),
+            jax.ShapeDtypeStruct((D, D), jnp.float32),
+            jax.ShapeDtypeStruct((1, D), jnp.float32),
+            jax.ShapeDtypeStruct((1, D), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y)
+    return gxx, gxy, sx[0], sy[0]

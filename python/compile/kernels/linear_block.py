@@ -1,0 +1,41 @@
+"""Pallas kernel for the NBL replacement path: y = x + x @ W + b.
+
+This is the O(n d) block that replaces a linearized attention layer —
+the *other* half of the paper's trade. On TPU it is a pure MXU workload:
+one [block_t, D] x [D, D] matmul per grid step with W held in VMEM
+(D=256 -> 256 KiB, resident across the whole grid), no softmax/VPU work
+and no KV traffic. The speed-up the paper reports is exactly this
+kernel's roofline vs. the flash kernel's.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_block_kernel(x_ref, w_ref, b_ref, o_ref):
+    # x_ref [1, block_t, D]; w_ref [D, D]; b_ref [1, D]; o_ref like x_ref.
+    x = x_ref[0]
+    o_ref[0] = x + x @ w_ref[...] + b_ref[0][None, :]
+
+
+def linear_block_pallas(x, w, b, *, block_t=64):
+    """x [B,T,D]; w [D,D]; b [D] -> x + x@W + b."""
+    B, T, D = x.shape
+    block_t = min(block_t, T)
+    assert T % block_t == 0
+    grid = (B, T // block_t)
+    return pl.pallas_call(
+        functools.partial(_linear_block_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, D), lambda b_, i: (b_, i, 0)),
+            pl.BlockSpec((D, D), lambda b_, i: (0, 0)),
+            pl.BlockSpec((1, D), lambda b_, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, D), lambda b_, i: (b_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, D))

@@ -1,0 +1,139 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package has its semantics defined here; pytest
+(+hypothesis) asserts allclose between the kernel and these functions. The
+trainer also runs on these ops (training speed on CPU matters more than
+exercising interpret-mode Pallas during the build), so trained weights are
+by construction compatible with both lowering paths.
+
+Shapes follow DESIGN.md:
+  x        [B, T, D]     residual stream
+  wq       [D, H*dh]     query projection
+  wk, wv   [D, Hkv*dh]   grouped key/value projections
+  wo       [H*dh, D]     output projection
+  kcache   [B, Tmax, Hkv, dh]  (keys stored post-RoPE)
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_angles(positions, head_dim, theta=10000.0):
+    """positions [T] (int) -> (cos, sin) each [T, head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., T, n_heads, head_dim]; cos/sin [T, head_dim//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _proj_qkv(xn, wq, wk, wv, n_heads, n_kv_heads, head_dim):
+    B, T, _ = xn.shape
+    q = (xn @ wq).reshape(B, T, n_heads, head_dim)
+    k = (xn @ wk).reshape(B, T, n_kv_heads, head_dim)
+    v = (xn @ wv).reshape(B, T, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_heads, n_kv_heads):
+    """q [B,Tq,H,dh]; k,v [B,Tk,Hkv,dh]; mask [Tq,Tk] bool (True=visible)."""
+    group = n_heads // n_kv_heads
+    kr = jnp.repeat(k, group, axis=2)  # [B,Tk,H,dh]
+    vr = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    # [B,H,Tq,Tk]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * scale
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    return out.reshape(q.shape[0], q.shape[1], -1)
+
+
+def attn_prefill(x, normw, wq, wk, wv, wo, *, n_heads, n_kv_heads,
+                 head_dim, theta=10000.0, eps=1e-5):
+    """Fresh causal self-attention block. Returns (y, k_roped, v)."""
+    B, T, D = x.shape
+    xn = rms_norm(x, normw, eps)
+    q, k, v = _proj_qkv(xn, wq, wk, wv, n_heads, n_kv_heads, head_dim)
+    cos, sin = rope_angles(jnp.arange(T), head_dim, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    out = _sdpa(q, k, v, mask, n_heads, n_kv_heads)
+    y = x + out @ wo
+    return y, k, v
+
+
+def cache_init(k, v, max_ctx):
+    """Zero-pad prefill K/V [B,T,Hkv,dh] into cache layout [B,Tmax,Hkv,dh]."""
+    B, T, Hkv, dh = k.shape
+    pad = [(0, 0), (0, max_ctx - T), (0, 0), (0, 0)]
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+def attn_cached(x, normw, wq, wk, wv, wo, kcache, vcache, pos, *,
+                n_heads, n_kv_heads, head_dim, theta=10000.0, eps=1e-5):
+    """S new tokens attend over a device-resident cache.
+
+    x [B,S,D]; caches [B,Tmax,Hkv,dh]; pos scalar int32 = number of tokens
+    already cached (shared by the batch group — see DESIGN.md).
+    Returns (y, kcache', vcache').
+    """
+    B, S, D = x.shape
+    Tmax = kcache.shape[1]
+    xn = rms_norm(x, normw, eps)
+    q, k, v = _proj_qkv(xn, wq, wk, wv, n_heads, n_kv_heads, head_dim)
+    positions = pos + jnp.arange(S)
+    cos, sin = rope_angles(positions, head_dim, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kcache = jax.lax.dynamic_update_slice(kcache, k, (0, pos, 0, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v, (0, pos, 0, 0))
+    # query i (absolute pos+i) sees cache slot j iff j <= pos+i
+    mask = jnp.arange(Tmax)[None, :] <= (pos + jnp.arange(S))[:, None]
+    out = _sdpa(q, kcache, vcache, mask, n_heads, n_kv_heads)
+    y = x + out @ wo
+    return y, kcache, vcache
+
+
+def linear_block(x, w, b):
+    """The NBL substitution: y = x + x @ W + b (residual kept, Prop 3.1).
+
+    W absorbs the whole norm+attention sub-block input->output map; it is
+    fitted on (X = residual-stream input, Y = attention-block delta).
+    """
+    return x + x @ w + b
+
+
+def mlp_block(x, normw, w1, w3, w2, eps=1e-5):
+    """Pre-norm SwiGLU MLP block with residual."""
+    xn = rms_norm(x, normw, eps)
+    h = jax.nn.silu(xn @ w1) * (xn @ w3)
+    return x + h @ w2
+
+
+def head(x, normw, wout, eps=1e-5):
+    """Final RMSNorm + LM head. x [B,T,D] -> logits [B,T,V]."""
+    return rms_norm(x, normw, eps) @ wout
+
+
+def gram(x, y):
+    """Calibration accumulation: (X^T X, X^T Y, sum X, sum Y).
+
+    x, y [N, D]; the Rust side streams chunks of N rows through this and
+    combines into covariance/cross-covariance (stats::covariance).
+    """
+    return x.T @ x, x.T @ y, jnp.sum(x, axis=0), jnp.sum(y, axis=0)

@@ -1,0 +1,191 @@
+"""L2: the JAX model — parameter pytree, full forward, op-level functions.
+
+Two lowering paths share the same math:
+- ``ref``-backed (plain jnp): used for training and as the default AOT
+  lowering (fastest on the CPU PJRT backend that serves requests);
+- Pallas-backed: the L1 kernels, lowered as parity variants and validated
+  by pytest + a Rust integration test.
+
+The parameter layout here defines the on-disk ``weights_{model}.bin``
+format consumed by ``rust/src/model/weights.rs`` — keep the two in sync
+(order: emb, per-layer [attn_norm, wq, wk, wv, wo, mlp_norm, w1, w3, w2],
+final_norm, w_head; all f32 little-endian, row-major).
+"""
+
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+LAYER_TENSORS = ("attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w1", "w3", "w2")
+
+
+def layer_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "attn_norm": (d,),
+        "wq": (d, cfg.d_q),
+        "wk": (d, cfg.d_kv),
+        "wv": (d, cfg.d_kv),
+        "wo": (cfg.d_q, d),
+        "mlp_norm": (d,),
+        "w1": (d, f),
+        "w3": (d, f),
+        "w2": (f, d),
+    }
+
+
+def init_params(cfg: ModelConfig):
+    rng = np.random.default_rng(cfg.seed)
+    d = cfg.d_model
+
+    def dense(shape, fan_in):
+        return jnp.asarray(
+            rng.standard_normal(shape, dtype=np.float32) / np.sqrt(fan_in)
+        )
+
+    shapes = layer_shapes(cfg)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                name: (
+                    jnp.ones(shape, jnp.float32)
+                    if name.endswith("norm")
+                    else dense(shape, shape[0])
+                )
+                for name, shape in shapes.items()
+            }
+        )
+    return {
+        "emb": dense((cfg.vocab, d), d),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "w_head": dense((d, cfg.vocab), d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training / golden path, pure jnp)
+
+
+def forward(params, ids, cfg: ModelConfig):
+    """ids [B,T] int32 -> logits [B,T,V]. Full causal forward."""
+    kw = dict(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        theta=cfg.rope_theta,
+        eps=cfg.norm_eps,
+    )
+    x = params["emb"][ids]
+    for lp in params["layers"]:
+        x, _, _ = ref.attn_prefill(
+            x, lp["attn_norm"], lp["wq"], lp["wk"], lp["wv"], lp["wo"], **kw
+        )
+        x = ref.mlp_block(x, lp["mlp_norm"], lp["w1"], lp["w3"], lp["w2"],
+                          eps=cfg.norm_eps)
+    return ref.head(x, params["final_norm"], params["w_head"], eps=cfg.norm_eps)
+
+
+def capture_attn_io(params, ids, cfg: ModelConfig):
+    """Per-layer (X = attn-block input, Y = attn delta) for golden parity
+    with the Rust calibration capture path."""
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              head_dim=cfg.head_dim, theta=cfg.rope_theta, eps=cfg.norm_eps)
+    x = params["emb"][ids]
+    captures = []
+    for lp in params["layers"]:
+        y, _, _ = ref.attn_prefill(
+            x, lp["attn_norm"], lp["wq"], lp["wk"], lp["wv"], lp["wo"], **kw
+        )
+        captures.append((x, y - x))  # (input, attention delta)
+        x = y
+        x = ref.mlp_block(x, lp["mlp_norm"], lp["w1"], lp["w3"], lp["w2"],
+                          eps=cfg.norm_eps)
+    return captures
+
+
+# ---------------------------------------------------------------------------
+# serialization (consumed by rust/src/model/weights.rs)
+
+
+def flatten_named(params, cfg: ModelConfig):
+    """Canonical (name, array) list defining the .bin layout."""
+    out = [("emb", params["emb"])]
+    for i, lp in enumerate(params["layers"]):
+        for name in LAYER_TENSORS:
+            out.append((f"layers.{i}.{name}", lp[name]))
+    out.append(("final_norm", params["final_norm"]))
+    out.append(("w_head", params["w_head"]))
+    return out
+
+def save_weights(params, cfg: ModelConfig, bin_path: str, json_path: str):
+    tensors = []
+    offset = 0
+    with open(bin_path, "wb") as f:
+        for name, arr in flatten_named(params, cfg):
+            a = np.asarray(arr, dtype=np.float32)
+            raw = a.tobytes()  # row-major
+            f.write(raw)
+            tensors.append(
+                {
+                    "name": name,
+                    "shape": list(a.shape),
+                    "offset_bytes": offset,
+                    "size_bytes": len(raw),
+                }
+            )
+            offset += len(raw)
+    manifest = {
+        "model": cfg.name,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "max_ctx": cfg.max_ctx,
+            "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+        },
+        "total_bytes": offset,
+        "tensors": tensors,
+    }
+    with open(json_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_weights(cfg: ModelConfig, bin_path: str):
+    """Inverse of save_weights (used by tests and the LoRA ablation)."""
+    data = np.fromfile(bin_path, dtype=np.float32)
+    pos = 0
+
+    def take(shape):
+        nonlocal pos
+        n = int(np.prod(shape))
+        arr = jnp.asarray(data[pos : pos + n].reshape(shape))
+        pos += n
+        return arr
+
+    params = {"emb": take((cfg.vocab, cfg.d_model))}
+    shapes = layer_shapes(cfg)
+    params["layers"] = [
+        {name: take(shapes[name]) for name in LAYER_TENSORS}
+        for _ in range(cfg.n_layers)
+    ]
+    params["final_norm"] = take((cfg.d_model,))
+    params["w_head"] = take((cfg.d_model, cfg.vocab))
+    assert pos == data.size
+    return params

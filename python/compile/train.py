@@ -1,0 +1,131 @@
+"""Build-time trainer for the tiny model zoo (main / alt / distill / draft).
+
+Hand-rolled AdamW (optax is not available in this environment) + cosine
+schedule with warmup. ``distill`` is trained with a KL term against the
+``main`` teacher's logits (the DeepSeek-R1-Distill analogue, DESIGN.md §2).
+
+This is the end-to-end training driver required by the brief: it trains a
+real (small) transformer for a few hundred steps on the synthetic corpus
+and logs the loss curve to artifacts/train_log_{model}.json, which
+EXPERIMENTS.md records.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, TrainConfig
+from .model import forward, init_params
+
+
+def load_corpus_bytes(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        return np.frombuffer(f.read(), dtype=np.uint8)
+
+
+def make_batcher(data: np.ndarray, batch_size: int, seq_len: int, seed: int):
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        starts = rng.integers(0, len(data) - seq_len - 1, size=batch_size)
+        windows = np.stack([data[s : s + seq_len + 1] for s in starts])
+        return (
+            jnp.asarray(windows[:, :-1], jnp.int32),
+            jnp.asarray(windows[:, 1:], jnp.int32),
+        )
+
+    return next_batch
+
+
+def cross_entropy(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def kl_to_teacher(student_logits, teacher_logits, tau=1.0):
+    pt = jax.nn.softmax(teacher_logits / tau, axis=-1)
+    ls = jax.nn.log_softmax(student_logits / tau, axis=-1)
+    lt = jax.nn.log_softmax(teacher_logits / tau, axis=-1)
+    return jnp.mean(jnp.sum(pt * (lt - ls), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, wd, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * wd * p
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, base_lr, warmup, total):
+    w = jnp.minimum(1.0, (step + 1) / warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    return base_lr * w * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+# ---------------------------------------------------------------------------
+# training loops
+
+
+def train_lm(cfg: ModelConfig, tc: TrainConfig, data: np.ndarray, steps: int,
+             log_path: str, teacher=None, teacher_cfg=None):
+    params = init_params(cfg)
+    opt = adamw_init(params)
+    batcher = make_batcher(data, tc.batch_size, tc.seq_len, cfg.seed + 7)
+
+    if teacher is None:
+        def loss_fn(p, ids, targets):
+            return cross_entropy(forward(p, ids, cfg), targets)
+    else:
+        @jax.jit
+        def teacher_logits(ids):
+            return forward(teacher, ids, teacher_cfg)
+
+        def loss_fn(p, ids, targets):
+            logits = forward(p, ids, cfg)
+            ce = cross_entropy(logits, targets)
+            kl = kl_to_teacher(logits, teacher_logits(ids))
+            return 0.5 * ce + 0.5 * kl
+
+    @jax.jit
+    def step_fn(p, o, ids, targets, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(p, ids, targets)
+        p, o = adamw_update(p, grads, o, lr, tc.weight_decay)
+        return p, o, loss
+
+    log = {"model": cfg.name, "steps": [], "loss": [], "lr": [],
+           "params": sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))}
+    t0 = time.time()
+    for step in range(steps):
+        ids, targets = batcher()
+        lr = lr_schedule(step, tc.lr, tc.warmup, steps)
+        params, opt, loss = step_fn(params, opt, ids, targets, lr)
+        if step % tc.log_every == 0 or step == steps - 1:
+            log["steps"].append(step)
+            log["loss"].append(float(loss))
+            log["lr"].append(float(lr))
+            print(f"[{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                  f"lr {float(lr):.2e} ({time.time()-t0:.0f}s)", flush=True)
+    log["wall_seconds"] = time.time() - t0
+    with open(log_path, "w") as f:
+        json.dump(log, f, indent=1)
+    return params

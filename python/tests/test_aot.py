@@ -1,0 +1,57 @@
+"""AOT pipeline: op grid well-formedness + HLO text round-trip properties."""
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import build_ops, to_hlo_text
+from compile.configs import GRID, MAIN, MODELS
+
+
+def test_grid_covers_design():
+    names = {name for name, _, _ in build_ops()}
+    for b in GRID.batches:
+        for t in GRID.prefill_lens:
+            assert f"attn_prefill_b{b}_t{t}" in names
+            assert f"cache_init_b{b}_t{t}" in names
+        for s in GRID.cached_lens:
+            assert f"attn_cached_b{b}_s{s}" in names
+        for t in GRID.pointwise_lens:
+            for op in ("linear_block", "mlp", "head"):
+                assert f"{op}_b{b}_t{t}" in names
+    assert f"gram_n{GRID.gram_n}_d{GRID.gram_d}" in names
+
+
+def test_no_duplicate_names():
+    names = [name for name, _, _ in build_ops()]
+    assert len(names) == len(set(names))
+
+
+def test_models_share_op_dims():
+    """The whole grid is shared across models; anything dimension-bearing
+    must agree (only n_layers/seed may differ)."""
+    for m in MODELS.values():
+        for attr in ("vocab", "d_model", "n_heads", "n_kv_heads",
+                     "head_dim", "d_ff", "max_ctx"):
+            assert getattr(m, attr) == getattr(MAIN, attr), attr
+
+
+def test_hlo_text_is_parseable_entry():
+    """Lower the smallest op and sanity-check the HLO text structure the
+    Rust loader (HloModuleProto::from_text) expects."""
+    ops = {name: (fn, args) for name, fn, args in build_ops()}
+    fn, args = ops["linear_block_b1_t1"]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True: root is a tuple (rust side unwraps with to_tuple*)
+    assert "tuple" in text
+
+
+def test_lowered_shapes_in_hlo():
+    ops = {name: (fn, args) for name, fn, args in build_ops()}
+    fn, args = ops["attn_prefill_b1_t32"]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    d, dq, dkv = MAIN.d_model, MAIN.d_q, MAIN.d_kv
+    assert f"f32[1,32,{d}]" in text           # x / y
+    assert f"f32[{d},{dq}]" in text            # wq
+    assert f"f32[{d},{dkv}]" in text           # wk/wv

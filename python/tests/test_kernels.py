@@ -1,0 +1,188 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels.ref).
+
+Hypothesis sweeps shapes (and the GQA head grouping) — the CORE
+correctness signal for the kernel layer. All kernels run interpret=True.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attn_prefill_pallas, flash_attention
+from compile.kernels.gram import gram_pallas
+from compile.kernels.linear_block import linear_block_pallas
+from compile.kernels.swiglu import mlp_block_pallas
+
+SET = settings(max_examples=12, deadline=None)
+
+
+def rnd(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def attn_weights(rng, d, h, hkv, dh):
+    return (
+        rnd(rng, d),                       # norm
+        rnd(rng, d, h * dh, scale=0.08),   # wq
+        rnd(rng, d, hkv * dh, scale=0.08),
+        rnd(rng, d, hkv * dh, scale=0.08),
+        rnd(rng, h * dh, d, scale=0.08),
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@SET
+@given(
+    b=st.sampled_from([1, 2]),
+    t=st.sampled_from([8, 16, 32, 64]),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_flash_attention_matches_sdpa(b, t, hkv, group, dh, seed):
+    h = hkv * group
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, b, t, h, dh)
+    k = rnd(rng, b, t, hkv, dh)
+    v = rnd(rng, b, t, hkv, dh)
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    want = ref._sdpa(q, k, v, mask, h, hkv).reshape(b, t, h, dh)
+    got = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True,
+        block_q=min(16, t), block_k=min(16, t),
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@SET
+@given(
+    t=st.sampled_from([16, 64]),
+    bq=st.sampled_from([8, 16]),
+    bk=st.sampled_from([4, 16]),
+    seed=st.integers(0, 10_000),
+)
+def test_flash_attention_block_size_invariance(t, bq, bk, seed):
+    """The online-softmax result must not depend on tiling choices."""
+    rng = np.random.default_rng(seed)
+    q = rnd(rng, 1, t, 2, 16)
+    k = rnd(rng, 1, t, 2, 16)
+    v = rnd(rng, 1, t, 2, 16)
+    args = (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    base = flash_attention(*args, block_q=t, block_k=t)
+    tiled = flash_attention(*args, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(tiled, base, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_rejects_ragged_tiles():
+    q = jnp.zeros((1, 2, 24, 16))
+    with pytest.raises(AssertionError):
+        flash_attention(q, q[:, :2], q[:, :2], block_q=16, block_k=16)
+
+
+@SET
+@given(
+    b=st.sampled_from([1, 2]),
+    t=st.sampled_from([16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_attn_prefill_pallas_matches_ref(b, t, seed):
+    d, h, hkv, dh = 64, 4, 2, 16
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, b, t, d)
+    w = attn_weights(rng, d, h, hkv, dh)
+    kw = dict(n_heads=h, n_kv_heads=hkv, head_dim=dh)
+    y0, k0, v0 = ref.attn_prefill(x, *w, **kw)
+    y1, k1, v1 = attn_prefill_pallas(x, *w, block_q=16, block_k=16, **kw)
+    np.testing.assert_allclose(y1, y0, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(k1, k0, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(v1, v0, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear block (the NBL substitution path)
+
+
+@SET
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([1, 4, 32, 64]),
+    d=st.sampled_from([32, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_linear_block_matches_ref(b, t, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, b, t, d)
+    w = rnd(rng, d, d, scale=0.1)
+    bias = rnd(rng, d)
+    got = linear_block_pallas(x, w, bias, block_t=min(32, t))
+    np.testing.assert_allclose(got, ref.linear_block(x, w, bias),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_linear_block_identity_weight_is_doubling():
+    """x + xI + 0 == 2x — a closed-form sanity anchor."""
+    x = jnp.arange(2 * 4 * 8, dtype=jnp.float32).reshape(2, 4, 8)
+    got = linear_block_pallas(x, jnp.eye(8), jnp.zeros(8), block_t=4)
+    np.testing.assert_allclose(got, 2 * x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# swiglu mlp
+
+
+@SET
+@given(
+    b=st.sampled_from([1, 2]),
+    t=st.sampled_from([4, 32, 64]),
+    d=st.sampled_from([32, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_mlp_block_matches_ref(b, t, d, seed):
+    rng = np.random.default_rng(seed)
+    f = 2 * d
+    x = rnd(rng, b, t, d)
+    nw = rnd(rng, d)
+    w1, w3 = rnd(rng, d, f, scale=0.1), rnd(rng, d, f, scale=0.1)
+    w2 = rnd(rng, f, d, scale=0.1)
+    got = mlp_block_pallas(x, nw, w1, w3, w2, block_t=min(32, t))
+    np.testing.assert_allclose(got, ref.mlp_block(x, nw, w1, w3, w2),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# gram accumulation (calibration)
+
+
+@SET
+@given(
+    n=st.sampled_from([64, 256, 1024]),
+    d=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_gram_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rnd(rng, n, d), rnd(rng, n, d)
+    got = gram_pallas(x, y, block_n=min(64, n))
+    want = ref.gram(x, y)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-3)
+
+
+def test_gram_accumulation_equals_single_shot():
+    """Chunked accumulation (what Rust streams) == one-shot gram."""
+    rng = np.random.default_rng(3)
+    x, y = rnd(rng, 512, 32), rnd(rng, 512, 32)
+    whole = gram_pallas(x, y, block_n=64)
+    parts = [gram_pallas(x[i : i + 128], y[i : i + 128], block_n=64)
+             for i in range(0, 512, 128)]
+    summed = [sum(p[j] for p in parts) for j in range(4)]
+    for g, w in zip(summed, whole):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,118 @@
+"""L2 correctness: model assembly, cached-decode consistency, serialization."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import ModelConfig
+from compile.kernels import ref
+from compile.model import (
+    capture_attn_io, flatten_named, forward, init_params, load_weights,
+    save_weights,
+)
+
+TINY = ModelConfig(name="tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                   n_kv_heads=1, head_dim=16, d_ff=64, max_ctx=64, seed=7)
+
+
+def test_forward_shapes_and_finite():
+    params = init_params(TINY)
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, TINY.vocab, (2, 16)))
+    logits = forward(params, ids, TINY)
+    assert logits.shape == (2, 16, TINY.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params = init_params(TINY)
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, TINY.vocab, (1, 16))
+    ids2 = ids.copy()
+    ids2[0, -1] = (ids2[0, -1] + 1) % TINY.vocab
+    l1 = np.asarray(forward(params, jnp.asarray(ids), TINY))
+    l2 = np.asarray(forward(params, jnp.asarray(ids2), TINY))
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t0=st.sampled_from([4, 8, 12]), extra=st.sampled_from([1, 3]),
+       seed=st.integers(0, 1000))
+def test_cached_decode_matches_prefill(t0, extra, seed):
+    """prefill(t0) + cached steps == prefill(t0+extra) — the invariant the
+    Rust decode path relies on."""
+    params = init_params(TINY)
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, TINY.vocab, (1, t0 + extra)))
+    kw = dict(n_heads=TINY.n_heads, n_kv_heads=TINY.n_kv_heads,
+              head_dim=TINY.head_dim, theta=TINY.rope_theta, eps=TINY.norm_eps)
+
+    full = forward(params, ids, TINY)
+
+    # layerwise: prefill first t0, then decode one token at a time
+    x = params["emb"][ids[:, :t0]]
+    caches = []
+    for lp in params["layers"]:
+        y, k, v = ref.attn_prefill(x, lp["attn_norm"], lp["wq"], lp["wk"],
+                                   lp["wv"], lp["wo"], **kw)
+        kc, vc = ref.cache_init(k, v, TINY.max_ctx)
+        caches.append([kc, vc])
+        x = ref.mlp_block(y, lp["mlp_norm"], lp["w1"], lp["w3"], lp["w2"])
+    for step in range(extra):
+        pos = t0 + step
+        x = params["emb"][ids[:, pos : pos + 1]]
+        for li, lp in enumerate(params["layers"]):
+            y, kc, vc = ref.attn_cached(
+                x, lp["attn_norm"], lp["wq"], lp["wk"], lp["wv"], lp["wo"],
+                caches[li][0], caches[li][1], pos, **kw)
+            caches[li] = [kc, vc]
+            x = ref.mlp_block(y, lp["mlp_norm"], lp["w1"], lp["w3"], lp["w2"])
+    last = ref.head(x, params["final_norm"], params["w_head"])
+    np.testing.assert_allclose(last[:, 0], full[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_weights_round_trip():
+    params = init_params(TINY)
+    with tempfile.TemporaryDirectory() as d:
+        bin_path = os.path.join(d, "w.bin")
+        json_path = os.path.join(d, "w.json")
+        save_weights(params, TINY, bin_path, json_path)
+        loaded = load_weights(TINY, bin_path)
+        for (n1, a1), (n2, a2) in zip(flatten_named(params, TINY),
+                                      flatten_named(loaded, TINY)):
+            assert n1 == n2
+            np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_capture_attn_io_shapes():
+    params = init_params(TINY)
+    ids = jnp.asarray(np.random.default_rng(2).integers(0, TINY.vocab, (1, 8)))
+    caps = capture_attn_io(params, ids, TINY)
+    assert len(caps) == TINY.n_layers
+    for x, y in caps:
+        assert x.shape == (1, 8, TINY.d_model)
+        assert y.shape == (1, 8, TINY.d_model)
+    # Y is the attention *delta*: adding it back must reproduce the stream
+    # (checked implicitly by test_cached_decode; here check nonzero)
+    assert float(jnp.abs(caps[0][1]).max()) > 0
+
+
+def test_linear_block_is_exact_for_linear_target():
+    """If Y really is affine in X, LMMSE recovers it exactly and the
+    substituted block is a perfect replacement (NMSE bound ~ 0)."""
+    rng = np.random.default_rng(5)
+    d = 16
+    X = rng.standard_normal((500, d)).astype(np.float32)
+    Wt = rng.standard_normal((d, d)).astype(np.float32) * 0.3
+    bt = rng.standard_normal(d).astype(np.float32)
+    Y = X @ Wt + bt
+    # closed-form LMMSE (the math rust/src/nbl implements)
+    mx, my = X.mean(0), Y.mean(0)
+    Xc, Yc = X - mx, Y - my
+    W = np.linalg.solve(Xc.T @ Xc, Xc.T @ Yc)
+    b = my - mx @ W
+    got = ref.linear_block(jnp.asarray(X[None]), jnp.asarray(W), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got)[0], X + Y, rtol=1e-3, atol=1e-3)

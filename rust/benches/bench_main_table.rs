@@ -1,0 +1,64 @@
+//! Tables 2 / 3 / 4 / 8 (+ the interval Tables 9-12): the main
+//! accuracy-vs-speed grid over {Baseline, SliceGPT-%, SLEB-m,
+//! Block DROP/NBL-m, Attn DROP/NBL-m} for each model.
+//!
+//! Model mapping (DESIGN.md §2): main -> Mistral-7B slot,
+//! alt -> Llama-3.1-8B slot, distill -> DeepSeek-R1-Distill slot.
+//! Shape to hold: Attn NBL >= Attn DROP >= Block* >= SLEB/SliceGPT at
+//! matched m; NBL degrades gracefully at the largest m.
+
+use nbl::bench::experiments::{build_method_grid, evaluate_grid, main_table, ExpConfig, Workbench};
+
+fn run_model(model: &str, table_id: &str) {
+    let cfg = ExpConfig::from_env();
+    let wb = Workbench::new(model, cfg).unwrap();
+    let n_layers = wb.engine.config().n_layers;
+    // paper uses m in {4,8,12,16} of 32 layers; scale to our K
+    let ms: Vec<usize> = [1usize, 2, 3, 4]
+        .iter()
+        .copied()
+        .filter(|&m| m < n_layers)
+        .collect();
+    let rows = build_method_grid(&wb, &ms).unwrap();
+    let evaluated = evaluate_grid(&wb, &rows).unwrap();
+    let table = main_table(
+        &format!("Main table ({model} model, K={n_layers} layers)"),
+        &evaluated,
+    );
+    println!("{}", table.render());
+    table.save(table_id).unwrap();
+
+    // qualitative shape checks (soft: print loudly instead of panicking
+    // so one noisy cell doesn't kill the whole table run)
+    let find = |label: &str| evaluated.iter().find(|r| r.label == label);
+    if let (Some(nbl), Some(drop)) = (find("Attn NBL-3"), find("Attn DROP-3")) {
+        let diff = nbl.summary.avg_accuracy - drop.summary.avg_accuracy;
+        println!(
+            "[check] Attn NBL-3 vs DROP-3 accuracy delta: {:+.3} (paper: NBL wins at high m)",
+            diff
+        );
+    }
+    if let (Some(base), Some(nbl)) = (find("Baseline"), find("Attn NBL-1")) {
+        println!(
+            "[check] NBL-1 accuracy drop vs baseline: {:+.3} (paper: ~0)",
+            nbl.summary.avg_accuracy - base.summary.avg_accuracy
+        );
+    }
+}
+
+fn main() {
+    let model = std::env::args()
+        .skip_while(|a| a != "--model")
+        .nth(1)
+        .unwrap_or_else(|| "all".into());
+    match model.as_str() {
+        "main" => run_model("main", "table2_main"),
+        "alt" => run_model("alt", "table3_alt"),
+        "distill" => run_model("distill", "table4_distill"),
+        _ => {
+            run_model("main", "table2_main");
+            run_model("alt", "table3_alt");
+            run_model("distill", "table4_distill");
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! §Perf microbenchmarks: the hot-path costs the optimization pass
+//! iterates on (EXPERIMENTS.md §Perf records before/after).
+//!
+//! - decode step latency per layer-op (attn_cached vs linear_block):
+//!   the very trade NBL makes;
+//! - prefill latency per bucket;
+//! - gram accumulation: Rust loop vs XLA `gram` executable;
+//! - Jacobi eigh / SVD / LMMSE solve at model width.
+
+use nbl::bench::{bench_for, BenchStats};
+use nbl::linalg::{eigh, singular_values, solve_psd, Mat};
+use nbl::model::Artifacts;
+use nbl::nbl::criteria::Criterion;
+use nbl::report::Table;
+use nbl::runtime::{lit_from_tensor, Runtime};
+use nbl::stats::GramAccumulator;
+use nbl::tensor::Tensor;
+use nbl::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("NBL_FAST").is_ok();
+    let min_t = if fast { 0.2 } else { 1.0 };
+    let artifacts = Artifacts::discover().unwrap();
+    let runtime = Runtime::new(artifacts).unwrap();
+    let engine = nbl::executor::Engine::load(runtime.clone(), "main").unwrap();
+    let corpus = nbl::data::Corpus::load(
+        nbl::executor::Engine::load(runtime.clone(), "main")
+            .unwrap()
+            .runtime
+            .artifacts(),
+        nbl::data::corpus::CorpusId::TinyC4,
+        "train",
+    )
+    .unwrap();
+
+    let mut stats: Vec<BenchStats> = Vec::new();
+
+    // ---- end-to-end decode step (full layer stack), baseline vs NBL-3
+    {
+        let prompt = &corpus.tokens[..128];
+        let pre = engine.prefill(prompt, 1, 128, None).unwrap();
+        let mut state = pre.state;
+        stats.push(bench_for("decode_step/baseline", 3, min_t, || {
+            if state.remaining() == 0 {
+                state.pos = 128;
+            }
+            let _ = engine.decode(&mut state, &[42], 1).unwrap();
+        }));
+
+        let mut src =
+            nbl::executor::CaptureSource::new(&engine, &corpus.tokens, 8, 128);
+        let report = nbl::nbl::calibrate::Calibrator::run(&mut src).unwrap();
+        let nbl_engine = engine
+            .with_plan(report.plan_attn_nbl(3, Criterion::CcaBound).unwrap())
+            .unwrap();
+        let pre2 = nbl_engine.prefill(prompt, 1, 128, None).unwrap();
+        let mut state2 = pre2.state;
+        stats.push(bench_for("decode_step/attn-nbl-3", 3, min_t, || {
+            if state2.remaining() == 0 {
+                state2.pos = 128;
+            }
+            let _ = nbl_engine.decode(&mut state2, &[42], 1).unwrap();
+        }));
+    }
+
+    // ---- prefill per bucket
+    for t in [32usize, 128, 512] {
+        let prompt = &corpus.tokens[..t];
+        // warm the executables outside the timer
+        let _ = engine.prefill(prompt, 1, t, None).unwrap();
+        stats.push(bench_for(&format!("prefill/b1_t{t}"), 1, min_t, || {
+            let _ = engine.prefill(prompt, 1, t, None).unwrap();
+        }));
+    }
+
+    // ---- single-op dispatch: attn_cached vs linear_block at S=1
+    {
+        let d = engine.config().d_model;
+        let x = Tensor::zeros(vec![1, 1, d]);
+        let xl = lit_from_tensor(&x).unwrap();
+        let w = lit_from_tensor(&Tensor::zeros(vec![d, d])).unwrap();
+        let b = lit_from_tensor(&Tensor::zeros(vec![d])).unwrap();
+        let _ = runtime.run("linear_block_b1_t1", &[&xl, &w, &b]).unwrap();
+        stats.push(bench_for("op/linear_block_b1_t1", 3, min_t, || {
+            let _ = runtime.run("linear_block_b1_t1", &[&xl, &w, &b]).unwrap();
+        }));
+    }
+
+    // ---- gram: rust accumulation vs XLA executable
+    {
+        let n = 4096usize;
+        let dg = 128usize;
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..n * dg).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> = (0..n * dg).map(|_| rng.normal_f32()).collect();
+        stats.push(bench_for("gram/rust", 1, min_t, || {
+            let mut acc = GramAccumulator::new(dg);
+            acc.update(&x, &y).unwrap();
+        }));
+        let xt = Tensor::new(vec![n, dg], x.clone()).unwrap();
+        let yt = Tensor::new(vec![n, dg], y.clone()).unwrap();
+        let xl = lit_from_tensor(&xt).unwrap();
+        let yl = lit_from_tensor(&yt).unwrap();
+        let op = format!("gram_jnp_n{n}_d{dg}");
+        let _ = runtime.run(&op, &[&xl, &yl]).unwrap();
+        stats.push(bench_for("gram/xla_jnp", 1, min_t, || {
+            let _ = runtime.run(&op, &[&xl, &yl]).unwrap();
+        }));
+        let op_p = format!("gram_n{n}_d{dg}");
+        let _ = runtime.run(&op_p, &[&xl, &yl]).unwrap();
+        stats.push(bench_for("gram/xla_pallas", 1, min_t, || {
+            let _ = runtime.run(&op_p, &[&xl, &yl]).unwrap();
+        }));
+    }
+
+    // ---- O(d^3) calibration core at model width
+    {
+        let d = 128usize;
+        let mut rng = Rng::new(6);
+        let a = Mat::from_fn(d, d, |_, _| rng.normal());
+        let mut psd = a.matmul_nt(&a);
+        for i in 0..d {
+            psd[(i, i)] += 1.0;
+        }
+        let b = Mat::from_fn(d, d, |_, _| rng.normal());
+        stats.push(bench_for("linalg/eigh_128", 1, min_t, || {
+            let _ = eigh(&psd).unwrap();
+        }));
+        stats.push(bench_for("linalg/svd_128", 1, min_t, || {
+            let _ = singular_values(&b).unwrap();
+        }));
+        stats.push(bench_for("linalg/solve_psd_128", 1, min_t, || {
+            let _ = solve_psd(&psd, &b, 0.0).unwrap();
+        }));
+    }
+
+    let mut table = Table::new(
+        "§Perf microbenchmarks",
+        &["bench", "median_ms", "p10_ms", "p90_ms", "iters"],
+    );
+    for s in &stats {
+        println!("{}", s.line());
+        table.row(vec![
+            s.name.clone(),
+            format!("{:.3}", s.median_s * 1e3),
+            format!("{:.3}", s.p10_s * 1e3),
+            format!("{:.3}", s.p90_s * 1e3),
+            s.iters.to_string(),
+        ]);
+    }
+    table.save("perf_micro").unwrap();
+}

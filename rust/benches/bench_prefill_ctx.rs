@@ -1,0 +1,64 @@
+//! Figure 3: prefill speed-up of NBL-m vs context length.
+//!
+//! Shape to hold: the speed-up over the baseline widens with context
+//! length (the O(n^2 d) attention term grows; the O(n d^2) linear
+//! replacement doesn't) and with m.
+
+use nbl::bench::experiments::{measure_speed, ExpConfig, Workbench};
+use nbl::nbl::criteria::Criterion;
+use nbl::report::Table;
+
+fn main() {
+    let cfg = ExpConfig::from_env();
+    let wb = Workbench::new("main", cfg.clone()).unwrap();
+    let contexts: &[usize] = if std::env::var("NBL_FAST").is_ok() {
+        &[32, 128]
+    } else {
+        &[32, 128, 512]
+    };
+    let ms = [0usize, 1, 2, 3, 4];
+
+    let mut table = Table::new(
+        "Figure 3 analogue: prefill speed-up vs context length",
+        &["ctx", "NBL-0", "NBL-1", "NBL-2", "NBL-3", "NBL-4"],
+    );
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    for &ctx in contexts {
+        let mut row = vec![ctx.to_string()];
+        let mut speeds = Vec::new();
+        for &m in &ms {
+            let engine = if m == 0 {
+                wb.engine.with_plan(nbl::nbl::plan::ModelPlan::baseline(
+                    wb.engine.config().n_layers,
+                ))
+            } else {
+                wb.engine
+                    .with_plan(wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap())
+            }
+            .unwrap();
+            let s = measure_speed(&engine, &wb.calib.tokens, ctx, 4, cfg.speed_reps).unwrap();
+            speeds.push(s.prefill_tok_s);
+        }
+        let base = speeds[0];
+        for s in &speeds {
+            row.push(format!("{:.3}", s / base));
+        }
+        series.push(speeds.iter().map(|s| s / base).collect());
+        table.row(row);
+    }
+    println!("{}", table.render());
+    table.save("fig3_prefill_ctx").unwrap();
+
+    // shape check: speed-up of the largest m grows with context
+    if series.len() >= 2 {
+        let m_idx = ms.len() - 1;
+        println!(
+            "[check] NBL-{} speed-up at ctx {} = {:.3}, at ctx {} = {:.3} (paper: grows)",
+            ms[m_idx],
+            contexts[0],
+            series[0][m_idx],
+            contexts[series.len() - 1],
+            series[series.len() - 1][m_idx]
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline compression methods the paper compares against.
+//!
+//! - Attn/Block DROP (He et al. 2024) — plans built directly from
+//!   `CalibrationReport` with the cosine criterion (see `nbl::calibrate`).
+//! - SLEB (Song et al. 2024) — greedy perplexity-driven block removal.
+//! - SliceGPT (Ashkboos et al. 2024) — PCA rotation + width slicing,
+//!   re-embedded at full width (DESIGN.md §2 documents the substitution).
+
+pub mod slicegpt;
+pub mod sleb;
+
+pub use slicegpt::slicegpt_apply;
+pub use sleb::sleb_select;

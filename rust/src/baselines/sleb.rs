@@ -1,0 +1,99 @@
+//! SLEB (Song et al. 2024): streamline LLMs by greedily removing the
+//! transformer *block* whose removal hurts calibration perplexity least,
+//! re-evaluating after every removal.
+
+use crate::error::{Error, Result};
+use crate::nbl::plan::{ModelPlan, PlanKind};
+
+/// Greedily drop `m` whole blocks. `eval_ppl(plan)` must return the
+/// calibration-set perplexity of the model under `plan`.
+pub fn sleb_select(
+    n_layers: usize,
+    m: usize,
+    mut eval_ppl: impl FnMut(&ModelPlan) -> Result<f64>,
+) -> Result<ModelPlan> {
+    if m > n_layers {
+        return Err(Error::Calibration(format!(
+            "SLEB: cannot drop {m} of {n_layers} blocks"
+        )));
+    }
+    let mut plan = ModelPlan::baseline(n_layers);
+    plan.kind = PlanKind::Sleb(m);
+    let mut dropped: Vec<usize> = Vec::new();
+    for _round in 0..m {
+        let mut best: Option<(usize, f64)> = None;
+        for cand in 0..n_layers {
+            if dropped.contains(&cand) {
+                continue;
+            }
+            let mut trial = plan.clone();
+            trial.drop_block(cand);
+            let ppl = eval_ppl(&trial)?;
+            if best.map_or(true, |(_, b)| ppl < b) {
+                best = Some((cand, ppl));
+            }
+        }
+        let (idx, _) = best.ok_or_else(|| Error::Calibration("SLEB: nothing left".into()))?;
+        plan.drop_block(idx);
+        dropped.push(idx);
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbl::plan::MlpOp;
+
+    #[test]
+    fn drops_cheapest_blocks_first() {
+        // synthetic: dropping layer i costs ppl penalty = i (layer 0 cheapest)
+        let plan = sleb_select(5, 2, |p| {
+            let mut ppl = 10.0;
+            for (i, l) in p.layers.iter().enumerate() {
+                if l.mlp == MlpOp::Identity {
+                    ppl += i as f64;
+                }
+            }
+            Ok(ppl)
+        })
+        .unwrap();
+        assert_eq!(plan.kv_layers(), 3);
+        assert_eq!(plan.layers[0].mlp, MlpOp::Identity);
+        assert_eq!(plan.layers[1].mlp, MlpOp::Identity);
+        assert_eq!(plan.kind.label(), "SLEB-2");
+    }
+
+    #[test]
+    fn greedy_is_adaptive() {
+        // interaction: dropping 2 is cheap only if 0 already dropped
+        let plan = sleb_select(3, 2, |p| {
+            let d: Vec<bool> = p.layers.iter().map(|l| l.mlp == MlpOp::Identity).collect();
+            let mut ppl = 10.0;
+            if d[0] {
+                ppl += 0.1;
+            }
+            if d[1] {
+                ppl += 5.0;
+            }
+            if d[2] {
+                ppl += if d[0] { 0.2 } else { 3.0 };
+            }
+            Ok(ppl)
+        })
+        .unwrap();
+        let d: Vec<bool> = plan.layers.iter().map(|l| l.mlp == MlpOp::Identity).collect();
+        assert_eq!(d, vec![true, false, true]);
+    }
+
+    #[test]
+    fn rejects_m_too_large() {
+        assert!(sleb_select(2, 3, |_| Ok(1.0)).is_err());
+    }
+
+    #[test]
+    fn propagates_eval_errors() {
+        let r = sleb_select(2, 1, |_| Err(crate::error::Error::msg("boom")));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! SliceGPT-like baseline (Ashkboos et al. 2024).
+//!
+//! SliceGPT rotates the residual stream into its PCA basis and slices the
+//! lowest-variance directions, shrinking every weight matrix. Our AOT
+//! executables are shape-static, so we apply the *same* information
+//! bottleneck re-embedded at full width: every inter-block weight is
+//! replaced by its projection onto the top-k principal subspace
+//! (W' = P Pᵀ W for inputs, W' = W P Pᵀ for outputs, with P ∈ R^{d×k}
+//! from the residual-stream covariance). The accuracy effect of slicing
+//! is fully exercised; the wall-clock speed-up is reported analytically
+//! from the FLOP ratio (DESIGN.md §2, EXPERIMENTS.md notes this).
+
+use crate::error::Result;
+use crate::linalg::{eigh, Mat};
+use crate::model::weights::Weights;
+use crate::tensor::Tensor;
+
+/// Build the rank-k residual-stream projector P Pᵀ from a stream
+/// covariance estimate (d x d).
+pub fn principal_projector(cov: &Mat, keep: usize) -> Result<Mat> {
+    let r = eigh(cov)?;
+    let d = cov.rows();
+    let k = keep.min(d);
+    // P = top-k eigenvector columns; projector = P Pᵀ
+    let p = Mat::from_fn(d, k, |i, j| r.vectors[(i, j)]);
+    Ok(p.matmul_nt(&p))
+}
+
+fn project_rows(proj: &Mat, w: &Tensor) -> Tensor {
+    // rows of w live in residual space: w' = proj @ w
+    let (d, cols) = (w.shape()[0], w.shape()[1]);
+    let wm = Mat::from_f32(d, cols, w.data());
+    let out = proj.matmul(&wm);
+    Tensor::new(vec![d, cols], out.to_f32()).unwrap()
+}
+
+fn project_cols(proj: &Mat, w: &Tensor) -> Tensor {
+    // columns of w produce residual-space vectors: w' = w @ proj
+    let (rows, d) = (w.shape()[0], w.shape()[1]);
+    let wm = Mat::from_f32(rows, d, w.data());
+    let out = wm.matmul(proj);
+    Tensor::new(vec![rows, d], out.to_f32()).unwrap()
+}
+
+/// Apply SliceGPT-style slicing at `percent`% sparsity to a copy of the
+/// weights. `stream_cov` is the residual-stream covariance from
+/// calibration (averaged over layers).
+pub fn slicegpt_apply(weights: &Weights, stream_cov: &Mat, percent: u32) -> Result<Weights> {
+    let d = weights.config.d_model;
+    let keep = ((d as f64) * (1.0 - percent as f64 / 100.0)).round() as usize;
+    let proj = principal_projector(stream_cov, keep.max(1))?;
+    let mut out = weights.clone();
+    for l in out.layers.iter_mut() {
+        // inputs read from the residual stream
+        l.wq = project_rows(&proj, &l.wq);
+        l.wk = project_rows(&proj, &l.wk);
+        l.wv = project_rows(&proj, &l.wv);
+        l.w1 = project_rows(&proj, &l.w1);
+        l.w3 = project_rows(&proj, &l.w3);
+        // outputs write into the residual stream
+        l.wo = project_cols(&proj, &l.wo);
+        l.w2 = project_cols(&proj, &l.w2);
+    }
+    out.w_head = project_rows(&proj, &out.w_head);
+    Ok(out)
+}
+
+/// Analytic speed-up of true width-slicing at `percent`% (FLOP ratio of
+/// the dominant d-dependent matmuls; the paper's Table 2/3 prefill column
+/// analogue for this baseline).
+pub fn slicegpt_analytic_speedup(percent: u32) -> f64 {
+    let keep = 1.0 - percent as f64 / 100.0;
+    // linear layers scale ~ d_kept (one side of each GEMM is sliced)
+    1.0 / keep.max(0.01)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_cov(d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::from_fn(d, d, |_, _| rng.normal());
+        let mut c = a.matmul_nt(&a);
+        for i in 0..d {
+            c[(i, i)] += 0.1;
+        }
+        c
+    }
+
+    #[test]
+    fn projector_is_idempotent_and_rank_k() {
+        let cov = random_cov(8, 1);
+        let p = principal_projector(&cov, 3).unwrap();
+        // idempotent
+        assert!(p.matmul(&p).sub(&p).max_abs() < 1e-8);
+        // trace == rank
+        assert!((p.trace() - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn full_rank_projector_is_identity() {
+        let cov = random_cov(6, 2);
+        let p = principal_projector(&cov, 6).unwrap();
+        assert!(p.sub(&Mat::identity(6)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn projector_keeps_top_directions() {
+        // diagonal covariance: projector must keep the largest-variance axes
+        let mut cov = Mat::zeros(4, 4);
+        for (i, v) in [0.1, 5.0, 0.2, 3.0].iter().enumerate() {
+            cov[(i, i)] = *v;
+        }
+        let p = principal_projector(&cov, 2).unwrap();
+        assert!((p[(1, 1)] - 1.0).abs() < 1e-9);
+        assert!((p[(3, 3)] - 1.0).abs() < 1e-9);
+        assert!(p[(0, 0)].abs() < 1e-9);
+        assert!(p[(2, 2)].abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_speedup_monotone() {
+        assert!(slicegpt_analytic_speedup(35) > slicegpt_analytic_speedup(25));
+        assert!(slicegpt_analytic_speedup(25) > slicegpt_analytic_speedup(15));
+        assert!(slicegpt_analytic_speedup(15) > 1.0);
+    }
+}

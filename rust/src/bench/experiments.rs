@@ -1,0 +1,356 @@
+//! Shared experiment driver: builds every method's plan (NBL + all
+//! baselines), measures accuracy and §4.1 speed, and emits paper-shaped
+//! table rows. Used by every bench target and the `repro` CLI
+//! (DESIGN.md §4 experiment index).
+
+use std::sync::Arc;
+
+use crate::baselines::slicegpt::{slicegpt_analytic_speedup, slicegpt_apply};
+use crate::baselines::sleb::sleb_select;
+use crate::data::corpus::{Corpus, CorpusId};
+use crate::error::Result;
+use crate::eval::harness::{evaluate_all, EvalSummary};
+use crate::eval::perplexity;
+use crate::eval::tasks::all_tasks;
+use crate::executor::capture::CaptureSource;
+use crate::executor::engine::Engine;
+use crate::linalg::Mat;
+use crate::model::artifacts::Artifacts;
+use crate::nbl::calibrate::{CalibrationReport, Calibrator};
+use crate::nbl::criteria::Criterion;
+use crate::nbl::plan::{ModelPlan, PlanKind};
+use crate::runtime::Runtime;
+use crate::sampling::argmax;
+use crate::util::timer::Timer;
+
+/// Workload knobs; `fast()` keeps every bench under a couple of minutes.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub calib_seqs: usize,
+    pub calib_len: usize,
+    pub eval_items: usize,
+    pub ppl_windows: usize,
+    pub speed_prompt: usize,
+    pub speed_gen: usize,
+    pub speed_reps: usize,
+    pub seed: u64,
+}
+
+impl ExpConfig {
+    pub fn full() -> ExpConfig {
+        ExpConfig {
+            calib_seqs: 48,
+            calib_len: 128,
+            eval_items: 24,
+            ppl_windows: 12,
+            speed_prompt: 512,
+            speed_gen: 128,
+            speed_reps: 3,
+            seed: 1234,
+        }
+    }
+
+    pub fn fast() -> ExpConfig {
+        ExpConfig {
+            calib_seqs: 12,
+            calib_len: 128,
+            eval_items: 8,
+            ppl_windows: 4,
+            speed_prompt: 128,
+            speed_gen: 32,
+            speed_reps: 2,
+            seed: 1234,
+        }
+    }
+
+    pub fn from_env() -> ExpConfig {
+        if std::env::var("NBL_FAST").is_ok() {
+            ExpConfig::fast()
+        } else {
+            ExpConfig::full()
+        }
+    }
+}
+
+/// Everything a bench needs for one model.
+pub struct Workbench {
+    pub artifacts: Artifacts,
+    pub runtime: Arc<Runtime>,
+    pub engine: Engine,
+    pub report: CalibrationReport,
+    pub calib: Corpus,
+    pub val: Corpus,
+    pub cfg: ExpConfig,
+}
+
+impl Workbench {
+    pub fn new(model: &str, cfg: ExpConfig) -> Result<Workbench> {
+        // calibrate on the models' pretraining mix by default; the
+        // single-corpus choice is the F.1 ablation (bench_ablations)
+        Workbench::with_corpus(model, cfg, CorpusId::Mix)
+    }
+
+    pub fn with_corpus(model: &str, cfg: ExpConfig, calib_id: CorpusId) -> Result<Workbench> {
+        let artifacts = Artifacts::discover()?;
+        let runtime = Runtime::new(artifacts.clone())?;
+        let engine = Engine::load(runtime.clone(), model)?;
+        let calib = Corpus::load(&artifacts, calib_id, "train")?;
+        let val = Corpus::load(&artifacts, calib_id, "val")?;
+        let mut src = CaptureSource::new(&engine, &calib.tokens, cfg.calib_seqs, cfg.calib_len);
+        let report = Calibrator::run(&mut src)?;
+        Ok(Workbench { artifacts, runtime, engine, report, calib, val, cfg })
+    }
+
+    /// Mean residual-stream covariance across layers (SliceGPT input).
+    pub fn stream_cov(&self) -> Mat {
+        let d = self.engine.config().d_model;
+        let mut acc = Mat::zeros(d, d);
+        let mut n = 0usize;
+        for lc in &self.report.layers {
+            if lc.stats.n > 0 {
+                acc = acc.add(&lc.stats.cxx);
+                n += 1;
+            }
+        }
+        acc.scale(1.0 / n.max(1) as f64)
+    }
+
+    /// Perplexity of a plan on the validation split.
+    pub fn ppl(&self, plan: &ModelPlan) -> Result<f64> {
+        let e = self.engine.with_plan(plan.clone())?;
+        perplexity(&e, &self.val, self.cfg.ppl_windows, 128)
+    }
+
+    /// Full 8-task eval of an engine.
+    pub fn accuracy(&self, engine: &Engine) -> Result<EvalSummary> {
+        evaluate_all(engine, all_tasks(), self.cfg.eval_items, self.cfg.seed)
+    }
+
+    /// §4.1 protocol: prefill tok/s and median decode tok/s at batch 1.
+    pub fn speed(&self, engine: &Engine) -> Result<SpeedResult> {
+        measure_speed(
+            engine,
+            &self.calib.tokens,
+            self.cfg.speed_prompt,
+            self.cfg.speed_gen,
+            self.cfg.speed_reps,
+        )
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpeedResult {
+    pub prefill_tok_s: f64,
+    pub decode_tok_s: f64,
+}
+
+/// Measure prefill/decode speed (batch 1, greedy), warm caches first.
+pub fn measure_speed(
+    engine: &Engine,
+    token_stream: &[u32],
+    prompt_len: usize,
+    gen_len: usize,
+    reps: usize,
+) -> Result<SpeedResult> {
+    let prompt = &token_stream[..prompt_len];
+    // decode is timed from a shorter prompt so the cache has room for
+    // gen_len tokens (paper protocol: prefill and generation are
+    // measured as separate phases)
+    let max_ctx = engine.config().max_ctx;
+    let decode_prompt_len = prompt_len.min(max_ctx.saturating_sub(gen_len + 1)).max(1);
+    let decode_prompt = &token_stream[..decode_prompt_len];
+
+    // warm both compile cache and data paths
+    let pre = engine.prefill(prompt, 1, prompt_len, None)?;
+    drop(pre);
+    let warm = engine.prefill(decode_prompt, 1, decode_prompt_len, None)?;
+    let mut st = warm.state;
+    let _ = engine.decode(&mut st, &[1], 1)?;
+
+    // best-of-N timing: the testbed is a single shared vCPU with bursty
+    // host-side contention, so the *minimum* time is the faithful cost of
+    // the code path (documented in EXPERIMENTS.md §Methodology)
+    let mut prefill_speeds = Vec::with_capacity(reps);
+    let mut decode_speeds = Vec::with_capacity(reps);
+    for _ in 0..reps.max(3) {
+        let t = Timer::start();
+        let pre = engine.prefill(prompt, 1, prompt_len, None)?;
+        let logits = engine.head(&pre.hidden)?;
+        let next = argmax(logits.at2(0, prompt_len - 1));
+        let ttft = t.elapsed_s();
+        prefill_speeds.push(prompt_len as f64 / ttft);
+        drop(pre);
+        let _ = next;
+
+        let dpre = engine.prefill(decode_prompt, 1, decode_prompt_len, None)?;
+        let dlogits = engine.head(&dpre.hidden)?;
+        let mut next = argmax(dlogits.at2(0, decode_prompt_len - 1));
+        let mut state = dpre.state;
+        let mut intervals = Vec::with_capacity(gen_len);
+        let gen = gen_len.min(state.remaining());
+        for _ in 0..gen {
+            let t2 = Timer::start();
+            let l = engine.decode(&mut state, &[next], 1)?;
+            next = argmax(l.at2(0, 0));
+            intervals.push(t2.elapsed_s());
+        }
+        let per: Vec<f64> = intervals.iter().map(|&dt| 1.0 / dt.max(1e-12)).collect();
+        decode_speeds.push(crate::util::median(&per));
+    }
+    let best = |xs: &[f64]| xs.iter().cloned().fold(0.0f64, f64::max);
+    Ok(SpeedResult {
+        prefill_tok_s: best(&prefill_speeds),
+        decode_tok_s: best(&decode_speeds),
+    })
+}
+
+/// A method row in the main tables.
+pub struct MethodRow {
+    pub plan: ModelPlan,
+    /// Engine override (SliceGPT swaps weights, not just the plan).
+    pub engine: Option<Engine>,
+    /// Analytic speed-up override (SliceGPT: width-slicing not executable
+    /// on the static-shape grid — DESIGN.md §2).
+    pub analytic_speedup: Option<f64>,
+}
+
+/// Build the full method grid of Tables 2/3 for a workbench.
+pub fn build_method_grid(wb: &Workbench, ms: &[usize]) -> Result<Vec<MethodRow>> {
+    let n_layers = wb.engine.config().n_layers;
+    let mut rows = Vec::new();
+    rows.push(MethodRow {
+        plan: ModelPlan::baseline(n_layers),
+        engine: None,
+        analytic_speedup: None,
+    });
+
+    // SliceGPT-{15,25,35}%
+    let cov = wb.stream_cov();
+    for pct in [15u32, 25, 35] {
+        let sliced = slicegpt_apply(&wb.engine.weights, &cov, pct)?;
+        let mut plan = ModelPlan::baseline(n_layers);
+        plan.kind = PlanKind::SliceGpt(pct);
+        let engine = Engine::new(wb.runtime.clone(), Arc::new(sliced), plan.clone())?;
+        rows.push(MethodRow {
+            plan,
+            engine: Some(engine),
+            analytic_speedup: Some(slicegpt_analytic_speedup(pct)),
+        });
+    }
+
+    for &m in ms {
+        if m >= n_layers {
+            continue;
+        }
+        // SLEB-m (greedy ppl-based block removal)
+        let sleb = sleb_select(n_layers, m, |p| wb.ppl(p))?;
+        rows.push(MethodRow { plan: sleb, engine: None, analytic_speedup: None });
+
+        // Block DROP-m (cosine criterion, per He et al.)
+        let mut bd = ModelPlan::baseline(n_layers);
+        bd.kind = PlanKind::BlockDrop(m);
+        for idx in crate::nbl::criteria::select_lowest(
+            &wb.report.scores(Criterion::CosineDistance),
+            m,
+        ) {
+            bd.drop_block(idx);
+        }
+        rows.push(MethodRow { plan: bd, engine: None, analytic_speedup: None });
+
+        // Block NBL-m (residual LMMSE over the whole block)
+        let mut bn = ModelPlan::baseline(n_layers);
+        bn.kind = PlanKind::BlockNbl(m);
+        for idx in crate::nbl::criteria::select_lowest(
+            &wb.report.scores(Criterion::CcaBound),
+            m,
+        ) {
+            let lin = wb.report.layers[idx].fit_linear_residual()?;
+            bn.linearize_block(idx, Arc::new(lin));
+        }
+        rows.push(MethodRow { plan: bn, engine: None, analytic_speedup: None });
+
+        // Attn DROP-m (cosine criterion)
+        let mut ad = wb.report.plan_attn_drop(m, Criterion::CosineDistance);
+        ad.kind = PlanKind::AttnDrop(m);
+        rows.push(MethodRow { plan: ad, engine: None, analytic_speedup: None });
+
+        // Attn NBL-m (the paper's method, CCA criterion)
+        let an = wb.report.plan_attn_nbl(m, Criterion::CcaBound)?;
+        rows.push(MethodRow { plan: an, engine: None, analytic_speedup: None });
+    }
+    Ok(rows)
+}
+
+/// One fully-evaluated row of Table 2/3/4.
+pub struct EvaluatedRow {
+    pub label: String,
+    pub summary: EvalSummary,
+    pub prefill_ratio: f64,
+    pub decode_ratio: f64,
+    pub kv_fraction: f64,
+}
+
+/// Evaluate the full grid; the first row must be the baseline (ratios are
+/// normalized to it, matching the paper's presentation).
+pub fn evaluate_grid(wb: &Workbench, rows: &[MethodRow]) -> Result<Vec<EvaluatedRow>> {
+    let mut out = Vec::with_capacity(rows.len());
+    let mut base_speed: Option<SpeedResult> = None;
+    for row in rows {
+        let engine_storage;
+        let engine: &Engine = match &row.engine {
+            Some(e) => e,
+            None => {
+                engine_storage = wb.engine.with_plan(row.plan.clone())?;
+                &engine_storage
+            }
+        };
+        let summary = wb.accuracy(engine)?;
+        let speed = wb.speed(engine)?;
+        let base = *base_speed.get_or_insert(speed);
+        let (prefill_ratio, decode_ratio) = match row.analytic_speedup {
+            Some(s) => (s, s * 0.5 + 0.5), // SliceGPT: decode gains are smaller (paper T2/T3)
+            None => (
+                speed.prefill_tok_s / base.prefill_tok_s,
+                speed.decode_tok_s / base.decode_tok_s,
+            ),
+        };
+        log::info!(
+            "{}: acc {:.3} prefill x{:.2} decode x{:.2}",
+            row.plan.kind.label(),
+            summary.avg_accuracy,
+            prefill_ratio,
+            decode_ratio
+        );
+        out.push(EvaluatedRow {
+            label: row.plan.kind.label(),
+            summary,
+            prefill_ratio,
+            decode_ratio,
+            kv_fraction: row.plan.kv_fraction(),
+        });
+    }
+    Ok(out)
+}
+
+/// Render evaluated rows as the paper's main-table layout.
+pub fn main_table(title: &str, rows: &[EvaluatedRow]) -> crate::report::Table {
+    let mut headers = vec!["Method"];
+    for t in all_tasks() {
+        headers.push(t.name);
+    }
+    headers.extend(["Avg", "PooledSE", "Prefill", "Throughput", "KV"]);
+    let mut table = crate::report::Table::new(title, &headers);
+    for r in rows {
+        let mut cells = vec![r.label.clone()];
+        for t in &r.summary.tasks {
+            cells.push(crate::report::pct(t.accuracy));
+        }
+        cells.push(crate::report::pct(r.summary.avg_accuracy));
+        cells.push(format!("{:.2}", r.summary.pooled_se * 100.0));
+        cells.push(crate::report::ratio(r.prefill_ratio));
+        cells.push(crate::report::ratio(r.decode_ratio));
+        cells.push(format!("{:.2}", r.kv_fraction));
+        table.row(cells);
+    }
+    table
+}

@@ -1,0 +1,122 @@
+//! Micro-benchmark harness (criterion is not available offline) plus the
+//! shared experiment driver behind every paper table.
+//!
+//! Warmup + timed iterations with median/p10/p90 reporting, plus a
+//! comparison helper for speed-up tables (every speed number in the
+//! paper's tables is a ratio vs the repo's own baseline, matching the
+//! paper's normalization).
+
+pub mod experiments;
+
+use crate::util::timer::Timer;
+use crate::util::{mean, percentile};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl BenchStats {
+    pub fn speedup_vs(&self, baseline: &BenchStats) -> f64 {
+        baseline.median_s / self.median_s.max(1e-12)
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<32} median {:>9.3} ms  (p10 {:>8.3}, p90 {:>8.3}, n={})",
+            self.name,
+            self.median_s * 1e3,
+            self.p10_s * 1e3,
+            self.p90_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmups.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+    }
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: percentile(&samples, 50.0),
+        mean_s: mean(&samples),
+        p10_s: percentile(&samples, 10.0),
+        p90_s: percentile(&samples, 90.0),
+    }
+}
+
+/// Adaptive: run for at least `min_time_s`, at least 3 iterations.
+pub fn bench_for(name: &str, warmup: usize, min_time_s: f64, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while samples.len() < 3 || total.elapsed_s() < min_time_s {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: percentile(&samples, 50.0),
+        mean_s: mean(&samples),
+        p10_s: percentile(&samples, 10.0),
+        p90_s: percentile(&samples, 90.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.median_s >= 0.0);
+        assert!(s.p10_s <= s.p90_s);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let slow = BenchStats {
+            name: "slow".into(),
+            iters: 1,
+            median_s: 0.2,
+            mean_s: 0.2,
+            p10_s: 0.2,
+            p90_s: 0.2,
+        };
+        let fast = BenchStats { name: "fast".into(), median_s: 0.1, ..slow.clone() };
+        assert!((fast.speedup_vs(&slow) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_for_respects_min_time() {
+        let s = bench_for("sleepy", 0, 0.02, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Compare NBL/DROP on matched layer sets: isolates criterion choice from
+//! substitution quality.
+use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::nbl::criteria::Criterion;
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::new("main", ExpConfig::full()).unwrap();
+    println!("cca scores:    {:?}", wb.report.scores(Criterion::CcaBound).iter().map(|x| (x*100.0).round()/100.0).collect::<Vec<_>>());
+    println!("cosine scores: {:?}", wb.report.scores(Criterion::CosineDistance).iter().map(|x| (x*1000.0).round()/1000.0).collect::<Vec<_>>());
+    for m in [3usize] {
+        for (label, plan) in [
+            ("NBL(cca)", wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap()),
+            ("NBL(cos)", wb.report.plan_attn_nbl(m, Criterion::CosineDistance).unwrap()),
+            ("DROP(cca)", wb.report.plan_attn_drop(m, Criterion::CcaBound)),
+            ("DROP(cos)", wb.report.plan_attn_drop(m, Criterion::CosineDistance)),
+        ] {
+            let layers = plan.describe();
+            let e = wb.engine.with_plan(plan).unwrap();
+            let acc = wb.accuracy(&e).unwrap();
+            let per: Vec<String> = acc.tasks.iter().map(|t| format!("{}:{:.2}", t.name, t.accuracy)).collect();
+            println!("m={m} {label:<10} avg {:.3} [{}] ({})", acc.avg_accuracy, per.join(" "), layers);
+        }
+    }
+    Ok(())
+}

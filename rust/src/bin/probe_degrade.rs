@@ -1,0 +1,15 @@
+//! Diagnose process-lifetime slowdown: measure baseline speed, run work,
+//! measure again.
+use nbl::bench::experiments::{measure_speed, ExpConfig, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::new("main", ExpConfig::fast()).unwrap();
+    let s0 = measure_speed(&wb.engine, &wb.calib.tokens, 128, 32, 3).unwrap();
+    println!("before: prefill {:.0} decode {:.0}", s0.prefill_tok_s, s0.decode_tok_s);
+    for i in 0..4 {
+        let _ = wb.accuracy(&wb.engine).unwrap();
+        let s = measure_speed(&wb.engine, &wb.calib.tokens, 128, 32, 3).unwrap();
+        println!("after eval {}: prefill {:.0} decode {:.0}", i, s.prefill_tok_s, s.decode_tok_s);
+    }
+    Ok(())
+}

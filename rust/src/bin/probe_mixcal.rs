@@ -1,0 +1,25 @@
+//! Does calibrating on the full pretraining mix (c4+wiki) improve NBL?
+use nbl::data::corpus::{Corpus, CorpusId};
+use nbl::executor::CaptureSource;
+use nbl::nbl::calibrate::Calibrator;
+use nbl::nbl::criteria::Criterion;
+use nbl::bench::experiments::{ExpConfig, Workbench};
+
+fn main() -> anyhow::Result<()> {
+    let wb = Workbench::new("main", ExpConfig::full()).unwrap();
+    let artifacts = nbl::model::Artifacts::discover().unwrap();
+    let wiki = Corpus::load(&artifacts, CorpusId::TinyWiki, "train").unwrap();
+    // mixed-token stream: interleave c4 + wiki
+    let mut mixed = wb.calib.tokens.clone();
+    mixed.extend(&wiki.tokens);
+    let mut src = CaptureSource::new(&wb.engine, &mixed, 48, 128);
+    let report = Calibrator::run(&mut src).unwrap();
+    for m in [3usize, 4] {
+        let plan = report.plan_attn_nbl(m, Criterion::CcaBound).unwrap();
+        let e = wb.engine.with_plan(plan).unwrap();
+        let acc = wb.accuracy(&e).unwrap();
+        let per: Vec<String> = acc.tasks.iter().map(|t| format!("{}:{:.2}", t.name, t.accuracy)).collect();
+        println!("mixcal m={m} avg {:.3} [{}]", acc.avg_accuracy, per.join(" "));
+    }
+    Ok(())
+}

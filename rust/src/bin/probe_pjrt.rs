@@ -1,0 +1,62 @@
+//! One-off probe: how does the PJRT CPU client hand back multi-output
+//! (tuple-rooted) executables, and can outputs be chained via execute_b?
+//! Kept as a diagnostic binary (`cargo run --bin probe_pjrt`).
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let art = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let client = xla::PjRtClient::cpu()?;
+    println!("platform={}", client.platform_name());
+
+    // multi-output op: cache_init (k,v) -> (kcache, vcache)
+    let proto =
+        xla::HloModuleProto::from_text_file(format!("{art}/hlo/cache_init_b1_t32.hlo.txt"))?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let k = xla::Literal::vec1(&vec![1f32; 32 * 2 * 32]).reshape(&[1, 32, 2, 32])?;
+    let v = xla::Literal::vec1(&vec![2f32; 32 * 2 * 32]).reshape(&[1, 32, 2, 32])?;
+    let out = exe.execute::<xla::Literal>(&[k, v])?;
+    println!("replicas={} buffers={}", out.len(), out[0].len());
+    for (i, b) in out[0].iter().enumerate() {
+        println!("  out[{i}] shape={:?}", b.on_device_shape()?);
+    }
+
+    // if single tuple buffer: decompose via literal
+    if out[0].len() == 1 {
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        println!("tuple parts={}", parts.len());
+        for p in &parts {
+            println!("  part shape={:?}", p.array_shape()?);
+        }
+    }
+
+    // chaining: feed an output buffer into execute_b of linear_block
+    let proto2 =
+        xla::HloModuleProto::from_text_file(format!("{art}/hlo/linear_block_b1_t1.hlo.txt"))?;
+    let exe2 = client.compile(&xla::XlaComputation::from_proto(&proto2))?;
+    let x = xla::Literal::vec1(&vec![0.5f32; 128]).reshape(&[1, 1, 128])?;
+    let w = xla::Literal::vec1(&vec![0.0f32; 128 * 128]).reshape(&[128, 128])?;
+    let b = xla::Literal::vec1(&vec![1.0f32; 128]).reshape(&[128])?;
+    let out2 = exe2.execute::<xla::Literal>(&[x, w, b])?;
+    println!("linear out buffers={}", out2[0].len());
+
+    // re-run feeding buffers (chain)
+    let devices = client.addressable_devices();
+    let device = &devices[0];
+    let xb = client.buffer_from_host_literal(
+        Some(device),
+        &xla::Literal::vec1(&vec![0.5f32; 128]).reshape(&[1, 1, 128])?,
+    )?;
+    let wb = client.buffer_from_host_literal(
+        Some(device),
+        &xla::Literal::vec1(&vec![0.0f32; 128 * 128]).reshape(&[128, 128])?,
+    )?;
+    let bb = client
+        .buffer_from_host_literal(Some(device), &xla::Literal::vec1(&vec![1.0f32; 128]).reshape(&[128])?)?;
+    let out3 = exe2.execute_b(&[&xb, &wb, &bb])?;
+    println!("execute_b ok, buffers={}", out3[0].len());
+    let lit3 = out3[0][0].to_literal_sync()?;
+    println!("result ty={:?}", lit3.shape()?);
+    Ok(())
+}

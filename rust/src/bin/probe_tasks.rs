@@ -1,0 +1,24 @@
+//! Diagnostic: per-task accuracy of each model (chance vs signal).
+
+use nbl::executor::Engine;
+use nbl::model::Artifacts;
+use nbl::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::discover()?;
+    let runtime = Runtime::new(artifacts)?;
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16usize);
+    for model in ["main"] {
+        let engine = Engine::load(runtime.clone(), model)?;
+        let summary = nbl::eval::evaluate_all(&engine, nbl::eval::all_tasks(), n, 99)?;
+        println!("== {model} ==");
+        for t in &summary.tasks {
+            println!("  {:<12} {:.3}", t.name, t.accuracy);
+        }
+        println!("  avg {:.3} ± {:.3}", summary.avg_accuracy, summary.pooled_se);
+    }
+    Ok(())
+}

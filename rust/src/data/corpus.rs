@@ -1,0 +1,118 @@
+//! Corpus loading + deterministic window extraction for calibration and
+//! perplexity evaluation (the paper's 256-sample C4/WikiText protocol).
+
+use crate::data::tokenizer::ByteTokenizer;
+use crate::error::{Error, Result};
+use crate::model::artifacts::Artifacts;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusId {
+    TinyC4,
+    TinyWiki,
+    /// Concatenation of both — the models' pretraining distribution
+    /// (default for calibration; single corpora are the F.1 ablation).
+    Mix,
+}
+
+impl CorpusId {
+    pub fn key(self, split: &str) -> String {
+        match self {
+            CorpusId::TinyC4 => format!("tinyc4_{split}"),
+            CorpusId::TinyWiki => format!("tinywiki_{split}"),
+            CorpusId::Mix => format!("mix_{split}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CorpusId::TinyC4 => "tiny-c4",
+            CorpusId::TinyWiki => "tiny-wiki",
+            CorpusId::Mix => "mix",
+        }
+    }
+}
+
+pub struct Corpus {
+    pub id: CorpusId,
+    pub split: String,
+    pub tokens: Vec<u32>,
+}
+
+impl Corpus {
+    pub fn load(artifacts: &Artifacts, id: CorpusId, split: &str) -> Result<Corpus> {
+        if id == CorpusId::Mix {
+            let a = Corpus::load(artifacts, CorpusId::TinyC4, split)?;
+            let b = Corpus::load(artifacts, CorpusId::TinyWiki, split)?;
+            let mut tokens = a.tokens;
+            tokens.extend(b.tokens);
+            return Ok(Corpus { id, split: split.to_string(), tokens });
+        }
+        let path = artifacts.corpus_path(&id.key(split))?;
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("{}: {e}", path.display())))?;
+        let tokens = ByteTokenizer::new().encode(&text);
+        if tokens.is_empty() {
+            return Err(Error::Artifact(format!("empty corpus {}", path.display())));
+        }
+        Ok(Corpus { id, split: split.to_string(), tokens })
+    }
+
+    /// `n` deterministic windows of `len` tokens (seeded; reproducible).
+    pub fn windows(&self, n: usize, len: usize, seed: u64) -> Vec<&[u32]> {
+        let mut rng = Rng::new(seed);
+        let span = self.tokens.len().saturating_sub(len + 1).max(1);
+        (0..n)
+            .map(|_| {
+                let start = rng.below(span);
+                &self.tokens[start..start + len]
+            })
+            .collect()
+    }
+
+    /// Sequential non-overlapping windows (perplexity protocol).
+    pub fn sequential_windows(&self, len: usize, max_n: usize) -> Vec<&[u32]> {
+        self.tokens
+            .chunks_exact(len)
+            .take(max_n)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake() -> Corpus {
+        Corpus {
+            id: CorpusId::TinyC4,
+            split: "val".into(),
+            tokens: (0..10_000).map(|i| (i % 256) as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn windows_are_deterministic_and_sized() {
+        let c = fake();
+        let w1 = c.windows(5, 64, 42);
+        let w2 = c.windows(5, 64, 42);
+        assert_eq!(w1, w2);
+        assert!(w1.iter().all(|w| w.len() == 64));
+        assert_ne!(c.windows(5, 64, 43), w1);
+    }
+
+    #[test]
+    fn sequential_windows_do_not_overlap() {
+        let c = fake();
+        let ws = c.sequential_windows(100, 7);
+        assert_eq!(ws.len(), 7);
+        assert_eq!(ws[0][99], 99);
+        assert_eq!(ws[1][0], 100);
+    }
+
+    #[test]
+    fn corpus_keys() {
+        assert_eq!(CorpusId::TinyWiki.key("train"), "tinywiki_train");
+        assert_eq!(CorpusId::TinyC4.name(), "tiny-c4");
+    }
+}

@@ -1,0 +1,8 @@
+//! Data plumbing: byte-level tokenizer + corpus loading + calibration and
+//! eval window extraction.
+
+pub mod corpus;
+pub mod tokenizer;
+
+pub use corpus::Corpus;
+pub use tokenizer::ByteTokenizer;

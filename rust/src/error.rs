@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+/// Unified error for the whole coordinator.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("linalg error: {0}")]
+    Linalg(String),
+
+    #[error("calibration error: {0}")]
+    Calibration(String),
+
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,173 @@
+//! lm-eval-harness-style scoring: choose the answer with the highest
+//! (optionally length-normalized) log-likelihood under the model.
+//!
+//! All choices of an item are scored in ONE batched prefill (the choices
+//! become batch rows padded to a common bucket) — on this single-core
+//! testbed dispatch overhead dominates, so batching choices is the
+//! difference between minutes and tens of minutes per table.
+
+use crate::data::tokenizer::ByteTokenizer;
+use crate::error::Result;
+use crate::executor::engine::Engine;
+use crate::eval::tasks::{generate, Item, TaskSpec};
+use crate::sampling::log_softmax;
+use crate::util::{mean, percentile};
+
+/// A tokenized multiple-choice item.
+pub struct McItem {
+    pub context: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+impl McItem {
+    pub fn tokenize(item: &Item) -> McItem {
+        let tok = ByteTokenizer::new();
+        McItem {
+            context: tok.encode(&item.context),
+            choices: item.choices.iter().map(|c| tok.encode(c)).collect(),
+            correct: item.correct,
+        }
+    }
+}
+
+/// Score one item; returns the chosen index.
+pub fn score_item(engine: &Engine, item: &McItem, length_norm: bool) -> Result<usize> {
+    let n = item.choices.len();
+    // rows: context + choice, right-padded to the longest row
+    let rows: Vec<Vec<u32>> = item
+        .choices
+        .iter()
+        .map(|c| {
+            let mut r = item.context.clone();
+            r.extend_from_slice(c);
+            r
+        })
+        .collect();
+    let max_len = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut ids = vec![0u32; n * max_len];
+    for (i, r) in rows.iter().enumerate() {
+        ids[i * max_len..i * max_len + r.len()].copy_from_slice(r);
+    }
+    let out = engine.prefill(&ids, n, max_len, None)?;
+    let logits = engine.head(&out.hidden)?;
+
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (i, choice) in item.choices.iter().enumerate() {
+        let ctx_len = item.context.len();
+        let mut ll = 0.0f64;
+        // token at absolute position p is predicted by logits at p-1
+        for (j, &tok) in choice.iter().enumerate() {
+            let p = ctx_len + j;
+            let ls = log_softmax(logits.at2(i, p - 1));
+            ll += ls[tok as usize];
+        }
+        let score = if length_norm { ll / choice.len() as f64 } else { ll };
+        if score > best.0 {
+            best = (score, i);
+        }
+    }
+    Ok(best.1)
+}
+
+/// Result for one task.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub name: &'static str,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+impl TaskResult {
+    /// Binomial standard error.
+    pub fn se(&self) -> f64 {
+        (self.accuracy * (1.0 - self.accuracy) / self.n as f64).sqrt()
+    }
+
+    pub fn chance(&self, n_choices: usize) -> f64 {
+        1.0 / n_choices as f64
+    }
+}
+
+/// Summary across all tasks (paper App. E.3 pooled SE).
+#[derive(Debug, Clone)]
+pub struct EvalSummary {
+    pub tasks: Vec<TaskResult>,
+    pub avg_accuracy: f64,
+    pub pooled_se: f64,
+}
+
+/// Run every task in the menu on the engine.
+pub fn evaluate_all(engine: &Engine, tasks: &[TaskSpec], n_items: usize, seed: u64) -> Result<EvalSummary> {
+    let mut results = Vec::new();
+    for spec in tasks {
+        let items = generate(spec, n_items, seed);
+        let mut correct = 0usize;
+        for item in &items {
+            let mc = McItem::tokenize(item);
+            if score_item(engine, &mc, spec.length_norm)? == mc.correct {
+                correct += 1;
+            }
+        }
+        results.push(TaskResult {
+            name: spec.name,
+            accuracy: correct as f64 / items.len() as f64,
+            n: items.len(),
+        });
+    }
+    Ok(summarize(results))
+}
+
+pub fn summarize(tasks: Vec<TaskResult>) -> EvalSummary {
+    let accs: Vec<f64> = tasks.iter().map(|t| t.accuracy).collect();
+    let n = tasks.len().max(1) as f64;
+    let pooled_se = (tasks.iter().map(|t| t.se() * t.se()).sum::<f64>()).sqrt() / n;
+    EvalSummary { avg_accuracy: mean(&accs), pooled_se, tasks }
+}
+
+/// Latency percentiles helper for serve-side summaries (re-exported here
+/// because the bench tables pair accuracy with speed columns).
+pub fn p50_p90(xs: &[f64]) -> (f64, f64) {
+    (percentile(xs, 50.0), percentile(xs, 90.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooled_se_formula() {
+        let tasks = vec![
+            TaskResult { name: "a", accuracy: 0.5, n: 100 },
+            TaskResult { name: "b", accuracy: 0.5, n: 100 },
+        ];
+        let se_each = (0.25f64 / 100.0).sqrt();
+        let want = (2.0 * se_each * se_each).sqrt() / 2.0;
+        let s = summarize(tasks);
+        assert!((s.pooled_se - want).abs() < 1e-12);
+        assert!((s.avg_accuracy - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn task_se_extremes() {
+        let t = TaskResult { name: "x", accuracy: 1.0, n: 50 };
+        assert_eq!(t.se(), 0.0);
+        let t2 = TaskResult { name: "x", accuracy: 0.5, n: 50 };
+        assert!(t2.se() > 0.0);
+    }
+
+    #[test]
+    fn tokenize_round_trips_lengths() {
+        let item = Item {
+            context: "ab ".into(),
+            choices: vec!["cd.".into(), "efgh.".into()],
+            correct: 1,
+        };
+        let mc = McItem::tokenize(&item);
+        assert_eq!(mc.context.len(), 3);
+        assert_eq!(mc.choices[1].len(), 5);
+        assert_eq!(mc.correct, 1);
+    }
+
+    use crate::eval::tasks::Item;
+}

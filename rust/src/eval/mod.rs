@@ -1,0 +1,13 @@
+//! Evaluation harness: 8 synthetic multiple-choice "reasoning" tasks
+//! (stand-ins for ARC-e/c, BoolQ, HellaSwag, MMLU, OBQA, PIQA,
+//! WinoGrande — DESIGN.md §2) scored exactly like lm-eval-harness
+//! (choice log-likelihood, optionally length-normalized), plus
+//! perplexity on the tiny-c4 / tiny-wiki validation splits.
+
+pub mod harness;
+pub mod perplexity;
+pub mod tasks;
+
+pub use harness::{evaluate_all, EvalSummary, McItem, TaskResult};
+pub use perplexity::perplexity;
+pub use tasks::{all_tasks, TaskSpec};

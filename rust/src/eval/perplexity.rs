@@ -1,0 +1,47 @@
+//! Perplexity evaluation (paper App. F.1, Tables 14/15).
+
+use crate::data::corpus::Corpus;
+use crate::error::Result;
+use crate::executor::engine::Engine;
+use crate::sampling::log_softmax;
+
+/// Perplexity over `n_windows` sequential windows of `win` tokens.
+///
+/// Each window is prefetched once; token t is scored from logits at t-1
+/// (the first token of a window is unscored, standard sliding protocol).
+pub fn perplexity(engine: &Engine, corpus: &Corpus, n_windows: usize, win: usize) -> Result<f64> {
+    let windows = corpus.sequential_windows(win, n_windows);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for w in windows {
+        let out = engine.prefill(w, 1, w.len(), None)?;
+        let logits = engine.head(&out.hidden)?;
+        for t in 1..w.len() {
+            let ls = log_softmax(logits.at2(0, t - 1));
+            nll -= ls[w[t] as usize];
+            count += 1;
+        }
+    }
+    if count == 0 {
+        return Ok(f64::INFINITY);
+    }
+    Ok((nll / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    // engine-backed perplexity is covered by rust/tests/test_nbl_end_to_end.rs;
+    // the unit here checks degenerate inputs only.
+    use crate::data::corpus::{Corpus, CorpusId};
+
+    #[test]
+    fn empty_windows_is_infinite() {
+        let c = Corpus {
+            id: CorpusId::TinyC4,
+            split: "val".into(),
+            tokens: vec![1, 2, 3],
+        };
+        // window longer than the corpus -> no windows -> inf
+        assert_eq!(c.sequential_windows(100, 5).len(), 0);
+    }
+}

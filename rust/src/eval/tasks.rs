@@ -1,0 +1,299 @@
+//! Synthetic multiple-choice task generators.
+//!
+//! Every task draws items from the *same grammar the models were trained
+//! on* (python/compile/corpora.py — word lists mirrored here), with the
+//! correct answer being the true-grammar continuation and distractors
+//! being corruptions. A trained model scores far above chance; random or
+//! heavily-compressed models regress toward chance — which is exactly the
+//! measurement the paper's benchmark tables make.
+//!
+//! Task menu mirrors the paper's eight benchmarks in format:
+//!   arc_e      4-way continuation, category-violating distractors (easy)
+//!   arc_c      4-way continuation, same-category distractors (hard)
+//!   boolq      2-way yes/no fact check, raw loglik (paper: non-norm)
+//!   hellaswag  4-way next-sentence, length-normalized
+//!   mmlu       4-way infobox completion with 5-shot context
+//!   obqa       4-way definition completion, length-normalized
+//!   piqa       2-way grammatical-vs-scrambled, length-normalized
+//!   winogrande 2-way referent resolution
+
+use crate::util::rng::Rng;
+
+// word lists mirrored from python/compile/corpora.py
+const NOUNS: &[&str] = &[
+    "robot", "garden", "river", "engine", "signal", "cache", "kernel",
+    "matrix", "tensor", "packet", "planet", "crystal", "circuit", "library",
+    "model", "window", "market", "forest", "valley", "beacon",
+];
+const ADJS: &[&str] = &[
+    "small", "bright", "hidden", "rapid", "quiet", "linear", "sparse",
+    "dense", "ancient", "modern", "stable", "fragile", "deep", "shallow",
+];
+const VERBS_T: &[&str] = &[
+    "moves", "computes", "stores", "routes", "compresses", "observes",
+    "updates", "encodes", "decodes", "balances", "measures", "predicts",
+];
+const ADVS: &[&str] = &["quickly", "slowly", "carefully", "rarely", "often", "silently"];
+const PLACES: &[&str] = &[
+    "the north field", "the old town", "the data hall", "the lab",
+    "the harbor", "the archive",
+];
+const NAMES: &[&str] = &["arin", "bela", "cato", "dara", "evin", "fara", "goran", "hale"];
+const WIKI_TOPICS: &[&str] = &[
+    "linear estimator", "canonical analysis", "block cipher", "query cache",
+    "token router", "systolic array", "prefix tree", "ring buffer",
+    "hash table", "state machine", "packet filter", "page allocator",
+];
+const WIKI_FIELDS: &[&str] = &["type", "origin", "status", "class", "order", "family"];
+const WIKI_VALUES: &[&str] = &[
+    "primary", "secondary", "derived", "classical", "modern",
+    "composite", "atomic", "stable", "deprecated",
+];
+
+/// One multiple-choice item (strings; the harness tokenizes).
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub correct: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    /// Length-normalize choice log-likelihood (lm-eval "acc_norm").
+    pub length_norm: bool,
+    pub n_choices: usize,
+}
+
+pub const TASKS: &[TaskSpec] = &[
+    TaskSpec { name: "arc_e", length_norm: true, n_choices: 4 },
+    TaskSpec { name: "arc_c", length_norm: true, n_choices: 4 },
+    TaskSpec { name: "boolq", length_norm: false, n_choices: 2 },
+    TaskSpec { name: "hellaswag", length_norm: true, n_choices: 4 },
+    TaskSpec { name: "mmlu", length_norm: false, n_choices: 4 },
+    TaskSpec { name: "obqa", length_norm: true, n_choices: 4 },
+    TaskSpec { name: "piqa", length_norm: true, n_choices: 2 },
+    TaskSpec { name: "winogrande", length_norm: false, n_choices: 2 },
+];
+
+pub fn all_tasks() -> &'static [TaskSpec] {
+    TASKS
+}
+
+fn pick<'a>(rng: &mut Rng, xs: &[&'a str]) -> &'a str {
+    xs[rng.below(xs.len())]
+}
+
+fn pick_other<'a>(rng: &mut Rng, xs: &[&'a str], not: &str) -> &'a str {
+    loop {
+        let c = pick(rng, xs);
+        if c != not {
+            return c;
+        }
+    }
+}
+
+/// Shuffle the correct answer into a random slot.
+fn assemble(rng: &mut Rng, context: String, correct: String, distractors: Vec<String>) -> Item {
+    let mut choices = distractors;
+    let slot = rng.below(choices.len() + 1);
+    choices.insert(slot, correct);
+    Item { context, choices, correct: slot }
+}
+
+pub fn generate(task: &TaskSpec, n_items: usize, seed: u64) -> Vec<Item> {
+    let mut rng = Rng::new(seed ^ fxhash(task.name));
+    (0..n_items).map(|_| generate_one(task.name, &mut rng)).collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+fn generate_one(name: &str, rng: &mut Rng) -> Item {
+    match name {
+        "arc_e" => {
+            // "the {adj} {noun} {verb} the {noun2} ___" — correct: adverb;
+            // distractors: nouns (category violation, easy)
+            let ctx = format!(
+                "the {} {} {} the {} ",
+                pick(rng, ADJS), pick(rng, NOUNS), pick(rng, VERBS_T), pick(rng, NOUNS)
+            );
+            let correct = format!("{}.", pick(rng, ADVS));
+            let distractors = (0..3).map(|_| format!("{}.", pick(rng, NOUNS))).collect();
+            assemble(rng, ctx, correct, distractors)
+        }
+        "arc_c" => {
+            // harder: the count-sentence template; distractors swap the
+            // plural suffix / preposition structure (same category)
+            let k = 2 + rng.below(98);
+            let adj = pick(rng, ADJS);
+            let noun = pick(rng, NOUNS);
+            let place = pick(rng, PLACES);
+            let ctx = format!("there are {k} {adj} ");
+            let correct = format!("{noun}s in {place}.");
+            let distractors = vec![
+                format!("{noun}s on {place}."),                        // wrong preposition
+                format!("{}s in {place}.", pick_other(rng, ADVS, "")), // adverb as noun
+                format!("{noun}s in the {}.", pick(rng, NOUNS)),       // noun as place
+            ];
+            assemble(rng, ctx, correct, distractors)
+        }
+        "boolq" => {
+            // 2-way category agreement: after "near the" the grammar only
+            // ever produces places — never bare nouns.
+            let name = pick(rng, NAMES);
+            let noun = pick(rng, NOUNS);
+            let place = pick(rng, PLACES).trim_start_matches("the ").to_string();
+            let wrong = pick(rng, NOUNS);
+            let ctx = format!("{name} said that the {noun} near the ");
+            assemble(rng, ctx, format!("{place} "), vec![format!("{wrong} ")])
+        }
+        "hellaswag" => {
+            // two true sentences, pick the true third vs sentences built
+            // from scrambled grammar
+            let s = |rng: &mut Rng| {
+                format!(
+                    "the {} {} {} the {} {}.",
+                    pick(rng, ADJS), pick(rng, NOUNS), pick(rng, VERBS_T),
+                    pick(rng, NOUNS), pick(rng, ADVS)
+                )
+            };
+            let ctx = format!("{} {} ", s(rng), s(rng));
+            let correct = s(rng);
+            let scrambled = |rng: &mut Rng| {
+                format!(
+                    "the {} {} {} the {} {}.",
+                    pick(rng, NOUNS), pick(rng, ADVS), pick(rng, ADJS),
+                    pick(rng, VERBS_T), pick(rng, NOUNS)
+                )
+            };
+            let distractors = (0..3).map(|_| scrambled(rng)).collect();
+            assemble(rng, ctx, correct, distractors)
+        }
+        "mmlu" => {
+            // 5-shot infobox completion: "field: value" lines from the
+            // tiny-wiki grammar, answer with a valid VALUE (distractors:
+            // topics — invalid fillers)
+            let mut ctx = String::new();
+            for _ in 0..5 {
+                ctx.push_str(&format!(
+                    "{}: {}\n",
+                    pick(rng, WIKI_FIELDS),
+                    pick(rng, WIKI_VALUES)
+                ));
+            }
+            ctx.push_str(&format!("{}:", pick(rng, WIKI_FIELDS)));
+            // distractors: adjectives — length-matched to the values but
+            // never seen after "field:" in the wiki grammar ("stable"
+            // lives in both lists, so re-draw on collision)
+            let value = pick(rng, WIKI_VALUES);
+            let correct = format!(" {value}");
+            let distractors = (0..3)
+                .map(|_| format!(" {}", pick_other(rng, ADJS, value)))
+                .collect();
+            assemble(rng, ctx, correct, distractors)
+        }
+        "obqa" => {
+            // definition completion from the wiki grammar
+            let topic = pick(rng, WIKI_TOPICS);
+            let ctx = format!("== {topic} ==\na {topic} is a ");
+            let correct = format!("{} {} that {} data.",
+                                  pick(rng, ADJS), pick(rng, NOUNS), pick(rng, VERBS_T));
+            let distractors = (0..3)
+                .map(|_| format!("{} {} that {} data.",
+                                 pick(rng, ADVS), pick(rng, VERBS_T), pick(rng, ADJS)))
+                .collect();
+            assemble(rng, ctx, correct, distractors)
+        }
+        "piqa" => {
+            // grammatical vs word-order-scrambled completion (2-way)
+            let name = pick(rng, NAMES);
+            let noun = pick(rng, NOUNS);
+            let place = pick(rng, PLACES);
+            let verb = pick(rng, VERBS_T);
+            let adj = pick(rng, ADJS);
+            let obj = pick(rng, NOUNS);
+            let ctx = format!("{name} said that ");
+            let correct = format!("the {noun} near {place} {verb} every {adj} {obj}.");
+            let wrong = format!("near the {verb} {place} every {noun} {obj} {adj}.");
+            assemble(rng, ctx, correct, vec![wrong])
+        }
+        "winogrande" => {
+            // 2-way plural agreement across a long dependency: the "there
+            // are {k}" opener forces the plural form much later.
+            let k = 2 + rng.below(98);
+            let adj = pick(rng, ADJS);
+            let noun = pick(rng, NOUNS);
+            let place = pick(rng, PLACES);
+            let ctx = format!("there are {k} {adj} {noun}");
+            let correct = format!("s in {place}.");
+            let wrong = format!(" in {place}.");
+            assemble(rng, ctx, correct, vec![wrong])
+        }
+        other => panic!("unknown task {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_items() {
+        for task in TASKS {
+            let items = generate(task, 20, 7);
+            assert_eq!(items.len(), 20);
+            for it in &items {
+                assert_eq!(it.choices.len(), task.n_choices, "{}", task.name);
+                assert!(it.correct < it.choices.len());
+                assert!(!it.context.is_empty());
+                assert!(it.choices.iter().all(|c| !c.is_empty()));
+                assert!(it.context.is_ascii() && it.choices.iter().all(|c| c.is_ascii()));
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for task in TASKS {
+            let a = generate(task, 5, 11);
+            let b = generate(task, 5, 11);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.choices, y.choices);
+                assert_eq!(x.correct, y.correct);
+            }
+        }
+    }
+
+    #[test]
+    fn correct_slot_is_uniformish() {
+        let spec = &TASKS[0];
+        let items = generate(spec, 200, 3);
+        let mut counts = [0usize; 4];
+        for it in items {
+            counts[it.correct] += 1;
+        }
+        for c in counts {
+            assert!(c > 20, "slot distribution skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn correct_choice_differs_from_distractors() {
+        for task in TASKS {
+            for it in generate(task, 30, 5) {
+                let correct = &it.choices[it.correct];
+                for (i, c) in it.choices.iter().enumerate() {
+                    if i != it.correct {
+                        assert_ne!(c, correct, "{}", task.name);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Calibration capture: adapt the engine's prefill tap to the
+//! `nbl::calibrate::ActivationSource` interface.
+//!
+//! Streams `n_seqs` sequences of `seq_len` tokens from a calibration
+//! token stream through the engine, emitting per-layer (X, Y_delta) token
+//! rows — the paper's §3.1 calibration dataset D with s sequences of
+//! context length t.
+
+use crate::error::Result;
+use crate::executor::engine::Engine;
+use crate::nbl::calibrate::ActivationSource;
+
+pub struct CaptureSource<'a> {
+    engine: &'a Engine,
+    /// Calibration token stream (windows are cut deterministically).
+    tokens: &'a [u32],
+    pub n_seqs: usize,
+    pub seq_len: usize,
+}
+
+impl<'a> CaptureSource<'a> {
+    pub fn new(engine: &'a Engine, tokens: &'a [u32], n_seqs: usize, seq_len: usize) -> Self {
+        CaptureSource { engine, tokens, n_seqs, seq_len }
+    }
+
+    /// Deterministic window starts covering the stream.
+    fn window(&self, i: usize) -> &'a [u32] {
+        let span = self.tokens.len().saturating_sub(self.seq_len + 1).max(1);
+        let start = (i * 2654435761usize) % span; // Fibonacci hashing stride
+        &self.tokens[start..start + self.seq_len]
+    }
+}
+
+impl ActivationSource for CaptureSource<'_> {
+    fn n_layers(&self) -> usize {
+        self.engine.config().n_layers
+    }
+
+    fn d_model(&self) -> usize {
+        self.engine.config().d_model
+    }
+
+    fn stream(
+        &mut self,
+        sink: &mut dyn FnMut(usize, &[f32], &[f32]) -> Result<()>,
+    ) -> Result<()> {
+        for i in 0..self.n_seqs {
+            let ids = self.window(i);
+            let mut cb = |layer: usize,
+                          x: &crate::tensor::Tensor,
+                          y: &crate::tensor::Tensor|
+             -> Result<()> { sink(layer, x.data(), y.data()) };
+            self.engine.prefill(ids, 1, self.seq_len, Some(&mut cb))?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,429 @@
+//! The execution engine: plan-dispatched layerwise forward passes.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::kvcache::KvState;
+use crate::model::artifacts::Grid;
+use crate::model::weights::Weights;
+use crate::nbl::plan::{BlockOp, MlpOp, ModelPlan};
+use crate::runtime::literals::{lit_from_tensor, lit_scalar_i32, tensor_from_lit};
+use crate::runtime::registry::{ArgRef, HeldBuffer};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Cached per-layer weight device buffers (uploaded once per engine —
+/// §Perf iteration 2: weights never re-upload on the decode hot path).
+struct LayerLits {
+    attn_norm: HeldBuffer,
+    wq: HeldBuffer,
+    wk: HeldBuffer,
+    wv: HeldBuffer,
+    wo: HeldBuffer,
+    mlp_norm: HeldBuffer,
+    w1: HeldBuffer,
+    w3: HeldBuffer,
+    w2: HeldBuffer,
+    /// LMMSE substitution weights when the plan says Linear.
+    linear: Option<(HeldBuffer, HeldBuffer)>,
+}
+
+pub struct PrefillResult {
+    pub state: KvState,
+    /// Final hidden states at the bucket shape [Bb, Tb, D].
+    pub hidden: Tensor,
+    /// Bucket used.
+    pub t_bucket: usize,
+}
+
+pub struct Engine {
+    pub runtime: Arc<Runtime>,
+    pub weights: Arc<Weights>,
+    pub plan: ModelPlan,
+    grid: Grid,
+    layers: Vec<LayerLits>,
+    final_norm: HeldBuffer,
+    w_head: HeldBuffer,
+}
+
+// Literal members are plain host buffers on the CPU backend; the runtime
+// serializes PJRT access internally.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load a model by name from the artifacts with the baseline plan.
+    pub fn load(runtime: Arc<Runtime>, model: &str) -> Result<Engine> {
+        let (bin, json) = runtime.artifacts().weights_paths(model)?;
+        let weights = Arc::new(Weights::load(model, &bin, &json)?);
+        let plan = ModelPlan::baseline(weights.config.n_layers);
+        Engine::new(runtime, weights, plan)
+    }
+
+    pub fn new(runtime: Arc<Runtime>, weights: Arc<Weights>, plan: ModelPlan) -> Result<Engine> {
+        if plan.n_layers() != weights.config.n_layers {
+            return Err(Error::Config(format!(
+                "plan has {} layers, model has {}",
+                plan.n_layers(),
+                weights.config.n_layers
+            )));
+        }
+        let grid = runtime.artifacts().grid()?;
+        let mut layers = Vec::with_capacity(weights.layers.len());
+        for (lw, lp) in weights.layers.iter().zip(&plan.layers) {
+            let linear = match &lp.attn {
+                BlockOp::Linear(lin) => {
+                    let d = weights.config.d_model;
+                    if lin.d_in != d || lin.d_out != d {
+                        return Err(Error::Shape(format!(
+                            "linear layer {}x{} vs d_model {d}",
+                            lin.d_in, lin.d_out
+                        )));
+                    }
+                    let w = crate::runtime::literals::lit_from_slice(&lin.w, &[d, d])?;
+                    let b = crate::runtime::literals::lit_from_slice(&lin.b, &[d])?;
+                    Some((runtime.upload(w)?, runtime.upload(b)?))
+                }
+                _ => None,
+            };
+            let up = |t: &crate::tensor::Tensor| -> Result<HeldBuffer> {
+                runtime.upload(lit_from_tensor(t)?)
+            };
+            layers.push(LayerLits {
+                attn_norm: up(&lw.attn_norm)?,
+                wq: up(&lw.wq)?,
+                wk: up(&lw.wk)?,
+                wv: up(&lw.wv)?,
+                wo: up(&lw.wo)?,
+                mlp_norm: up(&lw.mlp_norm)?,
+                w1: up(&lw.w1)?,
+                w3: up(&lw.w3)?,
+                w2: up(&lw.w2)?,
+                linear,
+            });
+        }
+        Ok(Engine {
+            final_norm: runtime.upload(lit_from_tensor(&weights.final_norm)?)?,
+            w_head: runtime.upload(lit_from_tensor(&weights.w_head)?)?,
+            runtime,
+            weights,
+            plan,
+            grid,
+            layers,
+        })
+    }
+
+    /// Same weights, different plan (NBL-m, DROP-m, ...).
+    pub fn with_plan(&self, plan: ModelPlan) -> Result<Engine> {
+        Engine::new(self.runtime.clone(), self.weights.clone(), plan)
+    }
+
+    pub fn config(&self) -> &crate::model::config::ModelConfig {
+        &self.weights.config
+    }
+
+    // ------------------------------------------------------------- buckets
+
+    pub fn batch_bucket(&self, batch: usize) -> Result<usize> {
+        Grid::bucket(&self.grid.batches, batch).ok_or_else(|| {
+            Error::Serving(format!(
+                "batch {batch} exceeds grid {:?}",
+                self.grid.batches
+            ))
+        })
+    }
+
+    pub fn prefill_bucket(&self, len: usize) -> Result<usize> {
+        Grid::bucket(&self.grid.prefill_lens, len).ok_or_else(|| {
+            Error::Serving(format!(
+                "prompt length {len} exceeds grid {:?}",
+                self.grid.prefill_lens
+            ))
+        })
+    }
+
+    pub fn cached_bucket(&self, s: usize) -> Result<usize> {
+        Grid::bucket(&self.grid.cached_lens, s).ok_or_else(|| {
+            Error::Serving(format!("step width {s} exceeds grid {:?}", self.grid.cached_lens))
+        })
+    }
+
+    // ------------------------------------------------------------- prefill
+
+    /// Prefill a batch of equal-length prompts.
+    ///
+    /// `ids` is row-major [batch, len]. Rows are padded to the bucket
+    /// internally (causal attention makes right-padding invisible to the
+    /// real positions). `capture` receives per-layer (X, Y_delta) at the
+    /// *real* token rows — the calibration tap (paper §3.1).
+    pub fn prefill(
+        &self,
+        ids: &[u32],
+        batch: usize,
+        len: usize,
+        mut capture: Option<&mut dyn FnMut(usize, &Tensor, &Tensor) -> Result<()>>,
+    ) -> Result<PrefillResult> {
+        if len == 0 || batch == 0 || ids.len() != batch * len {
+            return Err(Error::Shape(format!(
+                "prefill: {} ids for {batch}x{len}",
+                ids.len()
+            )));
+        }
+        let bb = self.batch_bucket(batch)?;
+        let tb = self.prefill_bucket(len)?;
+        let d = self.config().d_model;
+
+        // pad ids to [bb, tb] (token 0 as pad; garbage rows are ignored)
+        let mut padded = vec![0u32; bb * tb];
+        for b in 0..batch {
+            padded[b * tb..b * tb + len].copy_from_slice(&ids[b * len..(b + 1) * len]);
+        }
+        let x0 = self.weights.embed(&padded, bb, tb)?;
+        let mut x = lit_from_tensor(&x0)?;
+        let mut state = KvState::empty(&self.plan, self.config(), batch, bb);
+        state.pos = len;
+
+        let attn_op = format!("attn_prefill_b{bb}_t{tb}");
+        let init_op = format!("cache_init_b{bb}_t{tb}");
+        let mlp_op = format!("mlp_b{bb}_t{tb}");
+        let lin_op = format!("linear_block_b{bb}_t{tb}");
+
+        for (li, (lits, lp)) in self.layers.iter().zip(&self.plan.layers).enumerate() {
+            // capture taps X before the attention slot
+            let x_in = if capture.is_some() {
+                Some(tensor_from_lit(&x)?)
+            } else {
+                None
+            };
+            match &lp.attn {
+                BlockOp::Attention => {
+                    let out = self.runtime.run_mixed(
+                        &attn_op,
+                        &[
+                            ArgRef::Lit(&x),
+                            ArgRef::Buf(&lits.attn_norm),
+                            ArgRef::Buf(&lits.wq),
+                            ArgRef::Buf(&lits.wk),
+                            ArgRef::Buf(&lits.wv),
+                            ArgRef::Buf(&lits.wo),
+                        ],
+                    )?;
+                    let [y, k, v]: [xla::Literal; 3] = out
+                        .try_into()
+                        .map_err(|_| Error::Xla("attn_prefill arity".into()))?;
+                    if let Some(cb) = capture.as_deref_mut() {
+                        let x_t = x_in.as_ref().unwrap();
+                        let y_t = tensor_from_lit(&y)?;
+                        let (xr, yr) = rows_delta(x_t, &y_t, batch, len, d);
+                        cb(li, &xr, &yr)?;
+                    }
+                    let caches = self.runtime.run(&init_op, &[&k, &v])?;
+                    let [kc, vc]: [xla::Literal; 2] = caches
+                        .try_into()
+                        .map_err(|_| Error::Xla("cache_init arity".into()))?;
+                    state.caches[li] = Some((kc, vc));
+                    x = y;
+                }
+                BlockOp::Linear(_) => {
+                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let out = self.runtime.run_mixed(
+                        &lin_op,
+                        &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
+                    )?;
+                    x = into_single(out, "linear_block")?;
+                }
+                BlockOp::Identity => {}
+            }
+            if lp.mlp == MlpOp::Mlp {
+                let out = self.runtime.run_mixed(
+                    &mlp_op,
+                    &[
+                        ArgRef::Lit(&x),
+                        ArgRef::Buf(&lits.mlp_norm),
+                        ArgRef::Buf(&lits.w1),
+                        ArgRef::Buf(&lits.w3),
+                        ArgRef::Buf(&lits.w2),
+                    ],
+                )?;
+                x = into_single(out, "mlp")?;
+            }
+        }
+        Ok(PrefillResult {
+            state,
+            hidden: tensor_from_lit(&x)?,
+            t_bucket: tb,
+        })
+    }
+
+    // -------------------------------------------------------------- decode
+
+    /// Run `s_real` new tokens (per request) through the cached path.
+    ///
+    /// `ids` is [batch, s_real]; all requests in the group share `state.pos`.
+    /// Returns logits [batch, s_real, V].
+    pub fn decode(&self, state: &mut KvState, ids: &[u32], s_real: usize) -> Result<Tensor> {
+        let batch = state.batch;
+        if ids.len() != batch * s_real {
+            return Err(Error::Shape(format!(
+                "decode: {} ids for {batch}x{s_real}",
+                ids.len()
+            )));
+        }
+        if state.pos + s_real > state.max_ctx {
+            return Err(Error::Serving(format!(
+                "context overflow: {} + {s_real} > {}",
+                state.pos, state.max_ctx
+            )));
+        }
+        let bb = state.bucket_batch;
+        let sb = self.cached_bucket(s_real)?;
+
+        let mut padded = vec![0u32; bb * sb];
+        for b in 0..batch {
+            padded[b * sb..b * sb + s_real]
+                .copy_from_slice(&ids[b * s_real..(b + 1) * s_real]);
+        }
+        let x0 = self.weights.embed(&padded, bb, sb)?;
+        let mut x = lit_from_tensor(&x0)?;
+        let pos = lit_scalar_i32(state.pos as i32);
+
+        let cached_op = format!("attn_cached_b{bb}_s{sb}");
+        let mlp_op = format!("mlp_b{bb}_t{sb}");
+        let lin_op = format!("linear_block_b{bb}_t{sb}");
+
+        for (li, (lits, lp)) in self.layers.iter().zip(&self.plan.layers).enumerate() {
+            match &lp.attn {
+                BlockOp::Attention => {
+                    let (kc, vc) = state.caches[li]
+                        .take()
+                        .ok_or_else(|| Error::Serving(format!("layer {li}: no KV cache")))?;
+                    let out = self.runtime.run_mixed(
+                        &cached_op,
+                        &[
+                            ArgRef::Lit(&x),
+                            ArgRef::Buf(&lits.attn_norm),
+                            ArgRef::Buf(&lits.wq),
+                            ArgRef::Buf(&lits.wk),
+                            ArgRef::Buf(&lits.wv),
+                            ArgRef::Buf(&lits.wo),
+                            ArgRef::Lit(&kc),
+                            ArgRef::Lit(&vc),
+                            ArgRef::Lit(&pos),
+                        ],
+                    )?;
+                    let [y, kc2, vc2]: [xla::Literal; 3] = out
+                        .try_into()
+                        .map_err(|_| Error::Xla("attn_cached arity".into()))?;
+                    state.caches[li] = Some((kc2, vc2));
+                    x = y;
+                }
+                BlockOp::Linear(_) => {
+                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let out = self.runtime.run_mixed(
+                        &lin_op,
+                        &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
+                    )?;
+                    x = into_single(out, "linear_block")?;
+                }
+                BlockOp::Identity => {}
+            }
+            if lp.mlp == MlpOp::Mlp {
+                let out = self.runtime.run_mixed(
+                    &mlp_op,
+                    &[
+                        ArgRef::Lit(&x),
+                        ArgRef::Buf(&lits.mlp_norm),
+                        ArgRef::Buf(&lits.w1),
+                        ArgRef::Buf(&lits.w3),
+                        ArgRef::Buf(&lits.w2),
+                    ],
+                )?;
+                x = into_single(out, "mlp")?;
+            }
+        }
+        // note: if a speculative step is later partially rejected, the
+        // caller rolls `state.pos` back; stale cache rows beyond pos are
+        // masked out and overwritten on the next write.
+        state.pos += s_real;
+
+        let logits = self.head_lit(&x, bb, sb)?;
+        slice_logits(&logits, batch, s_real, self.config().vocab)
+    }
+
+    // ---------------------------------------------------------------- head
+
+    /// LM head over a hidden tensor [Bb, Tb, D] -> logits [Bb, Tb, V].
+    pub fn head(&self, hidden: &Tensor) -> Result<Tensor> {
+        let (bb, tb) = (hidden.shape()[0], hidden.shape()[1]);
+        let x = lit_from_tensor(hidden)?;
+        let lit = self.head_lit(&x, bb, tb)?;
+        tensor_from_lit(&lit)
+    }
+
+    fn head_lit(&self, x: &xla::Literal, bb: usize, tb: usize) -> Result<xla::Literal> {
+        let op = format!("head_b{bb}_t{tb}");
+        let out = self.runtime.run_mixed(
+            &op,
+            &[ArgRef::Lit(x), ArgRef::Buf(&self.final_norm), ArgRef::Buf(&self.w_head)],
+        )?;
+        into_single(out, "head")
+    }
+
+    /// Ops needed for a (batch, prompt_len, decode) workload — used to
+    /// warm the compile cache before latency measurements.
+    pub fn warmup_ops(&self, batch: usize, len: usize) -> Result<Vec<String>> {
+        let bb = self.batch_bucket(batch)?;
+        let tb = self.prefill_bucket(len)?;
+        Ok(vec![
+            format!("attn_prefill_b{bb}_t{tb}"),
+            format!("cache_init_b{bb}_t{tb}"),
+            format!("mlp_b{bb}_t{tb}"),
+            format!("linear_block_b{bb}_t{tb}"),
+            format!("head_b{bb}_t{tb}"),
+            format!("attn_cached_b{bb}_s1"),
+            format!("mlp_b{bb}_t1"),
+            format!("linear_block_b{bb}_t1"),
+            format!("head_b{bb}_t1"),
+        ])
+    }
+}
+
+fn into_single(out: Vec<xla::Literal>, what: &str) -> Result<xla::Literal> {
+    let mut it = out.into_iter();
+    match (it.next(), it.next()) {
+        (Some(x), None) => Ok(x),
+        _ => Err(Error::Xla(format!("{what}: expected single output"))),
+    }
+}
+
+/// Extract real-token rows and the attention delta (Y = out - in).
+fn rows_delta(x_in: &Tensor, y_out: &Tensor, batch: usize, len: usize, d: usize) -> (Tensor, Tensor) {
+    let mut xr = Vec::with_capacity(batch * len * d);
+    let mut yr = Vec::with_capacity(batch * len * d);
+    for b in 0..batch {
+        for t in 0..len {
+            let xi = x_in.at2(b, t);
+            let yo = y_out.at2(b, t);
+            xr.extend_from_slice(xi);
+            yr.extend(yo.iter().zip(xi).map(|(o, i)| o - i));
+        }
+    }
+    (
+        Tensor::new(vec![batch * len, d], xr).unwrap(),
+        Tensor::new(vec![batch * len, d], yr).unwrap(),
+    )
+}
+
+/// Slice bucket logits [Bb, Sb, V] down to [batch, s_real, V].
+fn slice_logits(lit: &xla::Literal, batch: usize, s_real: usize, vocab: usize) -> Result<Tensor> {
+    let full = tensor_from_lit(lit)?;
+    let (bb, sb) = (full.shape()[0], full.shape()[1]);
+    debug_assert!(batch <= bb && s_real <= sb);
+    let mut out = Vec::with_capacity(batch * s_real * vocab);
+    for b in 0..batch {
+        for s in 0..s_real {
+            out.extend_from_slice(full.at2(b, s));
+        }
+    }
+    Tensor::new(vec![batch, s_real, vocab], out)
+}

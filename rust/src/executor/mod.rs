@@ -1,0 +1,19 @@
+//! Layerwise execution engine.
+//!
+//! The engine composes the AOT op grid (attn_prefill / cache_init /
+//! attn_cached / linear_block / mlp / head) into full forward passes,
+//! dispatching each layer according to its substitution plan:
+//!
+//!   Attention  -> attn_prefill + cache_init   (prefill)
+//!                 attn_cached                  (decode / verify)
+//!   Linear     -> linear_block (the NBL path; no KV, no pos)
+//!   Identity   -> nothing (DROP)
+//!
+//! plus `mlp` unless the block was folded. Embedding lookup, sampling and
+//! all control flow are host-side Rust; Python never runs here.
+
+pub mod capture;
+pub mod engine;
+
+pub use capture::CaptureSource;
+pub use engine::{Engine, PrefillResult};

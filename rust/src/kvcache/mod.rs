@@ -1,0 +1,197 @@
+//! KV-cache management: per-group device cache state, a capacity-tracked
+//! pool, and the paper's §H.2 sizing formulas (Table 21).
+//!
+//! NBL's KV saving is structural: layers whose attention was linearized
+//! or dropped simply have no cache entry, so a plan with m of K layers
+//! substituted allocates (K-m)/K of the baseline bytes — the executor
+//! and this module enforce that invariant (`bytes_allocated`).
+
+use crate::error::{Error, Result};
+use crate::model::config::ModelConfig;
+use crate::nbl::plan::ModelPlan;
+
+/// Device-side KV cache for one batch group (literals stay attached to
+/// the PJRT runtime; on the CPU backend these are host buffers).
+pub struct KvState {
+    /// Logical batch (requests in the group).
+    pub batch: usize,
+    /// Executable batch bucket (>= batch; rows beyond batch are padding).
+    pub bucket_batch: usize,
+    /// Tokens cached so far (shared by the group — see DESIGN.md).
+    pub pos: usize,
+    /// Cache capacity (Tmax baked into the executables).
+    pub max_ctx: usize,
+    /// Per layer: Some((k, v)) iff the plan keeps attention there.
+    pub caches: Vec<Option<(xla::Literal, xla::Literal)>>,
+    /// Bytes accounted against the pool.
+    bytes: usize,
+}
+
+// Literals are plain host allocations on the CPU PJRT backend.
+unsafe impl Send for KvState {}
+
+impl KvState {
+    pub fn empty(plan: &ModelPlan, cfg: &ModelConfig, batch: usize, bucket_batch: usize) -> KvState {
+        let caches = plan
+            .layers
+            .iter()
+            .map(|_| None)
+            .collect();
+        KvState {
+            batch,
+            bucket_batch,
+            pos: 0,
+            max_ctx: cfg.max_ctx,
+            caches,
+            bytes: kv_bytes(cfg, plan.kv_layers(), bucket_batch, cfg.max_ctx, 4),
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_ctx.saturating_sub(self.pos)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// §H.2 grouped-query KV size: 2 * bs * n * d * (g/h) * bytes, per layer
+/// summed over layers that keep attention. (g/h == n_kv_heads/n_heads, so
+/// 2*bs*n*d*g/h == 2*bs*n*d_kv.)
+pub fn kv_bytes(
+    cfg: &ModelConfig,
+    kv_layers: usize,
+    batch: usize,
+    ctx: usize,
+    bytes_per_elem: usize,
+) -> usize {
+    2 * batch * ctx * cfg.d_kv() * bytes_per_elem * kv_layers
+}
+
+/// Capacity-tracked allocator for batch groups: admission control for the
+/// scheduler (requests wait when the cache budget is exhausted).
+pub struct KvPool {
+    capacity_bytes: usize,
+    in_use: std::sync::atomic::AtomicUsize,
+}
+
+impl KvPool {
+    pub fn new(capacity_bytes: usize) -> KvPool {
+        KvPool { capacity_bytes, in_use: 0.into() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Try to reserve bytes for a new group; Err if over budget.
+    pub fn reserve(&self, bytes: usize) -> Result<KvLease<'_>> {
+        use std::sync::atomic::Ordering;
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            if cur + bytes > self.capacity_bytes {
+                return Err(Error::Serving(format!(
+                    "KV pool exhausted: {} + {} > {}",
+                    cur, bytes, self.capacity_bytes
+                )));
+            }
+            match self.in_use.compare_exchange(
+                cur,
+                cur + bytes,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(KvLease { pool: self, bytes }),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// RAII lease; returns bytes to the pool on drop.
+pub struct KvLease<'a> {
+    pool: &'a KvPool,
+    bytes: usize,
+}
+
+impl KvLease<'_> {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for KvLease<'_> {
+    fn drop(&mut self) {
+        self.pool
+            .in_use
+            .fetch_sub(self.bytes, std::sync::atomic::Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 6,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ff: 256,
+            max_ctx: 512,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn kv_bytes_matches_paper_formula() {
+        let c = cfg();
+        // 2 * bs * n * d * g/h * bytes * K
+        let d = c.d_model;
+        let g_over_h = c.n_kv_heads as f64 / c.n_heads as f64;
+        let want = (2.0 * 64.0 * 512.0 * d as f64 * g_over_h * 2.0 * 6.0) as usize;
+        assert_eq!(kv_bytes(&c, 6, 64, 512, 2), want);
+    }
+
+    #[test]
+    fn nbl_scaling_is_k_minus_m_over_k() {
+        let c = cfg();
+        let full = kv_bytes(&c, 6, 1, 512, 4);
+        for m in 0..=6 {
+            let got = kv_bytes(&c, 6 - m, 1, 512, 4);
+            assert_eq!(got * 6, full * (6 - m));
+        }
+    }
+
+    #[test]
+    fn pool_reserve_and_release() {
+        let pool = KvPool::new(1000);
+        let a = pool.reserve(600).unwrap();
+        assert_eq!(pool.in_use(), 600);
+        assert!(pool.reserve(500).is_err());
+        drop(a);
+        assert_eq!(pool.in_use(), 0);
+        let _b = pool.reserve(1000).unwrap();
+    }
+
+    #[test]
+    fn empty_state_accounts_plan_layers() {
+        let c = cfg();
+        let mut plan = crate::nbl::plan::ModelPlan::baseline(6);
+        plan.drop_attn(0);
+        plan.drop_attn(1);
+        let st = KvState::empty(&plan, &c, 1, 1);
+        assert_eq!(st.bytes(), kv_bytes(&c, 4, 1, 512, 4));
+        assert_eq!(st.remaining(), 512);
+    }
+}

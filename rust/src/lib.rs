@@ -1,0 +1,45 @@
+//! # nbl — Neural Block Linearization
+//!
+//! Production-shaped reproduction of *Efficient Large Language Model
+//! Inference with Neural Block Linearization* (Erdogan, Tonin, Cevher,
+//! 2025). NBL replaces self-attention blocks of a pre-trained transformer
+//! with closed-form linear layers fitted by the LMMSE estimator on
+//! calibration activations, selecting layers via a CCA-derived bound on
+//! the linearization NMSE (paper Thm. 3.2). No fine-tuning involved.
+//!
+//! The crate is the L3 coordinator of a three-layer stack (see DESIGN.md):
+//! JAX/Pallas author the compute graph at build time, this crate loads the
+//! AOT-lowered HLO artifacts through the PJRT C API and owns everything at
+//! run time: calibration, substitution planning, KV-cache management,
+//! batching, serving, evaluation and the benchmark harness.
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! ```ignore
+//! let engine = Engine::load(&Artifacts::discover()?, "main")?;
+//! let plan = nbl::calibrate(&engine, &calib_set)?.plan_attn_nbl(2);
+//! let engine = engine.with_plan(plan);
+//! let out = engine.generate(&prompt_ids, 64, &SamplingParams::greedy())?;
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod executor;
+pub mod kvcache;
+pub mod linalg;
+pub mod model;
+pub mod nbl;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod spec;
+pub mod stats;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

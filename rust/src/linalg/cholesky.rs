@@ -1,0 +1,163 @@
+//! Cholesky factorization + triangular solves (the LMMSE normal-equation
+//! path, Prop. 3.1: `Cxx W = Cxy` with Cxx symmetric PSD).
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Lower-triangular factor L with A = L L^T.
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    pub fn factor(a: &Mat) -> Result<Cholesky> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::Linalg("cholesky: not square".into()));
+        }
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(Error::Linalg(format!(
+                            "cholesky: non-PD pivot {s:.3e} at {i}"
+                        )));
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve A x = b for one RHS vector.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        // backward: L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A X = B column-by-column.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// log det(A) = 2 * sum log L_ii (used by tests / diagnostics).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    #[test]
+    fn reconstruction_property() {
+        check(
+            13,
+            25,
+            |g: &mut Gen| {
+                let n = g.usize_in(1, (16 >> g.shrink.min(3)).max(1));
+                let a = Mat::from_fn(n, n, |_, _| g.rng.normal());
+                let mut p = a.matmul_nt(&a); // A A^T PSD
+                for i in 0..n {
+                    p[(i, i)] += 0.5;
+                }
+                p
+            },
+            |a| {
+                let ch = Cholesky::factor(a).map_err(|e| e.to_string())?;
+                let rec = ch.l().matmul(&ch.l().transpose());
+                if rec.sub(a).max_abs() > 1e-9 {
+                    return Err(format!("reconstruction err {}", rec.sub(a).max_abs()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn solve_property() {
+        check(
+            17,
+            25,
+            |g: &mut Gen| {
+                let n = g.usize_in(1, (12 >> g.shrink.min(3)).max(1));
+                let a = Mat::from_fn(n, n, |_, _| g.rng.normal());
+                let mut p = a.matmul_nt(&a);
+                for i in 0..n {
+                    p[(i, i)] += 1.0;
+                }
+                let x: Vec<f64> = (0..n).map(|_| g.rng.normal()).collect();
+                (p, x)
+            },
+            |(a, x)| {
+                let b: Vec<f64> = (0..a.rows())
+                    .map(|i| (0..a.cols()).map(|j| a[(i, j)] * x[j]).sum())
+                    .collect();
+                let got = Cholesky::factor(a).map_err(|e| e.to_string())?.solve(&b);
+                for (g, w) in got.iter().zip(x) {
+                    if (g - w).abs() > 1e-7 {
+                        return Err(format!("{g} vs {w}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1, 3
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Cholesky::factor(&Mat::zeros(2, 3)).is_err());
+    }
+}

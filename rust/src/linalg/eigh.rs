@@ -1,0 +1,172 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Jacobi is O(d^3) per sweep with quadratic convergence once nearly
+//! diagonal — robust and simple, which matters here because the CCA chain
+//! (Alg. 2) feeds it covariance matrices with eigenvalue spreads of 1e8+.
+//! For the d <= 1024 sizes of Table 1/7 this is fast enough on one core
+//! (bench_calibration measures the scaling the paper reports).
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+pub struct EighResult {
+    /// Eigenvalues in descending order.
+    pub values: Vec<f64>,
+    /// Column j of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Mat,
+}
+
+const MAX_SWEEPS: usize = 64;
+
+pub fn eigh(a: &Mat) -> Result<EighResult> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Linalg("eigh: not square".into()));
+    }
+    if n == 0 {
+        return Ok(EighResult { values: vec![], vectors: Mat::zeros(0, 0) });
+    }
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::identity(n);
+    let scale = m.max_abs().max(1e-300);
+    let tol = 1e-14 * scale;
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off = off.max(m[(i, j)].abs());
+            }
+        }
+        if off <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol * 1e-2 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract + sort descending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
+    let vectors = Mat::from_fn(n, n, |i, j| v[(i, idx[j])]);
+    Ok(EighResult { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstruction_property() {
+        check(
+            23,
+            15,
+            |g: &mut Gen| {
+                let n = g.usize_in(1, (20 >> g.shrink.min(3)).max(1));
+                let a = Mat::from_fn(n, n, |_, _| g.rng.normal());
+                let mut s = a.add(&a.transpose());
+                s.symmetrize();
+                s
+            },
+            |a| {
+                let EighResult { values, vectors } = eigh(a).map_err(|e| e.to_string())?;
+                let n = a.rows();
+                // A v_j == λ_j v_j
+                for j in 0..n {
+                    for i in 0..n {
+                        let av: f64 = (0..n).map(|k| a[(i, k)] * vectors[(k, j)]).sum();
+                        if (av - values[j] * vectors[(i, j)]).abs() > 1e-7 {
+                            return Err(format!("eigpair {j} row {i}"));
+                        }
+                    }
+                }
+                // orthonormal columns
+                let vtv = vectors.transpose().matmul(&vectors);
+                if vtv.sub(&Mat::identity(n)).max_abs() > 1e-9 {
+                    return Err("not orthonormal".into());
+                }
+                // descending order
+                for w in values.windows(2) {
+                    if w[0] < w[1] - 1e-12 {
+                        return Err("not sorted".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn diagonal_is_fixed_point() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let r = eigh(&a).unwrap();
+        assert_eq!(r.values, vec![4.0, 3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn trace_equals_eigsum() {
+        let mut rng = Rng::new(8);
+        let a = Mat::from_fn(12, 12, |_, _| rng.normal());
+        let mut s = a.add(&a.transpose());
+        s.symmetrize();
+        let r = eigh(&s).unwrap();
+        let sum: f64 = r.values.iter().sum();
+        assert!((sum - s.trace()).abs() < 1e-8);
+    }
+
+    #[test]
+    fn huge_condition_number() {
+        // diag(1e8, 1) rotated: must still recover both eigenvalues
+        let c = std::f64::consts::FRAC_1_SQRT_2;
+        let q = Mat::from_rows(vec![vec![c, -c], vec![c, c]]);
+        let d = Mat::from_rows(vec![vec![1e8, 0.0], vec![0.0, 1.0]]);
+        let a = q.matmul(&d).matmul(&q.transpose());
+        let r = eigh(&a).unwrap();
+        assert!((r.values[0] - 1e8).abs() / 1e8 < 1e-10);
+        assert!((r.values[1] - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_and_one() {
+        assert!(eigh(&Mat::zeros(0, 0)).unwrap().values.is_empty());
+        let r = eigh(&Mat::from_rows(vec![vec![3.0]])).unwrap();
+        assert_eq!(r.values, vec![3.0]);
+    }
+}

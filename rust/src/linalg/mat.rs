@@ -1,0 +1,250 @@
+//! Row-major dense f64 matrix with the operations the calibration math
+//! needs. The matmuls use ikj loop order (cache-friendly on the row-major
+//! layout); sizes here are d x d with d <= ~1024 so this is plenty on the
+//! single-core testbed (bench_calibration measures it for Table 1/7).
+
+use std::ops::{Index, IndexMut};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// From a row-major f32 slice (activations from the executor).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// self (r x k) @ other (k x c) — ikj order.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul inner dims");
+        let (r, k, c) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0.0; r * c];
+        for i in 0..r {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * c..(i + 1) * c];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * c..(kk + 1) * c];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Mat { rows: r, cols: c, data: out }
+    }
+
+    /// self (r x k) @ other^T (c x k) — contiguous dot products.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dims");
+        let (r, k, c) = (self.rows, self.cols, other.rows);
+        Mat::from_fn(r, c, |i, j| {
+            let a = &self.data[i * k..(i + 1) * k];
+            let b = &other.data[j * k..(j + 1) * k];
+            a.iter().zip(b).map(|(x, y)| x * y).sum()
+        })
+    }
+
+    /// self^T @ self (Gram), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let (n, d) = (self.rows, self.cols);
+        let mut out = Mat::zeros(d, d);
+        for r in 0..n {
+            let row = self.row(r);
+            for i in 0..d {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in i..d {
+                    out[(i, j)] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..i {
+                out[(i, j)] = out[(j, i)];
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+
+    /// Symmetrize in place: (A + A^T)/2 (kills accumulation asymmetry
+    /// before eigh).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..i {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        let a = Mat::from_fn(5, 7, |_, _| rng.normal());
+        let b = Mat::from_fn(7, 4, |_, _| rng.normal());
+        let c = a.matmul(&b);
+        for i in 0..5 {
+            for j in 0..4 {
+                let want: f64 = (0..7).map(|k| a[(i, k)] * b[(k, j)]).sum();
+                assert!((c[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = Mat::from_fn(6, 5, |_, _| rng.normal());
+        let b = Mat::from_fn(3, 5, |_, _| rng.normal());
+        let c1 = a.matmul(&b.transpose());
+        let c2 = a.matmul_nt(&b);
+        assert!(c1.sub(&c2).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Mat::from_fn(10, 6, |_, _| rng.normal());
+        let g1 = a.transpose().matmul(&a);
+        let g2 = a.gram();
+        assert!(g1.sub(&g2).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(4);
+        let a = Mat::from_fn(4, 4, |_, _| rng.normal());
+        assert!(a.matmul(&Mat::identity(4)).sub(&a).max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn trace_and_transpose() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.trace(), 5.0);
+        assert_eq!(a.transpose()[(0, 1)], 3.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Dense linear algebra built from scratch (no LAPACK/nalgebra offline).
+//!
+//! This is the O(d^3) core of the paper's calibration (App. D.1):
+//! covariance → eigendecomposition → inverse square roots → canonical
+//! correlation SVD → LMMSE solve. Matrices are row-major f64 (the paper
+//! runs calibration in f32; we use f64 internally because the CCA chain
+//! multiplies three near-singular factors and f32 loses the top
+//! correlations ρ≈1 that drive layer selection).
+
+mod cholesky;
+mod eigh;
+mod mat;
+mod svd;
+
+pub use cholesky::Cholesky;
+pub use eigh::{eigh, EighResult};
+pub use mat::Mat;
+pub use svd::{singular_values, svd};
+
+use crate::error::{Error, Result};
+
+/// Symmetric inverse square root via eigendecomposition, clamping
+/// eigenvalues below `floor` (ridge against rank deficiency — the paper's
+/// calibration hits this when s*t < d or activations are collinear).
+pub fn inv_sqrt_psd(a: &Mat, floor: f64) -> Result<Mat> {
+    let EighResult { values, vectors } = eigh(a)?;
+    let mut scaled = vectors.clone(); // columns scaled by λ^-1/2
+    for (j, &l) in values.iter().enumerate() {
+        let s = 1.0 / l.max(floor).sqrt();
+        for i in 0..scaled.rows() {
+            scaled[(i, j)] *= s;
+        }
+    }
+    // V diag(λ^-1/2) V^T
+    Ok(scaled.matmul_nt(&vectors))
+}
+
+/// Symmetric square root (for tests / SliceGPT whitening).
+pub fn sqrt_psd(a: &Mat, floor: f64) -> Result<Mat> {
+    let EighResult { values, vectors } = eigh(a)?;
+    let mut scaled = vectors.clone();
+    for (j, &l) in values.iter().enumerate() {
+        let s = l.max(floor).sqrt();
+        for i in 0..scaled.rows() {
+            scaled[(i, j)] *= s;
+        }
+    }
+    Ok(scaled.matmul_nt(&vectors))
+}
+
+/// Solve A X = B for PSD A (Cholesky with escalating ridge).
+///
+/// Returns X. Used for the LMMSE normal equations `Cxx W = Cxy`
+/// (Prop. 3.1, row-vector orientation).
+pub fn solve_psd(a: &Mat, b: &Mat, ridge: f64) -> Result<Mat> {
+    if a.rows() != a.cols() || a.rows() != b.rows() {
+        return Err(Error::Linalg(format!(
+            "solve_psd shapes: a {}x{}, b {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let mut lam = ridge;
+    for _ in 0..8 {
+        let mut aa = a.clone();
+        if lam > 0.0 {
+            for i in 0..aa.rows() {
+                aa[(i, i)] += lam;
+            }
+        }
+        if let Ok(ch) = Cholesky::factor(&aa) {
+            return Ok(ch.solve_mat(b));
+        }
+        lam = if lam == 0.0 { 1e-10 } else { lam * 100.0 };
+    }
+    Err(Error::Linalg("solve_psd: matrix not PSD even with ridge".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn random_psd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        // A^T A + n*I: comfortably PSD
+        let mut p = a.transpose().matmul(&a);
+        for i in 0..n {
+            p[(i, i)] += n as f64 * 0.1;
+        }
+        p
+    }
+
+    #[test]
+    fn inv_sqrt_property() {
+        // (A^-1/2) A (A^-1/2) == I
+        check(
+            7,
+            20,
+            |g: &mut Gen| {
+                let n = g.usize_in(2, 24 >> g.shrink.min(3));
+                random_psd(g.rng, n.max(2))
+            },
+            |a| {
+                let isq = inv_sqrt_psd(a, 1e-12).map_err(|e| e.to_string())?;
+                let ident = isq.matmul(a).matmul(&isq);
+                for i in 0..a.rows() {
+                    for j in 0..a.cols() {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        if (ident[(i, j)] - want).abs() > 1e-6 {
+                            return Err(format!(
+                                "({i},{j}) = {} want {want}",
+                                ident[(i, j)]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn solve_psd_recovers_solution() {
+        check(
+            9,
+            20,
+            |g: &mut Gen| {
+                let n = g.usize_in(2, 20 >> g.shrink.min(3)).max(2);
+                let a = random_psd(g.rng, n);
+                let x = Mat::from_fn(n, 3, |_, _| g.rng.normal());
+                (a, x)
+            },
+            |(a, x)| {
+                let b = a.matmul(x);
+                let got = solve_psd(a, &b, 0.0).map_err(|e| e.to_string())?;
+                for i in 0..x.rows() {
+                    for j in 0..x.cols() {
+                        if (got[(i, j)] - x[(i, j)]).abs() > 1e-6 {
+                            return Err(format!("({i},{j})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn solve_psd_singular_falls_back_to_ridge() {
+        // rank-1 matrix: plain Cholesky fails, ridge path must succeed
+        let mut a = Mat::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                a[(i, j)] = ((i + 1) * (j + 1)) as f64;
+            }
+        }
+        let b = Mat::from_fn(4, 1, |i, _| i as f64);
+        assert!(solve_psd(&a, &b, 1e-8).is_ok());
+    }
+
+    #[test]
+    fn sqrt_matches_inv_sqrt() {
+        let mut rng = Rng::new(4);
+        let a = random_psd(&mut rng, 8);
+        let s = sqrt_psd(&a, 1e-12).unwrap();
+        let isq = inv_sqrt_psd(&a, 1e-12).unwrap();
+        let ident = s.matmul(&isq);
+        for i in 0..8 {
+            assert!((ident[(i, i)] - 1.0).abs() < 1e-7);
+        }
+    }
+}

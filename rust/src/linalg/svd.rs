@@ -1,0 +1,203 @@
+//! Singular value decomposition via one-sided Jacobi.
+//!
+//! The CCA step (Alg. 2 line 30) needs the singular values of the
+//! standardized cross-correlation matrix C_W = Cyy^-1/2 Cyx Cxx^-1/2 —
+//! those are the canonical correlations ρ_i. One-sided Jacobi rotates
+//! column pairs of A until they are mutually orthogonal; the column norms
+//! are then the singular values. It is accurate for the small singular
+//! values too (unlike eigh of A^T A), which matters because the bound
+//! Σ(1-ρ_i²) is dominated by ρ near 1 where cancellation hurts.
+
+use crate::error::Result;
+use crate::linalg::Mat;
+
+pub struct SvdResult {
+    /// Left singular vectors (columns), m x k.
+    pub u: Mat,
+    /// Singular values, descending, length k = min(m, n).
+    pub s: Vec<f64>,
+    /// Right singular vectors (columns), n x k.
+    pub v: Mat,
+}
+
+const MAX_SWEEPS: usize = 60;
+
+/// Full thin SVD. For m < n we factor the transpose and swap U/V.
+pub fn svd(a: &Mat) -> Result<SvdResult> {
+    if a.rows() < a.cols() {
+        let r = svd(&a.transpose())?;
+        return Ok(SvdResult { u: r.v, s: r.s, v: r.u });
+    }
+    let (m, n) = (a.rows(), a.cols());
+    if n == 0 {
+        return Ok(SvdResult { u: Mat::zeros(m, 0), s: vec![], v: Mat::zeros(0, 0) });
+    }
+    // work on columns of U (copy of A), accumulate V
+    let mut u = a.clone();
+    let mut v = Mat::identity(n);
+    let scale = u.max_abs().max(1e-300);
+    let tol = 1e-15 * scale * scale * m as f64;
+
+    for _ in 0..MAX_SWEEPS {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in p + 1..n {
+                // gram entries of columns p, q
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= tol || apq.abs() <= 1e-15 * (app * aqq).sqrt() {
+                    continue;
+                }
+                rotated = true;
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // column norms -> singular values; normalize U columns
+    let mut svals: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let s: Vec<f64> = svals.iter().map(|(x, _)| *x).collect();
+    let u_out = Mat::from_fn(m, n, |i, jj| {
+        let (norm, j) = svals[jj];
+        if norm > 1e-300 {
+            u[(i, j)] / norm
+        } else {
+            0.0
+        }
+    });
+    let v_out = Mat::from_fn(n, n, |i, jj| v[(i, svals[jj].1)]);
+    Ok(SvdResult { u: u_out, s, v: v_out })
+}
+
+/// Singular values only (descending).
+pub fn singular_values(a: &Mat) -> Result<Vec<f64>> {
+    Ok(svd(a)?.s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+
+    fn reconstruct(r: &SvdResult) -> Mat {
+        let k = r.s.len();
+        let us = Mat::from_fn(r.u.rows(), k, |i, j| r.u[(i, j)] * r.s[j]);
+        us.matmul_nt(&r.v)
+    }
+
+    #[test]
+    fn reconstruction_property() {
+        check(
+            31,
+            15,
+            |g: &mut Gen| {
+                let m = g.usize_in(1, (16 >> g.shrink.min(3)).max(1));
+                let n = g.usize_in(1, (16 >> g.shrink.min(3)).max(1));
+                Mat::from_fn(m, n, |_, _| g.rng.normal())
+            },
+            |a| {
+                let r = svd(a).map_err(|e| e.to_string())?;
+                let rec = reconstruct(&r);
+                if rec.sub(a).max_abs() > 1e-8 {
+                    return Err(format!("recon err {}", rec.sub(a).max_abs()));
+                }
+                // orthonormal U,V columns
+                let k = r.s.len();
+                let utu = r.u.transpose().matmul(&r.u);
+                let vtv = r.v.transpose().matmul(&r.v);
+                for i in 0..k {
+                    for j in 0..k {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        // zero singular directions may be non-orthonormal
+                        if r.s[i] > 1e-12 && r.s[j] > 1e-12 {
+                            if (utu[(i, j)] - want).abs() > 1e-8 {
+                                return Err(format!("U^T U ({i},{j})"));
+                            }
+                            if (vtv[(i, j)] - want).abs() > 1e-8 {
+                                return Err(format!("V^T V ({i},{j})"));
+                            }
+                        }
+                    }
+                }
+                // nonneg + descending
+                for w in r.s.windows(2) {
+                    if w[0] < w[1] - 1e-12 {
+                        return Err("not sorted".into());
+                    }
+                }
+                if r.s.iter().any(|&x| x < 0.0) {
+                    return Err("negative singular value".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2) embedded in 3x2
+        let a = Mat::from_rows(vec![
+            vec![3.0, 0.0],
+            vec![0.0, 2.0],
+            vec![0.0, 0.0],
+        ]);
+        let s = singular_values(&a).unwrap();
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_matrix_has_unit_singulars() {
+        let c = std::f64::consts::FRAC_1_SQRT_2;
+        let q = Mat::from_rows(vec![vec![c, -c], vec![c, c]]);
+        let s = singular_values(&q).unwrap();
+        assert!((s[0] - 1.0).abs() < 1e-12 && (s[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 4.0]]);
+        let s = singular_values(&a).unwrap();
+        assert!(s[1].abs() < 1e-10, "{s:?}");
+    }
+
+    #[test]
+    fn wide_matrix() {
+        let a = Mat::from_rows(vec![vec![1.0, 0.0, 0.0], vec![0.0, 5.0, 0.0]]);
+        let s = singular_values(&a).unwrap();
+        assert!((s[0] - 5.0).abs() < 1e-12 && (s[1] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,223 @@
+//! `repro` — the NBL coordinator CLI.
+//!
+//! Subcommands:
+//!   serve      start the TCP serving engine (optionally NBL-compressed)
+//!   calibrate  run Algorithm 1/2 and print bounds + rankings
+//!   rank       per-layer CCA bound + criteria rankings (Fig 2 / T20)
+//!   eval       8-task accuracy + perplexity for a plan
+//!   generate   greedy/sampled generation from a prompt (T13 --sweep)
+//!   info       artifacts / model / grid summary
+
+use std::sync::Arc;
+
+use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::data::corpus::CorpusId;
+use nbl::data::ByteTokenizer;
+use nbl::eval::perplexity;
+use nbl::nbl::criteria::Criterion;
+use nbl::report::Table;
+use nbl::sampling::SamplingParams;
+use nbl::server::api::GenRequest;
+use nbl::server::service::{Server, ServerConfig};
+use nbl::server::tcp::TcpFrontend;
+use nbl::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["sweep", "drop", "help"])?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args),
+        "calibrate" | "rank" => rank(&args),
+        "eval" => eval(&args),
+        "generate" => generate(&args),
+        "info" => info(),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+    .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+const HELP: &str = "\
+repro — Neural Block Linearization coordinator
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  serve     --model main --m 2 --addr 127.0.0.1:7878   NBL-compressed TCP server
+  rank      --model main --corpus tinyc4               per-layer CCA bounds + rankings
+  eval      --model main --m 2 [--drop]                8-task accuracy + perplexity
+  generate  --model main --prompt 'the small robot ' --tokens 48 [--m 2] [--sweep]
+  info                                                 artifacts summary
+
+Set NBL_FAST=1 for quick calibration/eval budgets.
+";
+
+fn corpus_of(args: &Args) -> CorpusId {
+    match args.get_or("corpus", "tinyc4") {
+        "tinywiki" => CorpusId::TinyWiki,
+        _ => CorpusId::TinyC4,
+    }
+}
+
+fn workbench(args: &Args) -> nbl::error::Result<Workbench> {
+    Workbench::with_corpus(
+        args.get_or("model", "main"),
+        ExpConfig::from_env(),
+        corpus_of(args),
+    )
+}
+
+fn serve(args: &Args) -> nbl::error::Result<()> {
+    let wb = workbench(args)?;
+    let m = args.get_usize("m", 0)?;
+    let plan = if m == 0 {
+        nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers)
+    } else {
+        wb.report.plan_attn_nbl(m, Criterion::CcaBound)?
+    };
+    println!("plan: {} [{}]", plan.kind.label(), plan.describe());
+    let engine = Arc::new(wb.engine.with_plan(plan)?);
+    let server = Arc::new(Server::new(engine, ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let front = TcpFrontend::start(server, args.get_or("addr", "127.0.0.1:7878"))?;
+    println!("listening on {} (line-JSON; ctrl-c to stop)", front.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let s = metrics.summary();
+        if s.requests > 0 {
+            println!(
+                "served {} requests, {} tokens, mean TTFT {:.1} ms",
+                s.requests,
+                s.generated_tokens,
+                s.mean_ttft_s * 1e3
+            );
+        }
+    }
+}
+
+fn rank(args: &Args) -> nbl::error::Result<()> {
+    let wb = workbench(args)?;
+    let mut table = Table::new(
+        &format!(
+            "per-layer calibration ({}, corpus {})",
+            wb.engine.config().name,
+            wb.calib.id.name()
+        ),
+        &["layer", "cca_nmse_bound", "bound/dim", "cosine_dist", "top_rho"],
+    );
+    for lc in &wb.report.layers {
+        table.row(vec![
+            lc.layer.to_string(),
+            format!("{:.4}", lc.cca.nmse_bound),
+            format!("{:.6}", lc.cca.nmse_bound_per_dim),
+            format!("{:.4}", lc.cosine_distance),
+            format!("{:.5}", lc.cca.rho.first().copied().unwrap_or(0.0)),
+        ]);
+    }
+    println!("{}", table.render());
+    for crit in [Criterion::CcaBound, Criterion::CosineDistance] {
+        println!(
+            "{} ranking (most->least important): {:?}",
+            crit.name(),
+            wb.report.importance_ranking(crit)
+        );
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> nbl::error::Result<()> {
+    let wb = workbench(args)?;
+    let m = args.get_usize("m", 0)?;
+    let plan = if m == 0 {
+        nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers)
+    } else if args.flag("drop") {
+        wb.report.plan_attn_drop(m, Criterion::CosineDistance)
+    } else {
+        wb.report.plan_attn_nbl(m, Criterion::CcaBound)?
+    };
+    println!("plan: {}", plan.kind.label());
+    let engine = wb.engine.with_plan(plan)?;
+    let acc = wb.accuracy(&engine)?;
+    for t in &acc.tasks {
+        println!("  {:<12} {:.3}", t.name, t.accuracy);
+    }
+    println!("  avg {:.3} ± {:.3}", acc.avg_accuracy, acc.pooled_se);
+    let ppl = perplexity(&engine, &wb.val, wb.cfg.ppl_windows, 128)?;
+    println!("  perplexity ({}) {:.3}", wb.val.id.name(), ppl);
+    let speed = wb.speed(&engine)?;
+    println!(
+        "  prefill {:.0} tok/s, decode {:.0} tok/s",
+        speed.prefill_tok_s, speed.decode_tok_s
+    );
+    Ok(())
+}
+
+fn generate(args: &Args) -> nbl::error::Result<()> {
+    let wb = workbench(args)?;
+    let tok = ByteTokenizer::new();
+    let prompt = args.get_or("prompt", "the small robot ");
+    let tokens = args.get_usize("tokens", 48)?;
+    let temperature = args.get_f64("temperature", 0.0)?;
+    let ms: Vec<usize> = if args.flag("sweep") {
+        let k = wb.engine.config().n_layers;
+        (0..k).collect()
+    } else {
+        vec![args.get_usize("m", 0)?]
+    };
+    for m in ms {
+        for (name, drop) in [("NBL", false), ("DROP", true)] {
+            if m == 0 && drop {
+                continue;
+            }
+            let plan = if m == 0 {
+                nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers)
+            } else if drop {
+                wb.report.plan_attn_drop(m, Criterion::CosineDistance)
+            } else {
+                wb.report.plan_attn_nbl(m, Criterion::CcaBound)?
+            };
+            let engine = wb.engine.with_plan(plan)?;
+            let server = Server::new(Arc::new(engine), ServerConfig::default());
+            let r = server.generate_one(&GenRequest {
+                id: 0,
+                prompt: tok.encode(prompt),
+                max_new_tokens: tokens,
+                params: if temperature > 0.0 {
+                    SamplingParams::top_k(20, temperature, 7)
+                } else {
+                    SamplingParams::greedy()
+                },
+            });
+            let label = if m == 0 { "baseline".into() } else { format!("{name}-{m}") };
+            println!("[{label:>9}] {:?}", r.text);
+        }
+    }
+    Ok(())
+}
+
+fn info() -> nbl::error::Result<()> {
+    let artifacts = nbl::model::Artifacts::discover()?;
+    println!("artifacts: {}", artifacts.root.display());
+    let grid = artifacts.grid()?;
+    println!(
+        "grid: batches {:?}, prefill {:?}, cached {:?}, pointwise {:?}",
+        grid.batches, grid.prefill_lens, grid.cached_lens, grid.pointwise_lens
+    );
+    let runtime = nbl::runtime::Runtime::new(artifacts.clone())?;
+    for name in artifacts.model_names()? {
+        let engine = nbl::executor::Engine::load(runtime.clone(), &name)?;
+        let c = engine.config();
+        println!(
+            "model {:<8} layers {:>2}  d {}  heads {}/{}  params {}",
+            name,
+            c.n_layers,
+            c.d_model,
+            c.n_heads,
+            c.n_kv_heads,
+            engine.weights.param_count()
+        );
+    }
+    Ok(())
+}

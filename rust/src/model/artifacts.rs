@@ -1,0 +1,144 @@
+//! Artifact discovery: locate artifacts/ (built by `make artifacts`) and
+//! resolve HLO files, weights, corpora and goldens through the manifest.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub manifest: Json,
+}
+
+impl Artifacts {
+    /// Locate artifacts/: $NBL_ARTIFACTS, ./artifacts, or walking up from
+    /// the executable (cargo target dirs).
+    pub fn discover() -> Result<Artifacts> {
+        let mut candidates: Vec<PathBuf> = Vec::new();
+        if let Ok(env) = std::env::var("NBL_ARTIFACTS") {
+            candidates.push(PathBuf::from(env));
+        }
+        if let Ok(cwd) = std::env::current_dir() {
+            let mut dir = cwd.as_path();
+            loop {
+                candidates.push(dir.join("artifacts"));
+                match dir.parent() {
+                    Some(p) => dir = p,
+                    None => break,
+                }
+            }
+        }
+        for c in candidates {
+            if c.join("manifest.json").exists() {
+                return Artifacts::open(&c);
+            }
+        }
+        Err(Error::Artifact(
+            "artifacts/manifest.json not found — run `make artifacts` first \
+             (or set NBL_ARTIFACTS)"
+                .into(),
+        ))
+    }
+
+    pub fn open(root: impl AsRef<Path>) -> Result<Artifacts> {
+        let root = root.as_ref().to_path_buf();
+        let manifest = Json::parse_file(root.join("manifest.json"))?;
+        Ok(Artifacts { root, manifest })
+    }
+
+    /// Absolute path of an HLO op artifact by stem (e.g. "mlp_b1_t32").
+    pub fn hlo_path(&self, op: &str) -> Result<PathBuf> {
+        let rel = self.manifest.get("hlo")?.get(op).map_err(|_| {
+            Error::Artifact(format!("op '{op}' not in the AOT grid (manifest.json)"))
+        })?;
+        let p = self.root.join(rel.as_str()?);
+        if !p.exists() {
+            return Err(Error::Artifact(format!("missing HLO file {}", p.display())));
+        }
+        Ok(p)
+    }
+
+    pub fn has_op(&self, op: &str) -> bool {
+        self.manifest
+            .get("hlo")
+            .ok()
+            .and_then(|h| h.opt(op))
+            .is_some()
+    }
+
+    pub fn weights_paths(&self, model: &str) -> Result<(PathBuf, PathBuf)> {
+        let w = self.manifest.get("weights")?.get(model).map_err(|_| {
+            Error::Artifact(format!("unknown model '{model}'"))
+        })?;
+        Ok((
+            self.root.join(w.get("bin")?.as_str()?),
+            self.root.join(w.get("manifest")?.as_str()?),
+        ))
+    }
+
+    pub fn corpus_path(&self, key: &str) -> Result<PathBuf> {
+        let rel = self.manifest.get("corpora")?.get(key)?;
+        Ok(self.root.join(rel.as_str()?))
+    }
+
+    pub fn goldens(&self) -> Result<Json> {
+        Json::parse_file(self.root.join("goldens.json"))
+    }
+
+    pub fn model_names(&self) -> Result<Vec<String>> {
+        Ok(self.manifest.get("weights")?.as_obj()?.keys().cloned().collect())
+    }
+
+    /// The AOT shape grid (for bucket selection in the executor).
+    pub fn grid(&self) -> Result<Grid> {
+        let g = self.manifest.get("grid")?;
+        Ok(Grid {
+            batches: g.get("batches")?.as_usize_vec()?,
+            prefill_lens: g.get("prefill_lens")?.as_usize_vec()?,
+            cached_lens: g.get("cached_lens")?.as_usize_vec()?,
+            pointwise_lens: g.get("pointwise_lens")?.as_usize_vec()?,
+            gram_n: g.get("gram_n")?.as_usize()?,
+            gram_d: g.get("gram_d")?.as_usize()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub batches: Vec<usize>,
+    pub prefill_lens: Vec<usize>,
+    pub cached_lens: Vec<usize>,
+    pub pointwise_lens: Vec<usize>,
+    pub gram_n: usize,
+    pub gram_d: usize,
+}
+
+impl Grid {
+    /// Smallest bucket >= n, or None if n exceeds the grid.
+    pub fn bucket(sorted: &[usize], n: usize) -> Option<usize> {
+        sorted.iter().copied().filter(|&b| b >= n).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let lens = vec![32, 128, 512];
+        assert_eq!(Grid::bucket(&lens, 1), Some(32));
+        assert_eq!(Grid::bucket(&lens, 32), Some(32));
+        assert_eq!(Grid::bucket(&lens, 33), Some(128));
+        assert_eq!(Grid::bucket(&lens, 512), Some(512));
+        assert_eq!(Grid::bucket(&lens, 513), None);
+    }
+
+    #[test]
+    fn missing_artifacts_is_clear_error() {
+        let e = Artifacts::open("/nonexistent/path").unwrap_err();
+        assert!(e.to_string().contains("manifest.json") || e.to_string().contains("json"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Model hyper-parameters, parsed from the weight manifest JSON written
+//! by `python/compile/model.py::save_weights` (single source of truth).
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_ctx: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            max_ctx: j.get("max_ctx")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            norm_eps: j.get("norm_eps")?.as_f64()?,
+        })
+    }
+
+    pub fn d_q(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Bytes of one layer's KV cache for a batch (f32; paper §H.2 uses
+    /// half precision — the formula-level comparisons scale accordingly).
+    pub fn kv_bytes_per_layer(&self, batch: usize, ctx: usize, bytes_per_elem: usize) -> usize {
+        2 * batch * ctx * self.d_kv() * bytes_per_elem
+    }
+
+    /// Paper §H.2: KV bytes with m of the K layers linearized.
+    pub fn kv_bytes_with_nbl(
+        &self,
+        batch: usize,
+        ctx: usize,
+        m: usize,
+        bytes_per_elem: usize,
+    ) -> usize {
+        self.kv_bytes_per_layer(batch, ctx, bytes_per_elem) * (self.n_layers - m)
+    }
+
+    /// Approximate forward FLOPs for a prefill of length n (paper §4.2
+    /// complexity model) under a plan with `m` linearized attentions and
+    /// `blocks_dropped` whole blocks removed.
+    pub fn prefill_flops(&self, n: usize, m_linear: usize, blocks_dropped: usize) -> f64 {
+        let d = self.d_model as f64;
+        let dq = self.d_q() as f64;
+        let dkv = self.d_kv() as f64;
+        let f = self.d_ff as f64;
+        let nn = n as f64;
+        let attn_proj = 2.0 * nn * d * (dq + 2.0 * dkv + dq);
+        let attn_quad = 2.0 * nn * nn * (dq + dq); // scores + values
+        let linear = 2.0 * nn * d * d;
+        let mlp = 2.0 * nn * d * f * 3.0;
+        let k = self.n_layers as f64;
+        let m = m_linear as f64;
+        let dropped = blocks_dropped as f64;
+        let full_layers = k - m - dropped;
+        full_layers * (attn_proj + attn_quad + mlp) + m * (linear + mlp)
+            + 2.0 * nn * d * self.vocab as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 6,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            d_ff: 256,
+            max_ctx: 512,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    #[test]
+    fn derived_dims() {
+        let c = cfg();
+        assert_eq!(c.d_q(), 128);
+        assert_eq!(c.d_kv(), 64);
+    }
+
+    #[test]
+    fn kv_formula_matches_paper() {
+        let c = cfg();
+        // 2 * bs * n * d * g/h == 2 * bs * n * d_kv
+        let full = c.kv_bytes_per_layer(64, 512, 2) * c.n_layers;
+        let nbl12 = c.kv_bytes_with_nbl(64, 512, 2, 2) + c.kv_bytes_per_layer(64, 512, 2) * 0;
+        assert_eq!(nbl12, full / 6 * 4);
+        assert!((c.kv_bytes_with_nbl(64, 512, 3, 2) as f64 / full as f64 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_flops_decrease_with_m() {
+        let c = cfg();
+        let f0 = c.prefill_flops(512, 0, 0);
+        let f2 = c.prefill_flops(512, 2, 0);
+        let f4 = c.prefill_flops(512, 4, 0);
+        assert!(f0 > f2 && f2 > f4);
+        // quadratic term dominates more at longer n: relative gain grows
+        let gain_short = c.prefill_flops(32, 2, 0) / c.prefill_flops(32, 0, 0);
+        let gain_long = f2 / f0;
+        assert!(gain_long < gain_short);
+    }
+
+    #[test]
+    fn from_json_round_trip() {
+        let j = Json::parse(
+            r#"{"vocab":256,"d_model":128,"n_layers":6,"n_heads":4,
+                "n_kv_heads":2,"head_dim":32,"d_ff":256,"max_ctx":512,
+                "rope_theta":10000.0,"norm_eps":1e-5}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json("t", &j).unwrap();
+        assert_eq!(c, cfg());
+    }
+}

@@ -1,0 +1,9 @@
+//! Model configuration, weight loading and artifact discovery.
+
+pub mod artifacts;
+pub mod config;
+pub mod weights;
+
+pub use artifacts::Artifacts;
+pub use config::ModelConfig;
+pub use weights::{LayerWeights, Weights};

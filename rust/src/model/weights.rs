@@ -1,0 +1,232 @@
+//! Weight loading: the flat f32 .bin + JSON manifest emitted by
+//! `python/compile/model.py::save_weights`. Layout (row-major, LE):
+//! emb, per-layer [attn_norm, wq, wk, wv, wo, mlp_norm, w1, w3, w2],
+//! final_norm, w_head.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub attn_norm: Tensor,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub mlp_norm: Tensor,
+    pub w1: Tensor,
+    pub w3: Tensor,
+    pub w2: Tensor,
+}
+
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub config: ModelConfig,
+    pub emb: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Tensor,
+    pub w_head: Tensor,
+}
+
+impl Weights {
+    pub fn load(config_name: &str, bin_path: &Path, json_path: &Path) -> Result<Weights> {
+        let manifest = Json::parse_file(json_path)?;
+        let config = ModelConfig::from_json(config_name, manifest.get("config")?)?;
+        let raw = std::fs::read(bin_path)?;
+        let total = manifest.get("total_bytes")?.as_usize()?;
+        if raw.len() != total {
+            return Err(Error::Artifact(format!(
+                "weights {}: {} bytes on disk, manifest says {}",
+                bin_path.display(),
+                raw.len(),
+                total
+            )));
+        }
+
+        // index tensors by name
+        let mut by_name: BTreeMap<String, Tensor> = BTreeMap::new();
+        for t in manifest.get("tensors")?.as_arr()? {
+            let name = t.get("name")?.as_str()?.to_string();
+            let shape = t.get("shape")?.as_usize_vec()?;
+            let off = t.get("offset_bytes")?.as_usize()?;
+            let size = t.get("size_bytes")?.as_usize()?;
+            if off + size > raw.len() {
+                return Err(Error::Artifact(format!("tensor {name} out of bounds")));
+            }
+            let floats: Vec<f32> = raw[off..off + size]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            by_name.insert(name, Tensor::new(shape, floats)?);
+        }
+
+        let mut take = |name: &str| -> Result<Tensor> {
+            by_name
+                .remove(name)
+                .ok_or_else(|| Error::Artifact(format!("missing tensor '{name}'")))
+        };
+
+        let emb = take("emb")?;
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for i in 0..config.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: take(&format!("layers.{i}.attn_norm"))?,
+                wq: take(&format!("layers.{i}.wq"))?,
+                wk: take(&format!("layers.{i}.wk"))?,
+                wv: take(&format!("layers.{i}.wv"))?,
+                wo: take(&format!("layers.{i}.wo"))?,
+                mlp_norm: take(&format!("layers.{i}.mlp_norm"))?,
+                w1: take(&format!("layers.{i}.w1"))?,
+                w3: take(&format!("layers.{i}.w3"))?,
+                w2: take(&format!("layers.{i}.w2"))?,
+            });
+        }
+        let w = Weights {
+            emb,
+            layers,
+            final_norm: take("final_norm")?,
+            w_head: take("w_head")?,
+            config,
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Shape-check every tensor against the config.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.config;
+        let want = |t: &Tensor, shape: &[usize], name: &str| -> Result<()> {
+            if t.shape() != shape {
+                return Err(Error::Shape(format!(
+                    "{name}: shape {:?}, want {shape:?}",
+                    t.shape()
+                )));
+            }
+            Ok(())
+        };
+        want(&self.emb, &[c.vocab, c.d_model], "emb")?;
+        want(&self.final_norm, &[c.d_model], "final_norm")?;
+        want(&self.w_head, &[c.d_model, c.vocab], "w_head")?;
+        for (i, l) in self.layers.iter().enumerate() {
+            want(&l.attn_norm, &[c.d_model], &format!("l{i}.attn_norm"))?;
+            want(&l.wq, &[c.d_model, c.d_q()], &format!("l{i}.wq"))?;
+            want(&l.wk, &[c.d_model, c.d_kv()], &format!("l{i}.wk"))?;
+            want(&l.wv, &[c.d_model, c.d_kv()], &format!("l{i}.wv"))?;
+            want(&l.wo, &[c.d_q(), c.d_model], &format!("l{i}.wo"))?;
+            want(&l.mlp_norm, &[c.d_model], &format!("l{i}.mlp_norm"))?;
+            want(&l.w1, &[c.d_model, c.d_ff], &format!("l{i}.w1"))?;
+            want(&l.w3, &[c.d_model, c.d_ff], &format!("l{i}.w3"))?;
+            want(&l.w2, &[c.d_ff, c.d_model], &format!("l{i}.w2"))?;
+        }
+        Ok(())
+    }
+
+    /// Embedding lookup on the host (ids -> [B, T, D]); embedding is pure
+    /// gather so it never goes through an executable.
+    pub fn embed(&self, ids: &[u32], batch: usize, t: usize) -> Result<Tensor> {
+        let d = self.config.d_model;
+        if ids.len() != batch * t {
+            return Err(Error::Shape(format!(
+                "embed: {} ids for batch {batch} x t {t}",
+                ids.len()
+            )));
+        }
+        let mut out = vec![0.0f32; batch * t * d];
+        for (i, &id) in ids.iter().enumerate() {
+            if id as usize >= self.config.vocab {
+                return Err(Error::Shape(format!("token id {id} >= vocab")));
+            }
+            out[i * d..(i + 1) * d].copy_from_slice(self.emb.row(id as usize));
+        }
+        Tensor::new(vec![batch, t, d], out)
+    }
+
+    pub fn param_count(&self) -> usize {
+        let mut n = self.emb.len() + self.final_norm.len() + self.w_head.len();
+        for l in &self.layers {
+            n += l.attn_norm.len()
+                + l.wq.len()
+                + l.wk.len()
+                + l.wv.len()
+                + l.wo.len()
+                + l.mlp_norm.len()
+                + l.w1.len()
+                + l.w3.len()
+                + l.w2.len();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // integration tests against real artifacts live in rust/tests/;
+    // here we unit-test validate() failure modes with hand-built weights.
+
+    fn tiny_config() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 2,
+            d_ff: 8,
+            max_ctx: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    fn tiny_weights() -> Weights {
+        let c = tiny_config();
+        Weights {
+            emb: Tensor::zeros(vec![c.vocab, c.d_model]),
+            layers: vec![LayerWeights {
+                attn_norm: Tensor::zeros(vec![c.d_model]),
+                wq: Tensor::zeros(vec![c.d_model, c.d_q()]),
+                wk: Tensor::zeros(vec![c.d_model, c.d_kv()]),
+                wv: Tensor::zeros(vec![c.d_model, c.d_kv()]),
+                wo: Tensor::zeros(vec![c.d_q(), c.d_model]),
+                mlp_norm: Tensor::zeros(vec![c.d_model]),
+                w1: Tensor::zeros(vec![c.d_model, c.d_ff]),
+                w3: Tensor::zeros(vec![c.d_model, c.d_ff]),
+                w2: Tensor::zeros(vec![c.d_ff, c.d_model]),
+            }],
+            final_norm: Tensor::zeros(vec![c.d_model]),
+            w_head: Tensor::zeros(vec![c.d_model, c.vocab]),
+            config: c,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent() {
+        assert!(tiny_weights().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shape() {
+        let mut w = tiny_weights();
+        w.layers[0].wq = Tensor::zeros(vec![4, 3]);
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let mut w = tiny_weights();
+        w.emb = Tensor::from_fn(vec![8, 4], |i| i as f32);
+        let e = w.embed(&[1, 0, 7], 1, 3).unwrap();
+        assert_eq!(e.at2(0, 0), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(e.at2(0, 2), &[28.0, 29.0, 30.0, 31.0]);
+        assert!(w.embed(&[9], 1, 1).is_err()); // out of vocab
+        assert!(w.embed(&[1, 2], 1, 3).is_err()); // wrong count
+    }
+}

@@ -1,0 +1,378 @@
+//! Algorithm 1 + 2: calibrate every attention layer, compute the CCA
+//! bound and LMMSE weights, and build substitution plans.
+//!
+//! The calibration data flow is decoupled from the execution engine via
+//! [`ActivationSource`]: the production implementation is the executor's
+//! capture mode (one forward pass per calibration sequence, streaming
+//! per-layer (X, Y) token rows into this module); tests drive synthetic
+//! sources. Activations are consumed chunk-wise — memory stays
+//! O(chunk · d), not O(s·t·d).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::nbl::cca::{cca_bound, CcaAnalysis};
+use crate::nbl::criteria::{select_lowest, CosineAccumulator, Criterion};
+use crate::nbl::lmmse::{lmmse_fit, lmmse_fit_residual, LinearLayer, DEFAULT_RIDGE};
+use crate::nbl::plan::{ModelPlan, PlanKind};
+use crate::stats::{GramAccumulator, SampleStats};
+
+/// Anything that can stream per-layer calibration activations.
+///
+/// For every chunk of token rows, implementations call
+/// `sink(layer_idx, x_rows, y_rows)` where `x` is the attention-block
+/// input and `y` the attention *delta* (output before the residual add),
+/// both `[rows, d]` row-major f32 (paper §3.1 token stacking).
+pub trait ActivationSource {
+    fn n_layers(&self) -> usize;
+    fn d_model(&self) -> usize;
+    fn stream(
+        &mut self,
+        sink: &mut dyn FnMut(usize, &[f32], &[f32]) -> Result<()>,
+    ) -> Result<()>;
+}
+
+/// Per-layer calibration output (Alg. 2 for one layer).
+pub struct LayerCalibration {
+    pub layer: usize,
+    pub stats: SampleStats,
+    pub cca: CcaAnalysis,
+    /// DROP-style cosine distance between X and Y+ (ablation F.3).
+    pub cosine_distance: f64,
+}
+
+impl LayerCalibration {
+    pub fn fit_linear(&self) -> Result<LinearLayer> {
+        lmmse_fit(&self.stats, DEFAULT_RIDGE)
+    }
+
+    pub fn fit_linear_residual(&self) -> Result<LinearLayer> {
+        lmmse_fit_residual(&self.stats, DEFAULT_RIDGE)
+    }
+
+    pub fn score(&self, criterion: Criterion) -> f64 {
+        match criterion {
+            Criterion::CcaBound => self.cca.nmse_bound,
+            Criterion::CosineDistance => self.cosine_distance,
+        }
+    }
+}
+
+/// Full calibration result for a model (Alg. 1 input).
+pub struct CalibrationReport {
+    pub layers: Vec<LayerCalibration>,
+}
+
+impl CalibrationReport {
+    pub fn scores(&self, criterion: Criterion) -> Vec<f64> {
+        self.layers.iter().map(|l| l.score(criterion)).collect()
+    }
+
+    /// Paper Table 20: layer ids from most to least important.
+    pub fn importance_ranking(&self, criterion: Criterion) -> Vec<usize> {
+        crate::nbl::criteria::importance_ranking(&self.scores(criterion))
+    }
+
+    /// Build "Attn NBL-m": linearize the m most substitutable layers.
+    pub fn plan_attn_nbl(&self, m: usize, criterion: Criterion) -> Result<ModelPlan> {
+        let mut plan = ModelPlan::baseline(self.layers.len());
+        plan.kind = PlanKind::AttnNbl(m);
+        for idx in select_lowest(&self.scores(criterion), m) {
+            let lin = self.layers[idx].fit_linear()?;
+            plan.linearize_attn(idx, Arc::new(lin));
+        }
+        Ok(plan)
+    }
+
+    /// Build "Attn DROP-m" (He et al. 2024 baseline).
+    pub fn plan_attn_drop(&self, m: usize, criterion: Criterion) -> ModelPlan {
+        let mut plan = ModelPlan::baseline(self.layers.len());
+        plan.kind = PlanKind::AttnDrop(m);
+        for idx in select_lowest(&self.scores(criterion), m) {
+            plan.drop_attn(idx);
+        }
+        plan
+    }
+}
+
+/// The calibration driver (Alg. 2 over all layers in one streaming pass).
+pub struct Calibrator {
+    accs: Vec<GramAccumulator>,
+    cosines: Vec<CosineAccumulator>,
+    d: usize,
+}
+
+impl Calibrator {
+    pub fn new(n_layers: usize, d: usize) -> Self {
+        Calibrator {
+            accs: (0..n_layers).map(|_| GramAccumulator::new(d)).collect(),
+            cosines: vec![CosineAccumulator::new(); n_layers],
+            d,
+        }
+    }
+
+    /// Stream everything from `source` and finalize.
+    pub fn run(source: &mut dyn ActivationSource) -> Result<CalibrationReport> {
+        let mut cal = Calibrator::new(source.n_layers(), source.d_model());
+        let d = cal.d;
+        let accs = &mut cal.accs;
+        let cosines = &mut cal.cosines;
+        source.stream(&mut |layer, x, y| {
+            if layer >= accs.len() {
+                return Err(Error::Calibration(format!("layer {layer} out of range")));
+            }
+            accs[layer].update(x, y)?;
+            // Y+ = X + Y for the cosine criterion
+            let yplus: Vec<f32> = x.iter().zip(y).map(|(a, b)| a + b).collect();
+            cosines[layer].update(x, &yplus, d);
+            Ok(())
+        })?;
+        cal.finalize()
+    }
+
+    pub fn finalize(self) -> Result<CalibrationReport> {
+        let d = self.d;
+        let mut layers = Vec::with_capacity(self.accs.len());
+        let mut any = false;
+        for (i, (acc, cos)) in self.accs.into_iter().zip(self.cosines).enumerate() {
+            if acc.n < 2 {
+                // layer not captured (already substituted under the current
+                // plan, e.g. during greedy re-calibration): mark it
+                // non-selectable with an infinite bound.
+                layers.push(LayerCalibration {
+                    layer: i,
+                    stats: degenerate_stats(d),
+                    cca: CcaAnalysis {
+                        rho: vec![],
+                        nmse_bound: f64::INFINITY,
+                        nmse_bound_per_dim: f64::INFINITY,
+                    },
+                    cosine_distance: f64::INFINITY,
+                });
+                continue;
+            }
+            any = true;
+            let stats = acc
+                .finalize()
+                .map_err(|e| Error::Calibration(format!("layer {i}: {e}")))?;
+            let cca = cca_bound(&stats)?;
+            layers.push(LayerCalibration {
+                layer: i,
+                stats,
+                cca,
+                cosine_distance: cos.distance(),
+            });
+        }
+        if !any {
+            return Err(Error::Calibration("no layers captured".into()));
+        }
+        Ok(CalibrationReport { layers })
+    }
+}
+
+fn degenerate_stats(d: usize) -> SampleStats {
+    SampleStats {
+        n: 0,
+        mean_x: vec![0.0; d],
+        mean_y: vec![0.0; d],
+        cxx: crate::linalg::Mat::identity(d),
+        cxy: crate::linalg::Mat::zeros(d, d),
+        cyy: crate::linalg::Mat::identity(d),
+    }
+}
+
+/// Greedy iterative selection (ablation F.4): repeatedly re-calibrate the
+/// *current* compressed model and linearize the single best remaining
+/// layer. `recalibrate(plan)` must run a fresh capture pass under `plan`.
+pub fn greedy_select(
+    n_layers: usize,
+    m: usize,
+    mut recalibrate: impl FnMut(&ModelPlan) -> Result<CalibrationReport>,
+) -> Result<ModelPlan> {
+    let mut plan = ModelPlan::baseline(n_layers);
+    plan.kind = PlanKind::Custom(format!("Greedy-{m}"));
+    let mut chosen: Vec<usize> = Vec::new();
+    for _ in 0..m {
+        let report = recalibrate(&plan)?;
+        // best remaining layer under the CCA bound
+        let mut best: Option<(usize, f64)> = None;
+        for lc in &report.layers {
+            if chosen.contains(&lc.layer) {
+                continue;
+            }
+            let s = lc.cca.nmse_bound;
+            if best.map_or(true, |(_, bs)| s < bs) {
+                best = Some((lc.layer, s));
+            }
+        }
+        let (idx, _) = best.ok_or_else(|| Error::Calibration("greedy: no layers left".into()))?;
+        let lin = report.layers[idx].fit_linear()?;
+        plan.linearize_attn(idx, Arc::new(lin));
+        chosen.push(idx);
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbl::plan::BlockOp;
+    use crate::util::rng::Rng;
+
+    /// Synthetic model: layer i's attention delta is (1-a_i)·linear + a_i·nonlinear.
+    /// Higher a_i => less linearizable => higher bound.
+    struct SynthSource {
+        d: usize,
+        alphas: Vec<f64>,
+        chunks: usize,
+        rows: usize,
+        seed: u64,
+    }
+
+    impl ActivationSource for SynthSource {
+        fn n_layers(&self) -> usize {
+            self.alphas.len()
+        }
+
+        fn d_model(&self) -> usize {
+            self.d
+        }
+
+        fn stream(
+            &mut self,
+            sink: &mut dyn FnMut(usize, &[f32], &[f32]) -> Result<()>,
+        ) -> Result<()> {
+            let d = self.d;
+            for c in 0..self.chunks {
+                for (li, &alpha) in self.alphas.iter().enumerate() {
+                    let mut rng = Rng::new(self.seed + (c * 31 + li) as u64);
+                    let mut wrng = Rng::new(900 + li as u64); // fixed per-layer map
+                    let w: Vec<f32> =
+                        (0..d * d).map(|_| wrng.normal_f32() * 0.4).collect();
+                    let mut x = vec![0.0f32; self.rows * d];
+                    let mut y = vec![0.0f32; self.rows * d];
+                    for r in 0..self.rows {
+                        for j in 0..d {
+                            x[r * d + j] = rng.normal_f32();
+                        }
+                        for j in 0..d {
+                            let lin: f32 = (0..d)
+                                .map(|k| x[r * d + k] * w[k * d + j])
+                                .sum();
+                            let nonlin =
+                                (x[r * d + j] * x[r * d + (j + 1) % d]).tanh();
+                            y[r * d + j] = (1.0 - alpha as f32) * lin
+                                + alpha as f32 * 2.0 * nonlin;
+                        }
+                    }
+                    sink(li, &x, &y)?;
+                }
+            }
+            Ok(())
+        }
+    }
+
+    fn source(alphas: &[f64]) -> SynthSource {
+        SynthSource { d: 8, alphas: alphas.to_vec(), chunks: 4, rows: 400, seed: 5 }
+    }
+
+    #[test]
+    fn ranking_tracks_linearity() {
+        let mut src = source(&[0.9, 0.1, 0.5, 0.0]);
+        let report = Calibrator::run(&mut src).unwrap();
+        let order = select_lowest(&report.scores(Criterion::CcaBound), 4);
+        // most linearizable first: layer 3 (alpha 0), then 1, 2, 0
+        assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn plan_attn_nbl_substitutes_lowest() {
+        let mut src = source(&[0.9, 0.1, 0.5, 0.0]);
+        let report = Calibrator::run(&mut src).unwrap();
+        let plan = report.plan_attn_nbl(2, Criterion::CcaBound).unwrap();
+        assert_eq!(plan.kv_layers(), 2);
+        assert!(matches!(plan.layers[3].attn, BlockOp::Linear(_)));
+        assert!(matches!(plan.layers[1].attn, BlockOp::Linear(_)));
+        assert!(matches!(plan.layers[0].attn, BlockOp::Attention));
+        assert_eq!(plan.kind.label(), "Attn NBL-2");
+    }
+
+    #[test]
+    fn plan_attn_drop_drops() {
+        let mut src = source(&[0.9, 0.0]);
+        let report = Calibrator::run(&mut src).unwrap();
+        let plan = report.plan_attn_drop(1, Criterion::CcaBound);
+        assert!(matches!(plan.layers[1].attn, BlockOp::Identity));
+        assert_eq!(plan.kv_layers(), 1);
+    }
+
+    #[test]
+    fn fitted_linear_layer_has_low_error_on_linear_layer() {
+        let mut src = source(&[0.0, 1.0]);
+        let report = Calibrator::run(&mut src).unwrap();
+        let lin = report.layers[0].fit_linear().unwrap();
+        // replay a fresh sample through the fitted layer
+        let mut rng = Rng::new(77);
+        let mut wrng = Rng::new(900);
+        let d = 8;
+        let w: Vec<f32> = (0..d * d).map(|_| wrng.normal_f32() * 0.4).collect();
+        let mut max_err = 0.0f32;
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let want: Vec<f32> = (0..d)
+                .map(|j| (0..d).map(|k| x[k] * w[k * d + j]).sum())
+                .collect();
+            let got = lin.apply_row(&x);
+            for (g, wv) in got.iter().zip(&want) {
+                max_err = max_err.max((g - wv).abs());
+            }
+        }
+        assert!(max_err < 0.05, "max err {max_err}");
+    }
+
+    #[test]
+    fn cosine_scores_are_valid_but_differ_from_cca() {
+        // The two criteria measure different things (paper F.3): cosine
+        // only sees how much the block *moves* the stream, CCA sees how
+        // linearly predictable the move is. Both must produce valid
+        // scores; only CCA is required to rank by linearizability.
+        let mut src = source(&[0.95, 0.0]);
+        let report = Calibrator::run(&mut src).unwrap();
+        assert_eq!(select_lowest(&report.scores(Criterion::CcaBound), 2)[0], 1);
+        for s in report.scores(Criterion::CosineDistance) {
+            assert!((0.0..=2.0).contains(&s), "cosine distance {s}");
+        }
+    }
+
+    #[test]
+    fn greedy_selects_m_layers() {
+        let plan = greedy_select(4, 2, |_plan| {
+            let mut src = source(&[0.9, 0.1, 0.5, 0.0]);
+            Calibrator::run(&mut src)
+        })
+        .unwrap();
+        assert_eq!(plan.kv_layers(), 2);
+        assert!(matches!(plan.layers[3].attn, BlockOp::Linear(_)));
+        assert!(matches!(plan.layers[1].attn, BlockOp::Linear(_)));
+    }
+
+    #[test]
+    fn empty_source_errors() {
+        struct Empty;
+        impl ActivationSource for Empty {
+            fn n_layers(&self) -> usize {
+                2
+            }
+            fn d_model(&self) -> usize {
+                4
+            }
+            fn stream(
+                &mut self,
+                _sink: &mut dyn FnMut(usize, &[f32], &[f32]) -> Result<()>,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        assert!(Calibrator::run(&mut Empty).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Canonical Correlation Analysis and the Theorem 3.2 error bound.
+//!
+//! For a layer with input X and residual output Y+ = Y + X, the canonical
+//! correlations ρ_i are the singular values of the standardized
+//! cross-correlation matrix
+//!
+//! ```text
+//! C_W = C_{Y+Y+}^{-1/2} · C_{Y+X} · C_{XX}^{-1/2}
+//! ```
+//!
+//! and the linearization NMSE obeys (Thm. 3.2, with h_in = h_out = d):
+//!
+//! ```text
+//! NMSE(Y, Ŷ) ≤ Σ_i (1 - ρ_i²)
+//! ```
+//!
+//! Following Alg. 2 the bound is computed on the *residual* output Y+
+//! while the LMMSE weights are fitted on the raw delta Y (the residual
+//! connection is kept in the substituted block).
+
+use crate::error::Result;
+use crate::linalg::{inv_sqrt_psd, singular_values, Mat};
+use crate::stats::SampleStats;
+
+/// Eigenvalue floor for the inverse square roots (ridge against
+/// rank-deficient calibration covariance).
+pub const EIG_FLOOR: f64 = 1e-9;
+
+#[derive(Debug, Clone)]
+pub struct CcaAnalysis {
+    /// Canonical correlations, descending, clamped to [0, 1].
+    pub rho: Vec<f64>,
+    /// Theorem 3.2 upper bound on the NMSE: Σ (1 - ρ_i²).
+    pub nmse_bound: f64,
+    /// Bound normalized to [0, 1] by d (convenient for plots; Fig. 2).
+    pub nmse_bound_per_dim: f64,
+}
+
+/// Run CCA between X and the residual output Y+ derived from `stats`.
+pub fn cca_bound(stats: &SampleStats) -> Result<CcaAnalysis> {
+    let (_mean_yp, cx_yp, cyp_yp) = stats.residual_output();
+    cca_from_parts(&stats.cxx, &cx_yp, &cyp_yp)
+}
+
+/// CCA from explicit covariance blocks: C_XX, C_{X,Y}, C_{YY}.
+pub fn cca_from_parts(cxx: &Mat, cxy: &Mat, cyy: &Mat) -> Result<CcaAnalysis> {
+    let isq_x = inv_sqrt_psd(cxx, EIG_FLOOR)?;
+    let isq_y = inv_sqrt_psd(cyy, EIG_FLOOR)?;
+    // C_W = Cyy^-1/2 · Cyx · Cxx^-1/2  (cyx = cxy^T)
+    let cw = isq_y.matmul(&cxy.transpose()).matmul(&isq_x);
+    let mut rho = singular_values(&cw)?;
+    for r in rho.iter_mut() {
+        *r = r.clamp(0.0, 1.0);
+    }
+    let nmse_bound: f64 = rho.iter().map(|r| 1.0 - r * r).sum();
+    let d = rho.len().max(1);
+    Ok(CcaAnalysis {
+        nmse_bound,
+        nmse_bound_per_dim: nmse_bound / d as f64,
+        rho,
+    })
+}
+
+/// The *achieved* NMSE of the LMMSE estimator from covariance blocks
+/// (Appendix C, Eq. 12): MSE = Tr(Cyy - Cyx Cxx^-1 Cxy), NMSE = MSE/Tr(Cyy).
+/// Used by tests to verify bound ≥ achieved, and by the greedy ablation.
+pub fn achieved_nmse(cxx: &Mat, cxy: &Mat, cyy: &Mat) -> Result<f64> {
+    let w = crate::linalg::solve_psd(cxx, cxy, 1e-10)?; // Cxx^-1 Cxy
+    let explained = cxy.transpose().matmul(&w); // Cyx Cxx^-1 Cxy
+    let mse = cyy.trace() - explained.trace();
+    Ok((mse / cyy.trace().max(1e-300)).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::GramAccumulator;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Rng;
+
+    /// Build stats from synthetic rows y = x W + b + noise.
+    fn synth_stats(rng: &mut Rng, n: usize, d: usize, noise: f32) -> SampleStats {
+        let w: Vec<f32> = (0..d * d).map(|_| rng.normal_f32() * 0.4).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut acc = GramAccumulator::new(d);
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n * d];
+        for r in 0..n {
+            for j in 0..d {
+                x[r * d + j] = rng.normal_f32();
+            }
+            for j in 0..d {
+                let mut s = b[j];
+                for k in 0..d {
+                    s += x[r * d + k] * w[k * d + j];
+                }
+                y[r * d + j] = s + noise * rng.normal_f32();
+            }
+        }
+        acc.update(&x, &y).unwrap();
+        acc.finalize().unwrap()
+    }
+
+    #[test]
+    fn perfectly_linear_gives_tiny_bound() {
+        let mut rng = Rng::new(1);
+        let st = synth_stats(&mut rng, 2000, 8, 0.0);
+        let c = cca_bound(&st).unwrap();
+        assert!(c.nmse_bound < 1e-4, "bound {}", c.nmse_bound);
+        assert!(c.rho.iter().all(|&r| r > 0.999));
+    }
+
+    #[test]
+    fn pure_noise_gives_large_bound() {
+        // Y independent of X: Y+ = X + noise still correlates via the
+        // residual, so test the raw (X, Y) pair instead.
+        let mut rng = Rng::new(2);
+        let d = 6;
+        let n = 4000;
+        let mut acc = GramAccumulator::new(d);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+        let y: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+        acc.update(&x, &y).unwrap();
+        let st = acc.finalize().unwrap();
+        let c = cca_from_parts(&st.cxx, &st.cxy, &st.cyy).unwrap();
+        // each 1-ρ² near 1 → bound near d
+        assert!(c.nmse_bound > 0.8 * d as f64, "bound {}", c.nmse_bound);
+    }
+
+    #[test]
+    fn bound_dominates_achieved_nmse() {
+        // Theorem 3.2: bound >= achieved, across noise levels
+        check(
+            5,
+            10,
+            |g: &mut Gen| {
+                let d = g.usize_in(3, (10 >> g.shrink.min(2)).max(3));
+                let noise = g.rng.range_f64(0.0, 2.0) as f32;
+                (d, noise, g.rng.next_u64())
+            },
+            |&(d, noise, seed)| {
+                let mut rng = Rng::new(seed);
+                let st = synth_stats(&mut rng, 3000, d, noise);
+                let c = cca_from_parts(&st.cxx, &st.cxy, &st.cyy)
+                    .map_err(|e| e.to_string())?;
+                let ach = achieved_nmse(&st.cxx, &st.cxy, &st.cyy)
+                    .map_err(|e| e.to_string())?;
+                // allow small sampling slack
+                if c.nmse_bound + 1e-3 < ach {
+                    return Err(format!("bound {} < achieved {}", c.nmse_bound, ach));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bound_monotone_in_noise() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let low = cca_from_parts_of(&synth_stats(&mut r1, 3000, 6, 0.1));
+        let high = cca_from_parts_of(&synth_stats(&mut r2, 3000, 6, 1.5));
+        assert!(low < high, "low {low} high {high}");
+    }
+
+    fn cca_from_parts_of(st: &SampleStats) -> f64 {
+        cca_from_parts(&st.cxx, &st.cxy, &st.cyy).unwrap().nmse_bound
+    }
+
+    #[test]
+    fn rho_clamped_and_bound_in_range() {
+        let mut rng = Rng::new(11);
+        let st = synth_stats(&mut rng, 500, 5, 0.5);
+        let c = cca_bound(&st).unwrap();
+        assert!(c.rho.iter().all(|&r| (0.0..=1.0).contains(&r)));
+        assert!(c.nmse_bound >= 0.0 && c.nmse_bound <= 5.0 + 1e-9);
+        assert!((c.nmse_bound_per_dim - c.nmse_bound / 5.0).abs() < 1e-12);
+    }
+}

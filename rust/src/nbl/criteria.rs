@@ -1,0 +1,125 @@
+//! Layer-selection criteria (paper §3.2 + ablations F.3/F.4).
+//!
+//! Every criterion produces a per-layer *score* where lower = more
+//! suitable for substitution; `select_lowest` then picks the m best.
+//! - `CcaBound` — the paper's criterion: Thm 3.2 NMSE bound.
+//! - `CosineDistance` — DROP's criterion: 1 - E[cos(x, y+)] between the
+//!   block input and its residual output.
+//! - Greedy re-ranking lives in `calibrate::greedy_select` (it needs to
+//!   re-run calibration after each substitution).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    CcaBound,
+    CosineDistance,
+}
+
+impl Criterion {
+    pub fn name(self) -> &'static str {
+        match self {
+            Criterion::CcaBound => "cca-bound",
+            Criterion::CosineDistance => "cosine-distance",
+        }
+    }
+}
+
+/// Indices of the `m` lowest-scoring layers (most substitutable first).
+pub fn select_lowest(scores: &[f64], m: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.truncate(m);
+    idx
+}
+
+/// Full importance ranking: most substitutable (lowest score) LAST, i.e.
+/// ordered from most- to least-important as in paper Table 20.
+pub fn importance_ranking(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx
+}
+
+/// Streaming mean-cosine-similarity accumulator (DROP criterion).
+#[derive(Clone, Default)]
+pub struct CosineAccumulator {
+    sum: f64,
+    n: usize,
+}
+
+impl CosineAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// x, yplus: [rows, d] row-major; yplus is the residual output.
+    pub fn update(&mut self, x: &[f32], yplus: &[f32], d: usize) {
+        let rows = x.len() / d;
+        for r in 0..rows {
+            let a = &x[r * d..(r + 1) * d];
+            let b = &yplus[r * d..(r + 1) * d];
+            let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+            for (xa, xb) in a.iter().zip(b) {
+                dot += (*xa as f64) * (*xb as f64);
+                na += (*xa as f64) * (*xa as f64);
+                nb += (*xb as f64) * (*xb as f64);
+            }
+            let denom = (na.sqrt() * nb.sqrt()).max(1e-30);
+            self.sum += dot / denom;
+            self.n += 1;
+        }
+    }
+
+    /// Distance = 1 - mean cosine similarity (lower = more redundant).
+    pub fn distance(&self) -> f64 {
+        if self.n == 0 {
+            return 1.0;
+        }
+        1.0 - self.sum / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_lowest_picks_minimums() {
+        let scores = [5.0, 1.0, 3.0, 0.5, 4.0];
+        assert_eq!(select_lowest(&scores, 2), vec![3, 1]);
+        assert_eq!(select_lowest(&scores, 0), Vec::<usize>::new());
+        assert_eq!(select_lowest(&scores, 5), vec![3, 1, 2, 4, 0]);
+    }
+
+    #[test]
+    fn ranking_is_reverse_of_selection() {
+        let scores = [5.0, 1.0, 3.0];
+        assert_eq!(importance_ranking(&scores), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn cosine_identical_rows_is_zero_distance() {
+        let mut acc = CosineAccumulator::new();
+        let x = [1.0f32, 2.0, 3.0, -1.0, 0.5, 2.0];
+        acc.update(&x, &x, 3);
+        assert!(acc.distance().abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_orthogonal_rows_is_one() {
+        let mut acc = CosineAccumulator::new();
+        acc.update(&[1.0, 0.0], &[0.0, 1.0], 2);
+        assert!((acc.distance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_opposite_rows_is_two() {
+        let mut acc = CosineAccumulator::new();
+        acc.update(&[1.0, 0.0], &[-1.0, 0.0], 2);
+        assert!((acc.distance() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_accumulator_is_max_distance() {
+        assert_eq!(CosineAccumulator::new().distance(), 1.0);
+    }
+}

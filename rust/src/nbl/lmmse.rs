@@ -1,0 +1,216 @@
+//! Proposition 3.1 — the closed-form LMMSE estimator.
+//!
+//! Column-vector convention in the paper: W = C_YX C_XX^{-1},
+//! b = E[Y] - W E[X]. The executor's linear block computes row-vector
+//! `y_row = x_row @ Wmat + b`, so `Wmat = W^T = C_XX^{-1} C_XY`, i.e. one
+//! PSD solve of the normal equations `C_XX · Wmat = C_XY`.
+
+use crate::error::Result;
+use crate::linalg::solve_psd;
+use crate::stats::SampleStats;
+
+/// Default ridge added to C_XX when it is numerically singular.
+pub const DEFAULT_RIDGE: f64 = 1e-8;
+
+/// A fitted linear substitution layer (the executor uploads these as
+/// arguments of the `linear_block` executable).
+#[derive(Debug, Clone)]
+pub struct LinearLayer {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Row-major [d_in, d_out] so that y = x @ w + b.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LinearLayer {
+    /// Apply on the host (used by tests and the quantization path).
+    pub fn apply_row(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.d_in);
+        let mut y = self.b.clone();
+        for (k, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &self.w[k * self.d_out..(k + 1) * self.d_out];
+            for (o, &wv) in y.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        y
+    }
+}
+
+/// Fit the LMMSE estimator from finalized statistics.
+pub fn lmmse_fit(stats: &SampleStats, ridge: f64) -> Result<LinearLayer> {
+    let d = stats.cxx.rows();
+    // Wmat = Cxx^{-1} Cxy  (row-vector orientation)
+    let wmat = solve_psd(&stats.cxx, &stats.cxy, ridge)?;
+    // b = E[Y] - E[X] @ Wmat
+    let b: Vec<f32> = (0..d)
+        .map(|j| {
+            let proj: f64 = (0..d).map(|k| stats.mean_x[k] * wmat[(k, j)]).sum();
+            (stats.mean_y[j] - proj) as f32
+        })
+        .collect();
+    Ok(LinearLayer { d_in: d, d_out: d, w: wmat.to_f32(), b })
+}
+
+/// Fit against the *residual* output (used by Block-NBL where the whole
+/// transformer block including its residual is replaced): y+ = x @ W + b.
+pub fn lmmse_fit_residual(stats: &SampleStats, ridge: f64) -> Result<LinearLayer> {
+    let (mean_yp, cx_yp, _) = stats.residual_output();
+    let d = stats.cxx.rows();
+    let wmat = solve_psd(&stats.cxx, &cx_yp, ridge)?;
+    let b: Vec<f32> = (0..d)
+        .map(|j| {
+            let proj: f64 = (0..d).map(|k| stats.mean_x[k] * wmat[(k, j)]).sum();
+            (mean_yp[j] - proj) as f32
+        })
+        .collect();
+    Ok(LinearLayer { d_in: d, d_out: d, w: wmat.to_f32(), b })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::GramAccumulator;
+    use crate::util::rng::Rng;
+
+    fn make_xy(
+        rng: &mut Rng,
+        n: usize,
+        d: usize,
+        f: impl Fn(&[f32], &mut Rng) -> Vec<f32>,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n * d];
+        for r in 0..n {
+            let xr: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let yr = f(&xr, rng);
+            x[r * d..(r + 1) * d].copy_from_slice(&xr);
+            y[r * d..(r + 1) * d].copy_from_slice(&yr);
+        }
+        (x, y)
+    }
+
+    fn stats_of(x: &[f32], y: &[f32], d: usize) -> crate::stats::SampleStats {
+        let mut acc = GramAccumulator::new(d);
+        acc.update(x, y).unwrap();
+        acc.finalize().unwrap()
+    }
+
+    #[test]
+    fn recovers_exact_affine_map() {
+        let mut rng = Rng::new(1);
+        let d = 6;
+        let wt: Vec<f32> = (0..d * d).map(|_| rng.normal_f32() * 0.5).collect();
+        let bt: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let wt2 = wt.clone();
+        let bt2 = bt.clone();
+        let (x, y) = make_xy(&mut rng, 3000, d, move |xr, _| {
+            (0..d)
+                .map(|j| bt2[j] + (0..d).map(|k| xr[k] * wt2[k * d + j]).sum::<f32>())
+                .collect()
+        });
+        let layer = lmmse_fit(&stats_of(&x, &y, d), 0.0).unwrap();
+        for (a, b) in layer.w.iter().zip(&wt) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        for (a, b) in layer.b.iter().zip(&bt) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn orthogonality_principle() {
+        // E[(Y - Ŷ)(X - μx)^T] == 0 on the sample (Appendix A.2.1)
+        let mut rng = Rng::new(2);
+        let d = 5;
+        let n = 2000;
+        let (x, y) = make_xy(&mut rng, n, d, |xr, rng| {
+            (0..d)
+                .map(|j| (xr[j] * xr[(j + 1) % d]).tanh() + 0.3 * rng.normal_f32())
+                .collect()
+        });
+        let st = stats_of(&x, &y, d);
+        let layer = lmmse_fit(&st, 0.0).unwrap();
+        let mut cross = vec![0.0f64; d * d];
+        for r in 0..n {
+            let xr = &x[r * d..(r + 1) * d];
+            let yhat = layer.apply_row(xr);
+            for i in 0..d {
+                let err = (y[r * d + i] - yhat[i]) as f64;
+                for j in 0..d {
+                    cross[i * d + j] += err * (xr[j] as f64 - st.mean_x[j]);
+                }
+            }
+        }
+        let max = cross.iter().fold(0.0f64, |m, &v| m.max((v / n as f64).abs()));
+        assert!(max < 5e-3, "orthogonality violated: {max}");
+    }
+
+    #[test]
+    fn beats_any_perturbed_linear_map() {
+        // LMMSE minimizes MSE among linear estimators: perturbing W must
+        // not decrease the sample MSE (up to sampling noise).
+        let mut rng = Rng::new(3);
+        let d = 4;
+        let n = 3000;
+        let (x, y) = make_xy(&mut rng, n, d, |xr, rng| {
+            (0..d).map(|j| xr[j].sin() + 0.2 * rng.normal_f32()).collect()
+        });
+        let layer = lmmse_fit(&stats_of(&x, &y, d), 0.0).unwrap();
+        let mse = |l: &LinearLayer| -> f64 {
+            (0..n)
+                .map(|r| {
+                    let yh = l.apply_row(&x[r * d..(r + 1) * d]);
+                    yh.iter()
+                        .zip(&y[r * d..(r + 1) * d])
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum::<f64>()
+                / n as f64
+        };
+        let base = mse(&layer);
+        for trial in 0..5 {
+            let mut pert = layer.clone();
+            let mut prng = Rng::new(100 + trial);
+            for w in pert.w.iter_mut() {
+                *w += 0.05 * prng.normal_f32();
+            }
+            assert!(mse(&pert) >= base - 1e-9, "perturbation improved MSE");
+        }
+    }
+
+    #[test]
+    fn residual_fit_matches_delta_fit_plus_identity() {
+        // fitting on Y+ = X + Y should equal fitting on Y then adding I
+        let mut rng = Rng::new(4);
+        let d = 4;
+        let (x, y) = make_xy(&mut rng, 2000, d, |xr, rng| {
+            (0..d).map(|j| 0.5 * xr[j] + 0.1 * rng.normal_f32()).collect()
+        });
+        let st = stats_of(&x, &y, d);
+        let delta = lmmse_fit(&st, 0.0).unwrap();
+        let resid = lmmse_fit_residual(&st, 0.0).unwrap();
+        for i in 0..d {
+            for j in 0..d {
+                let want = delta.w[i * d + j] + if i == j { 1.0 } else { 0.0 };
+                assert!((resid.w[i * d + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_row_matches_manual() {
+        let layer = LinearLayer {
+            d_in: 2,
+            d_out: 2,
+            w: vec![1.0, 2.0, 3.0, 4.0], // [[1,2],[3,4]]
+            b: vec![10.0, 20.0],
+        };
+        assert_eq!(layer.apply_row(&[1.0, 1.0]), vec![14.0, 26.0]);
+    }
+}

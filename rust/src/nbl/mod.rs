@@ -1,0 +1,19 @@
+//! The paper's core contribution: Neural Block Linearization.
+//!
+//! - [`cca`]      — Theorem 3.2: the CCA-based NMSE upper bound.
+//! - [`lmmse`]    — Proposition 3.1: the closed-form linear estimator.
+//! - [`criteria`] — layer-selection criteria (CCA bound / cosine / greedy).
+//! - [`plan`]     — per-layer substitution plans consumed by the executor.
+//! - [`calibrate`]— Algorithm 1/2: drive capture → stats → bound + weights.
+
+pub mod calibrate;
+pub mod cca;
+pub mod criteria;
+pub mod lmmse;
+pub mod plan;
+
+pub use calibrate::{CalibrationReport, Calibrator, LayerCalibration};
+pub use cca::{cca_bound, CcaAnalysis};
+pub use criteria::Criterion;
+pub use lmmse::{lmmse_fit, LinearLayer};
+pub use plan::{BlockOp, LayerPlan, PlanKind};

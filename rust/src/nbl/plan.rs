@@ -1,0 +1,188 @@
+//! Substitution plans: what the executor runs per layer.
+//!
+//! A plan assigns every transformer layer an attention op and an MLP op.
+//! NBL, the DROP/SLEB baselines and SliceGPT-like all reduce to plans, so
+//! the serving engine, KV manager and eval harness are agnostic to *how*
+//! a compression method was derived.
+
+use std::sync::Arc;
+
+use crate::nbl::lmmse::LinearLayer;
+
+/// What runs in a layer's attention slot.
+#[derive(Debug, Clone)]
+pub enum BlockOp {
+    /// Original softmax attention (allocates KV cache).
+    Attention,
+    /// NBL linear substitution: x + xW + b (no KV cache).
+    Linear(Arc<LinearLayer>),
+    /// Attn-DROP: the block is removed entirely (identity).
+    Identity,
+}
+
+impl BlockOp {
+    pub fn needs_kv(&self) -> bool {
+        matches!(self, BlockOp::Attention)
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            BlockOp::Attention => "attn",
+            BlockOp::Linear(_) => "nbl",
+            BlockOp::Identity => "drop",
+        }
+    }
+}
+
+/// What runs in a layer's MLP slot.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MlpOp {
+    Mlp,
+    /// Removed (Block-DROP / SLEB / Block-NBL fold the whole block).
+    Identity,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub attn: BlockOp,
+    pub mlp: MlpOp,
+}
+
+/// Descriptor of how a plan was produced (report labels).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanKind {
+    Baseline,
+    AttnNbl(usize),
+    AttnDrop(usize),
+    BlockNbl(usize),
+    BlockDrop(usize),
+    Sleb(usize),
+    SliceGpt(u32), // percent
+    Custom(String),
+}
+
+impl PlanKind {
+    pub fn label(&self) -> String {
+        match self {
+            PlanKind::Baseline => "Baseline".into(),
+            PlanKind::AttnNbl(m) => format!("Attn NBL-{m}"),
+            PlanKind::AttnDrop(m) => format!("Attn DROP-{m}"),
+            PlanKind::BlockNbl(m) => format!("Block NBL-{m}"),
+            PlanKind::BlockDrop(m) => format!("Block DROP-{m}"),
+            PlanKind::Sleb(m) => format!("SLEB-{m}"),
+            PlanKind::SliceGpt(p) => format!("SliceGPT-{p}%"),
+            PlanKind::Custom(s) => s.clone(),
+        }
+    }
+}
+
+/// A full per-model substitution plan.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub kind: PlanKind,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ModelPlan {
+    pub fn baseline(n_layers: usize) -> ModelPlan {
+        ModelPlan {
+            kind: PlanKind::Baseline,
+            layers: (0..n_layers)
+                .map(|_| LayerPlan { attn: BlockOp::Attention, mlp: MlpOp::Mlp })
+                .collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layers that still need a KV cache.
+    pub fn kv_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.attn.needs_kv()).count()
+    }
+
+    /// The paper's KV saving factor (K-m)/K (§4.2).
+    pub fn kv_fraction(&self) -> f64 {
+        self.kv_layers() as f64 / self.n_layers() as f64
+    }
+
+    /// Replace attention with a fitted linear layer at `idx`.
+    pub fn linearize_attn(&mut self, idx: usize, layer: Arc<LinearLayer>) {
+        self.layers[idx].attn = BlockOp::Linear(layer);
+    }
+
+    /// Remove the attention block at `idx` (Attn-DROP).
+    pub fn drop_attn(&mut self, idx: usize) {
+        self.layers[idx].attn = BlockOp::Identity;
+    }
+
+    /// Remove an entire transformer block (SLEB / Block-DROP).
+    pub fn drop_block(&mut self, idx: usize) {
+        self.layers[idx].attn = BlockOp::Identity;
+        self.layers[idx].mlp = MlpOp::Identity;
+    }
+
+    /// Replace an entire block with a residual-fitted linear layer.
+    pub fn linearize_block(&mut self, idx: usize, layer: Arc<LinearLayer>) {
+        self.layers[idx].attn = BlockOp::Linear(layer);
+        self.layers[idx].mlp = MlpOp::Identity;
+    }
+
+    /// Human-readable layer map, e.g. "attn attn nbl drop ...".
+    pub fn describe(&self) -> String {
+        self.layers
+            .iter()
+            .map(|l| {
+                let mut s = l.attn.short().to_string();
+                if l.mlp == MlpOp::Identity {
+                    s.push_str("-nomlp");
+                }
+                s
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear(d: usize) -> Arc<LinearLayer> {
+        Arc::new(LinearLayer { d_in: d, d_out: d, w: vec![0.0; d * d], b: vec![0.0; d] })
+    }
+
+    #[test]
+    fn baseline_all_attention() {
+        let p = ModelPlan::baseline(6);
+        assert_eq!(p.kv_layers(), 6);
+        assert_eq!(p.kv_fraction(), 1.0);
+        assert_eq!(p.kind.label(), "Baseline");
+    }
+
+    #[test]
+    fn kv_accounting_follows_substitutions() {
+        let mut p = ModelPlan::baseline(6);
+        p.linearize_attn(1, linear(4));
+        p.drop_attn(3);
+        assert_eq!(p.kv_layers(), 4);
+        assert!((p.kv_fraction() - 4.0 / 6.0).abs() < 1e-12);
+        p.drop_block(5);
+        assert_eq!(p.kv_layers(), 3);
+        assert_eq!(p.layers[5].mlp, MlpOp::Identity);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(PlanKind::AttnNbl(8).label(), "Attn NBL-8");
+        assert_eq!(PlanKind::SliceGpt(25).label(), "SliceGPT-25%");
+    }
+
+    #[test]
+    fn describe_is_stable() {
+        let mut p = ModelPlan::baseline(3);
+        p.linearize_block(2, linear(2));
+        assert_eq!(p.describe(), "attn attn nbl-nomlp");
+    }
+}

@@ -1,0 +1,182 @@
+//! Activation-aware weight quantization (AWQ-like; paper §4.3 + App E.6).
+//!
+//! Symmetric per-output-channel int-N quantization of every projection
+//! matrix, with AWQ's activation-aware trick: per-input-channel scales
+//! s_k = a_k^alpha (a_k = mean |activation_k| from calibration) are
+//! applied before rounding and folded back after, shrinking relative
+//! error exactly where activations are large. Weights are stored
+//! de-quantized (fake quant) because the CPU PJRT path computes in f32 —
+//! the *accuracy* effect of quantization is what Table 5 measures;
+//! memory/speed effects at 4-bit are reported analytically.
+
+use crate::error::Result;
+use crate::model::weights::Weights;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub bits: u32,
+    /// AWQ exponent on activation scales (0 = plain round-to-nearest).
+    pub alpha: f64,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { bits: 8, alpha: 0.5 }
+    }
+}
+
+/// Quantize one [in, out] matrix with optional per-input-channel
+/// activation scales.
+pub fn quantize_matrix(w: &Tensor, act_scale: Option<&[f32]>, cfg: &QuantConfig) -> Tensor {
+    let (rows, cols) = (w.shape()[0], w.shape()[1]);
+    let qmax = ((1i64 << (cfg.bits - 1)) - 1) as f32;
+    let data = w.data();
+
+    // AWQ scaling: s_k per input row
+    let s: Vec<f32> = match act_scale {
+        Some(a) => a
+            .iter()
+            .map(|&x| x.abs().max(1e-4).powf(cfg.alpha as f32))
+            .collect(),
+        None => vec![1.0; rows],
+    };
+
+    // scaled weights: w'_kj = w_kj * s_k
+    let mut scaled = vec![0.0f32; rows * cols];
+    for k in 0..rows {
+        for j in 0..cols {
+            scaled[k * cols + j] = data[k * cols + j] * s[k];
+        }
+    }
+    // per-output-channel symmetric scale
+    let mut out = vec![0.0f32; rows * cols];
+    for j in 0..cols {
+        let mut maxabs = 0.0f32;
+        for k in 0..rows {
+            maxabs = maxabs.max(scaled[k * cols + j].abs());
+        }
+        let delta = (maxabs / qmax).max(1e-12);
+        for k in 0..rows {
+            let q = (scaled[k * cols + j] / delta).round().clamp(-qmax, qmax);
+            // dequantize and undo the AWQ scale
+            out[k * cols + j] = q * delta / s[k];
+        }
+    }
+    Tensor::new(vec![rows, cols], out).unwrap()
+}
+
+/// Quantize a full model. `act_scales` gives the residual-stream
+/// per-channel mean |activation| (from calibration); None = plain RTN.
+pub fn quantize_weights(
+    weights: &Weights,
+    act_scales: Option<&[f32]>,
+    cfg: &QuantConfig,
+) -> Result<Weights> {
+    let mut out = weights.clone();
+    for l in out.layers.iter_mut() {
+        l.wq = quantize_matrix(&l.wq, act_scales, cfg);
+        l.wk = quantize_matrix(&l.wk, act_scales, cfg);
+        l.wv = quantize_matrix(&l.wv, act_scales, cfg);
+        l.wo = quantize_matrix(&l.wo, None, cfg); // input = attn out, not stream
+        l.w1 = quantize_matrix(&l.w1, act_scales, cfg);
+        l.w3 = quantize_matrix(&l.w3, act_scales, cfg);
+        l.w2 = quantize_matrix(&l.w2, None, cfg);
+    }
+    out.w_head = quantize_matrix(&out.w_head, act_scales, cfg);
+    Ok(out)
+}
+
+/// Quantize the LMMSE substitution layers too (App. E.6: "the linear
+/// weights calculated by NBL were also quantized ... for compatibility").
+pub fn quantize_linear_layer(
+    lin: &crate::nbl::lmmse::LinearLayer,
+    act_scales: Option<&[f32]>,
+    cfg: &QuantConfig,
+) -> crate::nbl::lmmse::LinearLayer {
+    let w = Tensor::new(vec![lin.d_in, lin.d_out], lin.w.clone()).unwrap();
+    let q = quantize_matrix(&w, act_scales, cfg);
+    crate::nbl::lmmse::LinearLayer {
+        d_in: lin.d_in,
+        d_out: lin.d_out,
+        w: q.into_data(),
+        b: lin.b.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Tensor {
+        Tensor::from_fn(vec![r, c], |_| rng.normal_f32() * 0.1)
+    }
+
+    fn rel_err(a: &Tensor, b: &Tensor) -> f64 {
+        let num: f64 = a
+            .data()
+            .iter()
+            .zip(b.data())
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        let den: f64 = a.data().iter().map(|x| (*x as f64).powi(2)).sum();
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn int8_error_is_small() {
+        let mut rng = Rng::new(1);
+        let w = random_mat(&mut rng, 64, 32);
+        let q = quantize_matrix(&w, None, &QuantConfig { bits: 8, alpha: 0.0 });
+        assert!(rel_err(&w, &q) < 0.01, "{}", rel_err(&w, &q));
+    }
+
+    #[test]
+    fn fewer_bits_more_error() {
+        let mut rng = Rng::new(2);
+        let w = random_mat(&mut rng, 64, 32);
+        let e8 = rel_err(&w, &quantize_matrix(&w, None, &QuantConfig { bits: 8, alpha: 0.0 }));
+        let e4 = rel_err(&w, &quantize_matrix(&w, None, &QuantConfig { bits: 4, alpha: 0.0 }));
+        let e2 = rel_err(&w, &quantize_matrix(&w, None, &QuantConfig { bits: 2, alpha: 0.0 }));
+        assert!(e8 < e4 && e4 < e2, "{e8} {e4} {e2}");
+    }
+
+    #[test]
+    fn awq_scaling_reduces_salient_error() {
+        // make channel 0's activations dominant; AWQ must cut the
+        // *activation-weighted* output error vs plain RTN at 3 bits
+        let mut rng = Rng::new(3);
+        let (r, c) = (32, 16);
+        let w = random_mat(&mut rng, r, c);
+        let mut act = vec![0.05f32; r];
+        act[0] = 10.0;
+        act[1] = 8.0;
+        let cfg_plain = QuantConfig { bits: 3, alpha: 0.0 };
+        let cfg_awq = QuantConfig { bits: 3, alpha: 0.7 };
+        let qp = quantize_matrix(&w, None, &cfg_plain);
+        let qa = quantize_matrix(&w, Some(&act), &cfg_awq);
+        // expected output error: sum_k act_k^2 * ||w_k - q_k||^2
+        let werr = |q: &Tensor| -> f64 {
+            (0..r)
+                .map(|k| {
+                    let row_err: f64 = (0..c)
+                        .map(|j| {
+                            ((w.data()[k * c + j] - q.data()[k * c + j]) as f64).powi(2)
+                        })
+                        .sum();
+                    (act[k] as f64).powi(2) * row_err
+                })
+                .sum()
+        };
+        assert!(werr(&qa) < werr(&qp), "awq {} rtn {}", werr(&qa), werr(&qp));
+    }
+
+    #[test]
+    fn quantize_preserves_shape_and_validates() {
+        let mut rng = Rng::new(4);
+        let w = random_mat(&mut rng, 8, 8);
+        let q = quantize_matrix(&w, None, &QuantConfig::default());
+        assert_eq!(q.shape(), w.shape());
+    }
+}

@@ -1,0 +1,149 @@
+//! Paper-shaped table formatting + CSV/JSON persistence under reports/.
+
+use std::path::PathBuf;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// A simple column-aligned table (the shape of the paper's Tables 2-5).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write reports/<id>.txt and reports/<id>.csv; returns the txt path.
+    pub fn save(&self, id: &str) -> Result<PathBuf> {
+        let dir = reports_dir();
+        std::fs::create_dir_all(&dir)?;
+        let txt = dir.join(format!("{id}.txt"));
+        std::fs::write(&txt, self.render())?;
+        std::fs::write(dir.join(format!("{id}.csv")), self.to_csv())?;
+        Ok(txt)
+    }
+}
+
+pub fn reports_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("NBL_REPORTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from("reports")
+}
+
+pub fn save_json(id: &str, j: &Json) -> Result<PathBuf> {
+    let dir = reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{id}.json"));
+    std::fs::write(&path, j.to_string())?;
+    Ok(path)
+}
+
+/// Format a ratio like the paper ("1.27"), with 1 = baseline.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format an accuracy in percent with one decimal ("70.2").
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("T", &["Method", "Avg"]);
+        t.row(vec!["Baseline".into(), "70.2".into()]);
+        t.row(vec!["Attn NBL-8".into(), "70.0".into()]);
+        let r = t.render();
+        assert!(r.contains("Baseline"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ratio(1.266), "1.27");
+        assert_eq!(pct(0.702), "70.2");
+    }
+}

@@ -1,0 +1,62 @@
+//! Tensor <-> xla::Literal conversions.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Upload a host tensor into an f32 literal with its shape.
+pub fn lit_from_tensor(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(Into::into)
+}
+
+/// Upload a raw f32 slice with an explicit shape.
+pub fn lit_from_slice(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(Error::Shape(format!(
+            "literal: {} elems for shape {shape:?}",
+            data.len()
+        )));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(Into::into)
+}
+
+/// Scalar i32 literal (the `pos` argument of cached attention).
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Download a literal into a Tensor (f32).
+pub fn tensor_from_lit(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let t = Tensor::from_fn(vec![2, 3, 4], |i| i as f32 * 0.5);
+        let lit = lit_from_tensor(&t).unwrap();
+        let back = tensor_from_lit(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_from_slice(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_i32() {
+        let l = lit_scalar_i32(42);
+        assert_eq!(l.get_first_element::<i32>().unwrap(), 42);
+    }
+}

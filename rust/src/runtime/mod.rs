@@ -1,0 +1,18 @@
+//! PJRT runtime: client + lazily-compiled executable registry.
+//!
+//! Loads HLO-text artifacts (AOT-lowered by `python/compile/aot.py`),
+//! compiles them on the PJRT CPU client on first use, and provides typed
+//! helpers for Tensor <-> Literal conversion.
+//!
+//! Findings baked into the design (see rust/src/bin/probe_pjrt.rs):
+//! - tuple-rooted executables return ONE tuple buffer on this PJRT build,
+//!   so multi-output results round-trip through `Literal::decompose_tuple`
+//!   (a host memcpy on the CPU backend — measured in §Perf);
+//! - `execute::<&Literal>` lets us pass cached weight literals without
+//!   cloning.
+
+pub mod literals;
+pub mod registry;
+
+pub use literals::{lit_from_tensor, lit_scalar_i32, tensor_from_lit};
+pub use registry::Runtime;

@@ -1,0 +1,180 @@
+//! The PJRT client + lazy executable registry.
+//!
+//! Executables compile on first use and are cached for the process
+//! lifetime; `warm_up` pre-compiles a given op list (the serving engine
+//! warms the decode-critical set at startup so TTFT is not polluted by
+//! compilation).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::model::artifacts::Artifacts;
+use crate::util::timer::Timer;
+
+/// Argument to `run_mixed`: host literal (uploaded per call) or a
+/// pre-uploaded device buffer.
+pub enum ArgRef<'a> {
+    Lit(&'a xla::Literal),
+    Buf(&'a HeldBuffer),
+}
+
+/// A device buffer plus the host literal backing its (asynchronous)
+/// transfer — see [`Runtime::upload`].
+pub struct HeldBuffer {
+    _lit: xla::Literal,
+    buf: xla::PjRtBuffer,
+}
+
+impl HeldBuffer {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: Artifacts,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// (op, compile_seconds) log for §Perf.
+    compile_log: Mutex<Vec<(String, f64)>>,
+}
+
+// The PJRT client and executables are internally synchronized by the C
+// runtime; the Rust wrapper just holds opaque pointers.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new(artifacts: Artifacts) -> Result<Arc<Runtime>> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Arc::new(Runtime {
+            client,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+            compile_log: Mutex::new(Vec::new()),
+        }))
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Get (compiling if needed) the executable for an op stem.
+    pub fn executable(&self, op: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(op) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts.hlo_path(op)?;
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        let secs = t.elapsed_s();
+        log::debug!("compiled {op} in {secs:.2}s");
+        self.compile_log.lock().unwrap().push((op.to_string(), secs));
+        // double-compile under race is harmless; last one wins
+        self.cache.lock().unwrap().insert(op.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a list of ops (startup warm-up).
+    pub fn warm_up(&self, ops: &[String]) -> Result<f64> {
+        let t = Timer::start();
+        for op in ops {
+            self.executable(op)?;
+        }
+        Ok(t.elapsed_s())
+    }
+
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.lock().unwrap().clone()
+    }
+
+    /// Run an op with literal args; returns the decomposed output tuple.
+    ///
+    /// NOTE: this goes through `execute_b` with buffers we own, NOT
+    /// `execute`: the crate's C-side `execute` leaks every input buffer
+    /// (`BufferFromHostLiteral(...).release()` with no delete —
+    /// xla_rs.cc:900), which grows the heap by ~1 MB per decode step and
+    /// degrades throughput over the process lifetime (measured in
+    /// EXPERIMENTS.md §Perf). Rust-owned `PjRtBuffer`s drop cleanly.
+    pub fn run(&self, op: &str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(op)?;
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<_, _>>()?;
+        self.run_buffers(op, &exe, &bufs)
+    }
+
+    /// Run an op with pre-uploaded device buffers (the hot path: weight
+    /// buffers are cached per engine and reused across calls).
+    pub fn run_buffers(
+        &self,
+        op: &str,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Xla(format!("{op}: no output buffer")))?;
+        let mut lit = first.to_literal_sync()?;
+        // AOT lowering uses return_tuple=True: root is always a tuple
+        lit.decompose_tuple().map_err(Into::into)
+    }
+
+    /// Upload a literal to a device buffer (cached-weights path).
+    ///
+    /// SAFETY NOTE: `BufferFromHostLiteral` transfers asynchronously on a
+    /// worker thread — the source literal MUST outlive the transfer. We
+    /// return a [`HeldBuffer`] that owns the literal for the buffer's
+    /// whole lifetime (freeing it early is a use-after-free that
+    /// manifests as a tfrt size-check abort).
+    pub fn upload(&self, lit: xla::Literal) -> Result<HeldBuffer> {
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        // force the async transfer to complete: a buffer dropped (or a
+        // literal freed) while its transfer is still in flight segfaults
+        // in the tfrt worker. ToLiteralSync blocks on buffer readiness.
+        let _ = buf.to_literal_sync()?;
+        Ok(HeldBuffer { _lit: lit, buf })
+    }
+
+    /// Run with a mix of literal args (uploaded now) and pre-uploaded
+    /// buffers (the engine's cached weights) — §Perf iteration 2: weights
+    /// are uploaded once per engine instead of once per op call.
+    pub fn run_mixed(&self, op: &str, args: &[ArgRef<'_>]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(op)?;
+        let owned: Vec<Option<xla::PjRtBuffer>> = args
+            .iter()
+            .map(|a| match a {
+                ArgRef::Lit(l) => self.client.buffer_from_host_literal(None, l).map(Some),
+                ArgRef::Buf(_) => Ok(None),
+            })
+            .collect::<std::result::Result<_, _>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .zip(&owned)
+            .map(|(a, o)| match a {
+                ArgRef::Lit(_) => o.as_ref().unwrap(),
+                ArgRef::Buf(b) => b.buffer(),
+            })
+            .collect();
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Xla(format!("{op}: no output buffer")))?;
+        let mut lit = first.to_literal_sync()?;
+        lit.decompose_tuple().map_err(Into::into)
+    }
+}

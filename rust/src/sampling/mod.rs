@@ -1,0 +1,123 @@
+//! Token sampling (host-side; logits come back from the head executable).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    pub temperature: f64,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+
+    pub fn top_k(k: usize, temperature: f64, seed: u64) -> SamplingParams {
+        SamplingParams { temperature, top_k: k, seed }
+    }
+}
+
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        let rng = Rng::new(params.seed);
+        Sampler { params, rng }
+    }
+
+    /// Sample a token id from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        if self.params.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // top-k filter then softmax at temperature
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let k = if self.params.top_k == 0 { logits.len() } else { self.params.top_k.min(logits.len()) };
+        let kept = &idx[..k];
+        let t = self.params.temperature;
+        let max = logits[kept[0]] as f64;
+        let weights: Vec<f64> = kept
+            .iter()
+            .map(|&i| ((logits[i] as f64 - max) / t).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut u = self.rng.uniform() * total;
+        for (w, &i) in weights.iter().zip(kept) {
+            u -= w;
+            if u <= 0.0 {
+                return i as u32;
+            }
+        }
+        kept[k - 1] as u32
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Log-softmax of a logits row (eval scoring).
+pub fn log_softmax(logits: &[f32]) -> Vec<f64> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&x| ((x as f64) - max).exp()).collect();
+    let lse = exps.iter().sum::<f64>().ln() + max;
+    logits.iter().map(|&x| x as f64 - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplingParams::greedy());
+        assert_eq!(s.sample(&[0.1, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let mut s = Sampler::new(SamplingParams::top_k(1, 1.0, 9));
+        for _ in 0..20 {
+            assert_eq!(s.sample(&[0.1, 3.0, 2.0]), 1);
+        }
+    }
+
+    #[test]
+    fn topk_stays_in_top_set() {
+        let mut s = Sampler::new(SamplingParams::top_k(2, 1.0, 4));
+        for _ in 0..200 {
+            let t = s.sample(&[0.0, 5.0, 4.5, -2.0]);
+            assert!(t == 1 || t == 2);
+        }
+    }
+
+    #[test]
+    fn temperature_spreads_mass() {
+        let mut hot = Sampler::new(SamplingParams::top_k(0, 5.0, 1));
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(hot.sample(&[1.0, 1.1, 0.9, 1.05]));
+        }
+        assert!(seen.len() >= 3, "high temperature should visit most tokens");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f64 = ls.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Request/response types + line-JSON wire codec.
+
+use crate::error::{Error, Result};
+use crate::sampling::SamplingParams;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+}
+
+impl GenRequest {
+    /// Parse the wire form: {"id":1,"prompt":"text","max_tokens":32,
+    /// "temperature":0.0,"top_k":0}  (prompt_ids may replace prompt).
+    pub fn from_json(j: &Json) -> Result<GenRequest> {
+        let id = j.get("id")?.as_usize()? as u64;
+        let prompt = if let Some(text) = j.opt("prompt") {
+            crate::data::tokenizer::ByteTokenizer::new().encode(text.as_str()?)
+        } else if let Some(ids) = j.opt("prompt_ids") {
+            ids.as_usize_vec()?.iter().map(|&x| x as u32).collect()
+        } else {
+            return Err(Error::Serving("need prompt or prompt_ids".into()));
+        };
+        if prompt.is_empty() {
+            return Err(Error::Serving("empty prompt".into()));
+        }
+        let max_new_tokens = match j.opt("max_tokens") {
+            Some(v) => v.as_usize()?,
+            None => 32,
+        };
+        let temperature = match j.opt("temperature") {
+            Some(v) => v.as_f64()?,
+            None => 0.0,
+        };
+        let top_k = match j.opt("top_k") {
+            Some(v) => v.as_usize()?,
+            None => 0,
+        };
+        let seed = match j.opt("seed") {
+            Some(v) => v.as_usize()? as u64,
+            None => id,
+        };
+        Ok(GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            params: SamplingParams { temperature, top_k, seed },
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub error: Option<String>,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::Str(self.text.clone())),
+            (
+                "tokens",
+                Json::arr_f64(self.tokens.iter().map(|&t| t as f64)),
+            ),
+            ("ttft_ms", Json::Num(self.ttft_ms)),
+            ("total_ms", Json::Num(self.total_ms)),
+        ]);
+        if let Some(e) = &self.error {
+            j.set("error", Json::Str(e.clone()));
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trip() {
+        let j = Json::parse(
+            r#"{"id": 7, "prompt": "abc", "max_tokens": 5, "temperature": 0.8, "top_k": 3}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![97, 98, 99]);
+        assert_eq!(r.max_new_tokens, 5);
+        assert_eq!(r.params.top_k, 3);
+    }
+
+    #[test]
+    fn prompt_ids_accepted() {
+        let j = Json::parse(r#"{"id": 1, "prompt_ids": [10, 20]}"#).unwrap();
+        let r = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r.prompt, vec![10, 20]);
+        assert_eq!(r.max_new_tokens, 32);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(GenRequest::from_json(&Json::parse(r#"{"id":1,"prompt":""}"#).unwrap()).is_err());
+        assert!(GenRequest::from_json(&Json::parse(r#"{"id":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn response_serializes() {
+        let r = GenResponse {
+            id: 3,
+            tokens: vec![1, 2],
+            text: "ab".into(),
+            ttft_ms: 1.5,
+            total_ms: 10.0,
+            error: None,
+        };
+        let s = r.to_json().to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("id").unwrap().as_usize().unwrap(), 3);
+        assert!(back.opt("error").is_none());
+    }
+}

@@ -1,0 +1,110 @@
+//! Batch-group formation: FIFO admission with exact-length grouping.
+//!
+//! Requests in a group share the prefill bucket and decode position
+//! (DESIGN.md), so a group = requests with identical prompt length, up to
+//! `max_batch`. The batcher favours the oldest waiting request (no
+//! starvation: groups are seeded by the queue head, never by popularity).
+
+use std::collections::VecDeque;
+
+use crate::server::api::GenRequest;
+
+pub struct Batcher {
+    queue: VecDeque<GenRequest>,
+    max_batch: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Batcher {
+        Batcher { queue: VecDeque::new(), max_batch: max_batch.max(1) }
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next group: the queue head plus all same-length requests
+    /// behind it (up to max_batch), preserving FIFO among the rest.
+    pub fn next_group(&mut self) -> Option<Vec<GenRequest>> {
+        let head = self.queue.pop_front()?;
+        let len = head.prompt.len();
+        let mut group = vec![head];
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(r) = self.queue.pop_front() {
+            if group.len() < self.max_batch && r.prompt.len() == len {
+                group.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.queue = rest;
+        Some(group)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::SamplingParams;
+
+    fn req(id: u64, len: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: vec![1; len],
+            max_new_tokens: 4,
+            params: SamplingParams::greedy(),
+        }
+    }
+
+    #[test]
+    fn groups_same_length_fifo() {
+        let mut b = Batcher::new(4);
+        for (id, len) in [(1, 8), (2, 16), (3, 8), (4, 8), (5, 16)] {
+            b.push(req(id, len));
+        }
+        let g1 = b.next_group().unwrap();
+        assert_eq!(g1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        let g2 = b.next_group().unwrap();
+        assert_eq!(g2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 5]);
+        assert!(b.next_group().is_none());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(2);
+        for id in 0..5 {
+            b.push(req(id, 8));
+        }
+        assert_eq!(b.next_group().unwrap().len(), 2);
+        assert_eq!(b.next_group().unwrap().len(), 2);
+        assert_eq!(b.next_group().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn head_is_never_starved() {
+        let mut b = Batcher::new(8);
+        b.push(req(1, 10)); // lonely length
+        for id in 2..10 {
+            b.push(req(id, 32));
+        }
+        // head defines the group even though length-32 is more popular
+        let g = b.next_group().unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].id, 1);
+    }
+
+    #[test]
+    fn preserves_order_of_leftovers() {
+        let mut b = Batcher::new(8);
+        b.push(req(1, 8));
+        b.push(req(2, 16));
+        b.push(req(3, 24));
+        let _ = b.next_group();
+        let g2 = b.next_group().unwrap();
+        assert_eq!(g2[0].id, 2);
+    }
+}

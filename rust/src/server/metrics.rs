@@ -1,0 +1,191 @@
+//! Serving metrics: TTFT, TPOT, prefill speed and throughput in the
+//! paper's §4.1 definitions.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::{mean, median, percentile};
+
+#[derive(Debug, Clone)]
+pub struct RequestTiming {
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// time to first token, seconds
+    pub ttft_s: f64,
+    /// total request wall time, seconds
+    pub total_s: f64,
+    /// per-generated-token intervals, seconds
+    pub token_intervals: Vec<f64>,
+}
+
+impl RequestTiming {
+    /// Paper §4.1: prefill speed = context tokens / time-to-first-token.
+    pub fn prefill_speed(&self) -> f64 {
+        self.prompt_tokens as f64 / self.ttft_s.max(1e-12)
+    }
+
+    /// Paper §4.1: throughput = median tokens/s over intervals.
+    pub fn decode_throughput(&self) -> f64 {
+        if self.token_intervals.is_empty() {
+            return 0.0;
+        }
+        let per: Vec<f64> = self
+            .token_intervals
+            .iter()
+            .map(|&dt| 1.0 / dt.max(1e-12))
+            .collect();
+        median(&per)
+    }
+}
+
+/// Per-request stopwatch used by the generation loop.
+pub struct Stopwatch {
+    start: Instant,
+    first_token: Option<f64>,
+    last_mark: f64,
+    intervals: Vec<f64>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch {
+            start: Instant::now(),
+            first_token: None,
+            last_mark: 0.0,
+            intervals: Vec::new(),
+        }
+    }
+
+    pub fn mark_token(&mut self) {
+        let now = self.start.elapsed().as_secs_f64();
+        if self.first_token.is_none() {
+            self.first_token = Some(now);
+        } else {
+            self.intervals.push(now - self.last_mark);
+        }
+        self.last_mark = now;
+    }
+
+    pub fn finish(self, prompt_tokens: usize, generated_tokens: usize) -> RequestTiming {
+        let total = self.start.elapsed().as_secs_f64();
+        RequestTiming {
+            prompt_tokens,
+            generated_tokens,
+            ttft_s: self.first_token.unwrap_or(total),
+            total_s: total,
+            token_intervals: self.intervals,
+        }
+    }
+}
+
+/// Aggregates request timings across the server lifetime.
+#[derive(Default)]
+pub struct MetricsHub {
+    timings: Mutex<Vec<RequestTiming>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    pub fn record(&self, t: RequestTiming) {
+        self.timings.lock().unwrap().push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.timings.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        let ts = self.timings.lock().unwrap();
+        let ttfts: Vec<f64> = ts.iter().map(|t| t.ttft_s).collect();
+        let prefill: Vec<f64> = ts.iter().map(|t| t.prefill_speed()).collect();
+        let tput: Vec<f64> = ts
+            .iter()
+            .filter(|t| !t.token_intervals.is_empty())
+            .map(|t| t.decode_throughput())
+            .collect();
+        let total_tokens: usize = ts.iter().map(|t| t.generated_tokens).sum();
+        let wall: f64 = ts.iter().map(|t| t.total_s).sum();
+        MetricsSummary {
+            requests: ts.len(),
+            generated_tokens: total_tokens,
+            mean_ttft_s: mean(&ttfts),
+            p90_ttft_s: percentile(&ttfts, 90.0),
+            mean_prefill_tok_s: mean(&prefill),
+            median_decode_tok_s: median(&tput),
+            aggregate_tok_s: total_tokens as f64 / wall.max(1e-12),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSummary {
+    pub requests: usize,
+    pub generated_tokens: usize,
+    pub mean_ttft_s: f64,
+    pub p90_ttft_s: f64,
+    pub mean_prefill_tok_s: f64,
+    pub median_decode_tok_s: f64,
+    pub aggregate_tok_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_math() {
+        let t = RequestTiming {
+            prompt_tokens: 100,
+            generated_tokens: 3,
+            ttft_s: 0.5,
+            total_s: 1.0,
+            token_intervals: vec![0.1, 0.2, 0.1],
+        };
+        assert!((t.prefill_speed() - 200.0).abs() < 1e-9);
+        assert!((t.decode_throughput() - 10.0).abs() < 1e-9); // median of 10,5,10
+    }
+
+    #[test]
+    fn stopwatch_tracks_first_token() {
+        let mut sw = Stopwatch::new();
+        sw.mark_token();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.mark_token();
+        let t = sw.finish(10, 2);
+        assert!(t.ttft_s >= 0.0);
+        assert_eq!(t.token_intervals.len(), 1);
+        assert!(t.token_intervals[0] >= 0.002);
+    }
+
+    #[test]
+    fn hub_aggregates() {
+        let hub = MetricsHub::new();
+        for _ in 0..3 {
+            hub.record(RequestTiming {
+                prompt_tokens: 10,
+                generated_tokens: 5,
+                ttft_s: 0.1,
+                total_s: 0.6,
+                token_intervals: vec![0.1; 4],
+            });
+        }
+        let s = hub.summary();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.generated_tokens, 15);
+        assert!((s.mean_prefill_tok_s - 100.0).abs() < 1e-9);
+        assert!((s.median_decode_tok_s - 10.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving engine (L3 coordinator proper): request router,
+//! batch-group scheduler, generation loop, TCP front-end and metrics.
+//!
+//! Shape: a vLLM-style engine scaled to this paper's evaluation protocol
+//! (§4.1: prefill speed = context tokens / TTFT; throughput = median
+//! generated tokens/s; batch size 1 for the headline numbers, batched
+//! groups for the load benches). Requests are grouped by exact prompt
+//! length (groups share the decode position — see DESIGN.md), prefilled
+//! once, then decoded in lockstep until every member finishes.
+
+pub mod api;
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+pub mod tcp;
+
+pub use api::{GenRequest, GenResponse};
+pub use batcher::Batcher;
+pub use metrics::{MetricsHub, RequestTiming};
+pub use service::{Server, ServerConfig};

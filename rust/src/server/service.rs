@@ -1,0 +1,254 @@
+//! The generation service: batched prefill + lockstep decode, a worker
+//! thread pulling groups from the batcher, and a submit API used by both
+//! the TCP front-end and the in-process benches.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::data::tokenizer::ByteTokenizer;
+use crate::error::{Error, Result};
+use crate::executor::engine::Engine;
+use crate::kvcache::{kv_bytes, KvPool};
+use crate::sampling::Sampler;
+use crate::server::api::{GenRequest, GenResponse};
+use crate::server::batcher::Batcher;
+use crate::server::metrics::{MetricsHub, Stopwatch};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    /// KV pool capacity in bytes (admission control).
+    pub kv_capacity_bytes: usize,
+    /// Optional stop token.
+    pub eos: Option<u32>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            kv_capacity_bytes: 1 << 30,
+            eos: None,
+        }
+    }
+}
+
+pub struct Server {
+    pub engine: Arc<Engine>,
+    pub config: ServerConfig,
+    pub metrics: Arc<MetricsHub>,
+    pub pool: Arc<KvPool>,
+}
+
+impl Server {
+    pub fn new(engine: Arc<Engine>, config: ServerConfig) -> Server {
+        let pool = Arc::new(KvPool::new(config.kv_capacity_bytes));
+        Server {
+            engine,
+            config,
+            metrics: Arc::new(MetricsHub::new()),
+            pool,
+        }
+    }
+
+    /// Synchronously serve one request (the paper's batch-1 protocol).
+    pub fn generate_one(&self, req: &GenRequest) -> GenResponse {
+        match self.run_group(std::slice::from_ref(req)) {
+            Ok(mut v) => v.pop().unwrap(),
+            Err(e) => error_response(req.id, e),
+        }
+    }
+
+    /// Serve a group of equal-length-prompt requests in lockstep.
+    pub fn run_group(&self, group: &[GenRequest]) -> Result<Vec<GenResponse>> {
+        let n = group.len();
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        let len = group[0].prompt.len();
+        if group.iter().any(|r| r.prompt.len() != len) {
+            return Err(Error::Serving("group prompts must share length".into()));
+        }
+        let cfg = self.engine.config();
+        let bucket_b = self.engine.batch_bucket(n)?;
+        let _lease = self.pool.reserve(kv_bytes(
+            cfg,
+            self.engine.plan.kv_layers(),
+            bucket_b,
+            cfg.max_ctx,
+            4,
+        ))?;
+
+        let max_new: usize = group.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
+        let budget = cfg.max_ctx.saturating_sub(len);
+        let max_new = max_new.min(budget);
+
+        let mut watches: Vec<Stopwatch> = group.iter().map(|_| Stopwatch::new()).collect();
+        let mut samplers: Vec<Sampler> =
+            group.iter().map(|r| Sampler::new(r.params.clone())).collect();
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut done: Vec<bool> = group.iter().map(|r| r.max_new_tokens == 0).collect();
+
+        // prefill + first token
+        let mut ids = Vec::with_capacity(n * len);
+        for r in group {
+            ids.extend_from_slice(&r.prompt);
+        }
+        let pre = self.engine.prefill(&ids, n, len, None)?;
+        let mut state = pre.state;
+        let logits = self.engine.head(&pre.hidden)?;
+        let mut next: Vec<u32> = (0..n)
+            .map(|b| samplers[b].sample(logits.at2(b, len - 1)))
+            .collect();
+        for b in 0..n {
+            if !done[b] {
+                watches[b].mark_token();
+                outputs[b].push(next[b]);
+                if Some(next[b]) == self.config.eos || outputs[b].len() >= group[b].max_new_tokens {
+                    done[b] = true;
+                }
+            }
+        }
+
+        // lockstep decode
+        for _step in 1..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let logits = self.engine.decode(&mut state, &next, 1)?;
+            for b in 0..n {
+                if done[b] {
+                    next[b] = 0; // keep feeding pad; output ignored
+                    continue;
+                }
+                let tok = samplers[b].sample(logits.at2(b, 0));
+                watches[b].mark_token();
+                outputs[b].push(tok);
+                next[b] = tok;
+                if Some(tok) == self.config.eos || outputs[b].len() >= group[b].max_new_tokens {
+                    done[b] = true;
+                }
+            }
+        }
+
+        // finalize
+        let tok = ByteTokenizer::new();
+        let mut responses = Vec::with_capacity(n);
+        for (b, (req, sw)) in group.iter().zip(watches.into_iter()).enumerate() {
+            let timing = sw.finish(len, outputs[b].len());
+            let resp = GenResponse {
+                id: req.id,
+                text: tok.decode(&outputs[b]),
+                tokens: std::mem::take(&mut outputs[b]),
+                ttft_ms: timing.ttft_s * 1e3,
+                total_ms: timing.total_s * 1e3,
+                error: None,
+            };
+            self.metrics.record(timing);
+            responses.push(resp);
+        }
+        Ok(responses)
+    }
+
+    /// Spawn the worker loop; returns a handle for async submission.
+    pub fn spawn(self: Arc<Self>) -> ServerHandle {
+        let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
+        let server = self.clone();
+        let join = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(server.config.max_batch);
+            let mut replies: std::collections::HashMap<u64, Sender<GenResponse>> =
+                std::collections::HashMap::new();
+            loop {
+                // block for at least one submission, drain the rest
+                let first = match rx.recv() {
+                    Ok(s) => s,
+                    Err(_) => break, // all senders dropped: shutdown
+                };
+                match first {
+                    Submission::Shutdown => break,
+                    Submission::Request(req, reply) => {
+                        replies.insert(req.id, reply);
+                        batcher.push(req);
+                    }
+                }
+                while let Ok(s) = rx.try_recv() {
+                    match s {
+                        Submission::Shutdown => return,
+                        Submission::Request(req, reply) => {
+                            replies.insert(req.id, reply);
+                            batcher.push(req);
+                        }
+                    }
+                }
+                while let Some(group) = batcher.next_group() {
+                    let resp = server
+                        .run_group(&group)
+                        .unwrap_or_else(|e| {
+                            group
+                                .iter()
+                                .map(|r| error_response(r.id, Error::msg(e.to_string())))
+                                .collect()
+                        });
+                    for r in resp {
+                        if let Some(tx) = replies.remove(&r.id) {
+                            let _ = tx.send(r);
+                        }
+                    }
+                }
+            }
+        });
+        ServerHandle { tx, join: Some(join) }
+    }
+}
+
+enum Submission {
+    Request(GenRequest, Sender<GenResponse>),
+    Shutdown,
+}
+
+pub struct ServerHandle {
+    tx: Sender<Submission>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Submission::Request(req, tx));
+        rx
+    }
+
+    pub fn submit_blocking(&self, req: GenRequest) -> Result<GenResponse> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| Error::Serving("server shut down".into()))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Submission::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Submission::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn error_response(id: u64, e: Error) -> GenResponse {
+    GenResponse {
+        id,
+        tokens: vec![],
+        text: String::new(),
+        ttft_ms: 0.0,
+        total_ms: 0.0,
+        error: Some(e.to_string()),
+    }
+}

@@ -1,0 +1,124 @@
+//! TCP front-end: newline-delimited JSON requests/responses.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"id": 1, "prompt": "the small robot ", "max_tokens": 32}
+//!   <- {"id": 1, "text": "...", "tokens": [...], "ttft_ms": ..., ...}
+//!
+//! One OS thread per connection (connection counts here are benchmark-
+//! scale); generation itself is funneled through the server worker, so
+//! batching happens across connections.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::server::api::{GenRequest, GenResponse};
+use crate::server::service::{Server, ServerHandle};
+use crate::util::json::Json;
+
+pub struct TcpFrontend {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpFrontend {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(server: Arc<Server>, addr: &str) -> Result<TcpFrontend> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = Arc::new(server.spawn());
+
+        let accept_thread = std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let h = handle.clone();
+                        let s = stop2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &h, &s);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+
+        Ok(TcpFrontend { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpFrontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, handle: &ServerHandle, stop: &AtomicBool) -> Result<()> {
+    // short read timeout so the thread notices server shutdown even while
+    // the peer keeps the connection open
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line).and_then(|j| GenRequest::from_json(&j)) {
+            Ok(req) => handle
+                .submit_blocking(req)
+                .unwrap_or_else(|e| err_resp(0, &e.to_string())),
+            Err(e) => err_resp(0, &e.to_string()),
+        };
+        writeln!(writer, "{}", resp.to_json().to_string())?;
+    }
+}
+
+fn err_resp(id: u64, msg: &str) -> GenResponse {
+    GenResponse {
+        id,
+        tokens: vec![],
+        text: String::new(),
+        ttft_ms: 0.0,
+        total_ms: 0.0,
+        error: Some(msg.to_string()),
+    }
+}

@@ -1,0 +1,165 @@
+//! Speculative decoding (paper §5 / Table 6: NBL composes with
+//! draft-and-verify for compounding speed-ups).
+//!
+//! Greedy draft-and-verify (EAGLE-style protocol, simple draft): the
+//! 2-layer draft model proposes `gamma = W-1` tokens autoregressively;
+//! the (possibly NBL-compressed) target verifies them in ONE cached
+//! forward of width W = the AOT verify bucket:
+//!
+//!   verify_ids = [last_committed, p1, .., p_{W-1}]
+//!   logits[i]  = prediction after verify_ids[..=i]
+//!     -> logits[i] verifies p_{i+1} for i < W-1
+//!     -> logits[W-1] is the bonus token on full acceptance
+//!
+//! With greedy acceptance the output equals the target's own greedy
+//! decoding exactly (asserted by rust/tests/test_serving.rs).
+//!
+//! Cache-rollback correctness: a partially-rejected round leaves stale
+//! rows beyond the accepted position in both KV caches; those rows are
+//! masked by `pos` and overwritten by later writes, so rollback is just
+//! `state.pos = start + accepted + 1`.
+
+use crate::error::Result;
+use crate::executor::engine::Engine;
+use crate::sampling::argmax;
+
+#[derive(Debug, Default)]
+pub struct SpecStats {
+    pub proposed: usize,
+    pub accepted: usize,
+    /// Target verify passes.
+    pub rounds: usize,
+    /// Draft forward passes (proposal + sync).
+    pub draft_steps: usize,
+    pub generated: usize,
+}
+
+impl SpecStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.proposed as f64
+    }
+
+    /// Mean tokens emitted per target forward pass (the speed-up driver).
+    pub fn tokens_per_target_pass(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.generated as f64 / (self.rounds + 1) as f64 // +1 for prefill
+    }
+}
+
+pub struct SpeculativeDecoder<'a> {
+    pub target: &'a Engine,
+    pub draft: &'a Engine,
+    /// Verify width (must be an AOT cached bucket, e.g. 4).
+    pub width: usize,
+}
+
+impl<'a> SpeculativeDecoder<'a> {
+    pub fn new(target: &'a Engine, draft: &'a Engine, width: usize) -> Self {
+        SpeculativeDecoder { target, draft, width }
+    }
+
+    /// Greedy speculative generation of exactly `max_new` tokens
+    /// (or fewer on context exhaustion).
+    pub fn generate(&self, prompt: &[u32], max_new: usize) -> Result<(Vec<u32>, SpecStats)> {
+        let len = prompt.len();
+        let mut stats = SpecStats::default();
+
+        let tpre = self.target.prefill(prompt, 1, len, None)?;
+        let mut tstate = tpre.state;
+        let tlogits = self.target.head(&tpre.hidden)?;
+        let mut next = argmax(tlogits.at2(0, len - 1));
+
+        let dpre = self.draft.prefill(prompt, 1, len, None)?;
+        let mut dstate = dpre.state;
+
+        let mut out: Vec<u32> = vec![next];
+
+        'outer: while out.len() < max_new {
+            // width this round: full bucket, or 1 near the limits
+            let room = tstate.remaining().min(dstate.remaining());
+            if room == 0 {
+                break;
+            }
+            let width = if room >= self.width && max_new - out.len() > 1 {
+                self.width
+            } else {
+                1
+            };
+            let gamma = width - 1;
+
+            // --- draft proposes gamma tokens after `next`
+            let dstart = dstate.pos;
+            let mut proposal: Vec<u32> = Vec::with_capacity(gamma);
+            let mut dtok = next;
+            for _ in 0..gamma {
+                let dl = self.draft.decode(&mut dstate, &[dtok], 1)?;
+                stats.draft_steps += 1;
+                dtok = argmax(dl.at2(0, 0));
+                proposal.push(dtok);
+            }
+            stats.proposed += gamma;
+
+            // --- target verifies [next, proposal..] in one pass
+            let tstart = tstate.pos;
+            let mut verify_ids = Vec::with_capacity(width);
+            verify_ids.push(next);
+            verify_ids.extend_from_slice(&proposal);
+            let vl = self.target.decode(&mut tstate, &verify_ids, width)?;
+            stats.rounds += 1;
+
+            let mut accepted = 0usize;
+            for i in 0..gamma {
+                let pred = argmax(vl.at2(0, i));
+                if proposal[i] == pred && out.len() + accepted + 1 < max_new {
+                    accepted += 1;
+                } else {
+                    // divergence (or budget): emit accepted prefix + target's token
+                    out.extend_from_slice(&proposal[..accepted]);
+                    out.push(pred);
+                    stats.accepted += accepted;
+                    tstate.pos = tstart + accepted + 1;
+                    dstate.pos = dstart + accepted + 1;
+                    next = pred;
+                    continue 'outer;
+                }
+            }
+            // full acceptance: bonus token from the last logits row
+            let bonus = argmax(vl.at2(0, width - 1));
+            out.extend_from_slice(&proposal);
+            out.push(bonus);
+            stats.accepted += gamma;
+            // target cache holds all `width` rows; draft is missing the
+            // row for the last proposal -> one sync step (output unused)
+            if gamma > 0 {
+                let _ = self.draft.decode(&mut dstate, &[proposal[gamma - 1]], 1)?;
+                stats.draft_steps += 1;
+            }
+            next = bonus;
+        }
+        out.truncate(max_new);
+        stats.generated = out.len();
+        Ok((out, stats))
+    }
+}
+
+/// Plain greedy generation with the target only (the baseline the
+/// speculative path must match token-for-token).
+pub fn greedy_generate(engine: &Engine, prompt: &[u32], max_new: usize) -> Result<Vec<u32>> {
+    let len = prompt.len();
+    let pre = engine.prefill(prompt, 1, len, None)?;
+    let mut state = pre.state;
+    let logits = engine.head(&pre.hidden)?;
+    let mut next = argmax(logits.at2(0, len - 1));
+    let mut out = vec![next];
+    while out.len() < max_new && state.remaining() > 0 {
+        let l = engine.decode(&mut state, &[next], 1)?;
+        next = argmax(l.at2(0, 0));
+        out.push(next);
+    }
+    Ok(out)
+}

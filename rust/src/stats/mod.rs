@@ -1,0 +1,282 @@
+//! Streaming covariance accumulation — the O(s·t·d²) calibration pass.
+//!
+//! The executor feeds token-row chunks (X = attention-block input,
+//! Y = attention delta); this module accumulates raw Gram sums and
+//! finalizes unbiased covariance estimates (paper Alg. 2, lines 5-16).
+//! Gram products can be computed on the CPU here or offloaded to the
+//! `gram` XLA executable — both paths are tested to agree.
+//!
+//! Y+ = Y + X (residual output, used for the CCA bound) is derived
+//! *algebraically* rather than accumulated:
+//!   C_{Y+X}  = C_YX + C_XX
+//!   C_{Y+Y+} = C_YY + C_YX + C_XY + C_XX
+//! so one pass over the data serves both the bound and the LMMSE fit.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Raw accumulated sums for a pair of d-dimensional streams.
+#[derive(Clone)]
+pub struct GramAccumulator {
+    d: usize,
+    pub n: usize,
+    pub sum_x: Vec<f64>,
+    pub sum_y: Vec<f64>,
+    pub gxx: Mat,
+    pub gxy: Mat,
+    pub gyy: Mat,
+}
+
+impl GramAccumulator {
+    pub fn new(d: usize) -> Self {
+        GramAccumulator {
+            d,
+            n: 0,
+            sum_x: vec![0.0; d],
+            sum_y: vec![0.0; d],
+            gxx: Mat::zeros(d, d),
+            gxy: Mat::zeros(d, d),
+            gyy: Mat::zeros(d, d),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Accumulate a chunk of rows: x, y are [n, d] row-major f32.
+    pub fn update(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+        if x.len() != y.len() || x.len() % self.d != 0 {
+            return Err(Error::Shape(format!(
+                "gram update: x {} y {} d {}",
+                x.len(),
+                y.len(),
+                self.d
+            )));
+        }
+        let n = x.len() / self.d;
+        let xm = Mat::from_f32(n, self.d, x);
+        let ym = Mat::from_f32(n, self.d, y);
+        self.update_mats(&xm, &ym);
+        Ok(())
+    }
+
+    fn update_mats(&mut self, xm: &Mat, ym: &Mat) {
+        let n = xm.rows();
+        self.n += n;
+        for r in 0..n {
+            for (s, v) in self.sum_x.iter_mut().zip(xm.row(r)) {
+                *s += v;
+            }
+            for (s, v) in self.sum_y.iter_mut().zip(ym.row(r)) {
+                *s += v;
+            }
+        }
+        self.gxx = self.gxx.add(&xm.gram());
+        self.gxy = self.gxy.add(&xm.transpose().matmul(ym));
+        self.gyy = self.gyy.add(&ym.gram());
+    }
+
+    /// Accumulate pre-computed Gram products (the XLA `gram` executable
+    /// path: it returns X^T X, X^T Y and the column sums for a chunk).
+    pub fn update_precomputed(
+        &mut self,
+        n: usize,
+        gxx: &Mat,
+        gxy: &Mat,
+        gyy: &Mat,
+        sum_x: &[f64],
+        sum_y: &[f64],
+    ) {
+        self.n += n;
+        self.gxx = self.gxx.add(gxx);
+        self.gxy = self.gxy.add(gxy);
+        self.gyy = self.gyy.add(gyy);
+        for (s, v) in self.sum_x.iter_mut().zip(sum_x) {
+            *s += v;
+        }
+        for (s, v) in self.sum_y.iter_mut().zip(sum_y) {
+            *s += v;
+        }
+    }
+
+    /// Merge another accumulator (parallel shards).
+    pub fn merge(&mut self, other: &GramAccumulator) {
+        assert_eq!(self.d, other.d);
+        self.n += other.n;
+        self.gxx = self.gxx.add(&other.gxx);
+        self.gxy = self.gxy.add(&other.gxy);
+        self.gyy = self.gyy.add(&other.gyy);
+        for (s, v) in self.sum_x.iter_mut().zip(&other.sum_x) {
+            *s += v;
+        }
+        for (s, v) in self.sum_y.iter_mut().zip(&other.sum_y) {
+            *s += v;
+        }
+    }
+
+    /// Finalize into unbiased covariance estimates.
+    pub fn finalize(&self) -> Result<SampleStats> {
+        if self.n < 2 {
+            return Err(Error::Calibration(format!(
+                "need >= 2 samples, have {}",
+                self.n
+            )));
+        }
+        let n = self.n as f64;
+        let denom = n - 1.0;
+        let mean_x: Vec<f64> = self.sum_x.iter().map(|s| s / n).collect();
+        let mean_y: Vec<f64> = self.sum_y.iter().map(|s| s / n).collect();
+        let d = self.d;
+        // C = (G - n μ μ^T) / (n - 1)
+        let cov = |g: &Mat, mu_a: &[f64], mu_b: &[f64]| {
+            Mat::from_fn(d, d, |i, j| (g[(i, j)] - n * mu_a[i] * mu_b[j]) / denom)
+        };
+        Ok(SampleStats {
+            n: self.n,
+            cxx: cov(&self.gxx, &mean_x, &mean_x),
+            cxy: cov(&self.gxy, &mean_x, &mean_y),
+            cyy: cov(&self.gyy, &mean_y, &mean_y),
+            mean_x,
+            mean_y,
+        })
+    }
+}
+
+/// Finalized second-order statistics for one layer's (X, Y) pair.
+#[derive(Clone)]
+pub struct SampleStats {
+    pub n: usize,
+    pub mean_x: Vec<f64>,
+    pub mean_y: Vec<f64>,
+    pub cxx: Mat,
+    /// Cross-covariance C_XY = E[(X-μx)(Y-μy)^T] (note: cyx = cxy^T).
+    pub cxy: Mat,
+    pub cyy: Mat,
+}
+
+impl SampleStats {
+    /// Statistics of the residual output Y+ = Y + X, derived
+    /// algebraically (module docs).
+    pub fn residual_output(&self) -> (Vec<f64>, Mat, Mat) {
+        let mean_yp: Vec<f64> = self
+            .mean_x
+            .iter()
+            .zip(&self.mean_y)
+            .map(|(a, b)| a + b)
+            .collect();
+        // C_{X,Y+} = C_XY + C_XX
+        let cx_yp = self.cxy.add(&self.cxx);
+        // C_{Y+Y+} = C_YY + C_XY^T + C_XY + C_XX
+        let cyp_yp = self
+            .cyy
+            .add(&self.cxy.transpose())
+            .add(&self.cxy)
+            .add(&self.cxx);
+        (mean_yp, cx_yp, cyp_yp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_cov(x: &[Vec<f64>], y: &[Vec<f64>]) -> Mat {
+        let n = x.len();
+        let d = x[0].len();
+        let mx: Vec<f64> = (0..d).map(|j| x.iter().map(|r| r[j]).sum::<f64>() / n as f64).collect();
+        let my: Vec<f64> = (0..d).map(|j| y.iter().map(|r| r[j]).sum::<f64>() / n as f64).collect();
+        Mat::from_fn(d, d, |i, j| {
+            x.iter()
+                .zip(y)
+                .map(|(xr, yr)| (xr[i] - mx[i]) * (yr[j] - my[j]))
+                .sum::<f64>()
+                / (n - 1) as f64
+        })
+    }
+
+    fn random_rows(rng: &mut Rng, n: usize, d: usize) -> (Vec<f32>, Vec<Vec<f64>>) {
+        let flat: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+        let rows = (0..n)
+            .map(|i| flat[i * d..(i + 1) * d].iter().map(|&v| v as f64).collect())
+            .collect();
+        (flat, rows)
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let mut rng = Rng::new(42);
+        let d = 6;
+        let (xf, xr) = random_rows(&mut rng, 100, d);
+        let (yf, yr) = random_rows(&mut rng, 100, d);
+
+        // stream in uneven chunks
+        let mut acc = GramAccumulator::new(d);
+        for (lo, hi) in [(0, 13), (13, 50), (50, 99), (99, 100)] {
+            acc.update(&xf[lo * d..hi * d], &yf[lo * d..hi * d]).unwrap();
+        }
+        let st = acc.finalize().unwrap();
+        assert!(st.cxx.sub(&naive_cov(&xr, &xr)).max_abs() < 1e-4);
+        assert!(st.cxy.sub(&naive_cov(&xr, &yr)).max_abs() < 1e-4);
+        assert!(st.cyy.sub(&naive_cov(&yr, &yr)).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn merge_equals_single() {
+        let mut rng = Rng::new(3);
+        let d = 4;
+        let (xf, _) = random_rows(&mut rng, 64, d);
+        let (yf, _) = random_rows(&mut rng, 64, d);
+        let mut whole = GramAccumulator::new(d);
+        whole.update(&xf, &yf).unwrap();
+        let mut a = GramAccumulator::new(d);
+        let mut b = GramAccumulator::new(d);
+        a.update(&xf[..32 * d], &yf[..32 * d]).unwrap();
+        b.update(&xf[32 * d..], &yf[32 * d..]).unwrap();
+        a.merge(&b);
+        let s1 = whole.finalize().unwrap();
+        let s2 = a.finalize().unwrap();
+        assert!(s1.cxx.sub(&s2.cxx).max_abs() < 1e-9);
+        assert!(s1.cxy.sub(&s2.cxy).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_output_algebra() {
+        // directly accumulate Y+ vs derive algebraically: must agree
+        let mut rng = Rng::new(9);
+        let d = 5;
+        let (xf, _) = random_rows(&mut rng, 200, d);
+        let (yf, _) = random_rows(&mut rng, 200, d);
+        let ypf: Vec<f32> = xf.iter().zip(&yf).map(|(a, b)| a + b).collect();
+
+        let mut acc = GramAccumulator::new(d);
+        acc.update(&xf, &yf).unwrap();
+        let st = acc.finalize().unwrap();
+        let (mean_yp, cx_yp, cyp_yp) = st.residual_output();
+
+        let mut direct = GramAccumulator::new(d);
+        direct.update(&xf, &ypf).unwrap();
+        let dst = direct.finalize().unwrap();
+        for (a, b) in mean_yp.iter().zip(&dst.mean_y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        assert!(cx_yp.sub(&dst.cxy).max_abs() < 1e-3);
+        let mut direct_yy = GramAccumulator::new(d);
+        direct_yy.update(&ypf, &ypf).unwrap();
+        assert!(cyp_yp.sub(&direct_yy.finalize().unwrap().cxx).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn too_few_samples_errors() {
+        let acc = GramAccumulator::new(3);
+        assert!(acc.finalize().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let mut acc = GramAccumulator::new(4);
+        assert!(acc.update(&[0.0; 8], &[0.0; 12]).is_err());
+        assert!(acc.update(&[0.0; 7], &[0.0; 7]).is_err());
+    }
+}

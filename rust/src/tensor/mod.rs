@@ -1,0 +1,161 @@
+//! Host-side dense f32 tensors (activations, weights).
+//!
+//! Deliberately minimal: the heavy math runs either in PJRT executables
+//! (runtime) or in `linalg::Mat` (calibration). `Tensor` is the typed
+//! carrier between those worlds: shape-checked, row-major, convertible
+//! to/from XLA literals (see `runtime::literals`).
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} -> {:?}",
+                self.shape, shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Slice `[b, t, :]` of a 3-D tensor.
+    pub fn at2(&self, b: usize, t: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 3);
+        let (d1, d2) = (self.shape[1], self.shape[2]);
+        let off = (b * d1 + t) * d2;
+        &self.data[off..off + d2]
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn std(&self) -> f32 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.data.iter().map(|x| (x - m) * (x - m)).sum::<f32>()
+            / self.data.len() as f32)
+            .sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Flatten leading dims: [B,T,D] -> rows of a (B*T, D) view (used to
+    /// feed calibration with token-wise rows, paper §3.1 stacking).
+    pub fn rows_2d(&self) -> (usize, usize) {
+        let d = *self.shape.last().expect("rank >= 1");
+        (self.data.len() / d, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::from_fn(vec![2, 3, 4], |i| i as f32);
+        assert_eq!(t.at2(1, 2), &[20.0, 21.0, 22.0, 23.0]);
+        let m = Tensor::from_fn(vec![2, 3], |i| i as f32);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reshape_and_rows() {
+        let t = Tensor::from_fn(vec![2, 3, 4], |i| i as f32);
+        assert_eq!(t.rows_2d(), (6, 4));
+        let r = t.reshape(vec![6, 4]).unwrap();
+        assert_eq!(r.shape(), &[6, 4]);
+        assert!(r.reshape(vec![5, 5]).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert!((t.mean() - 2.5).abs() < 1e-6);
+    }
+}

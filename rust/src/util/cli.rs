@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `flag_names` lists options that
+    /// take no value; everything else starting with `--` consumes one.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        Error::Config(format!("option --{stripped} needs a value"))
+                    })?;
+                    out.options.insert(stripped.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} must be an integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} must be a number"))),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{name}: bad int '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(&s(&["cmd", "--m", "4", "--fast", "--k=v", "pos2"]), &["fast"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("m"), Some("4"));
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.get_usize("m", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&s(&["--key"]), &[]).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&s(&["--ms", "1,2,3"]), &[]).unwrap();
+        assert_eq!(a.get_usize_list("ms", &[9]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.get_usize_list("other", &[9]).unwrap(), vec![9]);
+    }
+}

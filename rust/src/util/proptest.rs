@@ -1,0 +1,115 @@
+//! Mini property-testing harness (proptest is not available offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs. On failure it retries with progressively "smaller" regenerated
+//! inputs (size-directed shrinking: the generator receives a shrink level
+//! and should produce simpler cases at higher levels), then panics with
+//! the seed + smallest failing case so runs are reproducible.
+
+use crate::util::rng::Rng;
+
+/// Context handed to generators: RNG + shrink level (0 = full size).
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub shrink: u32,
+}
+
+impl<'a> Gen<'a> {
+    /// Size budget helper: full at shrink=0, halved each level, min 1.
+    pub fn size(&mut self, full: usize) -> usize {
+        (full >> self.shrink).max(1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32() * scale).collect()
+    }
+}
+
+/// Run a property over generated cases. Panics with diagnostics on failure.
+pub fn check<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = generate(&mut Gen { rng: &mut rng, shrink: 0 });
+        if let Err(msg) = property(&input) {
+            // shrink: regenerate at increasing shrink levels from a fresh
+            // stream derived from the failing case index
+            let mut smallest: (String, String) = (format!("{input:?}"), msg);
+            for level in 1..6 {
+                let mut srng = Rng::new(seed ^ (case_idx as u64) << 17 ^ level as u64);
+                for _ in 0..20 {
+                    let cand = generate(&mut Gen { rng: &mut srng, shrink: level });
+                    if let Err(m) = property(&cand) {
+                        smallest = (format!("{cand:?}"), m);
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case_idx}).\n\
+                 smallest failing input: {}\nreason: {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0_f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() / denom > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            50,
+            |g| {
+                let n = g.size(64);
+                g.vec_f32(n, 1.0)
+            },
+            |v| {
+                let sum: f32 = v.iter().map(|x| x * x).sum();
+                if sum >= 0.0 { Ok(()) } else { Err("negative".into()) }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            2,
+            50,
+            |g| g.usize_in(0, 100),
+            |&n| if n < 90 { Ok(()) } else { Err(format!("{n} too big")) },
+        );
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-3).is_ok());
+    }
+}

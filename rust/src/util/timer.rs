@@ -1,0 +1,45 @@
+//! Wall-clock timing helpers used across benches and metrics.
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timed_measures_something() {
+        let (v, s) = super::timed(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(s >= 0.004, "{s}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-language parity: the Rust layerwise pipeline must reproduce the
+//! JAX full-model forward on the trained weights (artifacts/goldens.json),
+//! and the cached decode path must agree with prefill.
+
+use std::sync::Arc;
+
+use nbl::executor::Engine;
+use nbl::model::Artifacts;
+use nbl::runtime::Runtime;
+use nbl::sampling::argmax;
+use nbl::util::json::Json;
+
+fn setup(model: &str) -> (Engine, Json, Vec<u32>) {
+    let artifacts = Artifacts::discover().expect("run `make artifacts` first");
+    let goldens = artifacts.goldens().unwrap();
+    let prompt: Vec<u32> = goldens
+        .get("prompt")
+        .unwrap()
+        .as_usize_vec()
+        .unwrap()
+        .iter()
+        .map(|&x| x as u32)
+        .collect();
+    let runtime = Runtime::new(artifacts).unwrap();
+    let engine = Engine::load(runtime, model).unwrap();
+    (engine, goldens, prompt)
+}
+
+#[test]
+fn prefill_logits_match_jax_goldens() {
+    let (engine, goldens, prompt) = setup("main");
+    let g = goldens.get("main").unwrap();
+    let want_last = g.get("logits_last").unwrap().as_f32_vec().unwrap();
+    let want_argmax = g.get("argmax_per_pos").unwrap().as_usize_vec().unwrap();
+
+    let len = prompt.len();
+    let out = engine.prefill(&prompt, 1, len, None).unwrap();
+    let logits = engine.head(&out.hidden).unwrap();
+
+    // last-position logits numerically close (fp32, 6 layers deep)
+    let last = logits.at2(0, len - 1);
+    let mut max_err = 0.0f32;
+    for (a, b) in last.iter().zip(&want_last) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 2e-3, "last-logit max err {max_err}");
+
+    // argmax agreement at every position
+    for (t, &want) in want_argmax.iter().enumerate() {
+        let got = argmax(logits.at2(0, t)) as usize;
+        assert_eq!(got, want, "argmax mismatch at position {t}");
+    }
+}
+
+#[test]
+fn all_models_match_goldens_loosely() {
+    let artifacts = Artifacts::discover().unwrap();
+    let runtime = Runtime::new(artifacts.clone()).unwrap();
+    let goldens = artifacts.goldens().unwrap();
+    let prompt: Vec<u32> = goldens
+        .get("prompt")
+        .unwrap()
+        .as_usize_vec()
+        .unwrap()
+        .iter()
+        .map(|&x| x as u32)
+        .collect();
+    for model in ["alt", "distill", "draft"] {
+        let engine = Engine::load(runtime.clone(), model).unwrap();
+        let out = engine.prefill(&prompt, 1, prompt.len(), None).unwrap();
+        let logits = engine.head(&out.hidden).unwrap();
+        let want = goldens
+            .get(model)
+            .unwrap()
+            .get("logits_last")
+            .unwrap()
+            .as_f32_vec()
+            .unwrap();
+        let last = logits.at2(0, prompt.len() - 1);
+        let mut max_err = 0.0f32;
+        for (a, b) in last.iter().zip(&want) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-3, "{model}: max err {max_err}");
+    }
+}
+
+#[test]
+fn decode_matches_prefill_shifted() {
+    // prefill(prompt[..n]) + decode(prompt[n..]) must equal the full
+    // prefill logits at the same absolute positions.
+    let (engine, _goldens, prompt) = setup("main");
+    let n0 = 24;
+    let extra = 4;
+    let full = engine.prefill(&prompt[..n0 + extra], 1, n0 + extra, None).unwrap();
+    let full_logits = engine.head(&full.hidden).unwrap();
+
+    let pre = engine.prefill(&prompt[..n0], 1, n0, None).unwrap();
+    let mut state = pre.state;
+    for (i, &tok) in prompt[n0..n0 + extra].iter().enumerate() {
+        let logits = engine.decode(&mut state, &[tok], 1).unwrap();
+        let got = logits.at2(0, 0);
+        let want = full_logits.at2(0, n0 + i);
+        let mut max_err = 0.0f32;
+        for (a, b) in got.iter().zip(want) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-3, "step {i}: max err {max_err}");
+        assert_eq!(argmax(got), argmax(want), "argmax diverged at step {i}");
+    }
+}
+
+#[test]
+fn multi_token_decode_matches_single_steps() {
+    // the speculative-verify path (S=4) must agree with 4 single steps
+    let (engine, _goldens, prompt) = setup("main");
+    let n0 = 16;
+    let pre1 = engine.prefill(&prompt[..n0], 1, n0, None).unwrap();
+    let mut s1 = pre1.state;
+    let tokens = &prompt[n0..n0 + 4];
+    let wide = engine.decode(&mut s1, tokens, 4).unwrap();
+
+    let pre2 = engine.prefill(&prompt[..n0], 1, n0, None).unwrap();
+    let mut s2 = pre2.state;
+    for (i, &tok) in tokens.iter().enumerate() {
+        let narrow = engine.decode(&mut s2, &[tok], 1).unwrap();
+        let a = wide.at2(0, i);
+        let b = narrow.at2(0, 0);
+        let mut max_err = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            max_err = max_err.max((x - y).abs());
+        }
+        assert!(max_err < 2e-3, "position {i}: err {max_err}");
+    }
+    assert_eq!(s1.pos, s2.pos);
+}
+
+#[test]
+fn capture_stats_match_jax_goldens() {
+    // per-layer attention I/O mean/std must match capture_attn_io
+    let (engine, goldens, prompt) = setup("main");
+    let want = goldens.get("main").unwrap().get("attn_io").unwrap();
+    let mut got: Vec<(f32, f32, f32, f32)> = Vec::new();
+    let mut cb = |_layer: usize, x: &nbl::tensor::Tensor, y: &nbl::tensor::Tensor| {
+        got.push((x.mean(), x.std(), y.mean(), y.std()));
+        Ok(())
+    };
+    let _ = engine
+        .prefill(&prompt, 1, prompt.len(), Some(&mut cb))
+        .unwrap();
+    let arr = want.as_arr().unwrap();
+    assert_eq!(arr.len(), got.len());
+    for (i, (w, g)) in arr.iter().zip(&got).enumerate() {
+        let wx = w.get("x_mean").unwrap().as_f64().unwrap() as f32;
+        let wy = w.get("y_mean").unwrap().as_f64().unwrap() as f32;
+        let wxs = w.get("x_std").unwrap().as_f64().unwrap() as f32;
+        let wys = w.get("y_std").unwrap().as_f64().unwrap() as f32;
+        assert!((g.0 - wx).abs() < 1e-3, "layer {i} x_mean {} vs {wx}", g.0);
+        assert!((g.1 - wxs).abs() < 1e-3, "layer {i} x_std");
+        assert!((g.2 - wy).abs() < 1e-3, "layer {i} y_mean");
+        assert!((g.3 - wys).abs() < 1e-3, "layer {i} y_std");
+    }
+}
+
+#[test]
+fn pallas_lowering_matches_jnp_lowering() {
+    // the Pallas-lowered attention executable must agree with the default
+    // jnp-lowered one on the same weights (L1 parity *through PJRT*).
+    let (engine, _g, prompt) = setup("main");
+    let rt: &Arc<Runtime> = &engine.runtime;
+    let w = &engine.weights.layers[0];
+    let x = engine.weights.embed(&prompt, 1, prompt.len()).unwrap();
+    let xl = nbl::runtime::lit_from_tensor(&x).unwrap();
+    let args = [
+        &xl,
+        &nbl::runtime::lit_from_tensor(&w.attn_norm).unwrap(),
+        &nbl::runtime::lit_from_tensor(&w.wq).unwrap(),
+        &nbl::runtime::lit_from_tensor(&w.wk).unwrap(),
+        &nbl::runtime::lit_from_tensor(&w.wv).unwrap(),
+        &nbl::runtime::lit_from_tensor(&w.wo).unwrap(),
+    ];
+    let jnp = rt.run("attn_prefill_b1_t32", &args).unwrap();
+    let pal = rt.run("attn_prefill_pallas_b1_t32", &args).unwrap();
+    assert_eq!(jnp.len(), pal.len());
+    for (a, b) in jnp.iter().zip(&pal) {
+        let ta = nbl::runtime::tensor_from_lit(a).unwrap();
+        let tb = nbl::runtime::tensor_from_lit(b).unwrap();
+        assert!(ta.max_abs_diff(&tb) < 1e-4, "pallas vs jnp {}", ta.max_abs_diff(&tb));
+    }
+}
+
+#[test]
+fn oversized_prompt_is_rejected() {
+    let (engine, _g, _p) = setup("main");
+    let ids = vec![1u32; 600];
+    assert!(engine.prefill(&ids, 1, 600, None).is_err());
+}
+
+#[test]
+fn context_overflow_is_rejected() {
+    let (engine, _g, prompt) = setup("main");
+    let pre = engine.prefill(&prompt, 1, prompt.len(), None).unwrap();
+    let mut state = pre.state;
+    state.pos = state.max_ctx; // simulate a full cache
+    assert!(engine.decode(&mut state, &[1], 1).is_err());
+}

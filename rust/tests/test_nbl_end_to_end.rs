@@ -1,0 +1,164 @@
+//! End-to-end NBL: calibrate on the real trained model, build plans,
+//! and verify the paper's qualitative claims at small scale:
+//!   1. the trained model beats chance on the eval tasks;
+//!   2. NBL-m stays close to baseline perplexity at small m;
+//!   3. NBL-m degrades less than DROP-m at the same m;
+//!   4. KV accounting follows (K-m)/K.
+
+use std::sync::Arc;
+
+use nbl::data::corpus::{Corpus, CorpusId};
+use nbl::eval::perplexity;
+use nbl::executor::{CaptureSource, Engine};
+use nbl::model::Artifacts;
+use nbl::nbl::calibrate::Calibrator;
+use nbl::nbl::criteria::Criterion;
+use nbl::runtime::Runtime;
+
+struct Fixture {
+    engine: Engine,
+    report: nbl::nbl::calibrate::CalibrationReport,
+    val: Corpus,
+}
+
+fn fixture() -> Fixture {
+    let artifacts = Artifacts::discover().expect("run `make artifacts`");
+    let runtime = Runtime::new(artifacts.clone()).unwrap();
+    let engine = Engine::load(runtime, "main").unwrap();
+    let train = Corpus::load(&artifacts, CorpusId::TinyC4, "train").unwrap();
+    let val = Corpus::load(&artifacts, CorpusId::TinyC4, "val").unwrap();
+    let mut src = CaptureSource::new(&engine, &train.tokens, 24, 128);
+    let report = Calibrator::run(&mut src).unwrap();
+    Fixture { engine, report, val }
+}
+
+#[test]
+fn full_nbl_pipeline() {
+    let f = fixture();
+    let n_layers = f.engine.config().n_layers;
+    assert_eq!(f.report.layers.len(), n_layers);
+
+    // --- bounds are sane and layer-dependent (Fig. 2 shape)
+    let scores = f.report.scores(Criterion::CcaBound);
+    let d = f.engine.config().d_model as f64;
+    for (i, s) in scores.iter().enumerate() {
+        assert!(*s >= 0.0 && *s <= d, "layer {i} bound {s}");
+    }
+    let spread = scores.iter().cloned().fold(f64::MIN, f64::max)
+        - scores.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread > 1e-3, "bounds should differentiate layers: {scores:?}");
+
+    // --- baseline perplexity is meaningful (model trained to loss ~0.33)
+    let base_ppl = perplexity(&f.engine, &f.val, 8, 128).unwrap();
+    assert!(
+        base_ppl > 1.0 && base_ppl < 4.0,
+        "baseline ppl {base_ppl} out of expected range"
+    );
+
+    // --- NBL-1/2 stay close; DROP at same m is worse or equal
+    for m in [1usize, 2] {
+        let nbl_plan = f.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap();
+        assert_eq!(nbl_plan.kv_layers(), n_layers - m);
+        let nbl_engine = f.engine.with_plan(nbl_plan).unwrap();
+        let nbl_ppl = perplexity(&nbl_engine, &f.val, 8, 128).unwrap();
+
+        let drop_plan = f.report.plan_attn_drop(m, Criterion::CcaBound);
+        let drop_engine = f.engine.with_plan(drop_plan).unwrap();
+        let drop_ppl = perplexity(&drop_engine, &f.val, 8, 128).unwrap();
+
+        assert!(
+            nbl_ppl < base_ppl * 2.5,
+            "NBL-{m} ppl {nbl_ppl} blew up vs base {base_ppl}"
+        );
+        assert!(
+            nbl_ppl <= drop_ppl * 1.05,
+            "NBL-{m} ({nbl_ppl}) should not be worse than DROP-{m} ({drop_ppl})"
+        );
+    }
+}
+
+#[test]
+fn trained_model_beats_chance_on_tasks() {
+    let artifacts = Artifacts::discover().unwrap();
+    let runtime = Runtime::new(artifacts).unwrap();
+    let engine = Engine::load(runtime, "main").unwrap();
+    // two cheap, high-signal tasks
+    let tasks: Vec<_> = nbl::eval::all_tasks()
+        .iter()
+        .filter(|t| t.name == "boolq" || t.name == "arc_e")
+        .cloned()
+        .collect();
+    let summary = nbl::eval::evaluate_all(&engine, &tasks, 12, 99).unwrap();
+    for t in &summary.tasks {
+        let chance = match t.name {
+            "boolq" => 0.5,
+            _ => 0.25,
+        };
+        assert!(
+            t.accuracy > chance + 0.15,
+            "{}: accuracy {} barely above chance {chance}",
+            t.name,
+            t.accuracy
+        );
+    }
+}
+
+#[test]
+fn linearized_layer_reduces_measured_nmse_vs_identity() {
+    // the fitted LMMSE layer must beat the "drop" estimator (Y_hat = 0)
+    // on fresh data: SSE(lmmse) < SSE(zero) for every layer.
+    let f = fixture();
+    let artifacts = Artifacts::discover().unwrap();
+    let val = Corpus::load(&artifacts, CorpusId::TinyC4, "val").unwrap();
+    let d = f.engine.config().d_model;
+    for lc in &f.report.layers {
+        let lin = lc.fit_linear().unwrap();
+        let mut src = CaptureSource::new(&f.engine, &val.tokens, 2, 64);
+        let mut sse_lin = 0.0f64;
+        let mut sse_zero = 0.0f64;
+        let layer = lc.layer;
+        nbl::nbl::calibrate::ActivationSource::stream(&mut src, &mut |li, x, y| {
+            if li == layer {
+                for r in 0..x.len() / d {
+                    let xr = &x[r * d..(r + 1) * d];
+                    let yr = &y[r * d..(r + 1) * d];
+                    let yh = lin.apply_row(xr);
+                    for j in 0..d {
+                        sse_lin += ((yr[j] - yh[j]) as f64).powi(2);
+                        sse_zero += (yr[j] as f64).powi(2);
+                    }
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert!(
+            sse_lin < sse_zero,
+            "layer {layer}: lmmse SSE {sse_lin} !< zero-estimator SSE {sse_zero}"
+        );
+    }
+}
+
+#[test]
+fn block_nbl_and_sleb_plans_execute() {
+    let f = fixture();
+    // Block NBL-1: replace the best whole block with a residual fit
+    let scores = f.report.scores(Criterion::CcaBound);
+    let idx = nbl::nbl::criteria::select_lowest(&scores, 1)[0];
+    let lin = f.report.layers[idx].fit_linear_residual().unwrap();
+    let mut plan = nbl::nbl::plan::ModelPlan::baseline(f.engine.config().n_layers);
+    plan.kind = nbl::nbl::plan::PlanKind::BlockNbl(1);
+    plan.linearize_block(idx, Arc::new(lin));
+    let engine = f.engine.with_plan(plan).unwrap();
+    let ppl = perplexity(&engine, &f.val, 4, 128).unwrap();
+    assert!(ppl.is_finite() && ppl < 40.0, "block-NBL ppl {ppl}");
+
+    // SLEB-1 via the greedy perplexity driver (tiny budget)
+    let sleb = nbl::baselines::sleb_select(f.engine.config().n_layers, 1, |p| {
+        let e = f.engine.with_plan(p.clone())?;
+        perplexity(&e, &f.val, 2, 128)
+    })
+    .unwrap();
+    let e = f.engine.with_plan(sleb).unwrap();
+    assert!(perplexity(&e, &f.val, 2, 128).unwrap().is_finite());
+}

@@ -1,0 +1,178 @@
+//! Serving-stack integration: batched groups, the async worker, the TCP
+//! front-end, speculative decoding equivalence, and quantization.
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+use nbl::executor::Engine;
+use nbl::model::Artifacts;
+use nbl::quant::{quantize_weights, QuantConfig};
+use nbl::runtime::Runtime;
+use nbl::sampling::SamplingParams;
+use nbl::server::api::GenRequest;
+use nbl::server::service::{Server, ServerConfig};
+use nbl::server::tcp::TcpFrontend;
+use nbl::spec::{greedy_generate, SpeculativeDecoder};
+
+fn engine(model: &str) -> Engine {
+    let artifacts = Artifacts::discover().expect("run `make artifacts`");
+    let runtime = Runtime::new(artifacts).unwrap();
+    Engine::load(runtime, model).unwrap()
+}
+
+fn req(id: u64, prompt: &str, n: usize) -> GenRequest {
+    GenRequest {
+        id,
+        prompt: nbl::data::ByteTokenizer::new().encode(prompt),
+        max_new_tokens: n,
+        params: SamplingParams::greedy(),
+    }
+}
+
+#[test]
+fn single_request_generates_text() {
+    let server = Server::new(Arc::new(engine("main")), ServerConfig::default());
+    let r = server.generate_one(&req(1, "the small robot ", 24));
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.tokens.len(), 24);
+    assert!(r.ttft_ms > 0.0 && r.total_ms >= r.ttft_ms);
+    // greedy continuation of the trained grammar should be ascii words
+    assert!(r.text.is_ascii());
+    assert!(r.text.chars().any(|c| c.is_ascii_lowercase()), "{:?}", r.text);
+}
+
+#[test]
+fn batched_group_matches_single_requests() {
+    let server = Server::new(Arc::new(engine("main")), ServerConfig::default());
+    let a = req(1, "the bright engine ", 12);
+    let b = req(2, "the hidden garden ", 12);
+    let solo_a = server.generate_one(&a);
+    let solo_b = server.generate_one(&b);
+    let group = server.run_group(&[a, b]).unwrap();
+    assert_eq!(group[0].tokens, solo_a.tokens, "batch row 0 diverged");
+    assert_eq!(group[1].tokens, solo_b.tokens, "batch row 1 diverged");
+}
+
+#[test]
+fn group_rejects_mixed_lengths() {
+    let server = Server::new(Arc::new(engine("main")), ServerConfig::default());
+    let e = server.run_group(&[req(1, "abcd", 2), req(2, "abcde", 2)]);
+    assert!(e.is_err());
+}
+
+#[test]
+fn async_worker_serves_many() {
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = (0..5)
+        .map(|i| handle.submit(req(i, "there are 42 small ", 8)))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.tokens.len(), 8);
+    }
+    assert_eq!(metrics.len(), 5);
+    let s = metrics.summary();
+    assert!(s.mean_prefill_tok_s > 0.0);
+    handle.shutdown();
+}
+
+#[test]
+fn tcp_round_trip() {
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let front = TcpFrontend::start(server, "127.0.0.1:0").unwrap();
+    let mut conn = std::net::TcpStream::connect(front.addr).unwrap();
+    writeln!(
+        conn,
+        r#"{{"id": 9, "prompt": "the quiet river ", "max_tokens": 6}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = nbl::util::json::Json::parse(&line).unwrap();
+    assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 9);
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 6);
+    // malformed line comes back as an error response, not a hangup
+    writeln!(conn, "not json").unwrap();
+    let mut line2 = String::new();
+    reader.read_line(&mut line2).unwrap();
+    assert!(line2.contains("error"));
+    front.shutdown();
+}
+
+#[test]
+fn speculative_matches_greedy_exactly() {
+    let target = engine("main");
+    let draft = engine("draft");
+    let tok = nbl::data::ByteTokenizer::new();
+    for prompt in ["the small robot ", "== ring buffer ==\na ring ", "there are 7 "] {
+        let ids = tok.encode(prompt);
+        let want = greedy_generate(&target, &ids, 40).unwrap();
+        let dec = SpeculativeDecoder::new(&target, &draft, 4);
+        let (got, stats) = dec.generate(&ids, 40).unwrap();
+        assert_eq!(got, want, "speculative output diverged for {prompt:?}");
+        assert!(stats.proposed > 0);
+        assert!(
+            stats.acceptance_rate() > 0.3,
+            "draft should be useful: acceptance {}",
+            stats.acceptance_rate()
+        );
+        assert!(stats.tokens_per_target_pass() > 1.0, "no compounding");
+    }
+}
+
+#[test]
+fn speculative_composes_with_nbl() {
+    let target = engine("main");
+    let artifacts = Artifacts::discover().unwrap();
+    let train =
+        nbl::data::Corpus::load(&artifacts, nbl::data::corpus::CorpusId::TinyC4, "train").unwrap();
+    let mut src = nbl::executor::CaptureSource::new(&target, &train.tokens, 12, 128);
+    let report = nbl::nbl::calibrate::Calibrator::run(&mut src).unwrap();
+    let plan = report
+        .plan_attn_nbl(2, nbl::nbl::criteria::Criterion::CcaBound)
+        .unwrap();
+    let nbl_target = target.with_plan(plan).unwrap();
+    let draft = engine("draft");
+    let tok = nbl::data::ByteTokenizer::new();
+    let ids = tok.encode("the bright market ");
+    let want = greedy_generate(&nbl_target, &ids, 32).unwrap();
+    let dec = SpeculativeDecoder::new(&nbl_target, &draft, 4);
+    let (got, stats) = dec.generate(&ids, 32).unwrap();
+    assert_eq!(got, want, "NBL-compressed verifier diverged");
+    assert!(stats.rounds < 32, "verification must batch tokens");
+}
+
+#[test]
+fn quantized_model_still_generates() {
+    let artifacts = Artifacts::discover().unwrap();
+    let runtime = Runtime::new(artifacts).unwrap();
+    let base = Engine::load(runtime.clone(), "main").unwrap();
+    let q = quantize_weights(&base.weights, None, &QuantConfig { bits: 8, alpha: 0.0 }).unwrap();
+    let qe = Engine::new(
+        runtime,
+        Arc::new(q),
+        nbl::nbl::plan::ModelPlan::baseline(base.config().n_layers),
+    )
+    .unwrap();
+    let tok = nbl::data::ByteTokenizer::new();
+    let ids = tok.encode("the small robot ");
+    let a = greedy_generate(&base, &ids, 16).unwrap();
+    let b = greedy_generate(&qe, &ids, 16).unwrap();
+    // int8 is near-lossless at this scale: outputs should mostly agree
+    let agree = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+    assert!(agree >= 12, "int8 generation diverged early: {agree}/16");
+}
+
+#[test]
+fn kv_pool_admission_control() {
+    let cfg = ServerConfig { max_batch: 8, kv_capacity_bytes: 1024, eos: None };
+    let server = Server::new(Arc::new(engine("main")), cfg);
+    // a single group needs ~MBs of KV; a 1 KiB pool must refuse
+    let r = server.generate_one(&req(1, "the small robot ", 4));
+    assert!(r.error.is_some());
+    assert!(r.error.unwrap().contains("KV pool exhausted"));
+}
