@@ -1,10 +1,16 @@
 //! END-TO-END serving driver (the brief's required E2E example): bring up
-//! the full stack — engine + batcher + worker + TCP front-end — under an
-//! NBL-compressed model, fire a batched workload of real requests over
-//! TCP, and report latency/throughput. Results are recorded in
-//! EXPERIMENTS.md.
+//! the full stack — engine + scheduler + worker + TCP front-end — under an
+//! NBL-compressed model, fire a MIXED-PROMPT-LENGTH workload of real
+//! requests over TCP, and report latency/throughput. Results are recorded
+//! in EXPERIMENTS.md.
 //!
-//!     cargo run --release --example serve_bench [-- --m 2 --requests 24 --max-tokens 48]
+//! The workload interleaves four prompt lengths, the worst case for the
+//! old exact-length grouping (batches degenerate towards size 1) and the
+//! case continuous batching exists for. `--mode grouped` runs the legacy
+//! baseline for comparison.
+//!
+//!     cargo run --release --example serve_bench \
+//!         [-- --m 2 --requests 24 --max-tokens 48 --mode continuous]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -12,7 +18,7 @@ use std::sync::Arc;
 
 use nbl::bench::experiments::{ExpConfig, Workbench};
 use nbl::nbl::criteria::Criterion;
-use nbl::server::service::{Server, ServerConfig};
+use nbl::server::service::{BatchMode, Server, ServerConfig};
 use nbl::server::tcp::TcpFrontend;
 use nbl::util::cli::Args;
 use nbl::util::timer::Timer;
@@ -23,6 +29,10 @@ fn main() -> anyhow::Result<()> {
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
+    let mode = match args.get_or("mode", "continuous") {
+        "grouped" => BatchMode::ExactLength,
+        _ => BatchMode::Continuous,
+    };
     let cfg = ExpConfig::from_env();
 
     // --- build the NBL-compressed engine
@@ -38,16 +48,19 @@ fn main() -> anyhow::Result<()> {
     let engine = Arc::new(wb.engine.with_plan(plan).map_err(|e| anyhow::anyhow!("{e}"))?);
 
     // --- full stack: server worker + TCP front-end
-    let server = Arc::new(Server::new(engine, ServerConfig::default()));
+    let server_cfg = ServerConfig { mode, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, server_cfg));
     let metrics = server.metrics.clone();
     let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("listening on {}", front.addr);
+    println!("listening on {} (mode: {mode:?})", front.addr);
 
-    // --- client load: 4 concurrent connections, prompts from the corpus
+    // --- client load: 4 concurrent connections, MIXED-length prompts
+    // from the corpus (16/32/48/64 bytes interleaved)
     let prompts: Vec<String> = (0..n_requests)
         .map(|i| {
-            let start = (i * 997) % (wb.calib.tokens.len() - 64);
-            let bytes: Vec<u8> = wb.calib.tokens[start..start + 48]
+            let len = 16 + (i % 4) * 16;
+            let start = (i * 997) % (wb.calib.tokens.len() - 128);
+            let bytes: Vec<u8> = wb.calib.tokens[start..start + len]
                 .iter()
                 .map(|&t| t as u8)
                 .collect();
@@ -92,7 +105,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- report
     let s = metrics.summary();
-    println!("\n=== serve_bench results (Attn NBL-{m}) ===");
+    let g = metrics.gauges();
+    println!("\n=== serve_bench results (Attn NBL-{m}, {mode:?}, mixed lengths) ===");
     println!("requests                 {}", s.requests);
     println!("generated tokens         {}", s.generated_tokens);
     println!("wall time                {wall:.2} s");
@@ -104,6 +118,12 @@ fn main() -> anyhow::Result<()> {
     println!("median decode speed      {:.0} tok/s", s.median_decode_tok_s);
     println!("mean e2e latency         {:.1} ms", mean(&latencies) * 1e3);
     println!("p90 e2e latency          {:.1} ms", percentile(&latencies, 90.0) * 1e3);
+    if mode == BatchMode::Continuous {
+        println!("decode iterations        {}", g.iterations);
+        println!("mean rows/iteration      {:.2}", g.mean_rows_per_iteration());
+        println!("batch occupancy          {:.1}%", g.mean_occupancy() * 100.0);
+        println!("slot reuses              {}", g.slot_reuses);
+    }
     assert_eq!(s.requests, n_requests, "all requests must be served");
     println!("\nserve_bench OK");
     Ok(())

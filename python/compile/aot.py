@@ -49,6 +49,10 @@ def i32scalar():
     return jax.ShapeDtypeStruct((), jnp.int32)
 
 
+def i32vec(n):
+    return jax.ShapeDtypeStruct((n,), jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # op definitions — the (name, fn, example_args) grid
 
@@ -74,6 +78,9 @@ def build_ops():
 
     def cached_fn(x, nw, wq, wk, wv, wo, kc, vc, pos):
         return ref.attn_cached(x, nw, wq, wk, wv, wo, kc, vc, pos, **kw)
+
+    def cached_rows_fn(x, nw, wq, wk, wv, wo, kc, vc, pos):
+        return ref.attn_cached_rows(x, nw, wq, wk, wv, wo, kc, vc, pos, **kw)
 
     def mlp_fn(x, nw, w1, w3, w2):
         return (ref.mlp_block(x, nw, w1, w3, w2, eps=cfg.norm_eps),)
@@ -111,6 +118,12 @@ def build_ops():
                 (f32(B, S, D), *attn_w, f32(B, Tmax, hkv, dh),
                  f32(B, Tmax, hkv, dh), i32scalar()),
             ))
+        # continuous-batching decode: per-row positions, one token per row
+        ops.append((
+            f"attn_cached_rows_b{B}_s1", cached_rows_fn,
+            (f32(B, 1, D), *attn_w, f32(B, Tmax, hkv, dh),
+             f32(B, Tmax, hkv, dh), i32vec(B)),
+        ))
         for T in GRID.pointwise_lens:
             ops.append((f"linear_block_b{B}_t{T}", linear_fn,
                         (f32(B, T, D), f32(D, D), f32(D))))

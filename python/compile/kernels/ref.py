@@ -109,6 +109,71 @@ def attn_cached(x, normw, wq, wk, wv, wo, kcache, vcache, pos, *,
     return y, kcache, vcache
 
 
+def rope_angles_rows(positions, head_dim, theta=10000.0):
+    """positions [B,S] (int) -> (cos, sin) each [B,S,head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs[None, None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope_rows(x, cos, sin):
+    """x [B,S,H,dh]; cos/sin [B,S,head_dim//2] (per-row positions)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _sdpa_rows(q, k, v, mask, n_heads, n_kv_heads):
+    """_sdpa with a per-row mask [B,Tq,Tk] (rows are independent requests)."""
+    group = n_heads // n_kv_heads
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * scale
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+    return out.reshape(q.shape[0], q.shape[1], -1)
+
+
+def attn_cached_rows(x, normw, wq, wk, wv, wo, kcache, vcache, pos, *,
+                     n_heads, n_kv_heads, head_dim, theta=10000.0, eps=1e-5):
+    """Continuous-batching decode: every batch row owns its cache segment.
+
+    x [B,S,D]; caches [B,Tmax,Hkv,dh]; pos [B] int32 = tokens already
+    cached *per row*. Rows are independent requests at independent
+    positions (the dynamic decode group of DESIGN.md); the caller ignores
+    the outputs of free rows (which pass pos=0 and a pad token).
+    Returns (y, kcache', vcache').
+
+    Semantically this is `attn_cached` vmapped over the batch with a
+    per-row scalar pos — RoPE, cache write slot and causal mask all use
+    the row's own position.
+    """
+    B, S, D = x.shape
+    Tmax = kcache.shape[1]
+    xn = rms_norm(x, normw, eps)
+    q, k, v = _proj_qkv(xn, wq, wk, wv, n_heads, n_kv_heads, head_dim)
+    positions = pos[:, None] + jnp.arange(S)[None, :]  # [B,S]
+    cos, sin = rope_angles_rows(positions, head_dim, theta)
+    q = apply_rope_rows(q, cos, sin)
+    k = apply_rope_rows(k, cos, sin)
+    # scatter the S new K/V per row into that row's slots [pos_b, pos_b+S)
+    onehot = (jnp.arange(Tmax)[None, :, None]
+              == positions[:, None, :]).astype(x.dtype)      # [B,Tmax,S]
+    written = onehot.sum(-1)[..., None, None]                # [B,Tmax,1,1]
+    kcache = kcache * (1.0 - written) + jnp.einsum("bts,bshd->bthd", onehot, k)
+    vcache = vcache * (1.0 - written) + jnp.einsum("bts,bshd->bthd", onehot, v)
+    # row b, query i (absolute pos_b+i) sees cache slot j iff j <= pos_b+i
+    mask = jnp.arange(Tmax)[None, None, :] <= positions[:, :, None]
+    out = _sdpa_rows(q, kcache, vcache, mask, n_heads, n_kv_heads)
+    y = x + out @ wo
+    return y, kcache, vcache
+
+
 def linear_block(x, w, b):
     """The NBL substitution: y = x + x @ W + b (residual kept, Prop 3.1).
 

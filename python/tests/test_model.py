@@ -74,6 +74,39 @@ def test_cached_decode_matches_prefill(t0, extra, seed):
     np.testing.assert_allclose(last[:, 0], full[:, -1], rtol=2e-4, atol=2e-4)
 
 
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_attn_cached_rows_matches_per_row_cached(seed):
+    """attn_cached_rows == attn_cached applied row by row with that row's
+    scalar pos — the invariant the continuous-batching decode group relies
+    on (rows at different positions share one executable call)."""
+    rng = np.random.default_rng(seed)
+    B, D = 3, TINY.d_model
+    kw = dict(n_heads=TINY.n_heads, n_kv_heads=TINY.n_kv_heads,
+              head_dim=TINY.head_dim, theta=TINY.rope_theta, eps=TINY.norm_eps)
+    w = (
+        jnp.asarray(rng.standard_normal(D).astype(np.float32)),
+        jnp.asarray(rng.standard_normal((D, TINY.n_heads * TINY.head_dim)).astype(np.float32) * 0.08),
+        jnp.asarray(rng.standard_normal((D, TINY.n_kv_heads * TINY.head_dim)).astype(np.float32) * 0.08),
+        jnp.asarray(rng.standard_normal((D, TINY.n_kv_heads * TINY.head_dim)).astype(np.float32) * 0.08),
+        jnp.asarray(rng.standard_normal((TINY.n_heads * TINY.head_dim, D)).astype(np.float32) * 0.08),
+    )
+    x = jnp.asarray(rng.standard_normal((B, 1, D)).astype(np.float32))
+    kc = jnp.asarray(rng.standard_normal(
+        (B, TINY.max_ctx, TINY.n_kv_heads, TINY.head_dim)).astype(np.float32))
+    vc = jnp.asarray(rng.standard_normal(
+        (B, TINY.max_ctx, TINY.n_kv_heads, TINY.head_dim)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, TINY.max_ctx - 1, B), dtype=jnp.int32)
+
+    y, kc2, vc2 = ref.attn_cached_rows(x, *w, kc, vc, pos, **kw)
+    for b in range(B):
+        yb, kb, vb = ref.attn_cached(x[b:b + 1], *w, kc[b:b + 1],
+                                     vc[b:b + 1], int(pos[b]), **kw)
+        np.testing.assert_allclose(y[b:b + 1], yb, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(kc2[b:b + 1], kb, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(vc2[b:b + 1], vb, rtol=2e-4, atol=2e-4)
+
+
 def test_weights_round_trip():
     params = init_params(TINY)
     with tempfile.TemporaryDirectory() as d:

@@ -3,11 +3,11 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::kvcache::KvState;
+use crate::kvcache::{copy_cache_row, take_cache_row, KvState, SlotArena};
 use crate::model::artifacts::Grid;
 use crate::model::weights::Weights;
 use crate::nbl::plan::{BlockOp, MlpOp, ModelPlan};
-use crate::runtime::literals::{lit_from_tensor, lit_scalar_i32, tensor_from_lit};
+use crate::runtime::literals::{lit_from_tensor, lit_i32_vec, lit_scalar_i32, tensor_from_lit};
 use crate::runtime::registry::{ArgRef, HeldBuffer};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -34,6 +34,14 @@ pub struct PrefillResult {
     pub hidden: Tensor,
     /// Bucket used.
     pub t_bucket: usize,
+}
+
+/// One row of a continuous-batching decode iteration: advance `slot` by
+/// `token` (the token sampled for that request last iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct RowDecode {
+    pub slot: usize,
+    pub token: u32,
 }
 
 pub struct Engine {
@@ -350,6 +358,204 @@ impl Engine {
         slice_logits(&logits, batch, s_real, self.config().vocab)
     }
 
+    // --------------------------------------------------- continuous decode
+
+    /// Largest executable batch bucket not exceeding `want` — the decode
+    /// group (slot arena) size for a serving config's `max_batch`.
+    pub fn decode_group_bucket(&self, want: usize) -> usize {
+        let want = want.max(1);
+        self.grid
+            .batches
+            .iter()
+            .copied()
+            .filter(|&b| b <= want)
+            .max()
+            .or_else(|| self.grid.batches.iter().copied().min())
+            .unwrap_or(1)
+    }
+
+    /// Allocate a per-request slot arena sized for `max_batch` under this
+    /// engine's plan (substituted layers allocate no rows — §H.2).
+    pub fn new_arena(&self, max_batch: usize) -> Result<SlotArena> {
+        SlotArena::new(&self.plan, self.config(), self.decode_group_bucket(max_batch))
+    }
+
+    /// True if the AOT grid carries the per-row-position decode op for
+    /// bucket `bb`; otherwise `decode_rows` serves through the per-row
+    /// scalar-pos fallback.
+    pub fn supports_row_decode(&self, bb: usize) -> bool {
+        self.runtime
+            .artifacts()
+            .has_op(&format!("attn_cached_rows_b{bb}_s1"))
+    }
+
+    /// Decode ONE token for a dynamic set of occupied arena slots — the
+    /// continuous-batching iteration. Rows carry their own positions
+    /// (gathered from the arena), so one call mixes requests with
+    /// different prompt lengths and ages. Returns logits
+    /// [rows.len(), 1, V] in `rows` order and advances each row's
+    /// position by one.
+    pub fn decode_rows(&self, arena: &mut SlotArena, rows: &[RowDecode]) -> Result<Tensor> {
+        if rows.is_empty() {
+            return Err(Error::Serving("decode_rows: empty row set".into()));
+        }
+        let bb = arena.bucket_batch;
+        if rows.len() != arena.occupancy() {
+            // every occupied slot must advance each iteration: the batched
+            // path feeds pad tokens at pos 0 to rows outside the set, which
+            // would clobber a live slot's first cache entry
+            return Err(Error::Serving(format!(
+                "decode_rows: {} rows for {} occupied slots",
+                rows.len(),
+                arena.occupancy()
+            )));
+        }
+        let mut seen = vec![false; bb];
+        for r in rows {
+            if r.slot >= bb || std::mem::replace(&mut seen[r.slot], true) {
+                return Err(Error::Serving(format!(
+                    "decode_rows: bad or duplicate slot {}",
+                    r.slot
+                )));
+            }
+            let pos = arena
+                .pos(r.slot)
+                .ok_or_else(|| Error::Serving(format!("decode_rows: slot {} is free", r.slot)))?;
+            if pos + 1 > arena.max_ctx {
+                return Err(Error::Serving(format!(
+                    "context overflow: slot {} at {} of {}",
+                    r.slot, pos, arena.max_ctx
+                )));
+            }
+        }
+        let logits = if self.supports_row_decode(bb) {
+            self.decode_rows_batched(arena, rows)?
+        } else {
+            self.decode_rows_fallback(arena, rows)?
+        };
+        for r in rows {
+            let p = arena.pos(r.slot).unwrap();
+            arena.set_pos(r.slot, p + 1);
+        }
+        Ok(logits)
+    }
+
+    /// Fast path: one `attn_cached_rows` call per layer with the per-row
+    /// position vector. Free rows feed a pad token at pos 0: their
+    /// (garbage) segment row 0 is overwritten and their output ignored.
+    fn decode_rows_batched(&self, arena: &mut SlotArena, rows: &[RowDecode]) -> Result<Tensor> {
+        let bb = arena.bucket_batch;
+        let mut tokens = vec![0u32; bb];
+        let mut pos = vec![0i32; bb];
+        for r in rows {
+            tokens[r.slot] = r.token;
+            pos[r.slot] = arena.pos(r.slot).unwrap() as i32;
+        }
+        let x0 = self.weights.embed(&tokens, bb, 1)?;
+        let mut x = lit_from_tensor(&x0)?;
+        let pos_lit = lit_i32_vec(&pos);
+
+        let rows_op = format!("attn_cached_rows_b{bb}_s1");
+        let mlp_op = format!("mlp_b{bb}_t1");
+        let lin_op = format!("linear_block_b{bb}_t1");
+
+        for (li, (lits, lp)) in self.layers.iter().zip(&self.plan.layers).enumerate() {
+            match &lp.attn {
+                BlockOp::Attention => {
+                    // borrow (don't take) the caches: the arena outlives a
+                    // failed iteration, and a `?` exit must not leave a
+                    // structural hole that bricks later admissions
+                    let out = {
+                        let (kc, vc) = arena.caches[li]
+                            .as_ref()
+                            .ok_or_else(|| Error::Serving(format!("layer {li}: no KV cache")))?;
+                        self.runtime.run_mixed(
+                            &rows_op,
+                            &[
+                                ArgRef::Lit(&x),
+                                ArgRef::Buf(&lits.attn_norm),
+                                ArgRef::Buf(&lits.wq),
+                                ArgRef::Buf(&lits.wk),
+                                ArgRef::Buf(&lits.wv),
+                                ArgRef::Buf(&lits.wo),
+                                ArgRef::Lit(kc),
+                                ArgRef::Lit(vc),
+                                ArgRef::Lit(&pos_lit),
+                            ],
+                        )?
+                    };
+                    let [y, kc2, vc2]: [xla::Literal; 3] = out
+                        .try_into()
+                        .map_err(|_| Error::Xla("attn_cached_rows arity".into()))?;
+                    arena.caches[li] = Some((kc2, vc2));
+                    x = y;
+                }
+                BlockOp::Linear(_) => {
+                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let out = self.runtime.run_mixed(
+                        &lin_op,
+                        &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
+                    )?;
+                    x = into_single(out, "linear_block")?;
+                }
+                BlockOp::Identity => {}
+            }
+            if lp.mlp == MlpOp::Mlp {
+                let out = self.runtime.run_mixed(
+                    &mlp_op,
+                    &[
+                        ArgRef::Lit(&x),
+                        ArgRef::Buf(&lits.mlp_norm),
+                        ArgRef::Buf(&lits.w1),
+                        ArgRef::Buf(&lits.w3),
+                        ArgRef::Buf(&lits.w2),
+                    ],
+                )?;
+                x = into_single(out, "mlp")?;
+            }
+        }
+        let logits = self.head_lit(&x, bb, 1)?;
+        let full = tensor_from_lit(&logits)?;
+        let vocab = self.config().vocab;
+        let mut out = Vec::with_capacity(rows.len() * vocab);
+        for r in rows {
+            out.extend_from_slice(full.at2(r.slot, 0));
+        }
+        Tensor::new(vec![rows.len(), 1, vocab], out)
+    }
+
+    /// Fallback when the rows op is missing from the AOT grid: slice each
+    /// row out of the arena, run the batch-1 scalar-pos decode, and write
+    /// the updated row back. Slower (host row copies + B executable
+    /// calls) but bit-identical semantics, so stale artifact sets still
+    /// serve correctly.
+    fn decode_rows_fallback(&self, arena: &mut SlotArena, rows: &[RowDecode]) -> Result<Tensor> {
+        let vocab = self.config().vocab;
+        let mut out = Vec::with_capacity(rows.len() * vocab);
+        for r in rows {
+            let mut state = KvState::empty(&self.plan, self.config(), 1, 1);
+            state.pos = arena.pos(r.slot).unwrap();
+            for (li, c) in arena.caches.iter().enumerate() {
+                if let Some((k, v)) = c {
+                    state.caches[li] =
+                        Some((take_cache_row(k, r.slot)?, take_cache_row(v, r.slot)?));
+                }
+            }
+            let logits = self.decode(&mut state, &[r.token], 1)?;
+            out.extend_from_slice(logits.at2(0, 0));
+            for (li, c) in arena.caches.iter_mut().enumerate() {
+                if let Some((k, v)) = c {
+                    let (nk, nv) = state.caches[li].take().ok_or_else(|| {
+                        Error::Serving(format!("layer {li}: cache lost in fallback decode"))
+                    })?;
+                    copy_cache_row(k, r.slot, &nk, 0)?;
+                    copy_cache_row(v, r.slot, &nv, 0)?;
+                }
+            }
+        }
+        Tensor::new(vec![rows.len(), 1, vocab], out)
+    }
+
     // ---------------------------------------------------------------- head
 
     /// LM head over a hidden tensor [Bb, Tb, D] -> logits [Bb, Tb, V].
@@ -374,7 +580,7 @@ impl Engine {
     pub fn warmup_ops(&self, batch: usize, len: usize) -> Result<Vec<String>> {
         let bb = self.batch_bucket(batch)?;
         let tb = self.prefill_bucket(len)?;
-        Ok(vec![
+        let mut ops = vec![
             format!("attn_prefill_b{bb}_t{tb}"),
             format!("cache_init_b{bb}_t{tb}"),
             format!("mlp_b{bb}_t{tb}"),
@@ -384,7 +590,11 @@ impl Engine {
             format!("mlp_b{bb}_t1"),
             format!("linear_block_b{bb}_t1"),
             format!("head_b{bb}_t1"),
-        ])
+        ];
+        if self.supports_row_decode(bb) {
+            ops.push(format!("attn_cached_rows_b{bb}_s1"));
+        }
+        Ok(ops)
     }
 }
 

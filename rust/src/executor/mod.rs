@@ -6,6 +6,7 @@
 //!
 //!   Attention  -> attn_prefill + cache_init   (prefill)
 //!                 attn_cached                  (decode / verify)
+//!                 attn_cached_rows             (continuous-batching decode)
 //!   Linear     -> linear_block (the NBL path; no KV, no pos)
 //!   Identity   -> nothing (DROP)
 //!
@@ -16,4 +17,4 @@ pub mod capture;
 pub mod engine;
 
 pub use capture::CaptureSource;
-pub use engine::{Engine, PrefillResult};
+pub use engine::{Engine, PrefillResult, RowDecode};

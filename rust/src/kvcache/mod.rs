@@ -1,17 +1,26 @@
-//! KV-cache management: per-group device cache state, a capacity-tracked
-//! pool, and the paper's §H.2 sizing formulas (Table 21).
+//! KV-cache management: contiguous prefill cache state, the per-request
+//! slot arena used by the continuous-batching scheduler, a capacity-
+//! tracked pool, and the paper's §H.2 sizing formulas (Table 21).
 //!
 //! NBL's KV saving is structural: layers whose attention was linearized
 //! or dropped simply have no cache entry, so a plan with m of K layers
 //! substituted allocates (K-m)/K of the baseline bytes — the executor
-//! and this module enforce that invariant (`bytes_allocated`).
+//! and this module enforce that invariant per slot (see DESIGN.md
+//! §Serving for the slot layout and admission rules).
+
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::model::config::ModelConfig;
 use crate::nbl::plan::ModelPlan;
+use crate::runtime::literals::{lit_from_tensor, tensor_from_lit};
+use crate::tensor::Tensor;
 
-/// Device-side KV cache for one batch group (literals stay attached to
-/// the PJRT runtime; on the CPU backend these are host buffers).
+/// Device-side KV cache produced by one prefill call (literals stay
+/// attached to the PJRT runtime; on the CPU backend these are host
+/// buffers). Also the run-to-completion group state of the legacy
+/// exact-length protocol; under continuous batching a batch-1 `KvState`
+/// is migrated into a [`SlotArena`] row right after prefill.
 pub struct KvState {
     /// Logical batch (requests in the group).
     pub batch: usize,
@@ -56,6 +65,170 @@ impl KvState {
     }
 }
 
+/// Per-request KV slot arena for the continuous-batching decode group.
+///
+/// One fixed batch bucket of rows; row r of every layer cache literal is
+/// slot r's private segment with its own position (the rows-decode op
+/// consumes the positions as an i32 vector). Requests join by adopting a
+/// freshly prefilled batch-1 [`KvState`] into a free row and leave by
+/// releasing the row — the batch never restarts. Substituted layers hold
+/// `None`, so NBL's structural KV saving applies per slot.
+pub struct SlotArena {
+    /// Rows in the arena (an executable batch bucket).
+    pub bucket_batch: usize,
+    /// Cache capacity per row (Tmax baked into the executables).
+    pub max_ctx: usize,
+    /// Per layer: Some((k, v)) [Bb, Tmax, Hkv, dh] iff the plan keeps
+    /// attention there.
+    pub caches: Vec<Option<(xla::Literal, xla::Literal)>>,
+    /// Per slot: tokens cached so far; None = free.
+    pos: Vec<Option<usize>>,
+}
+
+// Literals are plain host allocations on the CPU PJRT backend.
+unsafe impl Send for SlotArena {}
+
+impl SlotArena {
+    /// Allocate an all-free arena (zero-initialized caches for every
+    /// layer that keeps attention under `plan`).
+    pub fn new(plan: &ModelPlan, cfg: &ModelConfig, bucket_batch: usize) -> Result<SlotArena> {
+        let shape = vec![bucket_batch, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim];
+        let mut caches = Vec::with_capacity(plan.layers.len());
+        for lp in &plan.layers {
+            if lp.attn.needs_kv() {
+                let k = lit_from_tensor(&Tensor::zeros(shape.clone()))?;
+                let v = lit_from_tensor(&Tensor::zeros(shape.clone()))?;
+                caches.push(Some((k, v)));
+            } else {
+                caches.push(None);
+            }
+        }
+        Ok(SlotArena {
+            bucket_batch,
+            max_ctx: cfg.max_ctx,
+            caches,
+            pos: vec![None; bucket_batch],
+        })
+    }
+
+    /// Lowest-index free slot, if any.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.pos.iter().position(|p| p.is_none())
+    }
+
+    /// Indices of occupied slots (ascending).
+    pub fn occupied(&self) -> Vec<usize> {
+        (0..self.bucket_batch).filter(|&s| self.pos[s].is_some()).collect()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.pos.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Tokens cached in `slot` (None if free).
+    pub fn pos(&self, slot: usize) -> Option<usize> {
+        self.pos.get(slot).copied().flatten()
+    }
+
+    pub fn set_pos(&mut self, slot: usize, pos: usize) {
+        self.pos[slot] = Some(pos);
+    }
+
+    /// Mark a slot free; its rows become garbage and are fully
+    /// overwritten by the next `adopt` into the same slot.
+    pub fn release(&mut self, slot: usize) {
+        self.pos[slot] = None;
+    }
+
+    /// Migrate a freshly prefilled batch-1 `KvState` into row `slot`:
+    /// copy row 0 of each layer cache and claim the slot at `state.pos`.
+    pub fn adopt(&mut self, slot: usize, state: &KvState) -> Result<()> {
+        if slot >= self.bucket_batch {
+            return Err(Error::Serving(format!(
+                "slot {slot} out of range ({} rows)",
+                self.bucket_batch
+            )));
+        }
+        if self.pos[slot].is_some() {
+            return Err(Error::Serving(format!("slot {slot} is occupied")));
+        }
+        if state.caches.len() != self.caches.len() {
+            return Err(Error::Serving(format!(
+                "plan mismatch: {} vs {} layers",
+                state.caches.len(),
+                self.caches.len()
+            )));
+        }
+        for (dst, src) in self.caches.iter_mut().zip(&state.caches) {
+            match (dst, src) {
+                (Some((dk, dv)), Some((sk, sv))) => {
+                    copy_cache_row(dk, slot, sk, 0)?;
+                    copy_cache_row(dv, slot, sv, 0)?;
+                }
+                (None, None) => {}
+                _ => {
+                    return Err(Error::Serving(
+                        "plan mismatch: KV layers differ between prefill and arena".into(),
+                    ))
+                }
+            }
+        }
+        self.pos[slot] = Some(state.pos);
+        Ok(())
+    }
+}
+
+/// Copy row `src_row` of `src` into row `dst_row` of `dst`. Both literals
+/// must share trailing dims (host-side memcpy; literals are host buffers
+/// on the CPU backend).
+pub fn copy_cache_row(
+    dst: &mut xla::Literal,
+    dst_row: usize,
+    src: &xla::Literal,
+    src_row: usize,
+) -> Result<()> {
+    let mut d = tensor_from_lit(dst)?;
+    let s = tensor_from_lit(src)?;
+    if d.shape()[1..] != s.shape()[1..] {
+        return Err(Error::Shape(format!(
+            "cache row copy: {:?} vs {:?}",
+            d.shape(),
+            s.shape()
+        )));
+    }
+    if dst_row >= d.shape()[0] || src_row >= s.shape()[0] {
+        return Err(Error::Shape(format!(
+            "cache row copy: rows {dst_row}/{src_row} out of range"
+        )));
+    }
+    let stride: usize = d.shape()[1..].iter().product();
+    d.data_mut()[dst_row * stride..(dst_row + 1) * stride]
+        .copy_from_slice(&s.data()[src_row * stride..(src_row + 1) * stride]);
+    *dst = lit_from_tensor(&d)?;
+    Ok(())
+}
+
+/// Extract one row of a cache literal as a batch-1 literal [1, ...]
+/// (the per-row fallback decode path when the rows op is not in the AOT
+/// grid — see `Engine::decode_rows`).
+pub fn take_cache_row(src: &xla::Literal, row: usize) -> Result<xla::Literal> {
+    let s = tensor_from_lit(src)?;
+    if row >= s.shape()[0] {
+        return Err(Error::Shape(format!("cache row {row} out of range")));
+    }
+    let stride: usize = s.shape()[1..].iter().product();
+    let mut shape = s.shape().to_vec();
+    shape[0] = 1;
+    let data = s.data()[row * stride..(row + 1) * stride].to_vec();
+    lit_from_tensor(&Tensor::new(shape, data)?)
+}
+
+/// §H.2 bytes for ONE request slot under `plan` (batch 1, full context):
+/// the unit of the scheduler's slot-granular admission control.
+pub fn slot_bytes(cfg: &ModelConfig, plan: &ModelPlan) -> usize {
+    kv_bytes(cfg, plan.kv_layers(), 1, cfg.max_ctx, 4)
+}
+
 /// §H.2 grouped-query KV size: 2 * bs * n * d * (g/h) * bytes, per layer
 /// summed over layers that keep attention. (g/h == n_kv_heads/n_heads, so
 /// 2*bs*n*d*g/h == 2*bs*n*d_kv.)
@@ -89,8 +262,28 @@ impl KvPool {
         self.in_use.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// True if `bytes` more could be reserved right now (the scheduler's
+    /// admission check; single-writer, so check-then-reserve is safe in
+    /// the worker loop and a racing reserve just fails cleanly).
+    pub fn would_fit(&self, bytes: usize) -> bool {
+        self.in_use() + bytes <= self.capacity_bytes
+    }
+
     /// Try to reserve bytes for a new group; Err if over budget.
     pub fn reserve(&self, bytes: usize) -> Result<KvLease<'_>> {
+        self.try_take(bytes)?;
+        Ok(KvLease { pool: self, bytes })
+    }
+
+    /// Owned variant of [`reserve`](Self::reserve) for long-lived
+    /// reservations: the per-slot leases the scheduler holds across
+    /// decode iterations.
+    pub fn reserve_owned(pool: &Arc<KvPool>, bytes: usize) -> Result<KvLeaseOwned> {
+        pool.try_take(bytes)?;
+        Ok(KvLeaseOwned { pool: pool.clone(), bytes })
+    }
+
+    fn try_take(&self, bytes: usize) -> Result<()> {
         use std::sync::atomic::Ordering;
         let mut cur = self.in_use.load(Ordering::Relaxed);
         loop {
@@ -106,10 +299,15 @@ impl KvPool {
                 Ordering::AcqRel,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return Ok(KvLease { pool: self, bytes }),
+                Ok(_) => return Ok(()),
                 Err(actual) => cur = actual,
             }
         }
+    }
+
+    fn give_back(&self, bytes: usize) {
+        self.in_use
+            .fetch_sub(bytes, std::sync::atomic::Ordering::AcqRel);
     }
 }
 
@@ -127,9 +325,26 @@ impl KvLease<'_> {
 
 impl Drop for KvLease<'_> {
     fn drop(&mut self) {
-        self.pool
-            .in_use
-            .fetch_sub(self.bytes, std::sync::atomic::Ordering::AcqRel);
+        self.pool.give_back(self.bytes);
+    }
+}
+
+/// Owned RAII lease (holds the pool by Arc): per-slot reservation held
+/// for a request's whole residency in the decode group.
+pub struct KvLeaseOwned {
+    pool: Arc<KvPool>,
+    bytes: usize,
+}
+
+impl KvLeaseOwned {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for KvLeaseOwned {
+    fn drop(&mut self) {
+        self.pool.give_back(self.bytes);
     }
 }
 
@@ -193,5 +408,91 @@ mod tests {
         let st = KvState::empty(&plan, &c, 1, 1);
         assert_eq!(st.bytes(), kv_bytes(&c, 4, 1, 512, 4));
         assert_eq!(st.remaining(), 512);
+    }
+
+    #[test]
+    fn owned_lease_returns_bytes_on_drop() {
+        let pool = std::sync::Arc::new(KvPool::new(1000));
+        let a = KvPool::reserve_owned(&pool, 400).unwrap();
+        let b = KvPool::reserve_owned(&pool, 400).unwrap();
+        assert!(KvPool::reserve_owned(&pool, 400).is_err());
+        assert!(!pool.would_fit(400));
+        assert!(pool.would_fit(200));
+        drop(a);
+        assert_eq!(pool.in_use(), 400);
+        drop(b);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn slot_bytes_is_batch1_full_ctx() {
+        let c = cfg();
+        let mut plan = crate::nbl::plan::ModelPlan::baseline(6);
+        plan.drop_attn(2);
+        assert_eq!(slot_bytes(&c, &plan), kv_bytes(&c, 5, 1, 512, 4));
+    }
+
+    #[test]
+    fn arena_slot_lifecycle() {
+        let c = cfg();
+        let mut plan = crate::nbl::plan::ModelPlan::baseline(6);
+        plan.drop_attn(0);
+        let mut arena = SlotArena::new(&plan, &c, 4).unwrap();
+        // substituted layer has no cache, kept layers do
+        assert!(arena.caches[0].is_none());
+        assert!(arena.caches[1].is_some());
+        assert_eq!(arena.occupancy(), 0);
+        assert_eq!(arena.free_slot(), Some(0));
+        arena.set_pos(0, 10);
+        arena.set_pos(2, 7);
+        assert_eq!(arena.occupancy(), 2);
+        assert_eq!(arena.occupied(), vec![0, 2]);
+        assert_eq!(arena.free_slot(), Some(1));
+        assert_eq!(arena.pos(2), Some(7));
+        arena.release(0);
+        assert_eq!(arena.free_slot(), Some(0));
+        assert_eq!(arena.occupied(), vec![2]);
+        assert_eq!(arena.pos(0), None);
+    }
+
+    #[test]
+    fn cache_row_copy_round_trip() {
+        use crate::runtime::literals::{lit_from_tensor, tensor_from_lit};
+        use crate::tensor::Tensor;
+        let src = lit_from_tensor(&Tensor::from_fn(vec![2, 3, 4], |i| i as f32)).unwrap();
+        let mut dst = lit_from_tensor(&Tensor::zeros(vec![4, 3, 4])).unwrap();
+        copy_cache_row(&mut dst, 2, &src, 1).unwrap();
+        let d = tensor_from_lit(&dst).unwrap();
+        // row 2 of dst == row 1 of src, other rows untouched
+        assert_eq!(d.at2(2, 0)[0], 12.0);
+        assert_eq!(d.at2(2, 2)[3], 23.0);
+        assert_eq!(d.at2(0, 0)[0], 0.0);
+        assert_eq!(d.at2(3, 2)[3], 0.0);
+        // extract the row back out as a batch-1 literal
+        let row = take_cache_row(&dst, 2).unwrap();
+        let r = tensor_from_lit(&row).unwrap();
+        assert_eq!(r.shape(), &[1, 3, 4]);
+        assert_eq!(r.at2(0, 0)[0], 12.0);
+        // shape-mismatched copies are rejected
+        let bad = lit_from_tensor(&Tensor::zeros(vec![1, 2, 4])).unwrap();
+        assert!(copy_cache_row(&mut dst, 0, &bad, 0).is_err());
+        assert!(take_cache_row(&dst, 9).is_err());
+    }
+
+    #[test]
+    fn arena_adopt_checks_plan_shape() {
+        let c = cfg();
+        let plan = crate::nbl::plan::ModelPlan::baseline(2);
+        let mut arena = SlotArena::new(&plan, &c, 2).unwrap();
+        let mut st = KvState::empty(&plan, &c, 1, 1);
+        st.pos = 5;
+        // empty KvState has no cache literals yet -> layer count matches
+        // but (Some, None) per-layer pairing must be rejected
+        assert!(arena.adopt(0, &st).is_err());
+        // occupied slot is rejected outright
+        arena.set_pos(1, 3);
+        assert!(arena.adopt(1, &st).is_err());
+        // out-of-range slot is rejected
+        assert!(arena.adopt(7, &st).is_err());
     }
 }

@@ -29,6 +29,11 @@ pub fn lit_scalar_i32(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// i32 vector literal (the per-row `pos` argument of the rows-decode op).
+pub fn lit_i32_vec(vals: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(vals)
+}
+
 /// Download a literal into a Tensor (f32).
 pub fn tensor_from_lit(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape()?;
@@ -58,5 +63,11 @@ mod tests {
     fn scalar_i32() {
         let l = lit_scalar_i32(42);
         assert_eq!(l.get_first_element::<i32>().unwrap(), 42);
+    }
+
+    #[test]
+    fn i32_vec() {
+        let l = lit_i32_vec(&[3, 1, 4]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![3, 1, 4]);
     }
 }

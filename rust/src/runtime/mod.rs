@@ -14,5 +14,5 @@
 pub mod literals;
 pub mod registry;
 
-pub use literals::{lit_from_tensor, lit_scalar_i32, tensor_from_lit};
+pub use literals::{lit_from_tensor, lit_i32_vec, lit_scalar_i32, tensor_from_lit};
 pub use registry::Runtime;

@@ -1,7 +1,9 @@
-//! Request/response types + line-JSON wire codec.
+//! Request/response types + line-JSON wire codec, including the stats
+//! endpoint ({"stats": true} on the TCP line protocol).
 
 use crate::error::{Error, Result};
 use crate::sampling::SamplingParams;
+use crate::server::metrics::{MetricsSummary, SchedulerGauges};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -81,6 +83,49 @@ impl GenResponse {
     }
 }
 
+/// True if a wire line is a stats query ({"stats": true}) rather than a
+/// generation request.
+pub fn is_stats_request(j: &Json) -> bool {
+    j.opt("stats")
+        .and_then(|v| v.as_bool().ok())
+        .unwrap_or(false)
+}
+
+/// Wire form of the stats endpoint: request/latency summary plus the
+/// scheduler's continuous-batching gauges (queue depth, per-iteration
+/// batch occupancy, KV-pool utilization). `kv_in_use`/`kv_capacity` are
+/// sampled live from the pool so idle servers still report truthfully.
+pub fn stats_to_json(
+    s: &MetricsSummary,
+    g: &SchedulerGauges,
+    kv_in_use: usize,
+    kv_capacity: usize,
+) -> Json {
+    let kv_util = if kv_capacity == 0 {
+        0.0
+    } else {
+        kv_in_use as f64 / kv_capacity as f64
+    };
+    Json::obj(vec![
+        ("requests", Json::Num(s.requests as f64)),
+        ("generated_tokens", Json::Num(s.generated_tokens as f64)),
+        ("mean_ttft_ms", Json::Num(s.mean_ttft_s * 1e3)),
+        ("p90_ttft_ms", Json::Num(s.p90_ttft_s * 1e3)),
+        ("mean_prefill_tok_s", Json::Num(s.mean_prefill_tok_s)),
+        ("median_decode_tok_s", Json::Num(s.median_decode_tok_s)),
+        ("aggregate_tok_s", Json::Num(s.aggregate_tok_s)),
+        ("queue_depth", Json::Num(g.queue_depth as f64)),
+        ("iterations", Json::Num(g.iterations as f64)),
+        ("mean_batch_occupancy", Json::Num(g.mean_occupancy())),
+        ("mean_rows_per_iteration", Json::Num(g.mean_rows_per_iteration())),
+        ("admissions", Json::Num(g.admissions as f64)),
+        ("slot_reuses", Json::Num(g.slot_reuses as f64)),
+        ("kv_in_use_bytes", Json::Num(kv_in_use as f64)),
+        ("kv_capacity_bytes", Json::Num(kv_capacity as f64)),
+        ("kv_utilization", Json::Num(kv_util)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +155,47 @@ mod tests {
     fn rejects_empty() {
         assert!(GenRequest::from_json(&Json::parse(r#"{"id":1,"prompt":""}"#).unwrap()).is_err());
         assert!(GenRequest::from_json(&Json::parse(r#"{"id":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn stats_request_detected() {
+        assert!(is_stats_request(&Json::parse(r#"{"stats": true}"#).unwrap()));
+        assert!(!is_stats_request(
+            &Json::parse(r#"{"stats": false}"#).unwrap()
+        ));
+        assert!(!is_stats_request(
+            &Json::parse(r#"{"id": 1, "prompt": "x"}"#).unwrap()
+        ));
+    }
+
+    #[test]
+    fn stats_serialize_gauges() {
+        let s = MetricsSummary {
+            requests: 4,
+            generated_tokens: 40,
+            mean_ttft_s: 0.01,
+            p90_ttft_s: 0.02,
+            mean_prefill_tok_s: 1000.0,
+            median_decode_tok_s: 100.0,
+            aggregate_tok_s: 50.0,
+        };
+        let g = SchedulerGauges {
+            iterations: 10,
+            occupied_rows: 30,
+            bucket_rows: 80,
+            admissions: 6,
+            slot_reuses: 2,
+            queue_depth: 1,
+            kv_in_use: 0,
+            kv_capacity: 0,
+        };
+        let j = stats_to_json(&s, &g, 512, 1024);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("requests").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(back.get("queue_depth").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("slot_reuses").unwrap().as_usize().unwrap(), 2);
+        assert!((back.get("mean_batch_occupancy").unwrap().as_f64().unwrap() - 0.375).abs() < 1e-9);
+        assert!((back.get("kv_utilization").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -1,13 +1,72 @@
-//! Batch-group formation: FIFO admission with exact-length grouping.
+//! Request admission: the iteration-level [`Scheduler`] (continuous
+//! batching, DESIGN.md §Serving) and the legacy exact-length [`Batcher`]
+//! (the lockstep run-to-completion baseline the benches compare against).
 //!
-//! Requests in a group share the prefill bucket and decode position
-//! (DESIGN.md), so a group = requests with identical prompt length, up to
-//! `max_batch`. The batcher favours the oldest waiting request (no
-//! starvation: groups are seeded by the queue head, never by popularity).
+//! Both are strictly FIFO at the head — the oldest waiting request is
+//! always served first, so neither can starve a request. The scheduler
+//! admits one request at a time into a free KV *slot* whenever the pool
+//! budget allows; the batcher forms whole same-length groups.
 
 use std::collections::VecDeque;
 
+use crate::kvcache::KvPool;
 use crate::server::api::GenRequest;
+
+/// Iteration-level admission queue for continuous batching.
+///
+/// Head-of-queue discipline: `next_admission` only ever pops the front,
+/// and only when a decode slot is free AND the request's KV-slot bytes
+/// fit the pool budget. A head that does not fit blocks younger requests
+/// (FIFO fairness — no starvation by construction; see the property test
+/// in tests/test_serving.rs).
+pub struct Scheduler {
+    queue: VecDeque<GenRequest>,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler { queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Put a request back at the head (admission raced with another pool
+    /// user and lost — retry next iteration, still oldest-first).
+    pub fn push_front(&mut self, req: GenRequest) {
+        self.queue.push_front(req);
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Oldest waiting request, if one can be admitted right now.
+    pub fn next_admission(
+        &mut self,
+        free_slots: usize,
+        pool: &KvPool,
+        slot_bytes: usize,
+    ) -> Option<GenRequest> {
+        if free_slots == 0 || self.queue.is_empty() || !pool.would_fit(slot_bytes) {
+            return None;
+        }
+        self.queue.pop_front()
+    }
+
+    /// Drain every queued request (shutdown path: each one still gets a
+    /// response).
+    pub fn drain(&mut self) -> Vec<GenRequest> {
+        self.queue.drain(..).collect()
+    }
+}
 
 pub struct Batcher {
     queue: VecDeque<GenRequest>,
@@ -95,6 +154,37 @@ mod tests {
         let g = b.next_group().unwrap();
         assert_eq!(g.len(), 1);
         assert_eq!(g[0].id, 1);
+    }
+
+    #[test]
+    fn scheduler_admits_head_only_when_slot_and_budget_allow() {
+        let pool = KvPool::new(100);
+        let mut s = Scheduler::new();
+        s.push(req(1, 8));
+        s.push(req(2, 16));
+        assert!(s.next_admission(0, &pool, 10).is_none(), "no free slot");
+        assert!(s.next_admission(1, &pool, 200).is_none(), "over budget");
+        assert_eq!(s.waiting(), 2);
+        let a = s.next_admission(1, &pool, 60).unwrap();
+        assert_eq!(a.id, 1, "strict FIFO: head first");
+        let _lease = pool.reserve(60).unwrap();
+        assert!(s.next_admission(4, &pool, 60).is_none(), "budget consumed");
+        // losing a race puts the request back at the head
+        s.push_front(a);
+        assert_eq!(s.waiting(), 2);
+        drop(_lease);
+        assert_eq!(s.next_admission(1, &pool, 60).unwrap().id, 1);
+    }
+
+    #[test]
+    fn scheduler_drain_empties_queue() {
+        let mut s = Scheduler::new();
+        for id in 0..4 {
+            s.push(req(id, 8));
+        }
+        let drained = s.drain();
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(s.waiting(), 0);
     }
 
     #[test]

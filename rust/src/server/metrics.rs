@@ -84,10 +84,61 @@ impl Stopwatch {
     }
 }
 
+/// Scheduler-level gauges and counters (continuous batching): queue
+/// depth, per-iteration batch occupancy, KV-pool utilization, and slot
+/// churn. Updated by the worker loop once per decode iteration.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerGauges {
+    /// Decode iterations run.
+    pub iterations: u64,
+    /// Sum of occupied rows over iterations (occupancy numerator).
+    pub occupied_rows: u64,
+    /// Sum of arena rows over iterations (occupancy denominator).
+    pub bucket_rows: u64,
+    /// Requests admitted into a KV slot.
+    pub admissions: u64,
+    /// Admissions into a row that a finished request freed earlier
+    /// (slot reuse without restarting the batch).
+    pub slot_reuses: u64,
+    /// Waiting requests at the last observation.
+    pub queue_depth: usize,
+    /// KV-pool bytes reserved at the last observation.
+    pub kv_in_use: usize,
+    /// KV-pool capacity in bytes.
+    pub kv_capacity: usize,
+}
+
+impl SchedulerGauges {
+    /// Mean occupied fraction of the decode batch per iteration.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.bucket_rows == 0 {
+            return 0.0;
+        }
+        self.occupied_rows as f64 / self.bucket_rows as f64
+    }
+
+    /// Mean occupied ROWS per iteration (how many requests actually
+    /// shared a decode call).
+    pub fn mean_rows_per_iteration(&self) -> f64 {
+        if self.iterations == 0 {
+            return 0.0;
+        }
+        self.occupied_rows as f64 / self.iterations as f64
+    }
+
+    pub fn kv_utilization(&self) -> f64 {
+        if self.kv_capacity == 0 {
+            return 0.0;
+        }
+        self.kv_in_use as f64 / self.kv_capacity as f64
+    }
+}
+
 /// Aggregates request timings across the server lifetime.
 #[derive(Default)]
 pub struct MetricsHub {
     timings: Mutex<Vec<RequestTiming>>,
+    gauges: Mutex<SchedulerGauges>,
 }
 
 impl MetricsHub {
@@ -97,6 +148,36 @@ impl MetricsHub {
 
     pub fn record(&self, t: RequestTiming) {
         self.timings.lock().unwrap().push(t);
+    }
+
+    /// One decode iteration ran with `occupied` of `bucket` rows live.
+    pub fn note_iteration(&self, occupied: usize, bucket: usize) {
+        let mut g = self.gauges.lock().unwrap();
+        g.iterations += 1;
+        g.occupied_rows += occupied as u64;
+        g.bucket_rows += bucket as u64;
+    }
+
+    /// A request was admitted into a slot (`reused` = the row had served
+    /// an earlier, now-finished request).
+    pub fn note_admission(&self, reused: bool) {
+        let mut g = self.gauges.lock().unwrap();
+        g.admissions += 1;
+        if reused {
+            g.slot_reuses += 1;
+        }
+    }
+
+    /// Refresh the point-in-time gauges (queue depth + KV pool state).
+    pub fn observe(&self, queue_depth: usize, kv_in_use: usize, kv_capacity: usize) {
+        let mut g = self.gauges.lock().unwrap();
+        g.queue_depth = queue_depth;
+        g.kv_in_use = kv_in_use;
+        g.kv_capacity = kv_capacity;
+    }
+
+    pub fn gauges(&self) -> SchedulerGauges {
+        self.gauges.lock().unwrap().clone()
     }
 
     pub fn len(&self) -> usize {
@@ -168,6 +249,24 @@ mod tests {
         assert!(t.ttft_s >= 0.0);
         assert_eq!(t.token_intervals.len(), 1);
         assert!(t.token_intervals[0] >= 0.002);
+    }
+
+    #[test]
+    fn gauges_track_iterations_and_churn() {
+        let hub = MetricsHub::new();
+        hub.note_iteration(2, 8);
+        hub.note_iteration(6, 8);
+        hub.note_admission(false);
+        hub.note_admission(true);
+        hub.observe(3, 500, 1000);
+        let g = hub.gauges();
+        assert_eq!(g.iterations, 2);
+        assert!((g.mean_occupancy() - 0.5).abs() < 1e-9);
+        assert!((g.mean_rows_per_iteration() - 4.0).abs() < 1e-9);
+        assert_eq!(g.admissions, 2);
+        assert_eq!(g.slot_reuses, 1);
+        assert_eq!(g.queue_depth, 3);
+        assert!((g.kv_utilization() - 0.5).abs() < 1e-9);
     }
 
     #[test]

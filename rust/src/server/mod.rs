@@ -1,12 +1,16 @@
 //! The serving engine (L3 coordinator proper): request router,
-//! batch-group scheduler, generation loop, TCP front-end and metrics.
+//! iteration-level scheduler, generation loop, TCP front-end and metrics.
 //!
 //! Shape: a vLLM-style engine scaled to this paper's evaluation protocol
 //! (§4.1: prefill speed = context tokens / TTFT; throughput = median
 //! generated tokens/s; batch size 1 for the headline numbers, batched
-//! groups for the load benches). Requests are grouped by exact prompt
-//! length (groups share the decode position — see DESIGN.md), prefilled
-//! once, then decoded in lockstep until every member finishes.
+//! load for the serving benches). The default worker runs continuous
+//! batching (DESIGN.md §Serving): each request owns a KV *slot* in a
+//! fixed decode arena, the scheduler admits the oldest waiting request
+//! whenever a slot and the KV budget allow, and every decode iteration
+//! advances whatever mix of requests is resident — any prompt lengths,
+//! joining and leaving mid-flight. The legacy exact-length lockstep
+//! protocol (`run_group` + `Batcher`) is kept as the benches' baseline.
 
 pub mod api;
 pub mod batcher;
@@ -15,6 +19,6 @@ pub mod service;
 pub mod tcp;
 
 pub use api::{GenRequest, GenResponse};
-pub use batcher::Batcher;
-pub use metrics::{MetricsHub, RequestTiming};
-pub use service::{Server, ServerConfig};
+pub use batcher::{Batcher, Scheduler};
+pub use metrics::{MetricsHub, RequestTiming, SchedulerGauges};
+pub use service::{BatchMode, Server, ServerConfig};

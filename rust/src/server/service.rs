@@ -1,18 +1,38 @@
-//! The generation service: batched prefill + lockstep decode, a worker
-//! thread pulling groups from the batcher, and a submit API used by both
-//! the TCP front-end and the in-process benches.
+//! The generation service: a worker thread running either the
+//! continuous-batching scheduler (default) or the legacy lockstep group
+//! protocol, plus a submit API used by both the TCP front-end and the
+//! in-process benches.
+//!
+//! Continuous mode (DESIGN.md §Serving): the worker runs ONE decode
+//! iteration at a time over the occupied rows of a per-request KV slot
+//! arena. Finished requests leave the batch and free their slot
+//! immediately; newly admitted requests (any prompt length) are
+//! prefilled solo and join mid-flight. Admission is slot-granular
+//! against the KV pool.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
 use crate::data::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
-use crate::executor::engine::Engine;
-use crate::kvcache::{kv_bytes, KvPool};
+use crate::executor::engine::{Engine, RowDecode};
+use crate::kvcache::{kv_bytes, slot_bytes, KvLeaseOwned, KvPool, SlotArena};
 use crate::sampling::Sampler;
 use crate::server::api::{GenRequest, GenResponse};
-use crate::server::batcher::Batcher;
-use crate::server::metrics::{MetricsHub, Stopwatch};
+use crate::server::batcher::{Batcher, Scheduler};
+use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
+
+/// Worker-loop scheduling protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Iteration-level continuous batching over per-request KV slots
+    /// (the default).
+    Continuous,
+    /// Legacy lockstep protocol: exact-length groups run
+    /// prefill->decode to completion (the benches' baseline).
+    ExactLength,
+}
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -21,6 +41,8 @@ pub struct ServerConfig {
     pub kv_capacity_bytes: usize,
     /// Optional stop token.
     pub eos: Option<u32>,
+    /// Scheduling protocol for the async worker.
+    pub mode: BatchMode,
 }
 
 impl Default for ServerConfig {
@@ -29,6 +51,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             kv_capacity_bytes: 1 << 30,
             eos: None,
+            mode: BatchMode::Continuous,
         }
     }
 }
@@ -59,7 +82,9 @@ impl Server {
         }
     }
 
-    /// Serve a group of equal-length-prompt requests in lockstep.
+    /// Serve a group of equal-length-prompt requests in lockstep — the
+    /// legacy run-to-completion protocol, kept as the exact-length
+    /// baseline the continuous scheduler is benchmarked against.
     pub fn run_group(&self, group: &[GenRequest]) -> Result<Vec<GenResponse>> {
         let n = group.len();
         if n == 0 {
@@ -132,18 +157,10 @@ impl Server {
         }
 
         // finalize
-        let tok = ByteTokenizer::new();
         let mut responses = Vec::with_capacity(n);
         for (b, (req, sw)) in group.iter().zip(watches.into_iter()).enumerate() {
             let timing = sw.finish(len, outputs[b].len());
-            let resp = GenResponse {
-                id: req.id,
-                text: tok.decode(&outputs[b]),
-                tokens: std::mem::take(&mut outputs[b]),
-                ttft_ms: timing.ttft_s * 1e3,
-                total_ms: timing.total_s * 1e3,
-                error: None,
-            };
+            let resp = ok_response(req.id, std::mem::take(&mut outputs[b]), &timing);
             self.metrics.record(timing);
             responses.push(resp);
         }
@@ -154,50 +171,346 @@ impl Server {
     pub fn spawn(self: Arc<Self>) -> ServerHandle {
         let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
         let server = self.clone();
-        let join = std::thread::spawn(move || {
-            let mut batcher = Batcher::new(server.config.max_batch);
-            let mut replies: std::collections::HashMap<u64, Sender<GenResponse>> =
-                std::collections::HashMap::new();
-            loop {
-                // block for at least one submission, drain the rest
-                let first = match rx.recv() {
-                    Ok(s) => s,
-                    Err(_) => break, // all senders dropped: shutdown
-                };
-                match first {
-                    Submission::Shutdown => break,
-                    Submission::Request(req, reply) => {
-                        replies.insert(req.id, reply);
-                        batcher.push(req);
+        let join = std::thread::spawn(move || match server.config.mode {
+            BatchMode::Continuous => run_continuous(&server, &rx),
+            BatchMode::ExactLength => run_exact_length(&server, &rx),
+        });
+        ServerHandle { tx, join: Some(join) }
+    }
+}
+
+// ------------------------------------------------------------ worker loops
+
+/// A request resident in the decode group: one occupied arena slot.
+struct ActiveSlot {
+    req: GenRequest,
+    sampler: Sampler,
+    outputs: Vec<u32>,
+    watch: Stopwatch,
+    /// Token to feed at the next decode iteration (sampled last
+    /// iteration, or from the prefill logits at admission).
+    next: u32,
+    /// max_new_tokens clamped to the context budget.
+    effective_max: usize,
+    /// Slot-granular KV reservation; returns to the pool when the
+    /// request leaves the batch.
+    _lease: KvLeaseOwned,
+}
+
+/// Continuous-batching worker: one decode iteration per loop turn over
+/// the occupied slots; admissions and departures happen between
+/// iterations without restarting the batch.
+fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
+    let engine = &server.engine;
+    let per_slot = slot_bytes(engine.config(), &engine.plan);
+    let mut sched = Scheduler::new();
+    let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
+    // stopwatches start at SUBMISSION so TTFT includes scheduler queue
+    // wait (under load the queue is where latency lives)
+    let mut watches: HashMap<u64, Stopwatch> = HashMap::new();
+    let mut arena: Option<SlotArena> = None;
+    let mut slots: Vec<Option<ActiveSlot>> = Vec::new();
+    // rows that served an earlier request (slot-reuse accounting)
+    let mut row_used: Vec<bool> = Vec::new();
+
+    'outer: loop {
+        // ---- intake: block when idle, poll between iterations
+        let idle = slots.iter().all(|s| s.is_none()) && sched.waiting() == 0;
+        if idle {
+            match rx.recv() {
+                Ok(sub) => {
+                    if !intake(sub, &mut sched, &mut replies, &mut watches) {
+                        break 'outer;
                     }
                 }
-                while let Ok(s) = rx.try_recv() {
-                    match s {
-                        Submission::Shutdown => return,
-                        Submission::Request(req, reply) => {
-                            replies.insert(req.id, reply);
-                            batcher.push(req);
-                        }
+                Err(_) => break 'outer, // all senders dropped
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(sub) => {
+                    if !intake(sub, &mut sched, &mut replies, &mut watches) {
+                        break 'outer;
                     }
                 }
-                while let Some(group) = batcher.next_group() {
-                    let resp = server
-                        .run_group(&group)
-                        .unwrap_or_else(|e| {
-                            group
-                                .iter()
-                                .map(|r| error_response(r.id, Error::msg(e.to_string())))
-                                .collect()
-                        });
-                    for r in resp {
-                        if let Some(tx) = replies.remove(&r.id) {
-                            let _ = tx.send(r);
-                        }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'outer,
+            }
+        }
+
+        // ---- lazily size the arena from the grid on first demand
+        if arena.is_none() && sched.waiting() > 0 {
+            match engine.new_arena(server.config.max_batch) {
+                Ok(a) => {
+                    slots = (0..a.bucket_batch).map(|_| None).collect();
+                    row_used = vec![false; a.bucket_batch];
+                    arena = Some(a);
+                }
+                Err(e) => {
+                    for r in sched.drain() {
+                        watches.remove(&r.id);
+                        respond(&mut replies, error_response(r.id, Error::msg(e.to_string())));
+                    }
+                    continue;
+                }
+            }
+        }
+        let Some(arena_ref) = arena.as_mut() else { continue };
+
+        // ---- admission: oldest-first into free slots while budget holds
+        loop {
+            let Some(slot) = arena_ref.free_slot() else { break };
+            let free = arena_ref.bucket_batch - arena_ref.occupancy();
+            let Some(req) = sched.next_admission(free, &server.pool, per_slot) else { break };
+            let lease = match KvPool::reserve_owned(&server.pool, per_slot) {
+                Ok(l) => l,
+                Err(_) => {
+                    // raced with an external reservation; retry next turn
+                    sched.push_front(req);
+                    break;
+                }
+            };
+            let watch = watches.remove(&req.id).unwrap_or_default();
+            admit(
+                server, arena_ref, slot, req, watch, lease, &mut slots, &mut row_used,
+                &mut replies,
+            );
+        }
+
+        // ---- a head that can never fit must not hang the queue
+        if arena_ref.occupancy() == 0
+            && sched.waiting() > 0
+            && !server.pool.would_fit(per_slot)
+        {
+            if server.pool.in_use() == 0 {
+                let cap = server.pool.capacity();
+                for r in sched.drain() {
+                    watches.remove(&r.id);
+                    respond(
+                        &mut replies,
+                        error_response(
+                            r.id,
+                            Error::Serving(format!(
+                                "KV pool exhausted: slot needs {per_slot} > capacity {cap}"
+                            )),
+                        ),
+                    );
+                }
+            } else {
+                // an external lease holds the budget; yield briefly
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+
+        // ---- one decode iteration over the occupied rows
+        server
+            .metrics
+            .observe(sched.waiting(), server.pool.in_use(), server.pool.capacity());
+        let occ = arena_ref.occupied();
+        if occ.is_empty() {
+            continue;
+        }
+        let rows: Vec<RowDecode> = occ
+            .iter()
+            .map(|&s| RowDecode { slot: s, token: slots[s].as_ref().unwrap().next })
+            .collect();
+        server.metrics.note_iteration(occ.len(), arena_ref.bucket_batch);
+        match engine.decode_rows(arena_ref, &rows) {
+            Err(e) => {
+                // a failed iteration poisons the whole group: every
+                // resident request gets an answer and its slot back
+                for &s in &occ {
+                    if let Some(a) = slots[s].take() {
+                        arena_ref.release(s);
+                        respond(&mut replies, error_response(a.req.id, Error::msg(e.to_string())));
                     }
                 }
             }
-        });
-        ServerHandle { tx, join: Some(join) }
+            Ok(logits) => {
+                for (i, &s) in occ.iter().enumerate() {
+                    let done = {
+                        let a = slots[s].as_mut().unwrap();
+                        let tok = a.sampler.sample(logits.at2(i, 0));
+                        a.watch.mark_token();
+                        a.outputs.push(tok);
+                        a.next = tok;
+                        Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max
+                    };
+                    if done {
+                        // leave the batch: free the slot (and its KV
+                        // lease) without disturbing the other rows
+                        let a = slots[s].take().unwrap();
+                        arena_ref.release(s);
+                        let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
+                        let resp = ok_response(a.req.id, a.outputs, &timing);
+                        server.metrics.record(timing);
+                        respond(&mut replies, resp);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- shutdown: every queued and in-flight request gets an answer
+    // (a silently dropped reply channel looks like a hung client)
+    for r in sched.drain() {
+        respond(&mut replies, error_response(r.id, Error::Serving("server shut down".into())));
+    }
+    for slot in slots.iter_mut() {
+        if let Some(a) = slot.take() {
+            let err = Error::Serving("server shut down".into());
+            respond(&mut replies, error_response(a.req.id, err));
+        }
+    }
+    for (id, tx) in replies.drain() {
+        let _ = tx.send(error_response(id, Error::Serving("server shut down".into())));
+    }
+}
+
+/// Prefill a newly admitted request solo, sample its first token, and
+/// (unless it already finished) migrate its cache into arena row `slot`.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    server: &Arc<Server>,
+    arena: &mut SlotArena,
+    slot: usize,
+    req: GenRequest,
+    mut watch: Stopwatch,
+    lease: KvLeaseOwned,
+    slots: &mut [Option<ActiveSlot>],
+    row_used: &mut [bool],
+    replies: &mut HashMap<u64, Sender<GenResponse>>,
+) {
+    let engine = &server.engine;
+    let cfg = engine.config();
+    let len = req.prompt.len();
+    if req.max_new_tokens == 0 {
+        let timing = watch.finish(len, 0);
+        respond(replies, ok_response(req.id, Vec::new(), &timing));
+        return;
+    }
+    let pre = match engine.prefill(&req.prompt, 1, len, None) {
+        Ok(p) => p,
+        Err(e) => {
+            respond(replies, error_response(req.id, e));
+            return;
+        }
+    };
+    let logits = match engine.head(&pre.hidden) {
+        Ok(l) => l,
+        Err(e) => {
+            respond(replies, error_response(req.id, e));
+            return;
+        }
+    };
+    let mut sampler = Sampler::new(req.params.clone());
+    let first = sampler.sample(logits.at2(0, len - 1));
+    watch.mark_token();
+    let outputs = vec![first];
+    let effective_max = req
+        .max_new_tokens
+        .min(cfg.max_ctx.saturating_sub(len))
+        .max(1);
+    if Some(first) == server.config.eos || outputs.len() >= effective_max {
+        // finished on the prefill token: never occupies a slot
+        let timing = watch.finish(len, outputs.len());
+        let resp = ok_response(req.id, outputs, &timing);
+        server.metrics.record(timing);
+        respond(replies, resp);
+        return;
+    }
+    if let Err(e) = arena.adopt(slot, &pre.state) {
+        respond(replies, error_response(req.id, e));
+        return;
+    }
+    server.metrics.note_admission(row_used[slot]);
+    row_used[slot] = true;
+    slots[slot] = Some(ActiveSlot {
+        req,
+        sampler,
+        outputs,
+        watch,
+        next: first,
+        effective_max,
+        _lease: lease,
+    });
+}
+
+/// Legacy worker: exact-length groups served to completion.
+fn run_exact_length(server: &Arc<Server>, rx: &Receiver<Submission>) {
+    let mut batcher = Batcher::new(server.config.max_batch);
+    let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
+    'outer: loop {
+        // block for at least one submission, drain the rest
+        let first = match rx.recv() {
+            Ok(s) => s,
+            Err(_) => break, // all senders dropped: shutdown
+        };
+        let mut pending = vec![first];
+        while let Ok(s) = rx.try_recv() {
+            pending.push(s);
+        }
+        let mut shutdown = false;
+        for s in pending {
+            match s {
+                Submission::Shutdown => shutdown = true,
+                Submission::Request(req, reply) => {
+                    replies.insert(req.id, reply);
+                    batcher.push(req);
+                }
+            }
+        }
+        if shutdown {
+            break 'outer;
+        }
+        while let Some(group) = batcher.next_group() {
+            let resp = server.run_group(&group).unwrap_or_else(|e| {
+                group
+                    .iter()
+                    .map(|r| error_response(r.id, Error::msg(e.to_string())))
+                    .collect()
+            });
+            for r in resp {
+                respond(&mut replies, r);
+            }
+        }
+    }
+    // shutdown: requests drained alongside the shutdown submission (and
+    // any leftover reply channels) still get an answer instead of a hang
+    while let Some(group) = batcher.next_group() {
+        for r in &group {
+            respond(
+                &mut replies,
+                error_response(r.id, Error::Serving("server shut down".into())),
+            );
+        }
+    }
+    for (id, tx) in replies.drain() {
+        let _ = tx.send(error_response(id, Error::Serving("server shut down".into())));
+    }
+}
+
+/// Returns false on an explicit shutdown submission.
+fn intake(
+    sub: Submission,
+    sched: &mut Scheduler,
+    replies: &mut HashMap<u64, Sender<GenResponse>>,
+    watches: &mut HashMap<u64, Stopwatch>,
+) -> bool {
+    match sub {
+        Submission::Shutdown => false,
+        Submission::Request(req, reply) => {
+            replies.insert(req.id, reply);
+            watches.insert(req.id, Stopwatch::new());
+            sched.push(req);
+            true
+        }
+    }
+}
+
+fn respond(replies: &mut HashMap<u64, Sender<GenResponse>>, resp: GenResponse) {
+    if let Some(tx) = replies.remove(&resp.id) {
+        let _ = tx.send(resp);
     }
 }
 
@@ -239,6 +552,17 @@ impl Drop for ServerHandle {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+fn ok_response(id: u64, tokens: Vec<u32>, timing: &RequestTiming) -> GenResponse {
+    GenResponse {
+        id,
+        text: ByteTokenizer::new().decode(&tokens),
+        tokens,
+        ttft_ms: timing.ttft_s * 1e3,
+        total_ms: timing.total_s * 1e3,
+        error: None,
     }
 }
 

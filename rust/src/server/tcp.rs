@@ -3,10 +3,14 @@
 //! Protocol (one JSON object per line):
 //!   -> {"id": 1, "prompt": "the small robot ", "max_tokens": 32}
 //!   <- {"id": 1, "text": "...", "tokens": [...], "ttft_ms": ..., ...}
+//!   -> {"stats": true}
+//!   <- {"requests": ..., "queue_depth": ..., "mean_batch_occupancy":
+//!      ..., "kv_utilization": ..., ...}   (see api::stats_to_json)
 //!
 //! One OS thread per connection (connection counts here are benchmark-
 //! scale); generation itself is funneled through the server worker, so
-//! batching happens across connections.
+//! batching happens across connections — the continuous scheduler mixes
+//! prompts of any length into one decode group.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -32,7 +36,7 @@ impl TcpFrontend {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let handle = Arc::new(server.spawn());
+        let handle = Arc::new(server.clone().spawn());
 
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -40,9 +44,10 @@ impl TcpFrontend {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let h = handle.clone();
+                        let srv = server.clone();
                         let s = stop2.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &h, &s);
+                            let _ = handle_conn(stream, &srv, &h, &s);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -76,7 +81,12 @@ impl Drop for TcpFrontend {
     }
 }
 
-fn handle_conn(stream: TcpStream, handle: &ServerHandle, stop: &AtomicBool) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    server: &Server,
+    handle: &ServerHandle,
+    stop: &AtomicBool,
+) -> Result<()> {
     // short read timeout so the thread notices server shutdown even while
     // the peer keeps the connection open
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
@@ -102,7 +112,21 @@ fn handle_conn(stream: TcpStream, handle: &ServerHandle, stop: &AtomicBool) -> R
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match Json::parse(&line).and_then(|j| GenRequest::from_json(&j)) {
+        let parsed = Json::parse(&line);
+        // stats endpoint: answered from the hub, never enters the queue
+        if let Ok(j) = &parsed {
+            if crate::server::api::is_stats_request(j) {
+                let stats = crate::server::api::stats_to_json(
+                    &server.metrics.summary(),
+                    &server.metrics.gauges(),
+                    server.pool.in_use(),
+                    server.pool.capacity(),
+                );
+                writeln!(writer, "{}", stats.to_string())?;
+                continue;
+            }
+        }
+        let resp = match parsed.and_then(|j| GenRequest::from_json(&j)) {
             Ok(req) => handle
                 .submit_blocking(req)
                 .unwrap_or_else(|e| err_resp(0, &e.to_string())),

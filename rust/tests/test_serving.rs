@@ -1,18 +1,23 @@
-//! Serving-stack integration: batched groups, the async worker, the TCP
-//! front-end, speculative decoding equivalence, and quantization.
+//! Serving-stack integration: continuous batching (mixed prompt lengths,
+//! slot reuse, scheduler fairness, KV accounting), legacy batched groups,
+//! the async worker, the TCP front-end, speculative decoding equivalence,
+//! and quantization.
 
 use std::io::{BufRead, BufReader, Write};
 use std::sync::Arc;
 
 use nbl::executor::Engine;
+use nbl::kvcache::KvPool;
 use nbl::model::Artifacts;
 use nbl::quant::{quantize_weights, QuantConfig};
 use nbl::runtime::Runtime;
 use nbl::sampling::SamplingParams;
 use nbl::server::api::GenRequest;
-use nbl::server::service::{Server, ServerConfig};
+use nbl::server::service::{BatchMode, Server, ServerConfig};
 use nbl::server::tcp::TcpFrontend;
+use nbl::server::Scheduler;
 use nbl::spec::{greedy_generate, SpeculativeDecoder};
+use nbl::util::proptest::check;
 
 fn engine(model: &str) -> Engine {
     let artifacts = Artifacts::discover().expect("run `make artifacts`");
@@ -100,6 +105,15 @@ fn tcp_round_trip() {
     let mut line2 = String::new();
     reader.read_line(&mut line2).unwrap();
     assert!(line2.contains("error"));
+    // stats endpoint reports the scheduler gauges
+    writeln!(conn, r#"{{"stats": true}}"#).unwrap();
+    let mut line3 = String::new();
+    reader.read_line(&mut line3).unwrap();
+    let stats = nbl::util::json::Json::parse(&line3).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 1);
+    assert!(stats.get("kv_capacity_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(stats.opt("queue_depth").is_some());
+    assert!(stats.opt("mean_batch_occupancy").is_some());
     front.shutdown();
 }
 
@@ -169,10 +183,241 @@ fn quantized_model_still_generates() {
 
 #[test]
 fn kv_pool_admission_control() {
-    let cfg = ServerConfig { max_batch: 8, kv_capacity_bytes: 1024, eos: None };
+    let cfg = ServerConfig { kv_capacity_bytes: 1024, ..ServerConfig::default() };
     let server = Server::new(Arc::new(engine("main")), cfg);
     // a single group needs ~MBs of KV; a 1 KiB pool must refuse
     let r = server.generate_one(&req(1, "the small robot ", 4));
     assert!(r.error.is_some());
     assert!(r.error.unwrap().contains("KV pool exhausted"));
+}
+
+// ---------------------------------------------------------------------------
+// continuous batching (iteration-level scheduling over per-request KV slots)
+
+#[test]
+fn continuous_batching_mixes_prompt_lengths() {
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    // four DIFFERENT prompt lengths submitted together: the old
+    // exact-length protocol served these as four batch-1 groups; the
+    // continuous scheduler must decode them in shared iterations
+    let prompts = [
+        "hi ",
+        "the small robot ",
+        "a much longer prompt about walled gardens ",
+        "the quick brown fox jumps over the lazy dog and keeps going ",
+    ];
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| handle.submit(req(i as u64, p, 24)))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 24);
+    }
+    let g = metrics.gauges();
+    assert_eq!(g.admissions, 4);
+    assert!(
+        g.mean_rows_per_iteration() > 1.0,
+        "requests with different prompt lengths must share decode \
+         iterations, got {:.2} rows/iter over {} iterations",
+        g.mean_rows_per_iteration(),
+        g.iterations
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn continuous_batching_matches_solo_outputs() {
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let reqs = [
+        req(1, "the bright engine ", 12),
+        req(2, "a hidden garden of ", 12),
+        req(3, "ring ", 12),
+    ];
+    // greedy solo references (legacy batch-1 protocol)
+    let solo: Vec<_> = reqs.iter().map(|r| server.generate_one(r)).collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+    // same requests through the continuous worker, mixed lengths
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = reqs.iter().map(|r| handle.submit(r.clone())).collect();
+    for (rx, s) in rxs.into_iter().zip(&solo) {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, s.tokens, "continuous decode diverged from solo");
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn finished_slot_is_reused_without_restarting_the_batch() {
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    // 12 mixed-length requests against an 8-row arena: at least 4
+    // admissions must land in slots freed by finished requests, while
+    // other rows keep decoding (the batch never restarts). Varied
+    // max_tokens stagger the departures.
+    let rxs: Vec<_> = (0..12u64)
+        .map(|i| {
+            let p = "the small robot walked around "[..(10 + (i as usize % 4) * 5)].to_string();
+            handle.submit(req(i, &p, 6 + (i as usize % 3) * 8))
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(!r.tokens.is_empty());
+    }
+    let g = metrics.gauges();
+    assert_eq!(g.admissions, 12);
+    assert!(
+        g.slot_reuses >= 1,
+        "a freed KV slot must be reused by a later request: {g:?}"
+    );
+    assert!(
+        g.mean_rows_per_iteration() > 1.0,
+        "slot reuse must happen mid-flight, not batch-by-batch: {g:?}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn exact_length_mode_still_serves() {
+    let cfg = ServerConfig { mode: BatchMode::ExactLength, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(Arc::new(engine("main")), cfg));
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| handle.submit(req(i, "the small robot ", 6)))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens.len(), 6);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_answers_every_pending_request() {
+    // regression: a Submission::Shutdown drained mid-loop used to drop
+    // pending reply channels silently (clients hung on a dead receiver);
+    // every submitted request must now receive SOME response
+    for mode in [BatchMode::Continuous, BatchMode::ExactLength] {
+        let cfg = ServerConfig { mode, ..ServerConfig::default() };
+        let server = Arc::new(Server::new(Arc::new(engine("main")), cfg));
+        let handle = server.clone().spawn();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| handle.submit(req(i, "the small robot ", 200)))
+            .collect();
+        handle.shutdown();
+        for rx in rxs {
+            let r = rx
+                .recv()
+                .expect("pending request must be answered on shutdown, not dropped");
+            // either it finished in time or it was refused — never a hang
+            assert!(r.error.is_some() || !r.tokens.is_empty());
+        }
+    }
+}
+
+#[test]
+fn scheduler_never_starves_the_oldest_request() {
+    // property: over random arrival/finish churn, requests are admitted
+    // in exactly arrival order (head-of-queue discipline), no matter how
+    // slots free up or how prompt lengths vary
+    check(
+        0xC0FFEE,
+        50,
+        |g| {
+            let n = g.size(40);
+            (0..n).map(|_| g.usize_in(0, 2)).collect::<Vec<usize>>()
+        },
+        |trace| {
+            const SLOTS: usize = 4;
+            const SLOT_BYTES: usize = 100;
+            let pool = KvPool::new(SLOTS * SLOT_BYTES);
+            let mut sched = Scheduler::new();
+            let mut next_id = 0u64;
+            let mut leases = Vec::new();
+            let mut admitted: Vec<u64> = Vec::new();
+            for &ev in trace {
+                if ev <= 1 {
+                    // arrival (prompt length varies with id)
+                    sched.push(GenRequest {
+                        id: next_id,
+                        prompt: vec![1; 8 + (next_id as usize % 5)],
+                        max_new_tokens: 4,
+                        params: SamplingParams::greedy(),
+                    });
+                    next_id += 1;
+                } else {
+                    // a resident request finishes: slot + lease free
+                    leases.pop();
+                }
+                // admission pass, oldest first
+                while leases.len() < SLOTS {
+                    match sched.next_admission(SLOTS - leases.len(), &pool, SLOT_BYTES) {
+                        Some(r) => {
+                            admitted.push(r.id);
+                            leases.push(pool.reserve(SLOT_BYTES).unwrap());
+                        }
+                        None => break,
+                    }
+                }
+            }
+            for (i, &id) in admitted.iter().enumerate() {
+                if id != i as u64 {
+                    return Err(format!("admission out of arrival order: {admitted:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kv_pool_accounting_returns_to_zero_after_churn() {
+    // invariant: reserved bytes always equal the sum of live leases, and
+    // return to exactly zero after arbitrary join/leave churn
+    check(
+        0xBADCAB,
+        30,
+        |g| {
+            let n = g.size(60);
+            (0..n)
+                .map(|_| (g.usize_in(0, 1), g.usize_in(1, 64)))
+                .collect::<Vec<(usize, usize)>>()
+        },
+        |ops| {
+            let pool = Arc::new(KvPool::new(1 << 14));
+            let mut held = Vec::new();
+            for &(kind, x) in ops {
+                if kind == 0 {
+                    if let Ok(l) = KvPool::reserve_owned(&pool, x * 64) {
+                        held.push(l);
+                    }
+                } else if !held.is_empty() {
+                    held.swap_remove(x % held.len());
+                }
+                let live: usize = held.iter().map(|l| l.bytes()).sum();
+                if pool.in_use() != live {
+                    return Err(format!(
+                        "accounting drift: pool says {}, leases hold {live}",
+                        pool.in_use()
+                    ));
+                }
+            }
+            held.clear();
+            if pool.in_use() != 0 {
+                return Err(format!("leaked {} bytes after churn", pool.in_use()));
+            }
+            Ok(())
+        },
+    );
 }
