@@ -7,10 +7,13 @@
 //! The workload interleaves four prompt lengths, the worst case for the
 //! old exact-length grouping (batches degenerate towards size 1) and the
 //! case continuous batching exists for. `--mode grouped` runs the legacy
-//! baseline for comparison.
+//! baseline for comparison; `--mode spec` runs continuous batching with
+//! self-speculative draft-and-verify iterations (the draft is the SAME
+//! weights under an NBL-heavier plan — paper §5 composition, served).
 //!
 //!     cargo run --release --example serve_bench \
-//!         [-- --m 2 --requests 24 --max-tokens 48 --mode continuous]
+//!         [-- --m 2 --requests 24 --max-tokens 48 \
+//!              --mode spec --spec-width 4 --draft-m 4]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -18,7 +21,7 @@ use std::sync::Arc;
 
 use nbl::bench::experiments::{ExpConfig, Workbench};
 use nbl::nbl::criteria::Criterion;
-use nbl::server::service::{BatchMode, Server, ServerConfig};
+use nbl::server::service::{BatchMode, Server, ServerConfig, SpecConfig};
 use nbl::server::tcp::TcpFrontend;
 use nbl::util::cli::Args;
 use nbl::util::timer::Timer;
@@ -29,16 +32,19 @@ fn main() -> anyhow::Result<()> {
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
-    let mode = match args.get_or("mode", "continuous") {
-        "grouped" => BatchMode::ExactLength,
-        _ => BatchMode::Continuous,
+    let spec_width = args.get_usize("spec-width", 4)?;
+    let (mode, spec_on) = match args.get_or("mode", "continuous") {
+        "grouped" => (BatchMode::ExactLength, false),
+        "spec" => (BatchMode::Continuous, true),
+        _ => (BatchMode::Continuous, false),
     };
     let cfg = ExpConfig::from_env();
 
     // --- build the NBL-compressed engine
     let wb = Workbench::new("main", cfg).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n_layers = wb.engine.config().n_layers;
     let plan = if m == 0 {
-        nbl::nbl::plan::ModelPlan::baseline(wb.engine.config().n_layers)
+        nbl::nbl::plan::ModelPlan::baseline(n_layers)
     } else {
         wb.report
             .plan_attn_nbl(m, Criterion::CcaBound)
@@ -47,8 +53,26 @@ fn main() -> anyhow::Result<()> {
     println!("serving plan: {} [{}]", plan.kind.label(), plan.describe());
     let engine = Arc::new(wb.engine.with_plan(plan).map_err(|e| anyhow::anyhow!("{e}"))?);
 
+    // --- self-speculation: the draft is an NBL-heavier plan over the
+    // same Arc-shared weights (no second checkpoint)
+    let spec = if spec_on {
+        let draft_m = args.get_usize("draft-m", (m + 2).min(n_layers - 1))?;
+        let draft_plan = wb
+            .report
+            .plan_attn_nbl(draft_m, Criterion::CcaBound)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "draft plan:   {} [{}], verify width {spec_width}",
+            draft_plan.kind.label(),
+            draft_plan.describe()
+        );
+        Some(SpecConfig { draft_plan, width: spec_width })
+    } else {
+        None
+    };
+
     // --- full stack: server worker + TCP front-end
-    let server_cfg = ServerConfig { mode, ..ServerConfig::default() };
+    let server_cfg = ServerConfig { mode, spec, ..ServerConfig::default() };
     let server = Arc::new(Server::new(engine, server_cfg));
     let metrics = server.metrics.clone();
     let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -123,6 +147,27 @@ fn main() -> anyhow::Result<()> {
         println!("mean rows/iteration      {:.2}", g.mean_rows_per_iteration());
         println!("batch occupancy          {:.1}%", g.mean_occupancy() * 100.0);
         println!("slot reuses              {}", g.slot_reuses);
+    }
+    if spec_on {
+        println!("spec rounds              {}", g.spec_rounds);
+        println!("acceptance rate          {:.1}%", g.acceptance_rate() * 100.0);
+        println!(
+            "tokens/target-iteration  {:.2} per row",
+            g.tokens_per_row_iteration()
+        );
+        if args.get("draft-m").is_none() {
+            // the default self-speculative draft must pay for itself on
+            // the synthetic workload; a user-supplied draft plan is
+            // exploratory, so its numbers are reported, not asserted
+            assert!(
+                g.tokens_per_row_iteration() > 1.0,
+                "speculation must commit > 1 token per row per target pass, \
+                 got {:.2}",
+                g.tokens_per_row_iteration()
+            );
+        } else if g.tokens_per_row_iteration() <= 1.0 {
+            println!("WARNING: this draft plan never beat plain decoding");
+        }
     }
     assert_eq!(s.requests, n_requests, "all requests must be served");
     println!("\nserve_bench OK");

@@ -118,12 +118,16 @@ def build_ops():
                 (f32(B, S, D), *attn_w, f32(B, Tmax, hkv, dh),
                  f32(B, Tmax, hkv, dh), i32scalar()),
             ))
-        # continuous-batching decode: per-row positions, one token per row
-        ops.append((
-            f"attn_cached_rows_b{B}_s1", cached_rows_fn,
-            (f32(B, 1, D), *attn_w, f32(B, Tmax, hkv, dh),
-             f32(B, Tmax, hkv, dh), i32vec(B)),
-        ))
+        # continuous-batching decode: per-row positions. s=1 is the plain
+        # iteration; the wider widths are the speculative verify ops (one
+        # call checks W draft tokens per occupied row — DESIGN.md
+        # §Speculative iterations).
+        for S in GRID.cached_lens:
+            ops.append((
+                f"attn_cached_rows_b{B}_s{S}", cached_rows_fn,
+                (f32(B, S, D), *attn_w, f32(B, Tmax, hkv, dh),
+                 f32(B, Tmax, hkv, dh), i32vec(B)),
+            ))
         for T in GRID.pointwise_lens:
             ops.append((f"linear_block_b{B}_t{T}", linear_fn,
                         (f32(B, T, D), f32(D, D), f32(D))))

@@ -15,10 +15,21 @@ def test_grid_covers_design():
             assert f"cache_init_b{b}_t{t}" in names
         for s in GRID.cached_lens:
             assert f"attn_cached_b{b}_s{s}" in names
+            # continuous-batching decode + speculative verify widths
+            assert f"attn_cached_rows_b{b}_s{s}" in names
         for t in GRID.pointwise_lens:
             for op in ("linear_block", "mlp", "head"):
                 assert f"{op}_b{b}_t{t}" in names
     assert f"gram_n{GRID.gram_n}_d{GRID.gram_d}" in names
+
+
+def test_cached_widths_have_pointwise_ops():
+    """Every cached/verify width needs the pointwise ops at the same
+    width: Engine::decode_rows_batched runs mlp/linear_block/head at
+    t{sw} alongside attn_cached_rows s{sw}. The two grid axes are
+    independently editable, so the subset invariant is asserted here
+    before artifact drift can strand the Rust fast path."""
+    assert set(GRID.cached_lens) <= set(GRID.pointwise_lens)
 
 
 def test_no_duplicate_names():

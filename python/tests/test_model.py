@@ -75,11 +75,13 @@ def test_cached_decode_matches_prefill(t0, extra, seed):
 
 
 @settings(max_examples=8, deadline=None)
-@given(seed=st.integers(0, 1000))
-def test_attn_cached_rows_matches_per_row_cached(seed):
+@given(seed=st.integers(0, 1000), S=st.sampled_from([1, 4]))
+def test_attn_cached_rows_matches_per_row_cached(seed, S):
     """attn_cached_rows == attn_cached applied row by row with that row's
     scalar pos — the invariant the continuous-batching decode group relies
-    on (rows at different positions share one executable call)."""
+    on (rows at different positions share one executable call). S=1 is the
+    plain decode iteration, S>1 the speculative verify width: one call
+    must check S tokens per row at per-row positions."""
     rng = np.random.default_rng(seed)
     B, D = 3, TINY.d_model
     kw = dict(n_heads=TINY.n_heads, n_kv_heads=TINY.n_kv_heads,
@@ -91,12 +93,12 @@ def test_attn_cached_rows_matches_per_row_cached(seed):
         jnp.asarray(rng.standard_normal((D, TINY.n_kv_heads * TINY.head_dim)).astype(np.float32) * 0.08),
         jnp.asarray(rng.standard_normal((TINY.n_heads * TINY.head_dim, D)).astype(np.float32) * 0.08),
     )
-    x = jnp.asarray(rng.standard_normal((B, 1, D)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32))
     kc = jnp.asarray(rng.standard_normal(
         (B, TINY.max_ctx, TINY.n_kv_heads, TINY.head_dim)).astype(np.float32))
     vc = jnp.asarray(rng.standard_normal(
         (B, TINY.max_ctx, TINY.n_kv_heads, TINY.head_dim)).astype(np.float32))
-    pos = jnp.asarray(rng.integers(0, TINY.max_ctx - 1, B), dtype=jnp.int32)
+    pos = jnp.asarray(rng.integers(0, TINY.max_ctx - S, B), dtype=jnp.int32)
 
     y, kc2, vc2 = ref.attn_cached_rows(x, *w, kc, vc, pos, **kw)
     for b in range(B):

@@ -15,7 +15,7 @@ use nbl::model::config::ModelConfig;
 use nbl::report::Table;
 use nbl::sampling::SamplingParams;
 use nbl::server::api::GenRequest;
-use nbl::server::service::{BatchMode, Server, ServerConfig};
+use nbl::server::service::{BatchMode, Server, ServerConfig, SpecConfig};
 use nbl::util::timer::Timer;
 
 fn paper_config() -> ModelConfig {
@@ -89,8 +89,8 @@ fn main() {
         max_new_tokens: max_tokens,
         params: SamplingParams::greedy(),
     };
-    let run_mode = |mode: BatchMode| -> (f64, usize, f64) {
-        let cfg = ServerConfig { mode, ..ServerConfig::default() };
+    let run_mode = |mode: BatchMode, spec: Option<SpecConfig>| -> (f64, usize, f64, f64, f64) {
+        let cfg = ServerConfig { mode, spec, ..ServerConfig::default() };
         let server = Arc::new(Server::new(engine.clone(), cfg));
         let metrics = server.metrics.clone();
         let handle = server.clone().spawn();
@@ -102,20 +102,38 @@ fn main() {
         }
         let wall = t.elapsed_s();
         let toks = metrics.summary().generated_tokens;
-        let occ = metrics.gauges().mean_rows_per_iteration();
+        let g = metrics.gauges();
         handle.shutdown();
-        (wall, toks, occ)
+        (wall, toks, g.mean_rows_per_iteration(), g.acceptance_rate(), g.tokens_per_row_iteration())
     };
-    let (wall_g, toks_g, _) = run_mode(BatchMode::ExactLength);
-    let (wall_c, toks_c, occ_c) = run_mode(BatchMode::Continuous);
+    let (wall_g, toks_g, _, _, _) = run_mode(BatchMode::ExactLength, None);
+    let (wall_c, toks_c, occ_c, _, _) = run_mode(BatchMode::Continuous, None);
+    // continuous + self-speculation: the draft drops attention in two
+    // layers (cheaper forward, same weights) and the target verifies
+    // width-4 blocks per row
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(2);
+    draft_plan.drop_attn(4);
+    let (wall_s, toks_s, _, acc_s, tpi_s) = run_mode(
+        BatchMode::Continuous,
+        Some(SpecConfig { draft_plan, width: 4 }),
+    );
     let tps_g = toks_g as f64 / wall_g.max(1e-9);
     let tps_c = toks_c as f64 / wall_c.max(1e-9);
+    let tps_s = toks_s as f64 / wall_s.max(1e-9);
     println!("\n[serving] {n_requests} mixed-length requests x {max_tokens} tokens");
     println!("  exact-length grouping   {tps_g:8.1} tok/s  ({wall_g:.2} s)");
     println!(
         "  continuous batching     {tps_c:8.1} tok/s  ({wall_c:.2} s, {occ_c:.2} rows/iter)"
     );
-    println!("  speedup                 {:8.2}x", tps_c / tps_g.max(1e-9));
+    println!(
+        "  continuous + spec       {tps_s:8.1} tok/s  ({wall_s:.2} s, acceptance {:.0}%, \
+         {tpi_s:.2} tok/row-iter)",
+        acc_s * 100.0
+    );
+    println!("  speedup (cont/grouped)  {:8.2}x", tps_c / tps_g.max(1e-9));
+    println!("  speedup (spec/cont)     {:8.2}x", tps_s / tps_c.max(1e-9));
+    assert_eq!(toks_s, toks_c, "speculation must not change token counts");
     let bucket = engine.decode_group_bucket(ServerConfig::default().max_batch);
     if engine.supports_row_decode(bucket) {
         assert!(

@@ -44,6 +44,16 @@ pub struct RowDecode {
     pub token: u32,
 }
 
+/// One row of a speculative verify iteration: run `tokens` (the last
+/// committed token followed by the draft proposals, width W) through
+/// `slot`'s cache segment in a single pass. All rows of one call share
+/// the width; positions stay per-row.
+#[derive(Debug, Clone)]
+pub struct RowSpecDecode {
+    pub slot: usize,
+    pub tokens: Vec<u32>,
+}
+
 pub struct Engine {
     pub runtime: Arc<Runtime>,
     pub weights: Arc<Weights>,
@@ -284,7 +294,26 @@ impl Engine {
             )));
         }
         let bb = state.bucket_batch;
+        if batch > bb {
+            // an oversized group must fail loudly here, not mis-slice (or
+            // panic) downstream — see slice_logits
+            return Err(Error::Shape(format!(
+                "decode: batch {batch} exceeds bucket {bb}"
+            )));
+        }
         let sb = self.cached_bucket(s_real)?;
+        if state.pos + sb > state.max_ctx {
+            // the attn_cached kernel writes the PADDED bucket width via
+            // dynamic_update_slice, which clamps its start index: letting
+            // a padded call straddle the boundary would silently shift
+            // the writes onto committed cache entries. Reject instead
+            // (callers decode at bucket widths, where this equals the
+            // s_real check above).
+            return Err(Error::Serving(format!(
+                "context overflow: padded step {} + {sb} > {} (use a bucket width)",
+                state.pos, state.max_ctx
+            )));
+        }
 
         let mut padded = vec![0u32; bb * sb];
         for b in 0..batch {
@@ -384,9 +413,41 @@ impl Engine {
     /// bucket `bb`; otherwise `decode_rows` serves through the per-row
     /// scalar-pos fallback.
     pub fn supports_row_decode(&self, bb: usize) -> bool {
-        self.runtime
-            .artifacts()
-            .has_op(&format!("attn_cached_rows_b{bb}_s1"))
+        self.supports_row_decode_wide(bb, 1)
+    }
+
+    /// Snap a requested speculative verify width onto the AOT
+    /// `cached_lens` grid: the smallest bucket >= `want`, or the largest
+    /// bucket when `want` exceeds the grid. The result equals its own
+    /// bucket, so the batched and fallback verify paths agree on the
+    /// context-boundary rule and a misconfigured width can never turn
+    /// every iteration into an error.
+    pub fn snap_verify_width(&self, want: usize) -> usize {
+        Grid::bucket(&self.grid.cached_lens, want)
+            .or_else(|| self.grid.cached_lens.iter().copied().max())
+            .unwrap_or(1)
+    }
+
+    /// True if the AOT grid carries EVERY op the batched per-row-position
+    /// decode needs at verify width `width` for bucket `bb` (the
+    /// speculative iteration's fast path): the rows attention op plus the
+    /// pointwise mlp/linear/head ops at the same padded width — the two
+    /// grid axes (`cached_lens`, `pointwise_lens`) are independently
+    /// editable, so a width present in one but not the other must fall
+    /// back instead of erroring every iteration. Artifacts that predate
+    /// the widened family fall back to per-row scalar decodes with
+    /// identical semantics.
+    pub fn supports_row_decode_wide(&self, bb: usize, width: usize) -> bool {
+        match Grid::bucket(&self.grid.cached_lens, width) {
+            Some(sw) => {
+                let art = self.runtime.artifacts();
+                art.has_op(&format!("attn_cached_rows_b{bb}_s{sw}"))
+                    && art.has_op(&format!("mlp_b{bb}_t{sw}"))
+                    && art.has_op(&format!("linear_block_b{bb}_t{sw}"))
+                    && art.has_op(&format!("head_b{bb}_t{sw}"))
+            }
+            None => false,
+        }
     }
 
     /// Decode ONE token for a dynamic set of occupied arena slots — the
@@ -396,8 +457,30 @@ impl Engine {
     /// [rows.len(), 1, V] in `rows` order and advances each row's
     /// position by one.
     pub fn decode_rows(&self, arena: &mut SlotArena, rows: &[RowDecode]) -> Result<Tensor> {
+        let wide: Vec<RowSpecDecode> = rows
+            .iter()
+            .map(|r| RowSpecDecode { slot: r.slot, tokens: vec![r.token] })
+            .collect();
+        self.decode_rows_spec(arena, &wide)
+    }
+
+    /// Speculative verify iteration: run W tokens per occupied row (the
+    /// last committed token + the draft proposals) through each row's
+    /// cache segment in one call. Returns logits [rows.len(), W, V] in
+    /// `rows` order — row i, column j is the target's prediction after
+    /// `rows[i].tokens[..=j]` — and advances every row's position by W;
+    /// the caller rolls rejected suffixes back with `SlotArena::set_pos`
+    /// (stale cache entries beyond the accepted position are masked by
+    /// pos and overwritten by later writes, exactly as in spec/mod.rs).
+    pub fn decode_rows_spec(&self, arena: &mut SlotArena, rows: &[RowSpecDecode]) -> Result<Tensor> {
         if rows.is_empty() {
             return Err(Error::Serving("decode_rows: empty row set".into()));
+        }
+        let width = rows[0].tokens.len();
+        if width == 0 || rows.iter().any(|r| r.tokens.len() != width) {
+            return Err(Error::Serving(
+                "decode_rows: rows must share a nonzero verify width".into(),
+            ));
         }
         let bb = arena.bucket_batch;
         if rows.len() != arena.occupancy() {
@@ -410,6 +493,11 @@ impl Engine {
                 arena.occupancy()
             )));
         }
+        // bound by the PADDED bucket width, not the raw width: the
+        // fallback's attn_cached bucket writes sw entries, so a raw-width
+        // check would make the batched and fallback paths disagree at the
+        // context boundary for non-bucket widths
+        let sw = self.cached_bucket(width)?;
         let mut seen = vec![false; bb];
         for r in rows {
             if r.slot >= bb || std::mem::replace(&mut seen[r.slot], true) {
@@ -421,43 +509,49 @@ impl Engine {
             let pos = arena
                 .pos(r.slot)
                 .ok_or_else(|| Error::Serving(format!("decode_rows: slot {} is free", r.slot)))?;
-            if pos + 1 > arena.max_ctx {
+            if pos + sw > arena.max_ctx {
                 return Err(Error::Serving(format!(
-                    "context overflow: slot {} at {} of {}",
+                    "context overflow: slot {} at {} + {sw} (bucket of {width}) > {}",
                     r.slot, pos, arena.max_ctx
                 )));
             }
         }
-        let logits = if self.supports_row_decode(bb) {
-            self.decode_rows_batched(arena, rows)?
+        let logits = if self.supports_row_decode_wide(bb, width) {
+            self.decode_rows_batched(arena, rows, width)?
         } else {
-            self.decode_rows_fallback(arena, rows)?
+            self.decode_rows_fallback(arena, rows, width)?
         };
         for r in rows {
             let p = arena.pos(r.slot).unwrap();
-            arena.set_pos(r.slot, p + 1);
+            arena.set_pos(r.slot, p + width);
         }
         Ok(logits)
     }
 
     /// Fast path: one `attn_cached_rows` call per layer with the per-row
-    /// position vector. Free rows feed a pad token at pos 0: their
-    /// (garbage) segment row 0 is overwritten and their output ignored.
-    fn decode_rows_batched(&self, arena: &mut SlotArena, rows: &[RowDecode]) -> Result<Tensor> {
+    /// position vector. Free rows feed pad tokens at pos 0: their
+    /// (garbage) segment rows are overwritten and their output ignored.
+    fn decode_rows_batched(
+        &self,
+        arena: &mut SlotArena,
+        rows: &[RowSpecDecode],
+        width: usize,
+    ) -> Result<Tensor> {
         let bb = arena.bucket_batch;
-        let mut tokens = vec![0u32; bb];
+        let sw = self.cached_bucket(width)?;
+        let mut tokens = vec![0u32; bb * sw];
         let mut pos = vec![0i32; bb];
         for r in rows {
-            tokens[r.slot] = r.token;
+            tokens[r.slot * sw..r.slot * sw + width].copy_from_slice(&r.tokens);
             pos[r.slot] = arena.pos(r.slot).unwrap() as i32;
         }
-        let x0 = self.weights.embed(&tokens, bb, 1)?;
+        let x0 = self.weights.embed(&tokens, bb, sw)?;
         let mut x = lit_from_tensor(&x0)?;
         let pos_lit = lit_i32_vec(&pos);
 
-        let rows_op = format!("attn_cached_rows_b{bb}_s1");
-        let mlp_op = format!("mlp_b{bb}_t1");
-        let lin_op = format!("linear_block_b{bb}_t1");
+        let rows_op = format!("attn_cached_rows_b{bb}_s{sw}");
+        let mlp_op = format!("mlp_b{bb}_t{sw}");
+        let lin_op = format!("linear_block_b{bb}_t{sw}");
 
         for (li, (lits, lp)) in self.layers.iter().zip(&self.plan.layers).enumerate() {
             match &lp.attn {
@@ -514,24 +608,31 @@ impl Engine {
                 x = into_single(out, "mlp")?;
             }
         }
-        let logits = self.head_lit(&x, bb, 1)?;
+        let logits = self.head_lit(&x, bb, sw)?;
         let full = tensor_from_lit(&logits)?;
         let vocab = self.config().vocab;
-        let mut out = Vec::with_capacity(rows.len() * vocab);
+        let mut out = Vec::with_capacity(rows.len() * width * vocab);
         for r in rows {
-            out.extend_from_slice(full.at2(r.slot, 0));
+            for j in 0..width {
+                out.extend_from_slice(full.at2(r.slot, j));
+            }
         }
-        Tensor::new(vec![rows.len(), 1, vocab], out)
+        Tensor::new(vec![rows.len(), width, vocab], out)
     }
 
     /// Fallback when the rows op is missing from the AOT grid: slice each
-    /// row out of the arena, run the batch-1 scalar-pos decode, and write
-    /// the updated row back. Slower (host row copies + B executable
-    /// calls) but bit-identical semantics, so stale artifact sets still
-    /// serve correctly.
-    fn decode_rows_fallback(&self, arena: &mut SlotArena, rows: &[RowDecode]) -> Result<Tensor> {
+    /// row out of the arena, run the batch-1 scalar-pos decode (width W),
+    /// and write the updated row back. Slower (host row copies + B
+    /// executable calls) but bit-identical semantics, so stale artifact
+    /// sets still serve correctly.
+    fn decode_rows_fallback(
+        &self,
+        arena: &mut SlotArena,
+        rows: &[RowSpecDecode],
+        width: usize,
+    ) -> Result<Tensor> {
         let vocab = self.config().vocab;
-        let mut out = Vec::with_capacity(rows.len() * vocab);
+        let mut out = Vec::with_capacity(rows.len() * width * vocab);
         for r in rows {
             let mut state = KvState::empty(&self.plan, self.config(), 1, 1);
             state.pos = arena.pos(r.slot).unwrap();
@@ -541,8 +642,10 @@ impl Engine {
                         Some((take_cache_row(k, r.slot)?, take_cache_row(v, r.slot)?));
                 }
             }
-            let logits = self.decode(&mut state, &[r.token], 1)?;
-            out.extend_from_slice(logits.at2(0, 0));
+            let logits = self.decode(&mut state, &r.tokens, width)?;
+            for j in 0..width {
+                out.extend_from_slice(logits.at2(0, j));
+            }
             for (li, c) in arena.caches.iter_mut().enumerate() {
                 if let Some((k, v)) = c {
                     let (nk, nv) = state.caches[li].take().ok_or_else(|| {
@@ -553,7 +656,7 @@ impl Engine {
                 }
             }
         }
-        Tensor::new(vec![rows.len(), 1, vocab], out)
+        Tensor::new(vec![rows.len(), width, vocab], out)
     }
 
     // ---------------------------------------------------------------- head
@@ -628,7 +731,13 @@ fn rows_delta(x_in: &Tensor, y_out: &Tensor, batch: usize, len: usize, d: usize)
 fn slice_logits(lit: &xla::Literal, batch: usize, s_real: usize, vocab: usize) -> Result<Tensor> {
     let full = tensor_from_lit(lit)?;
     let (bb, sb) = (full.shape()[0], full.shape()[1]);
-    debug_assert!(batch <= bb && s_real <= sb);
+    if batch > bb || s_real > sb {
+        // a debug_assert here let release builds mis-slice (or panic deep
+        // in Tensor::at2) on an oversized request; fail with Shape instead
+        return Err(Error::Shape(format!(
+            "slice_logits: {batch}x{s_real} exceeds bucket {bb}x{sb}"
+        )));
+    }
     let mut out = Vec::with_capacity(batch * s_real * vocab);
     for b in 0..batch {
         for s in 0..s_real {

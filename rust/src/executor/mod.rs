@@ -6,7 +6,8 @@
 //!
 //!   Attention  -> attn_prefill + cache_init   (prefill)
 //!                 attn_cached                  (decode / verify)
-//!                 attn_cached_rows             (continuous-batching decode)
+//!                 attn_cached_rows             (continuous-batching decode
+//!                                               + speculative verify)
 //!   Linear     -> linear_block (the NBL path; no KV, no pos)
 //!   Identity   -> nothing (DROP)
 //!
@@ -17,4 +18,4 @@ pub mod capture;
 pub mod engine;
 
 pub use capture::CaptureSource;
-pub use engine::{Engine, PrefillResult, RowDecode};
+pub use engine::{Engine, PrefillResult, RowDecode, RowSpecDecode};

@@ -120,6 +120,12 @@ pub fn stats_to_json(
         ("mean_rows_per_iteration", Json::Num(g.mean_rows_per_iteration())),
         ("admissions", Json::Num(g.admissions as f64)),
         ("slot_reuses", Json::Num(g.slot_reuses as f64)),
+        ("committed_tokens", Json::Num(g.committed_tokens as f64)),
+        ("spec_rounds", Json::Num(g.spec_rounds as f64)),
+        ("spec_proposed", Json::Num(g.spec_proposed as f64)),
+        ("spec_accepted", Json::Num(g.spec_accepted as f64)),
+        ("spec_acceptance_rate", Json::Num(g.acceptance_rate())),
+        ("tokens_per_row_iteration", Json::Num(g.tokens_per_row_iteration())),
         ("kv_in_use_bytes", Json::Num(kv_in_use as f64)),
         ("kv_capacity_bytes", Json::Num(kv_capacity as f64)),
         ("kv_utilization", Json::Num(kv_util)),
@@ -188,6 +194,10 @@ mod tests {
             queue_depth: 1,
             kv_in_use: 0,
             kv_capacity: 0,
+            committed_tokens: 60,
+            spec_rounds: 10,
+            spec_proposed: 40,
+            spec_accepted: 30,
         };
         let j = stats_to_json(&s, &g, 512, 1024);
         let back = Json::parse(&j.to_string()).unwrap();
@@ -196,6 +206,9 @@ mod tests {
         assert_eq!(back.get("slot_reuses").unwrap().as_usize().unwrap(), 2);
         assert!((back.get("mean_batch_occupancy").unwrap().as_f64().unwrap() - 0.375).abs() < 1e-9);
         assert!((back.get("kv_utilization").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(back.get("spec_rounds").unwrap().as_usize().unwrap(), 10);
+        assert!((back.get("spec_acceptance_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+        assert!((back.get("tokens_per_row_iteration").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
     }
 
     #[test]

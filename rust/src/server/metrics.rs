@@ -63,11 +63,29 @@ impl Stopwatch {
     }
 
     pub fn mark_token(&mut self) {
+        self.mark_tokens(1);
+    }
+
+    /// Mark `n` tokens emitted at this instant — one speculative verify
+    /// pass commits up to W at once. The elapsed interval since the last
+    /// mark is amortized over them: pushing n near-zero intervals instead
+    /// would poison the median per-token throughput (§4.1) the summary
+    /// reports.
+    pub fn mark_tokens(&mut self, n: usize) {
+        if n == 0 {
+            return;
+        }
         let now = self.start.elapsed().as_secs_f64();
+        let mut n = n;
         if self.first_token.is_none() {
             self.first_token = Some(now);
-        } else {
-            self.intervals.push(now - self.last_mark);
+            n -= 1;
+        }
+        if n > 0 {
+            let dt = (now - self.last_mark) / n as f64;
+            for _ in 0..n {
+                self.intervals.push(dt);
+            }
         }
         self.last_mark = now;
     }
@@ -106,6 +124,14 @@ pub struct SchedulerGauges {
     pub kv_in_use: usize,
     /// KV-pool capacity in bytes.
     pub kv_capacity: usize,
+    /// Tokens committed by decode iterations (all rows, all widths).
+    pub committed_tokens: u64,
+    /// Speculative verify passes (target iterations with width > 1).
+    pub spec_rounds: u64,
+    /// Draft tokens that entered verification.
+    pub spec_proposed: u64,
+    /// Draft tokens the target accepted (greedy match).
+    pub spec_accepted: u64,
 }
 
 impl SchedulerGauges {
@@ -132,6 +158,25 @@ impl SchedulerGauges {
         }
         self.kv_in_use as f64 / self.kv_capacity as f64
     }
+
+    /// Fraction of draft proposals the target accepted (paper §5: the
+    /// driver of the speculative speed-up).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
+    }
+
+    /// Mean tokens committed per occupied row per target iteration —
+    /// exactly 1.0 for plain continuous decoding, > 1.0 when speculative
+    /// verification pays off.
+    pub fn tokens_per_row_iteration(&self) -> f64 {
+        if self.occupied_rows == 0 {
+            return 0.0;
+        }
+        self.committed_tokens as f64 / self.occupied_rows as f64
+    }
 }
 
 /// Aggregates request timings across the server lifetime.
@@ -156,6 +201,21 @@ impl MetricsHub {
         g.iterations += 1;
         g.occupied_rows += occupied as u64;
         g.bucket_rows += bucket as u64;
+    }
+
+    /// `committed` tokens were emitted by the iteration that just ran;
+    /// with speculation a single iteration commits 1..=W per row.
+    pub fn note_committed(&self, committed: usize) {
+        self.gauges.lock().unwrap().committed_tokens += committed as u64;
+    }
+
+    /// One speculative verify pass ran: `proposed` draft tokens entered
+    /// verification and `accepted` of them matched the target.
+    pub fn note_spec_round(&self, proposed: usize, accepted: usize) {
+        let mut g = self.gauges.lock().unwrap();
+        g.spec_rounds += 1;
+        g.spec_proposed += proposed as u64;
+        g.spec_accepted += accepted as u64;
     }
 
     /// A request was admitted into a slot (`reused` = the row had served
@@ -267,6 +327,49 @@ mod tests {
         assert_eq!(g.slot_reuses, 1);
         assert_eq!(g.queue_depth, 3);
         assert!((g.kv_utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mark_tokens_amortizes_the_interval() {
+        let mut sw = Stopwatch::new();
+        sw.mark_token(); // prefill token: sets TTFT, no interval
+        std::thread::sleep(std::time::Duration::from_millis(4));
+        sw.mark_tokens(4); // one verify pass committed 4 tokens
+        let t = sw.finish(8, 5);
+        assert_eq!(t.token_intervals.len(), 4);
+        // equal shares of the elapsed window, not 3 near-zero intervals
+        let first = t.token_intervals[0];
+        assert!(first >= 0.0009);
+        for dt in &t.token_intervals {
+            assert!((dt - first).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spec_gauges_track_acceptance_and_commit_rate() {
+        let hub = MetricsHub::new();
+        // two iterations over 2 occupied rows each; speculation commits
+        // more than one token per row-iteration
+        hub.note_iteration(2, 8);
+        hub.note_spec_round(6, 4);
+        hub.note_committed(6); // 4 accepted + 2 corrections
+        hub.note_iteration(2, 8);
+        hub.note_spec_round(6, 2);
+        hub.note_committed(4);
+        let g = hub.gauges();
+        assert_eq!(g.spec_rounds, 2);
+        assert_eq!(g.spec_proposed, 12);
+        assert_eq!(g.spec_accepted, 6);
+        assert_eq!(g.committed_tokens, 10);
+        assert!((g.acceptance_rate() - 0.5).abs() < 1e-9);
+        assert!((g.tokens_per_row_iteration() - 2.5).abs() < 1e-9);
+        // plain decoding commits exactly one token per row-iteration
+        let plain = MetricsHub::new();
+        plain.note_iteration(3, 8);
+        plain.note_committed(3);
+        let p = plain.gauges();
+        assert!((p.tokens_per_row_iteration() - 1.0).abs() < 1e-9);
+        assert_eq!(p.acceptance_rate(), 0.0);
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //! fixed decode arena, the scheduler admits the oldest waiting request
 //! whenever a slot and the KV budget allow, and every decode iteration
 //! advances whatever mix of requests is resident — any prompt lengths,
-//! joining and leaving mid-flight. The legacy exact-length lockstep
-//! protocol (`run_group` + `Batcher`) is kept as the benches' baseline.
+//! joining and leaving mid-flight. With `ServerConfig.spec` set the
+//! iterations are self-speculative draft-and-verify (paper §5: NBL
+//! composes with speculative decoding), committing up to W tokens per
+//! row per target pass. The legacy exact-length lockstep protocol
+//! (`run_group` + `Batcher`) is kept as the benches' baseline.
 
 pub mod api;
 pub mod batcher;
@@ -21,4 +24,4 @@ pub mod tcp;
 pub use api::{GenRequest, GenResponse};
 pub use batcher::{Batcher, Scheduler};
 pub use metrics::{MetricsHub, RequestTiming, SchedulerGauges};
-pub use service::{BatchMode, Server, ServerConfig};
+pub use service::{BatchMode, Server, ServerConfig, SpecConfig};

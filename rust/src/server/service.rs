@@ -9,6 +9,15 @@
 //! immediately; newly admitted requests (any prompt length) are
 //! prefilled solo and join mid-flight. Admission is slot-granular
 //! against the KV pool.
+//!
+//! Speculative mode (DESIGN.md §Speculative iterations): with
+//! `ServerConfig.spec` set, each iteration becomes draft-and-verify. A
+//! draft engine (same Arc-shared weights, an NBL-heavier plan — §5
+//! self-speculation) keeps its own slot arena in lockstep with the
+//! target's; gamma = W-1 batched draft steps propose tokens for every
+//! occupied row, one width-W target pass verifies them, and each row
+//! commits 1..=W tokens (rejected suffixes roll back via
+//! `SlotArena::set_pos`, exactly the KvState protocol of spec/mod.rs).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -16,9 +25,10 @@ use std::sync::Arc;
 
 use crate::data::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
-use crate::executor::engine::{Engine, RowDecode};
+use crate::executor::engine::{Engine, RowDecode, RowSpecDecode};
 use crate::kvcache::{kv_bytes, slot_bytes, KvLeaseOwned, KvPool, SlotArena};
-use crate::sampling::Sampler;
+use crate::nbl::plan::ModelPlan;
+use crate::sampling::{argmax, Sampler};
 use crate::server::api::{GenRequest, GenResponse};
 use crate::server::batcher::{Batcher, Scheduler};
 use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
@@ -34,6 +44,21 @@ pub enum BatchMode {
     ExactLength,
 }
 
+/// Self-speculative decoding for the continuous worker (paper §5 /
+/// Table 6): the draft is the SAME weights under a cheaper plan, so no
+/// second checkpoint is loaded.
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    /// Plan the draft engine runs (typically NBL-heavier than the
+    /// target's — `Engine::with_plan` shares the weight buffers).
+    pub draft_plan: ModelPlan,
+    /// Verify width W: the target checks W tokens per row per iteration
+    /// (gamma = W-1 draft proposals + the last committed token). Must be
+    /// covered by the AOT `cached_lens` grid for the fast path; widths
+    /// < 2 disable speculation.
+    pub width: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub max_batch: usize,
@@ -43,6 +68,8 @@ pub struct ServerConfig {
     pub eos: Option<u32>,
     /// Scheduling protocol for the async worker.
     pub mode: BatchMode,
+    /// Speculative draft-and-verify iterations (Continuous mode only).
+    pub spec: Option<SpecConfig>,
 }
 
 impl Default for ServerConfig {
@@ -52,6 +79,7 @@ impl Default for ServerConfig {
             kv_capacity_bytes: 1 << 30,
             eos: None,
             mode: BatchMode::Continuous,
+            spec: None,
         }
     }
 }
@@ -86,9 +114,30 @@ impl Server {
     /// legacy run-to-completion protocol, kept as the exact-length
     /// baseline the continuous scheduler is benchmarked against.
     pub fn run_group(&self, group: &[GenRequest]) -> Result<Vec<GenResponse>> {
+        let watches = group.iter().map(|_| Stopwatch::new()).collect();
+        self.run_group_timed(group, watches)
+    }
+
+    /// [`run_group`](Self::run_group) with caller-provided stopwatches.
+    /// The async ExactLength worker starts them at SUBMISSION so TTFT
+    /// includes scheduler queue wait — the same clock continuous mode
+    /// uses. (Starting the clock at group formation under-reported the
+    /// baseline's TTFT by the whole queue wait and skewed every bench
+    /// comparison.)
+    pub fn run_group_timed(
+        &self,
+        group: &[GenRequest],
+        mut watches: Vec<Stopwatch>,
+    ) -> Result<Vec<GenResponse>> {
         let n = group.len();
         if n == 0 {
             return Ok(vec![]);
+        }
+        if watches.len() != n {
+            return Err(Error::Serving(format!(
+                "run_group: {} stopwatches for {n} requests",
+                watches.len()
+            )));
         }
         let len = group[0].prompt.len();
         if group.iter().any(|r| r.prompt.len() != len) {
@@ -105,10 +154,13 @@ impl Server {
         ))?;
 
         let max_new: usize = group.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
-        let budget = cfg.max_ctx.saturating_sub(len);
+        // the first token comes from prefill logits and the k-th decode
+        // step writes cache slot len+k-1, so max_ctx - len + 1 tokens fit
+        // (clamping to max_ctx - len dropped one generable token at the
+        // context boundary)
+        let budget = (cfg.max_ctx + 1).saturating_sub(len);
         let max_new = max_new.min(budget);
 
-        let mut watches: Vec<Stopwatch> = group.iter().map(|_| Stopwatch::new()).collect();
         let mut samplers: Vec<Sampler> =
             group.iter().map(|r| Sampler::new(r.params.clone())).collect();
         let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); n];
@@ -197,12 +249,57 @@ struct ActiveSlot {
     _lease: KvLeaseOwned,
 }
 
+/// Draft side of speculative serving: an engine over the same weights
+/// with the draft plan, plus a slot arena kept in lockstep with the
+/// target's (slot s of both arenas always belongs to the same request).
+struct SpecState {
+    engine: Engine,
+    arena: Option<SlotArena>,
+    width: usize,
+}
+
 /// Continuous-batching worker: one decode iteration per loop turn over
 /// the occupied slots; admissions and departures happen between
-/// iterations without restarting the batch.
+/// iterations without restarting the batch. With speculation enabled an
+/// iteration is draft-and-verify and commits up to W tokens per row.
 fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
     let engine = &server.engine;
-    let per_slot = slot_bytes(engine.config(), &engine.plan);
+    let mut spec: Option<SpecState> = match &server.config.spec {
+        Some(sc) if sc.width >= 2 => {
+            // snap the width onto the AOT cached-lens grid: an
+            // off-grid width would otherwise fail EVERY iteration once
+            // the fallback hits a non-bucket step
+            let width = engine.snap_verify_width(sc.width);
+            if width != sc.width {
+                eprintln!(
+                    "server: verify width {} snapped to AOT bucket {width}",
+                    sc.width
+                );
+            }
+            if width < 2 {
+                eprintln!("server: no verify bucket >= 2; serving without speculation");
+                None
+            } else {
+                match engine.with_plan(sc.draft_plan.clone()) {
+                    Ok(d) => Some(SpecState { engine: d, arena: None, width }),
+                    Err(e) => {
+                        // availability first: a bad draft plan degrades to
+                        // plain continuous serving, not refused traffic
+                        eprintln!(
+                            "server: draft plan rejected ({e}); serving without speculation"
+                        );
+                        None
+                    }
+                }
+            }
+        }
+        _ => None,
+    };
+    // a resident request holds KV rows in BOTH arenas under speculation
+    let per_slot = slot_bytes(engine.config(), &engine.plan)
+        + spec
+            .as_ref()
+            .map_or(0, |sp| slot_bytes(engine.config(), &sp.engine.plan));
     let mut sched = Scheduler::new();
     let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
     // stopwatches start at SUBMISSION so TTFT includes scheduler queue
@@ -238,12 +335,24 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
             }
         }
 
-        // ---- lazily size the arena from the grid on first demand
+        // ---- lazily size the arenas from the grid on first demand (the
+        // draft arena is born together with the target's so slots stay
+        // in lockstep)
         if arena.is_none() && sched.waiting() > 0 {
-            match engine.new_arena(server.config.max_batch) {
-                Ok(a) => {
+            let built = engine.new_arena(server.config.max_batch).and_then(|a| {
+                let d = match &spec {
+                    Some(sp) => Some(sp.engine.new_arena(server.config.max_batch)?),
+                    None => None,
+                };
+                Ok((a, d))
+            });
+            match built {
+                Ok((a, d)) => {
                     slots = (0..a.bucket_batch).map(|_| None).collect();
                     row_used = vec![false; a.bucket_batch];
+                    if let Some(sp) = spec.as_mut() {
+                        sp.arena = d;
+                    }
                     arena = Some(a);
                 }
                 Err(e) => {
@@ -270,10 +379,10 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
                     break;
                 }
             };
-            let watch = watches.remove(&req.id).unwrap_or_default();
+            let watch = take_watch(&mut watches, req.id);
             admit(
-                server, arena_ref, slot, req, watch, lease, &mut slots, &mut row_used,
-                &mut replies,
+                server, arena_ref, spec.as_mut(), slot, req, watch, lease, &mut slots,
+                &mut row_used, &mut replies,
             );
         }
 
@@ -302,53 +411,15 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
             }
         }
 
-        // ---- one decode iteration over the occupied rows
+        // ---- one (possibly speculative) decode iteration over the
+        // occupied rows
         server
             .metrics
             .observe(sched.waiting(), server.pool.in_use(), server.pool.capacity());
-        let occ = arena_ref.occupied();
-        if occ.is_empty() {
+        if arena_ref.occupancy() == 0 {
             continue;
         }
-        let rows: Vec<RowDecode> = occ
-            .iter()
-            .map(|&s| RowDecode { slot: s, token: slots[s].as_ref().unwrap().next })
-            .collect();
-        server.metrics.note_iteration(occ.len(), arena_ref.bucket_batch);
-        match engine.decode_rows(arena_ref, &rows) {
-            Err(e) => {
-                // a failed iteration poisons the whole group: every
-                // resident request gets an answer and its slot back
-                for &s in &occ {
-                    if let Some(a) = slots[s].take() {
-                        arena_ref.release(s);
-                        respond(&mut replies, error_response(a.req.id, Error::msg(e.to_string())));
-                    }
-                }
-            }
-            Ok(logits) => {
-                for (i, &s) in occ.iter().enumerate() {
-                    let done = {
-                        let a = slots[s].as_mut().unwrap();
-                        let tok = a.sampler.sample(logits.at2(i, 0));
-                        a.watch.mark_token();
-                        a.outputs.push(tok);
-                        a.next = tok;
-                        Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max
-                    };
-                    if done {
-                        // leave the batch: free the slot (and its KV
-                        // lease) without disturbing the other rows
-                        let a = slots[s].take().unwrap();
-                        arena_ref.release(s);
-                        let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
-                        let resp = ok_response(a.req.id, a.outputs, &timing);
-                        server.metrics.record(timing);
-                        respond(&mut replies, resp);
-                    }
-                }
-            }
-        }
+        decode_iteration(server, arena_ref, spec.as_mut(), &mut slots, &mut replies);
     }
 
     // ---- shutdown: every queued and in-flight request gets an answer
@@ -368,11 +439,13 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
 }
 
 /// Prefill a newly admitted request solo, sample its first token, and
-/// (unless it already finished) migrate its cache into arena row `slot`.
+/// (unless it already finished) migrate its cache into arena row `slot`
+/// — of the target arena AND, under speculation, the draft arena.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     server: &Arc<Server>,
     arena: &mut SlotArena,
+    spec: Option<&mut SpecState>,
     slot: usize,
     req: GenRequest,
     mut watch: Stopwatch,
@@ -407,9 +480,11 @@ fn admit(
     let first = sampler.sample(logits.at2(0, len - 1));
     watch.mark_token();
     let outputs = vec![first];
+    // the prefill token is free and the k-th decode step writes cache
+    // slot len+k-1, so max_ctx - len + 1 tokens fit in the context
     let effective_max = req
         .max_new_tokens
-        .min(cfg.max_ctx.saturating_sub(len))
+        .min((cfg.max_ctx + 1).saturating_sub(len))
         .max(1);
     if Some(first) == server.config.eos || outputs.len() >= effective_max {
         // finished on the prefill token: never occupies a slot
@@ -422,6 +497,20 @@ fn admit(
     if let Err(e) = arena.adopt(slot, &pre.state) {
         respond(replies, error_response(req.id, e));
         return;
+    }
+    if let Some(sp) = spec {
+        // draft prefill + lockstep adoption into the SAME slot index
+        let adopted = sp.engine.prefill(&req.prompt, 1, len, None).and_then(|dpre| {
+            sp.arena
+                .as_mut()
+                .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
+                .and_then(|da| da.adopt(slot, &dpre.state))
+        });
+        if let Err(e) = adopted {
+            arena.release(slot);
+            respond(replies, error_response(req.id, e));
+            return;
+        }
     }
     server.metrics.note_admission(row_used[slot]);
     row_used[slot] = true;
@@ -436,10 +525,243 @@ fn admit(
     });
 }
 
-/// Legacy worker: exact-length groups served to completion.
+/// Token at absolute context position `pos` of a resident request
+/// (prompt, then committed outputs).
+fn context_token(a: &ActiveSlot, pos: usize) -> u32 {
+    let len = a.req.prompt.len();
+    if pos < len {
+        a.req.prompt[pos]
+    } else {
+        a.outputs[pos - len]
+    }
+}
+
+/// One scheduler iteration over the occupied rows. Plain mode commits
+/// exactly one token per row; speculative mode runs gamma batched draft
+/// steps + one width-W verify pass and commits 1..=W per row, rolling
+/// rejected suffixes back in both arenas. Exactness does not depend on
+/// draft quality: every committed token is the row's own sampler applied
+/// to target logits for the committed prefix, so greedy output is
+/// token-identical to plain serving (proposals only decide how far one
+/// iteration gets). Seeded stochastic sampling draws exactly one sample
+/// per committed token in order, but the width-W and width-1
+/// executables agree only to float tolerance, so a draw landing within
+/// ~1e-3 of a cumulative-probability edge can differ from plain mode.
+fn decode_iteration(
+    server: &Arc<Server>,
+    arena: &mut SlotArena,
+    spec: Option<&mut SpecState>,
+    slots: &mut [Option<ActiveSlot>],
+    replies: &mut HashMap<u64, Sender<GenResponse>>,
+) {
+    let engine = &server.engine;
+    let occ = arena.occupied();
+    server.metrics.note_iteration(occ.len(), arena.bucket_batch);
+
+    // ---- width selection: speculate only when every occupied row has
+    // context room for a full verify (and the draft for its proposals);
+    // otherwise fall back to a plain width-1 iteration
+    let mut draft_engine: Option<&Engine> = None;
+    let mut draft_arena: Option<&mut SlotArena> = None;
+    let mut width = 1usize;
+    if let Some(sp) = spec {
+        let w = sp.width;
+        if let Some(da) = sp.arena.as_mut() {
+            let fits = occ.iter().all(|&s| {
+                arena.pos(s).unwrap() + w <= arena.max_ctx
+                    && da.pos(s).unwrap() + (w - 1) <= da.max_ctx
+            });
+            if fits {
+                width = w;
+            }
+            draft_engine = Some(&sp.engine);
+            draft_arena = Some(da);
+        }
+    }
+    let gamma = width - 1;
+    let n = occ.len();
+
+    // ---- draft phase: gamma batched steps over the draft arena. Each
+    // step feeds, per row, the next committed-context token the draft
+    // has not cached yet (catch-up after a rollback or a full-accept
+    // bonus), or the draft's own last prediction once caught up — only
+    // outputs past the committed context are proposals.
+    let mut fed: Vec<Vec<u32>> = (0..n).map(|_| Vec::with_capacity(gamma)).collect();
+    let mut proposals: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
+    let mut dstart: Vec<usize> = vec![0; n];
+    if gamma > 0 {
+        let dengine = draft_engine.expect("width > 1 implies a draft engine");
+        let da = draft_arena.as_mut().expect("width > 1 implies a draft arena");
+        for (i, &s) in occ.iter().enumerate() {
+            dstart[i] = da.pos(s).unwrap();
+        }
+        let mut last_out: Vec<u32> = vec![0; n];
+        for _step in 0..gamma {
+            let rows: Vec<RowDecode> = occ
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    let a = slots[s].as_ref().unwrap();
+                    let d = da.pos(s).unwrap();
+                    let l = a.req.prompt.len() + a.outputs.len();
+                    let tok = if d < l { context_token(a, d) } else { last_out[i] };
+                    fed[i].push(tok);
+                    RowDecode { slot: s, token: tok }
+                })
+                .collect();
+            let logits = match dengine.decode_rows(da, &rows) {
+                Ok(l) => l,
+                Err(e) => {
+                    fail_iteration(arena, Some(&mut **da), &occ, slots, replies, &e);
+                    return;
+                }
+            };
+            for (i, &s) in occ.iter().enumerate() {
+                last_out[i] = argmax(logits.at2(i, 0));
+                let a = slots[s].as_ref().unwrap();
+                let l = a.req.prompt.len() + a.outputs.len();
+                // the token just cached sits at da.pos - 1; its successor
+                // prediction is a proposal once the context is consumed
+                if da.pos(s).unwrap() >= l {
+                    proposals[i].push(last_out[i]);
+                }
+            }
+        }
+    }
+
+    // ---- verify phase: one width-W target pass over every row
+    let tstart: Vec<usize> = occ.iter().map(|&s| arena.pos(s).unwrap()).collect();
+    let vrows: Vec<RowSpecDecode> = occ
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let a = slots[s].as_ref().unwrap();
+            let mut tokens = Vec::with_capacity(width);
+            tokens.push(a.next);
+            tokens.extend_from_slice(&proposals[i]);
+            // rows short on proposals (draft was catching up) pad with
+            // the last token; fillers only gate continuation, committed
+            // tokens always come from the sampler over true logits
+            while tokens.len() < width {
+                tokens.push(*tokens.last().unwrap());
+            }
+            RowSpecDecode { slot: s, tokens }
+        })
+        .collect();
+    let vl = match engine.decode_rows_spec(arena, &vrows) {
+        Ok(l) => l,
+        Err(e) => {
+            let da = draft_arena.as_mut().map(|x| &mut **x);
+            fail_iteration(arena, da, &occ, slots, replies, &e);
+            return;
+        }
+    };
+
+    // ---- acceptance: commit the longest sampled prefix that agrees
+    // with the verified tokens, then roll both arenas back to it
+    let mut total_committed = 0usize;
+    let mut total_proposed = 0usize;
+    let mut total_accepted = 0usize;
+    for (i, &s) in occ.iter().enumerate() {
+        let (committed, done) = {
+            let a = slots[s].as_mut().unwrap();
+            let mut committed = 0usize;
+            let mut done = false;
+            for j in 0..width {
+                let tok = a.sampler.sample(vl.at2(i, j));
+                a.outputs.push(tok);
+                a.next = tok;
+                committed += 1;
+                if Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max {
+                    done = true;
+                    break;
+                }
+                if j + 1 < width && tok != vrows[i].tokens[j + 1] {
+                    break; // divergence: the rest of the verify is stale
+                }
+            }
+            // one amortized mark for the whole commit: W back-to-back
+            // marks would push near-zero intervals and poison the median
+            // per-token throughput
+            a.watch.mark_tokens(committed);
+            (committed, done)
+        };
+        // rejected suffix: stale cache rows beyond the committed prefix
+        // are masked by pos and overwritten by later writes
+        arena.set_pos(s, tstart[i] + committed);
+        total_committed += committed;
+        total_proposed += proposals[i].len();
+        total_accepted += (committed - 1).min(proposals[i].len());
+        if let Some(da) = draft_arena.as_mut() {
+            if gamma > 0 {
+                // re-anchor the draft on the committed context: keep the
+                // longest fed prefix that matches it (never past the last
+                // committed token, so the next round always re-feeds it)
+                let a = slots[s].as_ref().unwrap();
+                let l_new = a.req.prompt.len() + a.outputs.len();
+                let mut valid = 0usize;
+                for (k, &t) in fed[i].iter().enumerate() {
+                    let p = dstart[i] + k;
+                    if p + 1 < l_new && t == context_token(a, p) {
+                        valid += 1;
+                    } else {
+                        break;
+                    }
+                }
+                da.set_pos(s, dstart[i] + valid);
+            }
+        }
+        if done {
+            // leave the batch: free the slot(s) and KV lease without
+            // disturbing the other rows
+            let a = slots[s].take().unwrap();
+            arena.release(s);
+            if let Some(da) = draft_arena.as_mut() {
+                da.release(s);
+            }
+            let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
+            let resp = ok_response(a.req.id, a.outputs, &timing);
+            server.metrics.record(timing);
+            respond(replies, resp);
+        }
+    }
+    server.metrics.note_committed(total_committed);
+    if width > 1 {
+        server.metrics.note_spec_round(total_proposed, total_accepted);
+    }
+}
+
+/// A failed iteration poisons the whole group: every resident request
+/// gets an answer and its slot back (in both arenas under speculation).
+fn fail_iteration(
+    arena: &mut SlotArena,
+    draft: Option<&mut SlotArena>,
+    occ: &[usize],
+    slots: &mut [Option<ActiveSlot>],
+    replies: &mut HashMap<u64, Sender<GenResponse>>,
+    e: &Error,
+) {
+    for &s in occ {
+        if let Some(a) = slots[s].take() {
+            arena.release(s);
+            respond(replies, error_response(a.req.id, Error::msg(e.to_string())));
+        }
+    }
+    if let Some(da) = draft {
+        for &s in occ {
+            da.release(s);
+        }
+    }
+}
+
+/// Legacy worker: exact-length groups served to completion. Stopwatches
+/// start at SUBMISSION (not group formation), so TTFT includes queue
+/// wait exactly like continuous mode — the two protocols are only
+/// comparable on the same clock.
 fn run_exact_length(server: &Arc<Server>, rx: &Receiver<Submission>) {
     let mut batcher = Batcher::new(server.config.max_batch);
     let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
+    let mut watches: HashMap<u64, Stopwatch> = HashMap::new();
     'outer: loop {
         // block for at least one submission, drain the rest
         let first = match rx.recv() {
@@ -454,8 +776,9 @@ fn run_exact_length(server: &Arc<Server>, rx: &Receiver<Submission>) {
         for s in pending {
             match s {
                 Submission::Shutdown => shutdown = true,
-                Submission::Request(req, reply) => {
+                Submission::Request(req, reply, watch) => {
                     replies.insert(req.id, reply);
+                    watches.insert(req.id, watch);
                     batcher.push(req);
                 }
             }
@@ -464,7 +787,9 @@ fn run_exact_length(server: &Arc<Server>, rx: &Receiver<Submission>) {
             break 'outer;
         }
         while let Some(group) = batcher.next_group() {
-            let resp = server.run_group(&group).unwrap_or_else(|e| {
+            let group_watches: Vec<Stopwatch> =
+                group.iter().map(|r| take_watch(&mut watches, r.id)).collect();
+            let resp = server.run_group_timed(&group, group_watches).unwrap_or_else(|e| {
                 group
                     .iter()
                     .map(|r| error_response(r.id, Error::msg(e.to_string())))
@@ -499,11 +824,30 @@ fn intake(
 ) -> bool {
     match sub {
         Submission::Shutdown => false,
-        Submission::Request(req, reply) => {
+        Submission::Request(req, reply, watch) => {
             replies.insert(req.id, reply);
-            watches.insert(req.id, Stopwatch::new());
+            watches.insert(req.id, watch);
             sched.push(req);
             true
+        }
+    }
+}
+
+/// Fetch the submission-time stopwatch for `id`. Every request gets one
+/// at intake; a missing watch would silently restart the clock at
+/// admission and erase queue wait from TTFT, so the invariant is loud:
+/// debug builds assert, release builds log before falling back to a
+/// fresh stopwatch (under-reporting beats killing the worker).
+fn take_watch(watches: &mut HashMap<u64, Stopwatch>, id: u64) -> Stopwatch {
+    match watches.remove(&id) {
+        Some(w) => w,
+        None => {
+            debug_assert!(false, "request {id} has no submission stopwatch");
+            eprintln!(
+                "server: request {id} missing its submission stopwatch; \
+                 TTFT restarts at admission"
+            );
+            Stopwatch::new()
         }
     }
 }
@@ -515,7 +859,9 @@ fn respond(replies: &mut HashMap<u64, Sender<GenResponse>>, resp: GenResponse) {
 }
 
 enum Submission {
-    Request(GenRequest, Sender<GenResponse>),
+    // the stopwatch is started by the SUBMITTING thread, so TTFT always
+    // includes channel + scheduler queue wait in every mode
+    Request(GenRequest, Sender<GenResponse>, Stopwatch),
     Shutdown,
 }
 
@@ -525,10 +871,11 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the response. The TTFT
+    /// stopwatch starts here, on the submitting thread.
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
-        let _ = self.tx.send(Submission::Request(req, tx));
+        let _ = self.tx.send(Submission::Request(req, tx, Stopwatch::new()));
         rx
     }
 

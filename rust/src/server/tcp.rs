@@ -5,7 +5,9 @@
 //!   <- {"id": 1, "text": "...", "tokens": [...], "ttft_ms": ..., ...}
 //!   -> {"stats": true}
 //!   <- {"requests": ..., "queue_depth": ..., "mean_batch_occupancy":
-//!      ..., "kv_utilization": ..., ...}   (see api::stats_to_json)
+//!      ..., "kv_utilization": ..., "spec_acceptance_rate": ...,
+//!      "tokens_per_row_iteration": ..., ...}  (see api::stats_to_json;
+//!      the spec_* gauges stay 0 unless ServerConfig.spec is set)
 //!
 //! One OS thread per connection (connection counts here are benchmark-
 //! scale); generation itself is funneled through the server worker, so

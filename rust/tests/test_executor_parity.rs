@@ -136,6 +136,66 @@ fn multi_token_decode_matches_single_steps() {
 }
 
 #[test]
+fn wide_rows_decode_matches_stepwise_rows_decode() {
+    // the speculative verify op (attn_cached_rows s=4) must agree with
+    // four s=1 iterations, per row, with rows at DIFFERENT positions —
+    // the invariant the spec scheduler's draft-and-verify relies on
+    use nbl::executor::{RowDecode, RowSpecDecode};
+    let (engine, _goldens, prompt) = setup("main");
+    let lens = [12usize, 20];
+    let slots = [0usize, 3];
+    let mk_arena = || {
+        let mut arena = engine.new_arena(8).unwrap();
+        for (&len, &slot) in lens.iter().zip(&slots) {
+            let pre = engine.prefill(&prompt[..len], 1, len, None).unwrap();
+            arena.adopt(slot, &pre.state).unwrap();
+        }
+        arena
+    };
+    let width = 4usize;
+    let feeds: Vec<Vec<u32>> = lens
+        .iter()
+        .map(|&len| prompt[len..len + width].to_vec())
+        .collect();
+
+    // one wide verify pass
+    let mut wide_arena = mk_arena();
+    let vrows: Vec<RowSpecDecode> = slots
+        .iter()
+        .zip(&feeds)
+        .map(|(&slot, f)| RowSpecDecode { slot, tokens: f.clone() })
+        .collect();
+    let wide = engine.decode_rows_spec(&mut wide_arena, &vrows).unwrap();
+    assert_eq!(wide.shape(), &[2, width, engine.config().vocab]);
+
+    // the same tokens as four single-token iterations
+    let mut step_arena = mk_arena();
+    for j in 0..width {
+        let rows: Vec<RowDecode> = slots
+            .iter()
+            .zip(&feeds)
+            .map(|(&slot, f)| RowDecode { slot, token: f[j] })
+            .collect();
+        let narrow = engine.decode_rows(&mut step_arena, &rows).unwrap();
+        for i in 0..slots.len() {
+            let a = wide.at2(i, j);
+            let b = narrow.at2(i, 0);
+            let mut max_err = 0.0f32;
+            for (x, y) in a.iter().zip(b) {
+                max_err = max_err.max((x - y).abs());
+            }
+            assert!(max_err < 2e-3, "row {i} step {j}: err {max_err}");
+            assert_eq!(argmax(a), argmax(b), "argmax diverged at row {i} step {j}");
+        }
+    }
+    // both protocols leave every row advanced by `width`
+    for (&slot, &len) in slots.iter().zip(&lens) {
+        assert_eq!(wide_arena.pos(slot), Some(len + width));
+        assert_eq!(step_arena.pos(slot), Some(len + width));
+    }
+}
+
+#[test]
 fn capture_stats_match_jax_goldens() {
     // per-layer attention I/O mean/std must match capture_attn_io
     let (engine, goldens, prompt) = setup("main");
