@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Artifact-staleness gate: fail CI loudly when the AOT grid no longer
+covers an op name the Rust engine can request at runtime.
+
+The Rust executor degrades gracefully when an op is missing — per-row
+scalar decode instead of `attn_cached_rows_b{B}_s{W}`, whole-prompt
+prefill instead of `attn_prefill_chunk_b{B}_t{T}` — which is right for
+a serving box with old artifacts but WRONG for CI: a silently slower
+fallback would pass every correctness test while the perf trajectory
+quietly decays. This script cross-references the op names the engine
+formats (engine.rs bucket math, mirrored here) against:
+
+  1. the grid axes in python/compile/configs.py (always), and
+  2. artifacts/manifest.json + the HLO files on disk (when present —
+     pass --manifest-required to fail if artifacts were never built).
+
+Run from the repo root:  python ci/check_artifacts.py [--manifest-required]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "python"))
+
+from compile.configs import GRID  # noqa: E402
+
+
+def required_ops():
+    """Every op name the Rust engine's bucket selection can format.
+
+    Mirrors rust/src/executor/engine.rs: prefill (attn_prefill +
+    cache_init + the chunked-prefill family), decode (attn_cached and
+    the per-row attn_cached_rows family at every verify width), the
+    pointwise ops at both grids' widths, and the calibration gram pair.
+    """
+    ops = set()
+    for b in GRID.batches:
+        for t in GRID.prefill_lens:
+            ops.add(f"attn_prefill_b{b}_t{t}")
+            ops.add(f"cache_init_b{b}_t{t}")
+            ops.add(f"attn_prefill_chunk_b{b}_t{t}")
+        for s in GRID.cached_lens:
+            ops.add(f"attn_cached_b{b}_s{s}")
+            ops.add(f"attn_cached_rows_b{b}_s{s}")
+        for t in GRID.pointwise_lens:
+            ops.add(f"linear_block_b{b}_t{t}")
+            ops.add(f"mlp_b{b}_t{t}")
+            ops.add(f"head_b{b}_t{t}")
+    ops.add(f"gram_n{GRID.gram_n}_d{GRID.gram_d}")
+    ops.add(f"gram_jnp_n{GRID.gram_n}_d{GRID.gram_d}")
+    return ops
+
+
+def check_grid():
+    """Grid-axis invariants the engine's fast paths depend on."""
+    errors = []
+    if not set(GRID.cached_lens) <= set(GRID.pointwise_lens):
+        errors.append(
+            "cached_lens not a subset of pointwise_lens: decode_rows_batched "
+            "needs mlp/linear_block/head at every verify width"
+        )
+    if not set(GRID.prefill_lens) <= set(GRID.pointwise_lens):
+        errors.append(
+            "prefill_lens not a subset of pointwise_lens: prefill_chunk "
+            "needs mlp/linear_block/head at every chunk width"
+        )
+    return errors
+
+
+def check_manifest(required):
+    """Cross-reference manifest.json + HLO files against `required`."""
+    manifest_path = os.path.join(REPO, "artifacts", "manifest.json")
+    if not os.path.exists(manifest_path):
+        return None  # caller decides whether that is fatal
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    hlo = manifest.get("hlo", {})
+    errors = []
+    missing = sorted(required - set(hlo))
+    if missing:
+        errors.append(
+            f"{len(missing)} required op(s) missing from manifest.json "
+            f"(stale artifacts — run `python -m compile.aot`): {missing}"
+        )
+    for op in sorted(required & set(hlo)):
+        path = os.path.join(REPO, "artifacts", hlo[op])
+        if not os.path.exists(path):
+            errors.append(f"manifest lists {op} but {path} does not exist")
+    # the manifest's recorded grid must match the committed configs, or
+    # Rust bucket selection and the artifact set disagree
+    mgrid = manifest.get("grid", {})
+    for axis in ("batches", "prefill_lens", "cached_lens", "pointwise_lens"):
+        want = list(getattr(GRID, axis))
+        got = mgrid.get(axis)
+        if got != want:
+            errors.append(f"manifest grid.{axis} = {got}, configs say {want}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--manifest-required",
+        action="store_true",
+        help="fail if artifacts/manifest.json has not been built",
+    )
+    args = ap.parse_args()
+
+    required = required_ops()
+    errors = check_grid()
+    manifest_errors = check_manifest(required)
+    if manifest_errors is None:
+        msg = "artifacts/manifest.json not found — manifest check skipped"
+        if args.manifest_required:
+            errors.append(msg + " (--manifest-required)")
+        else:
+            print(f"note: {msg}")
+    else:
+        errors.extend(manifest_errors)
+
+    if errors:
+        print(f"ARTIFACT STALENESS: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    print(f"artifact grid OK: {len(required)} engine-requestable ops covered")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Perf-trajectory collector for CI's perf-smoke job.
+
+Merges the per-bench JSON files the benches emit (schema nbl-bench/v1:
+reports/serve_bench_<mode>.json from examples/serve_bench.rs and
+reports/bench_kv.json from benches/bench_kv.rs) into one
+BENCH_<sha>.json uploaded as a workflow artifact, then gates on the
+committed baseline (ci/bench_baseline.json): any metric listed there
+with a positive baseline must stay above min_ratio * baseline — the
+">20% throughput regression fails CI" ratchet.
+
+The baseline is a floor, not a record: raise it as the trajectory of
+uploaded BENCH_*.json artifacts accumulates (runner-to-runner noise
+means floors should sit well under the typical run).
+
+Usage:  python ci/collect_bench.py --sha <sha> \
+            [--reports-dir rust/reports] [--out BENCH_<sha>.json]
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA = "nbl-bench/v1"
+
+
+def load_reports(reports_dir):
+    benches = {}
+    for path in sorted(glob.glob(os.path.join(reports_dir, "*.json"))):
+        try:
+            with open(path) as f:
+                j = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(j, dict) or j.get("schema") != SCHEMA:
+            continue
+        name = os.path.splitext(os.path.basename(path))[0]
+        benches[name] = j
+    return benches
+
+
+def lookup(benches, dotted):
+    """Resolve "bench_name.metric" into the merged bench dict."""
+    bench, _, metric = dotted.partition(".")
+    b = benches.get(bench)
+    if b is None:
+        return None
+    return b.get("metrics", {}).get(metric)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sha", default="local")
+    ap.add_argument("--reports-dir", default=os.path.join(REPO, "rust", "reports"))
+    ap.add_argument("--baseline", default=os.path.join(REPO, "ci", "bench_baseline.json"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    benches = load_reports(args.reports_dir)
+    if not benches:
+        print(f"no {SCHEMA} reports found under {args.reports_dir}")
+        sys.exit(1)
+
+    out_path = args.out or f"BENCH_{args.sha}.json"
+    merged = {"schema": SCHEMA, "sha": args.sha, "benches": benches}
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1, sort_keys=True)
+    print(f"wrote {out_path} ({len(benches)} bench(es): {sorted(benches)})")
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = []
+    for dotted, gate in sorted(baseline.get("metrics", {}).items()):
+        base = float(gate.get("baseline", 0.0))
+        min_ratio = float(gate.get("min_ratio", 0.8))
+        current = lookup(benches, dotted)
+        if base <= 0.0:
+            continue  # record-only metric, not yet ratcheted
+        if current is None:
+            failures.append(f"{dotted}: baseline {base} but metric missing from reports")
+            continue
+        floor = base * min_ratio
+        status = "OK" if current >= floor else "REGRESSION"
+        print(f"  {dotted}: {current:.2f} vs floor {floor:.2f} (baseline {base}) {status}")
+        if current < floor:
+            failures.append(
+                f"{dotted}: {current:.2f} < {floor:.2f} "
+                f"({min_ratio:.0%} of baseline {base})"
+            )
+    if failures:
+        print(f"PERF REGRESSION: {len(failures)} metric(s) under the committed floor")
+        for f_ in failures:
+            print(f"  - {f_}")
+        sys.exit(1)
+    print("perf gate OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,38 +2,135 @@
 //! the full stack — engine + scheduler + worker + TCP front-end — under an
 //! NBL-compressed model, fire a MIXED-PROMPT-LENGTH workload of real
 //! requests over TCP, and report latency/throughput. Results are recorded
-//! in EXPERIMENTS.md.
+//! in EXPERIMENTS.md and, for CI's perf-smoke job, emitted as bench JSON
+//! (reports/serve_bench_<mode>.json, schema nbl-bench/v1 — see
+//! ci/collect_bench.py).
 //!
-//! The workload interleaves four prompt lengths, the worst case for the
-//! old exact-length grouping (batches degenerate towards size 1) and the
-//! case continuous batching exists for. `--mode grouped` runs the legacy
-//! baseline for comparison; `--mode spec` runs continuous batching with
-//! self-speculative draft-and-verify iterations (the draft is the SAME
-//! weights under an NBL-heavier plan — paper §5 composition, served).
+//! The workload interleaves four short prompt lengths and (every
+//! `--long-every`-th request) one max-context 512-token prompt — the
+//! head-of-line case chunked prefill exists for: without chunking, every
+//! in-flight decode and every queued short stalls behind the whole long
+//! prefill. `--mode grouped` runs the legacy exact-length baseline;
+//! `--mode spec` runs continuous batching with self-speculative
+//! draft-and-verify iterations (the draft is the SAME weights under an
+//! NBL-heavier plan — paper §5 composition, served). `--ttft-compare`
+//! re-runs the continuous workload with chunking disabled and asserts
+//! the p50 TTFT of short requests dropped (the ISSUE 4 acceptance
+//! criterion, machine-checked).
 //!
 //!     cargo run --release --example serve_bench \
 //!         [-- --m 2 --requests 24 --max-tokens 48 \
-//!              --mode spec --spec-width 4 --draft-m 4]
+//!              --mode spec --spec-width 4 --draft-m 4 \
+//!              --chunk 128 --long-every 6 --ttft-compare]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
 use nbl::bench::experiments::{ExpConfig, Workbench};
+use nbl::executor::Engine;
 use nbl::nbl::criteria::Criterion;
+use nbl::server::metrics::{MetricsSummary, RequestTiming, SchedulerGauges};
 use nbl::server::service::{BatchMode, Server, ServerConfig, SpecConfig};
 use nbl::server::tcp::TcpFrontend;
 use nbl::util::cli::Args;
+use nbl::util::json::Json;
 use nbl::util::timer::Timer;
 use nbl::util::{mean, percentile};
 
+/// Prompts below this many tokens count as "short" when slicing TTFT —
+/// the workload's short lengths are 16..64, the long prompt is 512.
+const SHORT_PROMPT_MAX: usize = 100;
+
+struct LoadResult {
+    wall_s: f64,
+    latencies: Vec<f64>,
+    summary: MetricsSummary,
+    gauges: SchedulerGauges,
+    timings: Vec<RequestTiming>,
+}
+
+impl LoadResult {
+    /// p50 TTFT (ms) over the short requests — the number a long prompt
+    /// at the head of the line inflates, and chunked prefill lowers.
+    fn p50_short_ttft_ms(&self) -> f64 {
+        let shorts: Vec<f64> = self
+            .timings
+            .iter()
+            .filter(|t| t.prompt_tokens < SHORT_PROMPT_MAX)
+            .map(|t| t.ttft_s * 1e3)
+            .collect();
+        percentile(&shorts, 50.0)
+    }
+}
+
+/// Serve `prompts` through a fresh server + TCP front-end: 4 concurrent
+/// client connections, requests round-robin-chunked across them.
+fn run_load(
+    engine: &Arc<Engine>,
+    cfg: ServerConfig,
+    prompts: &[String],
+    max_tokens: usize,
+) -> anyhow::Result<LoadResult> {
+    let server = Arc::new(Server::new(engine.clone(), cfg));
+    let metrics = server.metrics.clone();
+    let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let t_all = Timer::start();
+    let mut client_threads = Vec::new();
+    let per_conn = prompts.len().div_ceil(4).max(1);
+    for (c, chunk) in prompts.chunks(per_conn).enumerate() {
+        let chunk: Vec<String> = chunk.to_vec();
+        let addr = front.addr;
+        client_threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut latencies = Vec::new();
+            let stream = TcpStream::connect(addr)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            for (i, p) in chunk.iter().enumerate() {
+                let id = c * 1000 + i;
+                let t = Timer::start();
+                writeln!(
+                    writer,
+                    r#"{{"id": {id}, "prompt": "{p}", "max_tokens": {max_tokens}}}"#
+                )?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                latencies.push(t.elapsed_s());
+                let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+                if j.opt("error").is_some() {
+                    anyhow::bail!("server error: {line}");
+                }
+            }
+            Ok(latencies)
+        }));
+    }
+    let mut latencies = Vec::new();
+    for t in client_threads {
+        latencies.extend(t.join().unwrap()?);
+    }
+    let wall_s = t_all.elapsed_s();
+    front.shutdown();
+    Ok(LoadResult {
+        wall_s,
+        latencies,
+        summary: metrics.summary(),
+        gauges: metrics.gauges(),
+        timings: metrics.timings(),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&[])?;
+    let args = Args::from_env(&["ttft-compare"])?;
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
     let spec_width = args.get_usize("spec-width", 4)?;
-    let (mode, spec_on) = match args.get_or("mode", "continuous") {
+    let chunk = args.get_usize("chunk", ServerConfig::default().prefill_chunk)?;
+    let long_every = args.get_usize("long-every", 6)?;
+    let ttft_compare = args.flag("ttft-compare");
+    let mode_name = args.get_or("mode", "continuous").to_string();
+    let (mode, spec_on) = match mode_name.as_str() {
         "grouped" => (BatchMode::ExactLength, false),
         "spec" => (BatchMode::Continuous, true),
         _ => (BatchMode::Continuous, false),
@@ -71,65 +168,46 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
-    // --- full stack: server worker + TCP front-end
-    let server_cfg = ServerConfig { mode, spec, ..ServerConfig::default() };
-    let server = Arc::new(Server::new(engine, server_cfg));
-    let metrics = server.metrics.clone();
-    let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("listening on {} (mode: {mode:?})", front.addr);
-
-    // --- client load: 4 concurrent connections, MIXED-length prompts
-    // from the corpus (16/32/48/64 bytes interleaved)
+    // --- client load: MIXED-length prompts from the corpus (16/32/48/64
+    // bytes interleaved), plus one max-context 512-token prompt every
+    // `long_every` requests — the admission that, unchunked, stalls every
+    // in-flight decode row and every queued short behind it
+    let max_ctx = engine.config().max_ctx;
     let prompts: Vec<String> = (0..n_requests)
         .map(|i| {
-            let len = 16 + (i % 4) * 16;
-            let start = (i * 997) % (wb.calib.tokens.len() - 128);
-            let bytes: Vec<u8> = wb.calib.tokens[start..start + len]
+            let len = if long_every > 0 && i % long_every == 0 {
+                max_ctx
+            } else {
+                16 + (i % 4) * 16
+            };
+            let start = (i * 997) % (wb.calib.tokens.len() - max_ctx - 1);
+            // one byte per token, JSON-safe: the byte tokenizer must see
+            // EXACTLY `len` tokens (a multi-byte replacement char would
+            // push a 512-byte prompt past the prefill grid)
+            wb.calib.tokens[start..start + len]
                 .iter()
-                .map(|&t| t as u8)
-                .collect();
-            String::from_utf8_lossy(&bytes).replace(['"', '\\', '\n'], " ")
+                .map(|&t| {
+                    let b = t as u8;
+                    if b.is_ascii_alphanumeric() || b == b' ' {
+                        b as char
+                    } else {
+                        ' '
+                    }
+                })
+                .collect::<String>()
         })
         .collect();
+    let has_long = long_every > 0 && prompts.iter().any(|p| p.len() >= max_ctx / 2);
 
-    let t_all = Timer::start();
-    let mut client_threads = Vec::new();
-    for (c, chunk) in prompts.chunks(n_requests.div_ceil(4)).enumerate() {
-        let chunk: Vec<String> = chunk.to_vec();
-        let addr = front.addr;
-        client_threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
-            let mut latencies = Vec::new();
-            let stream = TcpStream::connect(addr)?;
-            let mut writer = stream.try_clone()?;
-            let mut reader = BufReader::new(stream);
-            for (i, p) in chunk.iter().enumerate() {
-                let id = c * 1000 + i;
-                let t = Timer::start();
-                writeln!(
-                    writer,
-                    r#"{{"id": {id}, "prompt": "{p}", "max_tokens": {max_tokens}}}"#
-                )?;
-                let mut line = String::new();
-                reader.read_line(&mut line)?;
-                latencies.push(t.elapsed_s());
-                let j = nbl::util::json::Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
-                if j.opt("error").is_some() {
-                    anyhow::bail!("server error: {line}");
-                }
-            }
-            Ok(latencies)
-        }));
-    }
-    let mut latencies = Vec::new();
-    for t in client_threads {
-        latencies.extend(t.join().unwrap()?);
-    }
-    let wall = t_all.elapsed_s();
-    front.shutdown();
+    let server_cfg = ServerConfig { mode, spec, prefill_chunk: chunk, ..ServerConfig::default() };
+    println!("mode: {mode:?}, prefill chunk: {chunk} (0 = whole-prompt)");
+    let res = run_load(&engine, server_cfg.clone(), &prompts, max_tokens)?;
 
     // --- report
-    let s = metrics.summary();
-    let g = metrics.gauges();
+    let s = &res.summary;
+    let g = &res.gauges;
+    let wall = res.wall_s;
+    let p50_short = res.p50_short_ttft_ms();
     println!("\n=== serve_bench results (Attn NBL-{m}, {mode:?}, mixed lengths) ===");
     println!("requests                 {}", s.requests);
     println!("generated tokens         {}", s.generated_tokens);
@@ -138,15 +216,26 @@ fn main() -> anyhow::Result<()> {
     println!("token throughput         {:.1} tok/s", s.generated_tokens as f64 / wall);
     println!("mean TTFT                {:.1} ms", s.mean_ttft_s * 1e3);
     println!("p90 TTFT                 {:.1} ms", s.p90_ttft_s * 1e3);
+    println!("p50 short-request TTFT   {p50_short:.1} ms");
     println!("prefill speed            {:.0} tok/s", s.mean_prefill_tok_s);
     println!("median decode speed      {:.0} tok/s", s.median_decode_tok_s);
-    println!("mean e2e latency         {:.1} ms", mean(&latencies) * 1e3);
-    println!("p90 e2e latency          {:.1} ms", percentile(&latencies, 90.0) * 1e3);
+    println!("mean e2e latency         {:.1} ms", mean(&res.latencies) * 1e3);
+    println!(
+        "p90 e2e latency          {:.1} ms",
+        percentile(&res.latencies, 90.0) * 1e3
+    );
     if mode == BatchMode::Continuous {
         println!("decode iterations        {}", g.iterations);
         println!("mean rows/iteration      {:.2}", g.mean_rows_per_iteration());
         println!("batch occupancy          {:.1}%", g.mean_occupancy() * 100.0);
         println!("slot reuses              {}", g.slot_reuses);
+        println!("prefill chunks           {}", g.prefill_chunks);
+        println!("chunked admissions       {}", g.chunked_admissions);
+        println!(
+            "chunk stalls             {} ({:.1} ms mean)",
+            g.chunk_stalls,
+            g.mean_chunk_stall_ms()
+        );
     }
     if spec_on {
         println!("spec rounds              {}", g.spec_rounds);
@@ -170,6 +259,68 @@ fn main() -> anyhow::Result<()> {
         }
     }
     assert_eq!(s.requests, n_requests, "all requests must be served");
-    println!("\nserve_bench OK");
+
+    // --- chunked-vs-whole TTFT comparison (the acceptance criterion:
+    // short requests admitted behind a 512-token prompt see lower p50
+    // TTFT under chunked continuous admission)
+    let mut p50_short_unchunked = None;
+    if ttft_compare && mode == BatchMode::Continuous {
+        let whole_cfg = ServerConfig { prefill_chunk: 0, ..server_cfg };
+        let whole = run_load(&engine, whole_cfg, &prompts, max_tokens)?;
+        let p50_whole = whole.p50_short_ttft_ms();
+        p50_short_unchunked = Some(p50_whole);
+        println!("\n[ttft-compare] p50 short-request TTFT");
+        println!("  chunked (chunk {chunk:>3})    {p50_short:8.1} ms");
+        println!("  whole-prompt prefill   {p50_whole:8.1} ms");
+        if has_long && g.prefill_chunks > 0 {
+            assert!(
+                p50_short < p50_whole,
+                "chunked prefill must lower p50 short-request TTFT behind a \
+                 {max_ctx}-token prompt: {p50_short:.1} vs {p50_whole:.1} ms"
+            );
+        } else {
+            println!("  (no chunked admissions ran — comparison reported, not asserted)");
+        }
+    }
+
+    // --- bench JSON (nbl-bench/v1; consumed by ci/collect_bench.py)
+    let mut metrics_json = Json::obj(vec![
+        ("tok_s", Json::Num(s.generated_tokens as f64 / wall)),
+        ("req_s", Json::Num(s.requests as f64 / wall)),
+        ("generated_tokens", Json::Num(s.generated_tokens as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("mean_ttft_ms", Json::Num(s.mean_ttft_s * 1e3)),
+        ("p90_ttft_ms", Json::Num(s.p90_ttft_s * 1e3)),
+        ("p50_short_ttft_ms", Json::Num(p50_short)),
+        ("mean_rows_per_iteration", Json::Num(g.mean_rows_per_iteration())),
+        ("prefill_chunks", Json::Num(g.prefill_chunks as f64)),
+        ("chunked_admissions", Json::Num(g.chunked_admissions as f64)),
+        ("chunk_stall_ms_mean", Json::Num(g.mean_chunk_stall_ms())),
+        ("spec_acceptance_rate", Json::Num(g.acceptance_rate())),
+        ("tokens_per_row_iteration", Json::Num(g.tokens_per_row_iteration())),
+    ]);
+    if let Some(p) = p50_short_unchunked {
+        metrics_json.set("p50_short_ttft_ms_unchunked", Json::Num(p));
+    }
+    let bench_json = Json::obj(vec![
+        ("schema", Json::Str("nbl-bench/v1".into())),
+        ("bench", Json::Str("serve_bench".into())),
+        ("mode", Json::Str(mode_name.clone())),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(n_requests as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("chunk", Json::Num(chunk as f64)),
+                ("long_every", Json::Num(long_every as f64)),
+                ("m", Json::Num(m as f64)),
+            ]),
+        ),
+        ("metrics", metrics_json),
+    ]);
+    let path = nbl::report::save_json(&format!("serve_bench_{mode_name}"), &bench_json)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nbench JSON written to {}", path.display());
+    println!("serve_bench OK");
     Ok(())
 }

@@ -27,7 +27,8 @@ fn main() -> anyhow::Result<()> {
 
     // baseline plain decoding
     let t0 = Timer::start();
-    let base_out = greedy_generate(&wb.engine, &prompt, tokens).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base_out =
+        greedy_generate(&wb.engine, &prompt, tokens).map_err(|e| anyhow::anyhow!("{e}"))?;
     let base_t = t0.elapsed_s();
     println!("plain greedy: {:.2} tok/s", tokens as f64 / base_t);
     println!("  text: {:?}\n", tok.decode(&base_out[..32.min(base_out.len())]));

@@ -79,6 +79,9 @@ def build_ops():
     def cached_fn(x, nw, wq, wk, wv, wo, kc, vc, pos):
         return ref.attn_cached(x, nw, wq, wk, wv, wo, kc, vc, pos, **kw)
 
+    def prefill_chunk_fn(x, nw, wq, wk, wv, wo, kc, vc, pos):
+        return ref.attn_prefill_chunk(x, nw, wq, wk, wv, wo, kc, vc, pos, **kw)
+
     def cached_rows_fn(x, nw, wq, wk, wv, wo, kc, vc, pos):
         return ref.attn_cached_rows(x, nw, wq, wk, wv, wo, kc, vc, pos, **kw)
 
@@ -111,6 +114,16 @@ def build_ops():
                 f"cache_init_b{B}_t{T}",
                 lambda k, v: ref.cache_init(k, v, Tmax),
                 (f32(B, T, hkv, dh), f32(B, T, hkv, dh)),
+            ))
+            # chunked prefill: the cache-appending chunk op reuses the
+            # prefill grid widths as chunk sizes (DESIGN.md §Chunked
+            # prefill); the first chunk of an admission runs the fresh
+            # attn_prefill + cache_init pair, later chunks consume the
+            # prior KV through this op
+            ops.append((
+                f"attn_prefill_chunk_b{B}_t{T}", prefill_chunk_fn,
+                (f32(B, T, D), *attn_w, f32(B, Tmax, hkv, dh),
+                 f32(B, Tmax, hkv, dh), i32scalar()),
             ))
         for S in GRID.cached_lens:
             ops.append((

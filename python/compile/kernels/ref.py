@@ -109,6 +109,24 @@ def attn_cached(x, normw, wq, wk, wv, wo, kcache, vcache, pos, *,
     return y, kcache, vcache
 
 
+def attn_prefill_chunk(x, normw, wq, wk, wv, wo, kcache, vcache, pos, *,
+                       n_heads, n_kv_heads, head_dim, theta=10000.0, eps=1e-5):
+    """Cache-appending prefill chunk (chunked prefill, DESIGN.md §Chunked
+    prefill): T new prompt tokens attend causally over the cache built by
+    earlier chunks plus themselves, and append their K/V at [pos, pos+T).
+
+    Semantically identical to ``attn_cached`` — a prefill chunk IS a
+    wide cached step — but lowered as its own op family at the *prefill*
+    grid widths (``attn_prefill_b{B}_t{T}`` chunk sizes), so the serving
+    scheduler can split a long admission into grid-width chunks and
+    interleave them with decode iterations. Kept as a separate name so
+    artifact staleness is detectable per family (ci/check_artifacts.py).
+    """
+    return attn_cached(x, normw, wq, wk, wv, wo, kcache, vcache, pos,
+                       n_heads=n_heads, n_kv_heads=n_kv_heads,
+                       head_dim=head_dim, theta=theta, eps=eps)
+
+
 def rope_angles_rows(positions, head_dim, theta=10000.0):
     """positions [B,S] (int) -> (cos, sin) each [B,S,head_dim//2]."""
     half = head_dim // 2

@@ -13,6 +13,8 @@ def test_grid_covers_design():
         for t in GRID.prefill_lens:
             assert f"attn_prefill_b{b}_t{t}" in names
             assert f"cache_init_b{b}_t{t}" in names
+            # chunked prefill: cache-appending chunk at every prefill width
+            assert f"attn_prefill_chunk_b{b}_t{t}" in names
         for s in GRID.cached_lens:
             assert f"attn_cached_b{b}_s{s}" in names
             # continuous-batching decode + speculative verify widths
@@ -30,6 +32,13 @@ def test_cached_widths_have_pointwise_ops():
     independently editable, so the subset invariant is asserted here
     before artifact drift can strand the Rust fast path."""
     assert set(GRID.cached_lens) <= set(GRID.pointwise_lens)
+
+
+def test_prefill_widths_have_pointwise_ops():
+    """Chunked prefill runs mlp/linear_block/head at the chunk width
+    (Engine::prefill_chunk), so every prefill width must also be a
+    pointwise width — same drift guard as the cached-widths invariant."""
+    assert set(GRID.prefill_lens) <= set(GRID.pointwise_lens)
 
 
 def test_no_duplicate_names():

@@ -107,6 +107,72 @@ def test_attn_prefill_pallas_matches_ref(b, t, seed):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (cache-appending chunk op vs one whole prefill)
+
+
+@SET
+@given(
+    t=st.sampled_from([17, 24, 48, 64]),
+    chunk=st.sampled_from([8, 16]),
+    hkv=st.sampled_from([1, 2]),
+    seed=st.integers(0, 10_000),
+)
+def test_attn_prefill_chunk_matches_whole_prefill(t, chunk, hkv, seed):
+    """Chunked prefill must be a refactoring of whole prefill: the first
+    chunk runs attn_prefill + cache_init, later chunks append through
+    attn_prefill_chunk, and the concatenated outputs + final caches must
+    equal one whole-prompt attn_prefill (+ cache_init). Lengths not
+    divisible by the chunk size exercise the ragged tail."""
+    d, dh = 64, 16
+    h = hkv * 2
+    max_ctx = 128
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, 1, t, d)
+    w = attn_weights(rng, d, h, hkv, dh)
+    kw = dict(n_heads=h, n_kv_heads=hkv, head_dim=dh)
+
+    y_want, k_want, v_want = ref.attn_prefill(x, *w, **kw)
+    kc_want, vc_want = ref.cache_init(k_want, v_want, max_ctx)
+
+    ys = []
+    kc = vc = None
+    pos = 0
+    while pos < t:
+        n = min(chunk, t - pos)
+        xc = x[:, pos:pos + n]
+        if pos == 0:
+            y, k, v = ref.attn_prefill(xc, *w, **kw)
+            kc, vc = ref.cache_init(k, v, max_ctx)
+        else:
+            y, kc, vc = ref.attn_prefill_chunk(
+                xc, *w, kc, vc, jnp.int32(pos), **kw)
+        ys.append(y)
+        pos += n
+    y_got = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_got, y_want, rtol=3e-5, atol=3e-5)
+    # cache rows [0, t) must match; rows beyond t are never visible
+    np.testing.assert_allclose(kc[:, :t], kc_want[:, :t], rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(vc[:, :t], vc_want[:, :t], rtol=3e-5, atol=3e-5)
+
+
+def test_attn_prefill_chunk_is_attn_cached_at_chunk_width():
+    """The chunk op is attn_cached at a prefill width — one name per
+    family keeps artifact staleness detectable, not new math."""
+    rng = np.random.default_rng(7)
+    d, h, hkv, dh, max_ctx = 64, 4, 2, 16, 64
+    x = rnd(rng, 1, 8, d)
+    w = attn_weights(rng, d, h, hkv, dh)
+    kw = dict(n_heads=h, n_kv_heads=hkv, head_dim=dh)
+    kc = rnd(rng, 1, max_ctx, hkv, dh)
+    vc = rnd(rng, 1, max_ctx, hkv, dh)
+    pos = jnp.int32(16)
+    got = ref.attn_prefill_chunk(x, *w, kc, vc, pos, **kw)
+    want = ref.attn_cached(x, *w, kc, vc, pos, **kw)
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(g, wv, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # linear block (the NBL substitution path)
 
 

@@ -16,6 +16,7 @@ use nbl::report::Table;
 use nbl::sampling::SamplingParams;
 use nbl::server::api::GenRequest;
 use nbl::server::service::{BatchMode, Server, ServerConfig, SpecConfig};
+use nbl::util::json::Json;
 use nbl::util::timer::Timer;
 
 fn paper_config() -> ModelConfig {
@@ -42,7 +43,8 @@ fn main() {
         &["ctx", "Original", "NBL-4", "NBL-8", "NBL-12", "NBL-16"],
     );
     // paper's expected values for the Original column
-    let expect_gb = [(512usize, 4.0f64), (1024, 8.0), (2048, 16.0), (4096, 32.0), (128_000, 1000.0)];
+    let expect_gb =
+        [(512usize, 4.0f64), (1024, 8.0), (2048, 16.0), (4096, 32.0), (128_000, 1000.0)];
     for (ctx, want) in expect_gb {
         let mut row = vec![ctx.to_string()];
         for m in [0usize, 4, 8, 12, 16] {
@@ -134,6 +136,33 @@ fn main() {
     println!("  speedup (cont/grouped)  {:8.2}x", tps_c / tps_g.max(1e-9));
     println!("  speedup (spec/cont)     {:8.2}x", tps_s / tps_c.max(1e-9));
     assert_eq!(toks_s, toks_c, "speculation must not change token counts");
+
+    // bench JSON for CI's perf trajectory (nbl-bench/v1; merged into
+    // BENCH_<sha>.json by ci/collect_bench.py)
+    let bench_json = Json::obj(vec![
+        ("schema", Json::Str("nbl-bench/v1".into())),
+        ("bench", Json::Str("bench_kv".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(n_requests as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+            ]),
+        ),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("tok_s_grouped", Json::Num(tps_g)),
+                ("tok_s_continuous", Json::Num(tps_c)),
+                ("tok_s_spec", Json::Num(tps_s)),
+                ("speedup_cont_over_grouped", Json::Num(tps_c / tps_g.max(1e-9))),
+                ("speedup_spec_over_cont", Json::Num(tps_s / tps_c.max(1e-9))),
+                ("rows_per_iteration", Json::Num(occ_c)),
+            ]),
+        ),
+    ]);
+    let path = nbl::report::save_json("bench_kv", &bench_json).unwrap();
+    println!("bench JSON written to {}", path.display());
     let bucket = engine.decode_group_bucket(ServerConfig::default().max_batch);
     if engine.supports_row_decode(bucket) {
         assert!(

@@ -5,8 +5,20 @@ use nbl::nbl::criteria::Criterion;
 
 fn main() -> anyhow::Result<()> {
     let wb = Workbench::new("main", ExpConfig::full()).unwrap();
-    println!("cca scores:    {:?}", wb.report.scores(Criterion::CcaBound).iter().map(|x| (x*100.0).round()/100.0).collect::<Vec<_>>());
-    println!("cosine scores: {:?}", wb.report.scores(Criterion::CosineDistance).iter().map(|x| (x*1000.0).round()/1000.0).collect::<Vec<_>>());
+    let cca: Vec<f64> = wb
+        .report
+        .scores(Criterion::CcaBound)
+        .iter()
+        .map(|x| (x * 100.0).round() / 100.0)
+        .collect();
+    let cos: Vec<f64> = wb
+        .report
+        .scores(Criterion::CosineDistance)
+        .iter()
+        .map(|x| (x * 1000.0).round() / 1000.0)
+        .collect();
+    println!("cca scores:    {cca:?}");
+    println!("cosine scores: {cos:?}");
     for m in [3usize] {
         for (label, plan) in [
             ("NBL(cca)", wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap()),
@@ -17,8 +29,17 @@ fn main() -> anyhow::Result<()> {
             let layers = plan.describe();
             let e = wb.engine.with_plan(plan).unwrap();
             let acc = wb.accuracy(&e).unwrap();
-            let per: Vec<String> = acc.tasks.iter().map(|t| format!("{}:{:.2}", t.name, t.accuracy)).collect();
-            println!("m={m} {label:<10} avg {:.3} [{}] ({})", acc.avg_accuracy, per.join(" "), layers);
+            let per: Vec<String> = acc
+                .tasks
+                .iter()
+                .map(|t| format!("{}:{:.2}", t.name, t.accuracy))
+                .collect();
+            println!(
+                "m={m} {label:<10} avg {:.3} [{}] ({})",
+                acc.avg_accuracy,
+                per.join(" "),
+                layers
+            );
         }
     }
     Ok(())

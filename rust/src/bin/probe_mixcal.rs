@@ -18,7 +18,11 @@ fn main() -> anyhow::Result<()> {
         let plan = report.plan_attn_nbl(m, Criterion::CcaBound).unwrap();
         let e = wb.engine.with_plan(plan).unwrap();
         let acc = wb.accuracy(&e).unwrap();
-        let per: Vec<String> = acc.tasks.iter().map(|t| format!("{}:{:.2}", t.name, t.accuracy)).collect();
+        let per: Vec<String> = acc
+            .tasks
+            .iter()
+            .map(|t| format!("{}:{:.2}", t.name, t.accuracy))
+            .collect();
         println!("mixcal m={m} avg {:.3} [{}]", acc.avg_accuracy, per.join(" "));
     }
     Ok(())

@@ -52,8 +52,10 @@ fn main() -> Result<()> {
         Some(device),
         &xla::Literal::vec1(&vec![0.0f32; 128 * 128]).reshape(&[128, 128])?,
     )?;
-    let bb = client
-        .buffer_from_host_literal(Some(device), &xla::Literal::vec1(&vec![1.0f32; 128]).reshape(&[128])?)?;
+    let bb = client.buffer_from_host_literal(
+        Some(device),
+        &xla::Literal::vec1(&vec![1.0f32; 128]).reshape(&[128])?,
+    )?;
     let out3 = exe2.execute_b(&[&xb, &wb, &bb])?;
     println!("execute_b ok, buffers={}", out3[0].len());
     let lit3 = out3[0][0].to_literal_sync()?;

@@ -12,12 +12,19 @@ fn main() -> anyhow::Result<()> {
     let draft = Engine::load(runtime, "draft").unwrap();
     let prompt = &wb.calib.tokens[..64];
     for m in [2usize, 3] {
-        let target = wb.engine.with_plan(wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap()).unwrap();
+        let plan = wb.report.plan_attn_nbl(m, Criterion::CcaBound).unwrap();
+        let target = wb.engine.with_plan(plan).unwrap();
         for rep in 0..4 {
             let dec = SpeculativeDecoder::new(&target, &draft, 4);
             let t = Timer::start();
             let (_, stats) = dec.generate(prompt, 48).unwrap();
-            println!("m={m} rep={rep} {:.3}s rounds={} draft={} acc={:.2}", t.elapsed_s(), stats.rounds, stats.draft_steps, stats.acceptance_rate());
+            println!(
+                "m={m} rep={rep} {:.3}s rounds={} draft={} acc={:.2}",
+                t.elapsed_s(),
+                stats.rounds,
+                stats.draft_steps,
+                stats.acceptance_rate()
+            );
         }
     }
     Ok(())

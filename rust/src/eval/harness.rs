@@ -98,7 +98,12 @@ pub struct EvalSummary {
 }
 
 /// Run every task in the menu on the engine.
-pub fn evaluate_all(engine: &Engine, tasks: &[TaskSpec], n_items: usize, seed: u64) -> Result<EvalSummary> {
+pub fn evaluate_all(
+    engine: &Engine,
+    tasks: &[TaskSpec],
+    n_items: usize,
+    seed: u64,
+) -> Result<EvalSummary> {
     let mut results = Vec::new();
     for spec in tasks {
         let items = generate(spec, n_items, seed);

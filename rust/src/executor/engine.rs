@@ -273,6 +273,172 @@ impl Engine {
         })
     }
 
+    // ------------------------------------------------------ chunked prefill
+
+    /// Snap a requested prefill chunk size onto the AOT prefill grid:
+    /// the smallest bucket >= `want`, or the largest bucket when `want`
+    /// exceeds the grid. Full chunks then run unpadded at exactly this
+    /// width, so the one-chunk-per-iteration stall bound is a real grid
+    /// width, not an aspiration.
+    pub fn snap_chunk_len(&self, want: usize) -> usize {
+        Grid::bucket(&self.grid.prefill_lens, want)
+            .or_else(|| self.grid.prefill_lens.iter().copied().max())
+            .unwrap_or(0)
+    }
+
+    /// True if the AOT grid carries EVERY op the cache-appending chunked
+    /// prefill needs at batch bucket `bb` for chunk size `chunk`: the
+    /// chunk attention op plus the pointwise mlp/linear/head ops at
+    /// every prefill width <= chunk (full chunks run at `chunk`, the
+    /// ragged tail at its own bucket). Artifacts that predate the chunk
+    /// family make admissions fall back to whole-prompt prefill with
+    /// identical semantics — ci/check_artifacts.py fails the build
+    /// before that silent slow path can ship.
+    pub fn supports_chunked_prefill(&self, bb: usize, chunk: usize) -> bool {
+        let art = self.runtime.artifacts();
+        let widths: Vec<usize> = self
+            .grid
+            .prefill_lens
+            .iter()
+            .copied()
+            .filter(|&t| t <= chunk)
+            .collect();
+        !widths.is_empty()
+            && widths.iter().all(|&t| {
+                art.has_op(&format!("attn_prefill_chunk_b{bb}_t{t}"))
+                    && art.has_op(&format!("mlp_b{bb}_t{t}"))
+                    && art.has_op(&format!("linear_block_b{bb}_t{t}"))
+                    && art.has_op(&format!("head_b{bb}_t{t}"))
+            })
+    }
+
+    /// Append `len` prompt tokens to an in-flight prefill — one chunk of
+    /// the chunked-admission state machine (DESIGN.md §Chunked prefill).
+    ///
+    /// The first chunk (`state.pos == 0`) delegates to
+    /// [`Engine::prefill`] (the fresh `attn_prefill` + `cache_init`
+    /// pair — one layer walk to maintain, not two); later chunks run
+    /// the cache-appending
+    /// `attn_prefill_chunk` op, which consumes the prior KV at
+    /// `state.pos` instead of starting cold. Returns the chunk's final
+    /// hidden states [Bb, Tb, D] so the caller can sample the first
+    /// token from row `len - 1` of the last chunk.
+    ///
+    /// Padding invariant: `ids` are padded to the chunk bucket, so
+    /// cache rows [pos + len, pos + Tb) hold garbage after the call —
+    /// exactly the stale-row protocol of speculative rollback: every
+    /// later REAL write (next chunk, decode steps) lands at the row's
+    /// own position just before the only queries that could see it, so
+    /// garbage is either overwritten first or masked by the causal
+    /// bound forever.
+    pub fn prefill_chunk(&self, state: &mut KvState, ids: &[u32], len: usize) -> Result<Tensor> {
+        let batch = state.batch;
+        if len == 0 || batch == 0 || ids.len() != batch * len {
+            return Err(Error::Shape(format!(
+                "prefill_chunk: {} ids for {batch}x{len}",
+                ids.len()
+            )));
+        }
+        let bb = state.bucket_batch;
+        if batch > bb {
+            return Err(Error::Shape(format!(
+                "prefill_chunk: batch {batch} exceeds bucket {bb}"
+            )));
+        }
+        if state.pos == 0 {
+            let pre = self.prefill(ids, batch, len, None)?;
+            if pre.state.bucket_batch != bb {
+                return Err(Error::Shape(format!(
+                    "prefill_chunk: first chunk bucketed {} vs state bucket {bb}",
+                    pre.state.bucket_batch
+                )));
+            }
+            *state = pre.state;
+            return Ok(pre.hidden);
+        }
+        let tb = self.prefill_bucket(len)?;
+        if state.pos + tb > state.max_ctx {
+            // dynamic_update_slice clamps its start index: a padded
+            // chunk straddling Tmax would silently shift writes onto
+            // committed cache entries (same rule as `decode`)
+            return Err(Error::Serving(format!(
+                "context overflow: chunk at {} + {tb} > {}",
+                state.pos, state.max_ctx
+            )));
+        }
+        let chunk_op = format!("attn_prefill_chunk_b{bb}_t{tb}");
+        if !self.runtime.artifacts().has_op(&chunk_op) {
+            return Err(Error::Artifact(format!(
+                "{chunk_op} not in the AOT grid — rebuild artifacts \
+                 (`python -m compile.aot`) or serve with whole-prompt prefill"
+            )));
+        }
+
+        let mut padded = vec![0u32; bb * tb];
+        for b in 0..batch {
+            padded[b * tb..b * tb + len].copy_from_slice(&ids[b * len..(b + 1) * len]);
+        }
+        let x0 = self.weights.embed(&padded, bb, tb)?;
+        let mut x = lit_from_tensor(&x0)?;
+        let pos = lit_scalar_i32(state.pos as i32);
+
+        let mlp_op = format!("mlp_b{bb}_t{tb}");
+        let lin_op = format!("linear_block_b{bb}_t{tb}");
+
+        for (li, (lits, lp)) in self.layers.iter().zip(&self.plan.layers).enumerate() {
+            match &lp.attn {
+                BlockOp::Attention => {
+                    let (kc, vc) = state.caches[li]
+                        .take()
+                        .ok_or_else(|| Error::Serving(format!("layer {li}: no KV cache")))?;
+                    let out = self.runtime.run_mixed(
+                        &chunk_op,
+                        &[
+                            ArgRef::Lit(&x),
+                            ArgRef::Buf(&lits.attn_norm),
+                            ArgRef::Buf(&lits.wq),
+                            ArgRef::Buf(&lits.wk),
+                            ArgRef::Buf(&lits.wv),
+                            ArgRef::Buf(&lits.wo),
+                            ArgRef::Lit(&kc),
+                            ArgRef::Lit(&vc),
+                            ArgRef::Lit(&pos),
+                        ],
+                    )?;
+                    let [y, kc2, vc2]: [xla::Literal; 3] = out
+                        .try_into()
+                        .map_err(|_| Error::Xla("attn_prefill_chunk arity".into()))?;
+                    state.caches[li] = Some((kc2, vc2));
+                    x = y;
+                }
+                BlockOp::Linear(_) => {
+                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let out = self.runtime.run_mixed(
+                        &lin_op,
+                        &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
+                    )?;
+                    x = into_single(out, "linear_block")?;
+                }
+                BlockOp::Identity => {}
+            }
+            if lp.mlp == MlpOp::Mlp {
+                let out = self.runtime.run_mixed(
+                    &mlp_op,
+                    &[
+                        ArgRef::Lit(&x),
+                        ArgRef::Buf(&lits.mlp_norm),
+                        ArgRef::Buf(&lits.w1),
+                        ArgRef::Buf(&lits.w3),
+                        ArgRef::Buf(&lits.w2),
+                    ],
+                )?;
+                x = into_single(out, "mlp")?;
+            }
+        }
+        state.pos += len;
+        tensor_from_lit(&x)
+    }
+
     // -------------------------------------------------------------- decode
 
     /// Run `s_real` new tokens (per request) through the cached path.
@@ -472,7 +638,11 @@ impl Engine {
     /// the caller rolls rejected suffixes back with `SlotArena::set_pos`
     /// (stale cache entries beyond the accepted position are masked by
     /// pos and overwritten by later writes, exactly as in spec/mod.rs).
-    pub fn decode_rows_spec(&self, arena: &mut SlotArena, rows: &[RowSpecDecode]) -> Result<Tensor> {
+    pub fn decode_rows_spec(
+        &self,
+        arena: &mut SlotArena,
+        rows: &[RowSpecDecode],
+    ) -> Result<Tensor> {
         if rows.is_empty() {
             return Err(Error::Serving("decode_rows: empty row set".into()));
         }
@@ -710,7 +880,13 @@ fn into_single(out: Vec<xla::Literal>, what: &str) -> Result<xla::Literal> {
 }
 
 /// Extract real-token rows and the attention delta (Y = out - in).
-fn rows_delta(x_in: &Tensor, y_out: &Tensor, batch: usize, len: usize, d: usize) -> (Tensor, Tensor) {
+fn rows_delta(
+    x_in: &Tensor,
+    y_out: &Tensor,
+    batch: usize,
+    len: usize,
+    d: usize,
+) -> (Tensor, Tensor) {
     let mut xr = Vec::with_capacity(batch * len * d);
     let mut yr = Vec::with_capacity(batch * len * d);
     for b in 0..batch {

@@ -40,7 +40,12 @@ pub struct KvState {
 unsafe impl Send for KvState {}
 
 impl KvState {
-    pub fn empty(plan: &ModelPlan, cfg: &ModelConfig, batch: usize, bucket_batch: usize) -> KvState {
+    pub fn empty(
+        plan: &ModelPlan,
+        cfg: &ModelConfig,
+        batch: usize,
+        bucket_batch: usize,
+    ) -> KvState {
         let caches = plan
             .layers
             .iter()
@@ -65,14 +70,28 @@ impl KvState {
     }
 }
 
+/// Lifecycle of one arena row. `Reserved` is the partial-prefill state:
+/// a chunked admission has claimed the row (so later admissions cannot
+/// strand its finished prefill without a slot) but the row holds no
+/// decodable cache yet — the decode iteration skips it exactly like a
+/// free row, and `adopt` overwrites it whole.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Slot {
+    Free,
+    Reserved,
+    Occupied(usize),
+}
+
 /// Per-request KV slot arena for the continuous-batching decode group.
 ///
 /// One fixed batch bucket of rows; row r of every layer cache literal is
 /// slot r's private segment with its own position (the rows-decode op
 /// consumes the positions as an i32 vector). Requests join by adopting a
-/// freshly prefilled batch-1 [`KvState`] into a free row and leave by
-/// releasing the row — the batch never restarts. Substituted layers hold
-/// `None`, so NBL's structural KV saving applies per slot.
+/// freshly prefilled batch-1 [`KvState`] into a free (or reserved) row
+/// and leave by releasing the row — the batch never restarts.
+/// Substituted layers hold `None`, so NBL's structural KV saving applies
+/// per slot. A multi-chunk admission reserves its row up front
+/// (DESIGN.md §Chunked prefill) and adopts on the final chunk.
 pub struct SlotArena {
     /// Rows in the arena (an executable batch bucket).
     pub bucket_batch: usize,
@@ -81,8 +100,8 @@ pub struct SlotArena {
     /// Per layer: Some((k, v)) [Bb, Tmax, Hkv, dh] iff the plan keeps
     /// attention there.
     pub caches: Vec<Option<(xla::Literal, xla::Literal)>>,
-    /// Per slot: tokens cached so far; None = free.
-    pos: Vec<Option<usize>>,
+    /// Per slot lifecycle state (position = tokens cached so far).
+    slots: Vec<Slot>,
 }
 
 // Literals are plain host allocations on the CPU PJRT backend.
@@ -107,41 +126,77 @@ impl SlotArena {
             bucket_batch,
             max_ctx: cfg.max_ctx,
             caches,
-            pos: vec![None; bucket_batch],
+            slots: vec![Slot::Free; bucket_batch],
         })
     }
 
-    /// Lowest-index free slot, if any.
+    /// Lowest-index free slot, if any (reserved rows are not free).
     pub fn free_slot(&self) -> Option<usize> {
-        self.pos.iter().position(|p| p.is_none())
+        self.slots.iter().position(|s| *s == Slot::Free)
     }
 
-    /// Indices of occupied slots (ascending).
+    /// Number of free slots (reserved rows count as taken).
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| **s == Slot::Free).count()
+    }
+
+    /// Indices of occupied slots (ascending); reserved rows are not
+    /// occupied — they hold no decodable cache yet.
     pub fn occupied(&self) -> Vec<usize> {
-        (0..self.bucket_batch).filter(|&s| self.pos[s].is_some()).collect()
+        (0..self.bucket_batch)
+            .filter(|&s| matches!(self.slots[s], Slot::Occupied(_)))
+            .collect()
     }
 
     pub fn occupancy(&self) -> usize {
-        self.pos.iter().filter(|p| p.is_some()).count()
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, Slot::Occupied(_)))
+            .count()
     }
 
-    /// Tokens cached in `slot` (None if free).
+    /// Tokens cached in `slot` (None if free or reserved).
     pub fn pos(&self, slot: usize) -> Option<usize> {
-        self.pos.get(slot).copied().flatten()
+        match self.slots.get(slot) {
+            Some(Slot::Occupied(p)) => Some(*p),
+            _ => None,
+        }
     }
 
     pub fn set_pos(&mut self, slot: usize, pos: usize) {
-        self.pos[slot] = Some(pos);
+        self.slots[slot] = Slot::Occupied(pos);
     }
 
-    /// Mark a slot free; its rows become garbage and are fully
-    /// overwritten by the next `adopt` into the same slot.
+    /// Claim a free row for an in-flight chunked prefill: the row stops
+    /// being admissible but does not join decode iterations until the
+    /// finished prefill is adopted into it.
+    pub fn reserve(&mut self, slot: usize) -> Result<()> {
+        match self.slots.get(slot) {
+            Some(Slot::Free) => {
+                self.slots[slot] = Slot::Reserved;
+                Ok(())
+            }
+            Some(_) => Err(Error::Serving(format!("slot {slot} is not free"))),
+            None => Err(Error::Serving(format!(
+                "slot {slot} out of range ({} rows)",
+                self.bucket_batch
+            ))),
+        }
+    }
+
+    pub fn is_reserved(&self, slot: usize) -> bool {
+        matches!(self.slots.get(slot), Some(Slot::Reserved))
+    }
+
+    /// Mark a slot free (from any state); its rows become garbage and
+    /// are fully overwritten by the next `adopt` into the same slot.
     pub fn release(&mut self, slot: usize) {
-        self.pos[slot] = None;
+        self.slots[slot] = Slot::Free;
     }
 
-    /// Migrate a freshly prefilled batch-1 `KvState` into row `slot`:
-    /// copy row 0 of each layer cache and claim the slot at `state.pos`.
+    /// Migrate a freshly prefilled batch-1 `KvState` into row `slot`
+    /// (free, or reserved by the chunked-admission machine): copy row 0
+    /// of each layer cache and claim the slot at `state.pos`.
     pub fn adopt(&mut self, slot: usize, state: &KvState) -> Result<()> {
         if slot >= self.bucket_batch {
             return Err(Error::Serving(format!(
@@ -149,7 +204,7 @@ impl SlotArena {
                 self.bucket_batch
             )));
         }
-        if self.pos[slot].is_some() {
+        if matches!(self.slots[slot], Slot::Occupied(_)) {
             return Err(Error::Serving(format!("slot {slot} is occupied")));
         }
         if state.caches.len() != self.caches.len() {
@@ -173,7 +228,7 @@ impl SlotArena {
                 }
             }
         }
-        self.pos[slot] = Some(state.pos);
+        self.slots[slot] = Slot::Occupied(state.pos);
         Ok(())
     }
 }
@@ -453,6 +508,31 @@ mod tests {
         assert_eq!(arena.free_slot(), Some(0));
         assert_eq!(arena.occupied(), vec![2]);
         assert_eq!(arena.pos(0), None);
+    }
+
+    #[test]
+    fn arena_reservation_lifecycle() {
+        let c = cfg();
+        let plan = crate::nbl::plan::ModelPlan::baseline(2);
+        let mut arena = SlotArena::new(&plan, &c, 4).unwrap();
+        // a reserved row is neither free nor occupied
+        arena.reserve(0).unwrap();
+        assert!(arena.is_reserved(0));
+        assert_eq!(arena.free_slot(), Some(1));
+        assert_eq!(arena.free_slots(), 3);
+        assert_eq!(arena.occupancy(), 0);
+        assert!(arena.occupied().is_empty());
+        assert_eq!(arena.pos(0), None);
+        // cannot double-reserve, reserve an occupied row, or reserve
+        // out of range
+        assert!(arena.reserve(0).is_err());
+        arena.set_pos(1, 5);
+        assert!(arena.reserve(1).is_err());
+        assert!(arena.reserve(9).is_err());
+        // release returns a reserved row to the free pool
+        arena.release(0);
+        assert!(!arena.is_reserved(0));
+        assert_eq!(arena.free_slot(), Some(0));
     }
 
     #[test]

@@ -38,7 +38,11 @@ impl Sampler {
         // top-k filter then softmax at temperature
         let mut idx: Vec<usize> = (0..logits.len()).collect();
         idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-        let k = if self.params.top_k == 0 { logits.len() } else { self.params.top_k.min(logits.len()) };
+        let k = if self.params.top_k == 0 {
+            logits.len()
+        } else {
+            self.params.top_k.min(logits.len())
+        };
         let kept = &idx[..k];
         let t = self.params.temperature;
         let max = logits[kept[0]] as f64;

@@ -121,6 +121,11 @@ pub fn stats_to_json(
         ("admissions", Json::Num(g.admissions as f64)),
         ("slot_reuses", Json::Num(g.slot_reuses as f64)),
         ("committed_tokens", Json::Num(g.committed_tokens as f64)),
+        ("prefill_chunks", Json::Num(g.prefill_chunks as f64)),
+        ("chunked_admissions", Json::Num(g.chunked_admissions as f64)),
+        ("chunk_stalls", Json::Num(g.chunk_stalls as f64)),
+        ("chunk_stall_ms_total", Json::Num(g.chunk_stall_s * 1e3)),
+        ("chunk_stall_ms_mean", Json::Num(g.mean_chunk_stall_ms())),
         ("spec_rounds", Json::Num(g.spec_rounds as f64)),
         ("spec_proposed", Json::Num(g.spec_proposed as f64)),
         ("spec_accepted", Json::Num(g.spec_accepted as f64)),
@@ -198,6 +203,10 @@ mod tests {
             spec_rounds: 10,
             spec_proposed: 40,
             spec_accepted: 30,
+            prefill_chunks: 9,
+            chunked_admissions: 2,
+            chunk_stalls: 5,
+            chunk_stall_s: 0.05,
         };
         let j = stats_to_json(&s, &g, 512, 1024);
         let back = Json::parse(&j.to_string()).unwrap();
@@ -207,8 +216,13 @@ mod tests {
         assert!((back.get("mean_batch_occupancy").unwrap().as_f64().unwrap() - 0.375).abs() < 1e-9);
         assert!((back.get("kv_utilization").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
         assert_eq!(back.get("spec_rounds").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(back.get("prefill_chunks").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(back.get("chunked_admissions").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.get("chunk_stalls").unwrap().as_usize().unwrap(), 5);
+        assert!((back.get("chunk_stall_ms_mean").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
         assert!((back.get("spec_acceptance_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
-        assert!((back.get("tokens_per_row_iteration").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        let tpi = back.get("tokens_per_row_iteration").unwrap().as_f64().unwrap();
+        assert!((tpi - 2.0).abs() < 1e-9);
     }
 
     #[test]

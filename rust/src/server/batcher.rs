@@ -44,6 +44,14 @@ impl Scheduler {
         self.queue.push_front(req);
     }
 
+    /// The oldest waiting request — the only admissible one under the
+    /// head-of-queue discipline. The worker peeks it to decide whether
+    /// the head must wait for the in-flight chunked prefill (multi-chunk
+    /// prompts run one machine at a time) before popping anything.
+    pub fn head(&self) -> Option<&GenRequest> {
+        self.queue.front()
+    }
+
     pub fn waiting(&self) -> usize {
         self.queue.len()
     }

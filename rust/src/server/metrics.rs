@@ -126,6 +126,22 @@ pub struct SchedulerGauges {
     pub kv_capacity: usize,
     /// Tokens committed by decode iterations (all rows, all widths).
     pub committed_tokens: u64,
+    /// Prefill chunks executed by the chunked-admission state machine
+    /// (DESIGN.md §Chunked prefill), including each machine's first and
+    /// final chunk.
+    pub prefill_chunks: u64,
+    /// Admissions whose prompt was prefilled to completion through the
+    /// multi-chunk state machine rather than one whole-prompt call
+    /// (counted even when the request finishes on its prefill token and
+    /// never occupies a decode row, e.g. a max-context prompt).
+    pub chunked_admissions: u64,
+    /// Chunks that ran while decode rows were live — each one stalls
+    /// the whole decode group for its duration (the prefill/decode
+    /// interference the chunk size bounds).
+    pub chunk_stalls: u64,
+    /// Seconds decode rows spent stalled behind prefill chunks (sum of
+    /// the durations counted by `chunk_stalls`).
+    pub chunk_stall_s: f64,
     /// Speculative verify passes (target iterations with width > 1).
     pub spec_rounds: u64,
     /// Draft tokens that entered verification.
@@ -177,6 +193,16 @@ impl SchedulerGauges {
         }
         self.committed_tokens as f64 / self.occupied_rows as f64
     }
+
+    /// Mean decode stall per interfering prefill chunk, in milliseconds
+    /// — the per-iteration head-of-line cost chunking bounds (one grid
+    /// width instead of a whole long prompt).
+    pub fn mean_chunk_stall_ms(&self) -> f64 {
+        if self.chunk_stalls == 0 {
+            return 0.0;
+        }
+        self.chunk_stall_s * 1e3 / self.chunk_stalls as f64
+    }
 }
 
 /// Aggregates request timings across the server lifetime.
@@ -218,6 +244,22 @@ impl MetricsHub {
         g.spec_accepted += accepted as u64;
     }
 
+    /// One prefill chunk ran; `stalled` = decode rows were live and
+    /// waited `dt_s` seconds for it (the interference gauge).
+    pub fn note_prefill_chunk(&self, stalled: bool, dt_s: f64) {
+        let mut g = self.gauges.lock().unwrap();
+        g.prefill_chunks += 1;
+        if stalled {
+            g.chunk_stalls += 1;
+            g.chunk_stall_s += dt_s;
+        }
+    }
+
+    /// An admission completed through the multi-chunk prefill machine.
+    pub fn note_chunked_admission(&self) {
+        self.gauges.lock().unwrap().chunked_admissions += 1;
+    }
+
     /// A request was admitted into a slot (`reused` = the row had served
     /// an earlier, now-finished request).
     pub fn note_admission(&self, reused: bool) {
@@ -238,6 +280,13 @@ impl MetricsHub {
 
     pub fn gauges(&self) -> SchedulerGauges {
         self.gauges.lock().unwrap().clone()
+    }
+
+    /// Snapshot of every recorded request timing — benches slice TTFT
+    /// by prompt-length class (e.g. p50 TTFT of short requests admitted
+    /// behind a long prompt, the number chunked prefill exists to lower).
+    pub fn timings(&self) -> Vec<RequestTiming> {
+        self.timings.lock().unwrap().clone()
     }
 
     pub fn len(&self) -> usize {
@@ -370,6 +419,23 @@ mod tests {
         let p = plain.gauges();
         assert!((p.tokens_per_row_iteration() - 1.0).abs() < 1e-9);
         assert_eq!(p.acceptance_rate(), 0.0);
+    }
+
+    #[test]
+    fn chunk_gauges_track_stall_time() {
+        let hub = MetricsHub::new();
+        hub.note_prefill_chunk(false, 0.050); // admission ramp: no decode live
+        hub.note_prefill_chunk(true, 0.010);
+        hub.note_prefill_chunk(true, 0.030);
+        hub.note_chunked_admission();
+        let g = hub.gauges();
+        assert_eq!(g.prefill_chunks, 3);
+        assert_eq!(g.chunked_admissions, 1);
+        assert_eq!(g.chunk_stalls, 2);
+        assert!((g.chunk_stall_s - 0.040).abs() < 1e-12);
+        assert!((g.mean_chunk_stall_ms() - 20.0).abs() < 1e-9);
+        // no interfering chunks -> a well-defined zero, not NaN
+        assert_eq!(MetricsHub::new().gauges().mean_chunk_stall_ms(), 0.0);
     }
 
     #[test]

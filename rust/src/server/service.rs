@@ -26,12 +26,13 @@ use std::sync::Arc;
 use crate::data::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
 use crate::executor::engine::{Engine, RowDecode, RowSpecDecode};
-use crate::kvcache::{kv_bytes, slot_bytes, KvLeaseOwned, KvPool, SlotArena};
+use crate::kvcache::{kv_bytes, slot_bytes, KvLeaseOwned, KvPool, KvState, SlotArena};
 use crate::nbl::plan::ModelPlan;
 use crate::sampling::{argmax, Sampler};
 use crate::server::api::{GenRequest, GenResponse};
 use crate::server::batcher::{Batcher, Scheduler};
 use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
+use crate::util::timer::Timer;
 
 /// Worker-loop scheduling protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +71,14 @@ pub struct ServerConfig {
     pub mode: BatchMode,
     /// Speculative draft-and-verify iterations (Continuous mode only).
     pub spec: Option<SpecConfig>,
+    /// Chunked prefill (DESIGN.md §Chunked prefill): admissions whose
+    /// prompt exceeds this many tokens prefill as a sequence of
+    /// cache-appending chunks, at most one chunk per decode iteration,
+    /// so in-flight decode rows never stall behind a whole long prompt.
+    /// Snapped onto the AOT prefill grid at serve time; 0 disables
+    /// chunking (whole-prompt admission prefill — also the automatic
+    /// fallback when the artifact set predates the chunk ops).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +89,7 @@ impl Default for ServerConfig {
             eos: None,
             mode: BatchMode::Continuous,
             spec: None,
+            prefill_chunk: 128,
         }
     }
 }
@@ -258,6 +268,31 @@ struct SpecState {
     width: usize,
 }
 
+/// A multi-chunk admission in flight (DESIGN.md §Chunked prefill): the
+/// prompt is prefilled one cache-appending chunk per scheduler
+/// iteration instead of one whole blocking call, so decode rows stall
+/// for at most one grid-width chunk at a time. The machine owns its
+/// arena-row reservation (and the draft row under speculation) from the
+/// first chunk, so later single-chunk admissions can never strand a
+/// finished prefill without a slot. The TTFT stopwatch keeps running
+/// from submission: the first token is marked only when the FINAL
+/// chunk's logits are sampled, N iterations after admission started.
+struct PendingPrefill {
+    req: GenRequest,
+    watch: Stopwatch,
+    /// Slot-granular KV reservation, carried into the `ActiveSlot`.
+    lease: KvLeaseOwned,
+    /// Reserved arena row (both arenas under speculation).
+    slot: usize,
+    /// Batch-1 cache being built chunk by chunk (`state.pos` == tokens
+    /// prefilled so far), adopted into the reserved row when complete.
+    state: KvState,
+    /// Draft-engine cache built in lockstep (speculative mode only).
+    draft_state: Option<KvState>,
+    /// Prompt tokens prefilled so far.
+    done: usize,
+}
+
 /// Continuous-batching worker: one decode iteration per loop turn over
 /// the occupied slots; admissions and departures happen between
 /// iterations without restarting the batch. With speculation enabled an
@@ -300,6 +335,30 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
         + spec
             .as_ref()
             .map_or(0, |sp| slot_bytes(engine.config(), &sp.engine.plan));
+    // chunked prefill: snap the configured chunk size onto the AOT
+    // prefill grid. 0 — or an artifact set that predates the
+    // attn_prefill_chunk family — disables chunking, and admissions
+    // prefill whole prompts (the fallback ladder's last rung; see
+    // DESIGN.md §Chunked prefill).
+    let chunk = match server.config.prefill_chunk {
+        0 => 0,
+        want => {
+            let c = engine.snap_chunk_len(want);
+            if c != want {
+                eprintln!("server: prefill chunk {want} snapped to AOT bucket {c}");
+            }
+            if engine.supports_chunked_prefill(1, c) {
+                c
+            } else {
+                eprintln!(
+                    "server: attn_prefill_chunk ops missing from the AOT grid; \
+                     admissions prefill whole prompts (rebuild artifacts)"
+                );
+                0
+            }
+        }
+    };
+    let mut pending: Option<PendingPrefill> = None;
     let mut sched = Scheduler::new();
     let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
     // stopwatches start at SUBMISSION so TTFT includes scheduler queue
@@ -311,8 +370,10 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
     let mut row_used: Vec<bool> = Vec::new();
 
     'outer: loop {
-        // ---- intake: block when idle, poll between iterations
-        let idle = slots.iter().all(|s| s.is_none()) && sched.waiting() == 0;
+        // ---- intake: block when idle, poll between iterations (a
+        // pending chunked prefill is work, not idleness)
+        let idle =
+            slots.iter().all(|s| s.is_none()) && sched.waiting() == 0 && pending.is_none();
         if idle {
             match rx.recv() {
                 Ok(sub) => {
@@ -366,10 +427,19 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
         }
         let Some(arena_ref) = arena.as_mut() else { continue };
 
-        // ---- admission: oldest-first into free slots while budget holds
+        // ---- admission: oldest-first into free slots while budget
+        // holds. Prompts longer than one chunk enter the multi-iteration
+        // chunked-prefill machine (at most one in flight); single-chunk
+        // prompts admit whole, exactly as before chunking existed.
         loop {
+            if pending.is_some() && sched.head().is_none_or(|r| r.prompt.len() > chunk) {
+                // the running machine owns the chunk budget: a long head
+                // waits for it (strict FIFO among multi-chunk prompts);
+                // single-chunk heads may still slip into free slots
+                break;
+            }
             let Some(slot) = arena_ref.free_slot() else { break };
-            let free = arena_ref.bucket_batch - arena_ref.occupancy();
+            let free = arena_ref.free_slots();
             let Some(req) = sched.next_admission(free, &server.pool, per_slot) else { break };
             let lease = match KvPool::reserve_owned(&server.pool, per_slot) {
                 Ok(l) => l,
@@ -380,14 +450,30 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
                 }
             };
             let watch = take_watch(&mut watches, req.id);
+            if chunk > 0 && req.prompt.len() > chunk {
+                pending = start_chunked(
+                    server, arena_ref, spec.as_mut(), slot, req, watch, lease, &mut replies,
+                );
+                continue;
+            }
             admit(
                 server, arena_ref, spec.as_mut(), slot, req, watch, lease, &mut slots,
                 &mut row_used, &mut replies,
             );
         }
 
-        // ---- a head that can never fit must not hang the queue
-        if arena_ref.occupancy() == 0
+        // ---- chunked prefill: advance the pending admission by exactly
+        // ONE cache-appending chunk, then fall through to the decode
+        // iteration — in-flight rows never wait for more than one chunk
+        advance_chunked(
+            server, arena_ref, spec.as_mut(), &mut pending, &mut slots, &mut row_used,
+            &mut replies, chunk,
+        );
+
+        // ---- a head that can never fit must not hang the queue (a
+        // pending machine holds a lease and will free it; skip)
+        if pending.is_none()
+            && arena_ref.occupancy() == 0
             && sched.waiting() > 0
             && !server.pool.would_fit(per_slot)
         {
@@ -424,6 +510,12 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
 
     // ---- shutdown: every queued and in-flight request gets an answer
     // (a silently dropped reply channel looks like a hung client)
+    if let Some(p) = pending.take() {
+        respond(
+            &mut replies,
+            error_response(p.req.id, Error::Serving("server shut down".into())),
+        );
+    }
     for r in sched.drain() {
         respond(&mut replies, error_response(r.id, Error::Serving("server shut down".into())));
     }
@@ -438,9 +530,13 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
     }
 }
 
-/// Prefill a newly admitted request solo, sample its first token, and
-/// (unless it already finished) migrate its cache into arena row `slot`
-/// — of the target arena AND, under speculation, the draft arena.
+/// Prefill a newly admitted SINGLE-CHUNK request solo, sample its first
+/// token, and (unless it already finished) migrate its cache into arena
+/// row `slot` — of the target arena AND, under speculation, the draft
+/// arena. This still runs on the worker thread while the iteration loop
+/// holds, but only for prompts no longer than one chunk — the bounded
+/// stall the chunk size defines; longer prompts go through
+/// [`start_chunked`]/[`advance_chunked`] instead.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     server: &Arc<Server>,
@@ -523,6 +619,189 @@ fn admit(
         effective_max,
         _lease: lease,
     });
+}
+
+/// Begin a multi-chunk admission (DESIGN.md §Chunked prefill): answer
+/// zero-token requests immediately, otherwise reserve arena row `slot`
+/// (in both arenas under speculation) and return the state machine that
+/// [`advance_chunked`] drives one chunk per iteration. Returns None if
+/// the request was answered (or the reservation failed) instead of
+/// entering prefill.
+#[allow(clippy::too_many_arguments)]
+fn start_chunked(
+    server: &Arc<Server>,
+    arena: &mut SlotArena,
+    spec: Option<&mut SpecState>,
+    slot: usize,
+    req: GenRequest,
+    watch: Stopwatch,
+    lease: KvLeaseOwned,
+    replies: &mut HashMap<u64, Sender<GenResponse>>,
+) -> Option<PendingPrefill> {
+    let engine = &server.engine;
+    let cfg = engine.config();
+    if req.max_new_tokens == 0 {
+        let timing = watch.finish(req.prompt.len(), 0);
+        respond(replies, ok_response(req.id, Vec::new(), &timing));
+        return None;
+    }
+    if let Err(e) = arena.reserve(slot) {
+        respond(replies, error_response(req.id, e));
+        return None;
+    }
+    let mut draft_state = None;
+    if let Some(sp) = spec {
+        let reserved = sp
+            .arena
+            .as_mut()
+            .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
+            .and_then(|da| da.reserve(slot));
+        if let Err(e) = reserved {
+            arena.release(slot);
+            respond(replies, error_response(req.id, e));
+            return None;
+        }
+        draft_state = Some(KvState::empty(&sp.engine.plan, cfg, 1, 1));
+    }
+    Some(PendingPrefill {
+        state: KvState::empty(&engine.plan, cfg, 1, 1),
+        draft_state,
+        req,
+        watch,
+        lease,
+        slot,
+        done: 0,
+    })
+}
+
+/// Run ONE chunk of the pending admission through the target — and, in
+/// lockstep, the draft — engine. On the final chunk: sample the first
+/// token from the chunk's last real row, mark TTFT on the stopwatch
+/// that has been running since submission (the bugfix invariant: N
+/// chunk iterations of queue-adjacent prefill still count into TTFT),
+/// and adopt the built caches into the reserved slot(s).
+#[allow(clippy::too_many_arguments)]
+fn advance_chunked(
+    server: &Arc<Server>,
+    arena: &mut SlotArena,
+    mut spec: Option<&mut SpecState>,
+    pending: &mut Option<PendingPrefill>,
+    slots: &mut [Option<ActiveSlot>],
+    row_used: &mut [bool],
+    replies: &mut HashMap<u64, Sender<GenResponse>>,
+    chunk: usize,
+) {
+    let engine = &server.engine;
+    let Some(p) = pending.as_mut() else { return };
+    let len = p.req.prompt.len();
+    let step = chunk.min(len - p.done);
+    let ids = &p.req.prompt[p.done..p.done + step];
+    let timer = Timer::start();
+    let mut run = engine.prefill_chunk(&mut p.state, ids, step);
+    if run.is_ok() {
+        if let Some(sp) = spec.as_mut() {
+            // draft lockstep: the draft cache must cover exactly the
+            // same prefix, or the first draft-and-verify round would
+            // propose from a stale context
+            run = match p.draft_state.as_mut() {
+                Some(ds) => sp.engine.prefill_chunk(ds, ids, step).and(run),
+                None => Err(Error::Serving("draft state missing mid-prefill".into())),
+            };
+        }
+    }
+    // every chunk that runs while decode rows are live stalls the whole
+    // group for its duration — the interference gauge chunking bounds
+    server.metrics.note_prefill_chunk(arena.occupancy() > 0, timer.elapsed_s());
+    let hidden = match run {
+        Ok(h) => h,
+        Err(e) => {
+            let p = pending.take().unwrap();
+            release_reservation(arena, spec.as_deref_mut(), p.slot);
+            respond(replies, error_response(p.req.id, e));
+            return;
+        }
+    };
+    p.done += step;
+    if p.done < len {
+        return;
+    }
+
+    // ---- final chunk: first token, then adoption into the reserved row
+    let p = pending.take().unwrap();
+    // the machine completed its prefill — counted here, not at adoption:
+    // a max-context prompt whose budget is exactly the prefill token
+    // (effective_max 1) still chunked its way in
+    server.metrics.note_chunked_admission();
+    let logits = match engine.head(&hidden) {
+        Ok(l) => l,
+        Err(e) => {
+            release_reservation(arena, spec.as_deref_mut(), p.slot);
+            respond(replies, error_response(p.req.id, e));
+            return;
+        }
+    };
+    let mut watch = p.watch;
+    let mut sampler = Sampler::new(p.req.params.clone());
+    let first = sampler.sample(logits.at2(0, step - 1));
+    watch.mark_token();
+    let outputs = vec![first];
+    let cfg = engine.config();
+    // same budget as whole-prompt admission: the prefill token is free
+    // and the k-th decode write lands at len + k - 1
+    let effective_max = p
+        .req
+        .max_new_tokens
+        .min((cfg.max_ctx + 1).saturating_sub(len))
+        .max(1);
+    if Some(first) == server.config.eos || outputs.len() >= effective_max {
+        // finished on the prefill token: the reserved row never joins
+        release_reservation(arena, spec.as_deref_mut(), p.slot);
+        let timing = watch.finish(len, outputs.len());
+        let resp = ok_response(p.req.id, outputs, &timing);
+        server.metrics.record(timing);
+        respond(replies, resp);
+        return;
+    }
+    if let Err(e) = arena.adopt(p.slot, &p.state) {
+        release_reservation(arena, spec.as_deref_mut(), p.slot);
+        respond(replies, error_response(p.req.id, e));
+        return;
+    }
+    if let Some(sp) = spec.as_mut() {
+        let adopted = match (sp.arena.as_mut(), p.draft_state.as_ref()) {
+            (Some(da), Some(ds)) => da.adopt(p.slot, ds),
+            _ => Err(Error::Serving("draft arena missing at adoption".into())),
+        };
+        if let Err(e) = adopted {
+            arena.release(p.slot);
+            if let Some(da) = sp.arena.as_mut() {
+                da.release(p.slot);
+            }
+            respond(replies, error_response(p.req.id, e));
+            return;
+        }
+    }
+    server.metrics.note_admission(row_used[p.slot]);
+    row_used[p.slot] = true;
+    slots[p.slot] = Some(ActiveSlot {
+        req: p.req,
+        sampler,
+        outputs,
+        watch,
+        next: first,
+        effective_max,
+        _lease: p.lease,
+    });
+}
+
+/// Return a chunked admission's reserved row(s) to the free pool.
+fn release_reservation(arena: &mut SlotArena, spec: Option<&mut SpecState>, slot: usize) {
+    arena.release(slot);
+    if let Some(sp) = spec {
+        if let Some(da) = sp.arena.as_mut() {
+            da.release(slot);
+        }
+    }
 }
 
 /// Token at absolute context position `pos` of a resident request

@@ -124,7 +124,7 @@ fn handle_conn(
                     server.pool.in_use(),
                     server.pool.capacity(),
                 );
-                writeln!(writer, "{}", stats.to_string())?;
+                writeln!(writer, "{stats}")?;
                 continue;
             }
         }
@@ -134,7 +134,7 @@ fn handle_conn(
                 .unwrap_or_else(|e| err_resp(0, &e.to_string())),
             Err(e) => err_resp(0, &e.to_string()),
         };
-        writeln!(writer, "{}", resp.to_json().to_string())?;
+        writeln!(writer, "{}", resp.to_json())?;
     }
 }
 

@@ -135,12 +135,6 @@ impl Json {
 
     // ---------------------------------------------------------------- write
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -179,6 +173,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialized JSON text (`to_string()` comes with it). An inherent
+/// `to_string` would shadow this and trip clippy's `inherent_to_string`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

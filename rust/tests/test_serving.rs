@@ -622,6 +622,227 @@ fn oversized_batch_returns_shape_error() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// chunked prefill (ISSUE 4: cache-appending chunks interleaved with decode)
+
+/// ASCII text of exactly `len` byte-tokens from a repeating phrase.
+fn long_text(len: usize) -> String {
+    "the small robot walked around the garden and "
+        .chars()
+        .cycle()
+        .take(len)
+        .collect()
+}
+
+#[test]
+fn engine_prefill_chunk_chain_matches_whole_prefill() {
+    // token-level parity at the engine layer: a 150-token prompt (not
+    // divisible by the 32-token chunk) prefilled as 32-token chunks +
+    // a ragged tail must greedy-decode identically to one whole prefill
+    let engine = engine("main");
+    let cfg = engine.config();
+    let plan = nbl::nbl::plan::ModelPlan::baseline(cfg.n_layers);
+    let prompt = nbl::data::ByteTokenizer::new().encode(&long_text(150));
+    let chunk = 32usize;
+
+    let whole = engine.prefill(&prompt, 1, prompt.len(), None).unwrap();
+    let mut whole_state = whole.state;
+    let logits = engine.head(&whole.hidden).unwrap();
+    let mut want = vec![nbl::sampling::argmax(logits.at2(0, prompt.len() - 1))];
+
+    let mut state = nbl::kvcache::KvState::empty(&plan, cfg, 1, 1);
+    let mut done = 0usize;
+    let mut last = None;
+    while done < prompt.len() {
+        let step = chunk.min(prompt.len() - done);
+        let hidden = engine
+            .prefill_chunk(&mut state, &prompt[done..done + step], step)
+            .unwrap();
+        last = Some((hidden, step));
+        done += step;
+    }
+    assert_eq!(state.pos, prompt.len(), "chunked state must land on the prompt length");
+    let (hidden, tail) = last.expect("at least one chunk ran");
+    let logits = engine.head(&hidden).unwrap();
+    let mut got = vec![nbl::sampling::argmax(logits.at2(0, tail - 1))];
+
+    // continue greedily through the cached path on BOTH states: every
+    // chunk boundary the chain crossed must be invisible downstream
+    for _ in 0..16 {
+        let lw = engine.decode(&mut whole_state, &[*want.last().unwrap()], 1).unwrap();
+        want.push(nbl::sampling::argmax(lw.at2(0, 0)));
+        let lg = engine.decode(&mut state, &[*got.last().unwrap()], 1).unwrap();
+        got.push(nbl::sampling::argmax(lg.at2(0, 0)));
+    }
+    assert_eq!(got, want, "chunked prefill diverged from whole prefill");
+}
+
+#[test]
+fn chunked_continuous_matches_solo_under_churn() {
+    // end-to-end parity: long prompts (crossing several chunk
+    // boundaries, lengths not divisible by the chunk) mixed with shorts
+    // through the chunked continuous worker must match the synchronous
+    // whole-prefill protocol token for token — including admissions that
+    // land mid-prefill (batch churn around the pending machine)
+    let engine = Arc::new(engine("main"));
+    let solo_server = Server::new(engine.clone(), ServerConfig::default());
+    let reqs = [
+        req(1, &long_text(150), 10),
+        req(2, "the bright engine ", 12),
+        req(3, &long_text(97), 10),
+        req(4, "ring ", 12),
+        req(5, "a hidden garden of ", 12),
+    ];
+    let solo: Vec<_> = reqs.iter().map(|r| solo_server.generate_one(r)).collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+
+    let cfg = ServerConfig { prefill_chunk: 32, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = reqs.iter().map(|r| handle.submit(r.clone())).collect();
+    for (rx, s) in rxs.into_iter().zip(&solo) {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, s.tokens, "chunked continuous decode diverged from solo");
+    }
+    let g = metrics.gauges();
+    assert_eq!(g.admissions, 5);
+    assert_eq!(g.chunked_admissions, 2, "both long prompts must chunk: {g:?}");
+    // 150 -> 4x32 + 22-token tail = 5 chunks; 97 -> 3x32 + 1 = 4 chunks
+    assert_eq!(g.prefill_chunks, 9, "chunk count must match the grid math: {g:?}");
+    handle.shutdown();
+}
+
+#[test]
+fn chunked_spec_continuous_matches_solo() {
+    // chunked prefill composes with speculative serving: the draft
+    // arena prefills the same chunks in lockstep, and outputs still
+    // match the plain synchronous protocol exactly
+    let engine = Arc::new(engine("main"));
+    let solo_server = Server::new(engine.clone(), ServerConfig::default());
+    let reqs = [
+        req(1, &long_text(140), 10),
+        req(2, "the quiet river ", 12),
+        req(3, "a hidden garden of ", 12),
+    ];
+    let solo: Vec<_> = reqs.iter().map(|r| solo_server.generate_one(r)).collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(2);
+    let cfg = ServerConfig {
+        prefill_chunk: 32,
+        spec: Some(SpecConfig { draft_plan, width: 4 }),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = reqs.iter().map(|r| handle.submit(r.clone())).collect();
+    for (rx, s) in rxs.into_iter().zip(&solo) {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, s.tokens, "chunked spec serving diverged from solo");
+    }
+    let g = metrics.gauges();
+    assert_eq!(g.chunked_admissions, 1, "{g:?}");
+    assert!(g.spec_rounds > 0, "speculation must still run: {g:?}");
+    handle.shutdown();
+}
+
+#[test]
+fn chunking_disabled_still_serves_long_prompts() {
+    // prefill_chunk: 0 is the whole-prefill fallback rung — identical
+    // outputs, zero chunk activity
+    let engine = Arc::new(engine("main"));
+    let r1 = req(1, &long_text(150), 8);
+    let solo = Server::new(engine.clone(), ServerConfig::default()).generate_one(&r1);
+    assert!(solo.error.is_none());
+    let cfg = ServerConfig { prefill_chunk: 0, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let r = handle.submit(r1).recv().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.tokens, solo.tokens);
+    let g = metrics.gauges();
+    assert_eq!(g.prefill_chunks, 0);
+    assert_eq!(g.chunked_admissions, 0);
+    handle.shutdown();
+}
+
+#[test]
+fn chunked_ttft_starts_at_submission_and_spans_chunks() {
+    // ISSUE 4 bugfix regression: the first token of a chunked admission
+    // arrives N iterations after admission began, and the stopwatch must
+    // keep running from SUBMISSION through all of them. With a one-slot
+    // KV budget, B queues behind A's entire chunked service, so B's
+    // TTFT must cover it — a restarted stopwatch would report near zero.
+    let engine = Arc::new(engine("main"));
+    let per_slot = nbl::kvcache::slot_bytes(engine.config(), &engine.plan);
+    let cfg = ServerConfig {
+        kv_capacity_bytes: per_slot,
+        prefill_chunk: 32,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let rx_a = handle.submit(req(1, &long_text(256), 32));
+    let rx_b = handle.submit(req(2, "a hidden garden of light ", 2));
+    let a = rx_a.recv().unwrap();
+    let b = rx_b.recv().unwrap();
+    assert!(a.error.is_none() && b.error.is_none());
+    assert_eq!(a.tokens.len(), 32);
+    let g = metrics.gauges();
+    assert_eq!(g.chunked_admissions, 1, "{g:?}");
+    assert_eq!(g.prefill_chunks, 8, "256 tokens / 32-token chunks: {g:?}");
+    // A's own TTFT spans its 8 chunk iterations: it cannot beat the
+    // whole-prefill's share of total time by orders of magnitude
+    assert!(a.ttft_ms > 0.0 && a.ttft_ms <= a.total_ms);
+    assert!(
+        b.ttft_ms >= 0.5 * a.total_ms,
+        "chunked TTFT must include queue wait: A served {:.1} ms, \
+         B reported TTFT {:.1} ms",
+        a.total_ms,
+        b.ttft_ms
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn chunk_stall_gauges_observe_decode_interference() {
+    // a short request decodes while a long prompt chunks its way in:
+    // the interference gauges must see chunks that ran with decode rows
+    // live, and the short must be unaffected token-wise
+    let engine = Arc::new(engine("main"));
+    let solo = Server::new(engine.clone(), ServerConfig::default())
+        .generate_one(&req(7, "the quiet river ", 40));
+    assert!(solo.error.is_none());
+    let cfg = ServerConfig { prefill_chunk: 32, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let rx_short = handle.submit(req(7, "the quiet river ", 40));
+    let rx_long = handle.submit(req(8, &long_text(256), 8));
+    let short = rx_short.recv().unwrap();
+    let long = rx_long.recv().unwrap();
+    assert!(short.error.is_none() && long.error.is_none());
+    assert_eq!(short.tokens, solo.tokens, "interleaved chunks must not disturb decode");
+    let g = metrics.gauges();
+    assert!(g.prefill_chunks >= 8, "{g:?}");
+    assert!(
+        g.chunk_stalls >= 1,
+        "chunks ran while a row decoded; the stall gauge must see it: {g:?}"
+    );
+    assert!(g.chunk_stall_s > 0.0 && g.mean_chunk_stall_ms() > 0.0, "{g:?}");
+    handle.shutdown();
+}
+
 #[test]
 fn kv_pool_accounting_returns_to_zero_after_churn() {
     // invariant: reserved bytes always equal the sum of live leases, and
