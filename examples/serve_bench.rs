@@ -18,10 +18,17 @@
 //! the p50 TTFT of short requests dropped (the ISSUE 4 acceptance
 //! criterion, machine-checked).
 //!
+//! `--prefix-share` runs the ISSUE 5 shared-prefix arm instead: every
+//! request repeats one long system-prompt prefix with a distinct short
+//! suffix, served cold (prefix cache off) and warm (cache on, primed by
+//! one request). Emits hit rate and warm-vs-cold p50 TTFT, and asserts
+//! warm strictly beats cold — the multiplicative win prefix reuse adds
+//! on top of batching/speculation/chunking.
+//!
 //!     cargo run --release --example serve_bench \
 //!         [-- --m 2 --requests 24 --max-tokens 48 \
 //!              --mode spec --spec-width 4 --draft-m 4 \
-//!              --chunk 128 --long-every 6 --ttft-compare]
+//!              --chunk 128 --long-every 6 --ttft-compare | --prefix-share]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -45,6 +52,9 @@ const SHORT_PROMPT_MAX: usize = 100;
 struct LoadResult {
     wall_s: f64,
     latencies: Vec<f64>,
+    /// Server-reported per-request TTFT (ms), measured load only —
+    /// priming requests are excluded by construction.
+    ttfts_ms: Vec<f64>,
     summary: MetricsSummary,
     gauges: SchedulerGauges,
     timings: Vec<RequestTiming>,
@@ -66,9 +76,13 @@ impl LoadResult {
 
 /// Serve `prompts` through a fresh server + TCP front-end: 4 concurrent
 /// client connections, requests round-robin-chunked across them.
+/// `prime` prompts are served FIRST on a dedicated connection (the
+/// prefix-share arm warms the prompt cache with them) and excluded
+/// from the measured load's latency/TTFT vectors.
 fn run_load(
     engine: &Arc<Engine>,
     cfg: ServerConfig,
+    prime: &[String],
     prompts: &[String],
     max_tokens: usize,
 ) -> anyhow::Result<LoadResult> {
@@ -76,14 +90,35 @@ fn run_load(
     let metrics = server.metrics.clone();
     let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
 
+    if !prime.is_empty() {
+        let stream = TcpStream::connect(front.addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        for (i, p) in prime.iter().enumerate() {
+            let id = 900_000 + i;
+            // two tokens, not one: a request that finishes on its
+            // prefill token never enters the decode group, and in spec
+            // mode would publish no snapshots
+            writeln!(writer, r#"{{"id": {id}, "prompt": "{p}", "max_tokens": 2}}"#)?;
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if j.opt("error").is_some() {
+                anyhow::bail!("priming error: {line}");
+            }
+        }
+    }
+
+    type ConnResult = anyhow::Result<(Vec<f64>, Vec<f64>)>;
     let t_all = Timer::start();
     let mut client_threads = Vec::new();
     let per_conn = prompts.len().div_ceil(4).max(1);
     for (c, chunk) in prompts.chunks(per_conn).enumerate() {
         let chunk: Vec<String> = chunk.to_vec();
         let addr = front.addr;
-        client_threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        client_threads.push(std::thread::spawn(move || -> ConnResult {
             let mut latencies = Vec::new();
+            let mut ttfts = Vec::new();
             let stream = TcpStream::connect(addr)?;
             let mut writer = stream.try_clone()?;
             let mut reader = BufReader::new(stream);
@@ -101,27 +136,159 @@ fn run_load(
                 if j.opt("error").is_some() {
                     anyhow::bail!("server error: {line}");
                 }
+                let ttft = j
+                    .get("ttft_ms")
+                    .and_then(|v| v.as_f64())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                ttfts.push(ttft);
             }
-            Ok(latencies)
+            Ok((latencies, ttfts))
         }));
     }
     let mut latencies = Vec::new();
+    let mut ttfts_ms = Vec::new();
     for t in client_threads {
-        latencies.extend(t.join().unwrap()?);
+        let (lat, ttft) = t.join().unwrap()?;
+        latencies.extend(lat);
+        ttfts_ms.extend(ttft);
     }
     let wall_s = t_all.elapsed_s();
     front.shutdown();
     Ok(LoadResult {
         wall_s,
         latencies,
+        ttfts_ms,
         summary: metrics.summary(),
         gauges: metrics.gauges(),
         timings: metrics.timings(),
     })
 }
 
+/// JSON-safe one-byte-per-token text sliced out of the calibration
+/// corpus: the byte tokenizer must see EXACTLY `len` tokens (a
+/// multi-byte replacement char would push a prompt past its grid
+/// bucket).
+fn corpus_text(tokens: &[u32], start: usize, len: usize) -> String {
+    tokens[start..start + len]
+        .iter()
+        .map(|&t| {
+            let b = t as u8;
+            if b.is_ascii_alphanumeric() || b == b' ' {
+                b as char
+            } else {
+                ' '
+            }
+        })
+        .collect()
+}
+
+/// The ISSUE 5 shared-prefix workload: every request is one long shared
+/// prefix (the "system prompt") plus a distinct short suffix. Served
+/// twice — cold (prefix cache off) and warm (cache on, primed by the
+/// first prompt) — the warm run must report a nonzero hit rate and a
+/// strictly lower p50 TTFT, and both land in the nbl-bench/v1 JSON that
+/// ci/bench_baseline.json floors.
+fn run_prefix_share(
+    engine: &Arc<Engine>,
+    wb: &Workbench,
+    n_requests: usize,
+    max_tokens: usize,
+    chunk: usize,
+    m: usize,
+) -> anyhow::Result<()> {
+    let max_ctx = engine.config().max_ctx;
+    // the shared prefix spans two snapshot boundaries (snap = chunk, or
+    // 128 when chunking is off), leaving room for the suffix + decode
+    let snap = if chunk > 0 { chunk } else { 128 };
+    let share = (2 * snap).min(max_ctx.saturating_sub(64));
+    let suffix_len = 32usize;
+    let shared = corpus_text(&wb.calib.tokens, 0, share);
+    let prompts: Vec<String> = (0..n_requests)
+        .map(|i| {
+            let start = (share + 1 + i * 131) % (wb.calib.tokens.len() - suffix_len - 1);
+            format!("{shared}{}", corpus_text(&wb.calib.tokens, start, suffix_len))
+        })
+        .collect();
+    println!(
+        "shared-prefix workload: {} requests, {share}-token shared prefix + \
+         {suffix_len}-token suffixes, chunk {chunk}"
+    );
+
+    let cold_cfg = ServerConfig { prefill_chunk: chunk, ..ServerConfig::default() };
+    let warm_cfg = ServerConfig {
+        prefill_chunk: chunk,
+        prefix_cache_bytes: 64 << 20,
+        ..ServerConfig::default()
+    };
+    let cold = run_load(engine, cold_cfg, &[], &prompts, max_tokens)?;
+    let prime = vec![prompts[0].clone()];
+    let warm = run_load(engine, warm_cfg, &prime, &prompts, max_tokens)?;
+
+    let p50_cold = percentile(&cold.ttfts_ms, 50.0);
+    let p50_warm = percentile(&warm.ttfts_ms, 50.0);
+    let g = &warm.gauges;
+    let hit_rate = g.prefix_hit_rate();
+    println!("\n=== serve_bench results (Attn NBL-{m}, shared-prefix arm) ===");
+    println!("requests (per run)       {}", prompts.len());
+    println!("p50 TTFT cold            {p50_cold:.1} ms");
+    println!("p50 TTFT warm            {p50_warm:.1} ms");
+    println!("prefix hits / misses     {} / {}", g.prefix_hits, g.prefix_misses);
+    println!("prefix hit rate          {:.1}%", hit_rate * 100.0);
+    println!("prefix hit tokens        {}", g.prefix_hit_tokens);
+    println!("prefix inserts/evicts    {} / {}", g.prefix_inserts, g.prefix_evictions);
+    println!("prefix bytes             {} / {}", g.prefix_bytes, g.prefix_capacity_bytes);
+    let warm_tok_s = warm.summary.generated_tokens as f64 / warm.wall_s;
+    println!("warm token throughput    {warm_tok_s:.1} tok/s");
+
+    // the ISSUE 5 acceptance criteria, machine-checked
+    assert!(hit_rate > 0.0, "shared-prefix workload must hit the cache");
+    assert!(
+        g.prefix_hits as usize >= n_requests,
+        "every measured request shares the primed prefix: {} hits for {n_requests} requests",
+        g.prefix_hits
+    );
+    assert!(
+        p50_warm < p50_cold,
+        "warm-hit p50 TTFT must beat cold prefill: {p50_warm:.1} vs {p50_cold:.1} ms"
+    );
+
+    let metrics_json = Json::obj(vec![
+        ("tok_s", Json::Num(warm_tok_s)),
+        ("req_s", Json::Num(prompts.len() as f64 / warm.wall_s)),
+        ("p50_ttft_cold_ms", Json::Num(p50_cold)),
+        ("p50_ttft_warm_ms", Json::Num(p50_warm)),
+        ("warm_over_cold_ttft", Json::Num(p50_cold / p50_warm.max(1e-9))),
+        ("prefix_hit_rate", Json::Num(hit_rate)),
+        ("prefix_hits", Json::Num(g.prefix_hits as f64)),
+        ("prefix_hit_tokens", Json::Num(g.prefix_hit_tokens as f64)),
+        ("prefix_inserts", Json::Num(g.prefix_inserts as f64)),
+        ("prefix_evictions", Json::Num(g.prefix_evictions as f64)),
+    ]);
+    let bench_json = Json::obj(vec![
+        ("schema", Json::Str("nbl-bench/v1".into())),
+        ("bench", Json::Str("serve_bench".into())),
+        ("mode", Json::Str("prefix".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(n_requests as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("chunk", Json::Num(chunk as f64)),
+                ("share", Json::Num(share as f64)),
+                ("m", Json::Num(m as f64)),
+            ]),
+        ),
+        ("metrics", metrics_json),
+    ]);
+    let path = nbl::report::save_json("serve_bench_prefix", &bench_json)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nbench JSON written to {}", path.display());
+    println!("serve_bench OK");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["ttft-compare"])?;
+    let args = Args::from_env(&["ttft-compare", "prefix-share"])?;
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
@@ -149,6 +316,11 @@ fn main() -> anyhow::Result<()> {
     };
     println!("serving plan: {} [{}]", plan.kind.label(), plan.describe());
     let engine = Arc::new(wb.engine.with_plan(plan).map_err(|e| anyhow::anyhow!("{e}"))?);
+
+    // --- ISSUE 5 shared-prefix arm: warm-vs-cold prefix reuse, then exit
+    if args.flag("prefix-share") {
+        return run_prefix_share(&engine, &wb, n_requests, max_tokens, chunk, m);
+    }
 
     // --- self-speculation: the draft is an NBL-heavier plan over the
     // same Arc-shared weights (no second checkpoint)
@@ -181,27 +353,14 @@ fn main() -> anyhow::Result<()> {
                 16 + (i % 4) * 16
             };
             let start = (i * 997) % (wb.calib.tokens.len() - max_ctx - 1);
-            // one byte per token, JSON-safe: the byte tokenizer must see
-            // EXACTLY `len` tokens (a multi-byte replacement char would
-            // push a 512-byte prompt past the prefill grid)
-            wb.calib.tokens[start..start + len]
-                .iter()
-                .map(|&t| {
-                    let b = t as u8;
-                    if b.is_ascii_alphanumeric() || b == b' ' {
-                        b as char
-                    } else {
-                        ' '
-                    }
-                })
-                .collect::<String>()
+            corpus_text(&wb.calib.tokens, start, len)
         })
         .collect();
     let has_long = long_every > 0 && prompts.iter().any(|p| p.len() >= max_ctx / 2);
 
     let server_cfg = ServerConfig { mode, spec, prefill_chunk: chunk, ..ServerConfig::default() };
     println!("mode: {mode:?}, prefill chunk: {chunk} (0 = whole-prompt)");
-    let res = run_load(&engine, server_cfg.clone(), &prompts, max_tokens)?;
+    let res = run_load(&engine, server_cfg.clone(), &[], &prompts, max_tokens)?;
 
     // --- report
     let s = &res.summary;
@@ -266,7 +425,7 @@ fn main() -> anyhow::Result<()> {
     let mut p50_short_unchunked = None;
     if ttft_compare && mode == BatchMode::Continuous {
         let whole_cfg = ServerConfig { prefill_chunk: 0, ..server_cfg };
-        let whole = run_load(&engine, whole_cfg, &prompts, max_tokens)?;
+        let whole = run_load(&engine, whole_cfg, &[], &prompts, max_tokens)?;
         let p50_whole = whole.p50_short_ttft_ms();
         p50_short_unchunked = Some(p50_whole);
         println!("\n[ttft-compare] p50 short-request TTFT");

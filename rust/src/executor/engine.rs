@@ -3,7 +3,7 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::kvcache::{copy_cache_row, take_cache_row, KvState, SlotArena};
+use crate::kvcache::{put_row_state, take_row_state, KvState, SlotArena};
 use crate::model::artifacts::Grid;
 use crate::model::weights::Weights;
 use crate::nbl::plan::{BlockOp, MlpOp, ModelPlan};
@@ -439,6 +439,39 @@ impl Engine {
         tensor_from_lit(&x)
     }
 
+    // ----------------------------------------------------- prefix adoption
+
+    /// True if the AOT grid can extend an adopted prompt prefix by ANY
+    /// suffix width: prefix reuse needs the cache-appending chunk family
+    /// at every prefill bucket, because the uncovered suffix snaps onto
+    /// its own bucket (unlike chunked admission, which only ever runs
+    /// widths up to the configured chunk). Stale artifacts degrade the
+    /// prefix cache to cold prefill, never to an error.
+    pub fn supports_prefix_reuse(&self) -> bool {
+        self.supports_chunked_prefill(1, self.config().max_ctx)
+    }
+
+    /// Prefill ONLY the uncovered suffix of a prompt whose prefix was
+    /// adopted from the prefix cache (DESIGN.md §Prefix cache): `state`
+    /// starts at the snapshot position and the cache-appending chunk op
+    /// extends it by `ids`. Returns the suffix's final hidden states
+    /// [1, Tb, D]; the caller samples the first token at row
+    /// `ids.len() - 1`.
+    pub fn prefill_suffix(&self, state: &mut KvState, ids: &[u32]) -> Result<Tensor> {
+        if state.pos == 0 {
+            return Err(Error::Serving(
+                "prefill_suffix: state holds no adopted prefix (use prefill)".into(),
+            ));
+        }
+        if state.batch != 1 {
+            return Err(Error::Serving(format!(
+                "prefill_suffix: batch {} (prefix adoption is per-request)",
+                state.batch
+            )));
+        }
+        self.prefill_chunk(state, ids, ids.len())
+    }
+
     // -------------------------------------------------------------- decode
 
     /// Run `s_real` new tokens (per request) through the cached path.
@@ -804,27 +837,15 @@ impl Engine {
         let vocab = self.config().vocab;
         let mut out = Vec::with_capacity(rows.len() * width * vocab);
         for r in rows {
-            let mut state = KvState::empty(&self.plan, self.config(), 1, 1);
-            state.pos = arena.pos(r.slot).unwrap();
-            for (li, c) in arena.caches.iter().enumerate() {
-                if let Some((k, v)) = c {
-                    state.caches[li] =
-                        Some((take_cache_row(k, r.slot)?, take_cache_row(v, r.slot)?));
-                }
-            }
+            // shared row-transfer protocol (kvcache): slice the slot out
+            // as a batch-1 state, decode it solo, write it back
+            let pos = arena.pos(r.slot).unwrap();
+            let mut state = take_row_state(&self.plan, self.config(), &arena.caches, r.slot, pos)?;
             let logits = self.decode(&mut state, &r.tokens, width)?;
             for j in 0..width {
                 out.extend_from_slice(logits.at2(0, j));
             }
-            for (li, c) in arena.caches.iter_mut().enumerate() {
-                if let Some((k, v)) = c {
-                    let (nk, nv) = state.caches[li].take().ok_or_else(|| {
-                        Error::Serving(format!("layer {li}: cache lost in fallback decode"))
-                    })?;
-                    copy_cache_row(k, r.slot, &nk, 0)?;
-                    copy_cache_row(v, r.slot, &nv, 0)?;
-                }
-            }
+            put_row_state(&mut arena.caches, &state, r.slot)?;
         }
         Tensor::new(vec![rows.len(), width, vocab], out)
     }

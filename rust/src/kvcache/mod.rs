@@ -16,6 +16,8 @@ use crate::nbl::plan::ModelPlan;
 use crate::runtime::literals::{lit_from_tensor, tensor_from_lit};
 use crate::tensor::Tensor;
 
+pub mod prefix;
+
 /// Device-side KV cache produced by one prefill call (literals stay
 /// attached to the PJRT runtime; on the CPU backend these are host
 /// buffers). Also the run-to-completion group state of the legacy
@@ -102,6 +104,13 @@ pub struct SlotArena {
     pub caches: Vec<Option<(xla::Literal, xla::Literal)>>,
     /// Per slot lifecycle state (position = tokens cached so far).
     slots: Vec<Slot>,
+    /// Occupied slot indices, ascending — maintained incrementally so
+    /// the per-iteration hot path never rescans or reallocates.
+    occ: Vec<usize>,
+    /// Free-row count (reserved rows are neither free nor occupied).
+    n_free: usize,
+    /// Smallest free index; `bucket_batch` when none are free.
+    free_head: usize,
 }
 
 // Literals are plain host allocations on the CPU PJRT backend.
@@ -127,32 +136,37 @@ impl SlotArena {
             max_ctx: cfg.max_ctx,
             caches,
             slots: vec![Slot::Free; bucket_batch],
+            occ: Vec::with_capacity(bucket_batch),
+            n_free: bucket_batch,
+            free_head: 0,
         })
     }
 
     /// Lowest-index free slot, if any (reserved rows are not free).
+    /// O(1): reads the incrementally maintained free head.
     pub fn free_slot(&self) -> Option<usize> {
-        self.slots.iter().position(|s| *s == Slot::Free)
+        if self.n_free == 0 {
+            None
+        } else {
+            Some(self.free_head)
+        }
     }
 
-    /// Number of free slots (reserved rows count as taken).
+    /// Number of free slots (reserved rows count as taken). O(1).
     pub fn free_slots(&self) -> usize {
-        self.slots.iter().filter(|s| **s == Slot::Free).count()
+        self.n_free
     }
 
     /// Indices of occupied slots (ascending); reserved rows are not
-    /// occupied — they hold no decodable cache yet.
-    pub fn occupied(&self) -> Vec<usize> {
-        (0..self.bucket_batch)
-            .filter(|&s| matches!(self.slots[s], Slot::Occupied(_)))
-            .collect()
+    /// occupied — they hold no decodable cache yet. O(1): borrows the
+    /// incrementally maintained index list (no per-iteration rescan or
+    /// allocation on the decode hot path).
+    pub fn occupied(&self) -> &[usize] {
+        &self.occ
     }
 
     pub fn occupancy(&self) -> usize {
-        self.slots
-            .iter()
-            .filter(|s| matches!(s, Slot::Occupied(_)))
-            .count()
+        self.occ.len()
     }
 
     /// Tokens cached in `slot` (None if free or reserved).
@@ -163,7 +177,31 @@ impl SlotArena {
         }
     }
 
+    /// Bookkeeping for a slot leaving the Free state: when the free
+    /// head itself is claimed, advance it to the next free row
+    /// (amortized O(1) over a claim/release cycle).
+    fn note_unfree(&mut self, slot: usize) {
+        self.n_free -= 1;
+        if self.n_free == 0 {
+            self.free_head = self.bucket_batch;
+        } else if slot == self.free_head {
+            self.free_head = (slot + 1..self.bucket_batch)
+                .find(|&s| self.slots[s] == Slot::Free)
+                .unwrap_or(self.bucket_batch);
+        }
+    }
+
     pub fn set_pos(&mut self, slot: usize, pos: usize) {
+        match self.slots[slot] {
+            Slot::Occupied(_) => {}
+            was => {
+                if was == Slot::Free {
+                    self.note_unfree(slot);
+                }
+                let i = self.occ.partition_point(|&s| s < slot);
+                self.occ.insert(i, slot);
+            }
+        }
         self.slots[slot] = Slot::Occupied(pos);
     }
 
@@ -173,6 +211,7 @@ impl SlotArena {
     pub fn reserve(&mut self, slot: usize) -> Result<()> {
         match self.slots.get(slot) {
             Some(Slot::Free) => {
+                self.note_unfree(slot);
                 self.slots[slot] = Slot::Reserved;
                 Ok(())
             }
@@ -191,7 +230,19 @@ impl SlotArena {
     /// Mark a slot free (from any state); its rows become garbage and
     /// are fully overwritten by the next `adopt` into the same slot.
     pub fn release(&mut self, slot: usize) {
+        match self.slots[slot] {
+            Slot::Free => return,
+            Slot::Occupied(_) => {
+                let i = self.occ.partition_point(|&s| s < slot);
+                self.occ.remove(i);
+            }
+            Slot::Reserved => {}
+        }
         self.slots[slot] = Slot::Free;
+        self.n_free += 1;
+        if slot < self.free_head {
+            self.free_head = slot;
+        }
     }
 
     /// Migrate a freshly prefilled batch-1 `KvState` into row `slot`
@@ -207,30 +258,71 @@ impl SlotArena {
         if matches!(self.slots[slot], Slot::Occupied(_)) {
             return Err(Error::Serving(format!("slot {slot} is occupied")));
         }
-        if state.caches.len() != self.caches.len() {
-            return Err(Error::Serving(format!(
-                "plan mismatch: {} vs {} layers",
-                state.caches.len(),
-                self.caches.len()
-            )));
-        }
-        for (dst, src) in self.caches.iter_mut().zip(&state.caches) {
-            match (dst, src) {
-                (Some((dk, dv)), Some((sk, sv))) => {
-                    copy_cache_row(dk, slot, sk, 0)?;
-                    copy_cache_row(dv, slot, sv, 0)?;
-                }
-                (None, None) => {}
-                _ => {
-                    return Err(Error::Serving(
-                        "plan mismatch: KV layers differ between prefill and arena".into(),
-                    ))
-                }
-            }
-        }
-        self.slots[slot] = Slot::Occupied(state.pos);
+        put_row_state(&mut self.caches, state, slot)?;
+        self.set_pos(slot, state.pos);
         Ok(())
     }
+}
+
+/// Write the row-0 caches of batch-1 `state` into row `row` of `caches`
+/// — the restore half of the slot row-transfer protocol shared by
+/// [`SlotArena::adopt`], the fallback decode path
+/// (`Engine::decode_rows_fallback`), and the prefix snapshot store.
+pub fn put_row_state(
+    caches: &mut [Option<(xla::Literal, xla::Literal)>],
+    state: &KvState,
+    row: usize,
+) -> Result<()> {
+    if state.caches.len() != caches.len() {
+        return Err(Error::Serving(format!(
+            "plan mismatch: {} vs {} layers",
+            state.caches.len(),
+            caches.len()
+        )));
+    }
+    for (dst, src) in caches.iter_mut().zip(&state.caches) {
+        match (dst, src) {
+            (Some((dk, dv)), Some((sk, sv))) => {
+                copy_cache_row(dk, row, sk, 0)?;
+                copy_cache_row(dv, row, sv, 0)?;
+            }
+            (None, None) => {}
+            _ => {
+                return Err(Error::Serving(
+                    "plan mismatch: KV layers differ between prefill and arena".into(),
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extract row `row` of `caches` as a batch-1 [`KvState`] at position
+/// `pos` — the save half of the slot row-transfer protocol (the
+/// fallback decode slices a slot out, decodes it solo, and writes it
+/// back; the prefix snapshot store exports rows the same way).
+pub fn take_row_state(
+    plan: &ModelPlan,
+    cfg: &ModelConfig,
+    caches: &[Option<(xla::Literal, xla::Literal)>],
+    row: usize,
+    pos: usize,
+) -> Result<KvState> {
+    let mut state = KvState::empty(plan, cfg, 1, 1);
+    if caches.len() != state.caches.len() {
+        return Err(Error::Serving(format!(
+            "plan mismatch: {} vs {} layers",
+            caches.len(),
+            state.caches.len()
+        )));
+    }
+    for (dst, src) in state.caches.iter_mut().zip(caches) {
+        if let Some((k, v)) = src {
+            *dst = Some((take_cache_row(k, row)?, take_cache_row(v, row)?));
+        }
+    }
+    state.pos = pos;
+    Ok(state)
 }
 
 /// Copy row `src_row` of `src` into row `dst_row` of `dst`. Both literals
@@ -276,6 +368,29 @@ pub fn take_cache_row(src: &xla::Literal, row: usize) -> Result<xla::Literal> {
     shape[0] = 1;
     let data = s.data()[row * stride..(row + 1) * stride].to_vec();
     lit_from_tensor(&Tensor::new(shape, data)?)
+}
+
+/// Extract the first `tokens` cache entries of row `row` as a host
+/// tensor [1, tokens, ...] — the prefix-snapshot export: entries past
+/// `tokens` belong to a longer context (or are padding garbage) and are
+/// dropped, so a snapshot's byte cost scales with the prefix it covers,
+/// not with Tmax.
+pub fn take_cache_row_prefix(src: &xla::Literal, row: usize, tokens: usize) -> Result<Tensor> {
+    let s = tensor_from_lit(src)?;
+    if row >= s.shape()[0] || tokens > s.shape()[1] {
+        return Err(Error::Shape(format!(
+            "cache row prefix: row {row} / {tokens} tokens out of range {:?}",
+            s.shape()
+        )));
+    }
+    let row_stride: usize = s.shape()[1..].iter().product();
+    let tok_stride: usize = s.shape()[2..].iter().product();
+    let mut shape = s.shape().to_vec();
+    shape[0] = 1;
+    shape[1] = tokens;
+    let start = row * row_stride;
+    let data = s.data()[start..start + tokens * tok_stride].to_vec();
+    Tensor::new(shape, data)
 }
 
 /// §H.2 bytes for ONE request slot under `plan` (batch 1, full context):
@@ -557,6 +672,131 @@ mod tests {
         let bad = lit_from_tensor(&Tensor::zeros(vec![1, 2, 4])).unwrap();
         assert!(copy_cache_row(&mut dst, 0, &bad, 0).is_err());
         assert!(take_cache_row(&dst, 9).is_err());
+    }
+
+    /// Batch-1 KvState with deterministic literal caches for every
+    /// layer the plan keeps (the shape `SlotArena::adopt` expects).
+    fn batch1_state(plan: &crate::nbl::plan::ModelPlan, c: &ModelConfig, pos: usize) -> KvState {
+        let mut st = KvState::empty(plan, c, 1, 1);
+        for (li, lp) in plan.layers.iter().enumerate() {
+            if lp.attn.needs_kv() {
+                let t = Tensor::from_fn(vec![1, c.max_ctx, c.n_kv_heads, c.head_dim], |i| {
+                    (li * 100_000 + i) as f32 * 1e-3
+                });
+                let lit = || lit_from_tensor(&t).unwrap();
+                st.caches[li] = Some((lit(), lit()));
+            }
+        }
+        st.pos = pos;
+        st
+    }
+
+    #[test]
+    fn arena_bookkeeping_matches_naive_scan() {
+        // the incremental free list / occupied index must agree with a
+        // full rescan after ANY transition sequence (the hot-path
+        // structures are redundant state; drift would mis-admit)
+        let c = cfg();
+        let plan = crate::nbl::plan::ModelPlan::baseline(2);
+        let mut arena = SlotArena::new(&plan, &c, 8).unwrap();
+        let mut x = 0x12345678u64;
+        for step in 0..600 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let slot = (x >> 33) as usize % 8;
+            match (x >> 8) % 3 {
+                0 => arena.set_pos(slot, step),
+                1 => {
+                    let _ = arena.reserve(slot);
+                }
+                _ => arena.release(slot),
+            }
+            let occ_naive: Vec<usize> = (0..8).filter(|&s| arena.pos(s).is_some()).collect();
+            let free_naive: Vec<usize> = (0..8)
+                .filter(|&s| arena.pos(s).is_none() && !arena.is_reserved(s))
+                .collect();
+            assert_eq!(arena.occupied(), occ_naive, "occupied drift at step {step}");
+            assert_eq!(arena.occupancy(), occ_naive.len());
+            assert_eq!(arena.free_slots(), free_naive.len(), "free count drift at {step}");
+            assert_eq!(arena.free_slot(), free_naive.first().copied(), "free head at {step}");
+        }
+    }
+
+    #[test]
+    fn reserve_release_adopt_under_pool_exhaustion() {
+        // the chunked-admission lifecycle against a one-slot KV budget:
+        // reserve the row, lose the budget, release, then re-reserve and
+        // adopt at a NONZERO position once the budget frees
+        let c = cfg();
+        let plan = crate::nbl::plan::ModelPlan::baseline(6);
+        let per_slot = slot_bytes(&c, &plan);
+        let mut arena = SlotArena::new(&plan, &c, 2).unwrap();
+        let pool = Arc::new(KvPool::new(per_slot));
+        let lease = KvPool::reserve_owned(&pool, per_slot).unwrap();
+        // pool exhausted: the admission lease fails and the reserved row
+        // must return to the free pool untouched
+        arena.reserve(0).unwrap();
+        assert!(KvPool::reserve_owned(&pool, per_slot).is_err());
+        arena.release(0);
+        assert_eq!(arena.free_slots(), 2);
+        assert_eq!(arena.free_slot(), Some(0));
+        drop(lease);
+        // budget free again: reserve -> adopt lands mid-context
+        let l2 = KvPool::reserve_owned(&pool, per_slot).unwrap();
+        arena.reserve(0).unwrap();
+        let st = batch1_state(&plan, &c, 37);
+        arena.adopt(0, &st).unwrap();
+        assert_eq!(arena.pos(0), Some(37));
+        assert_eq!(arena.occupied(), vec![0]);
+        // departure returns both the row and (via the lease) the bytes
+        arena.release(0);
+        drop(l2);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(arena.free_slot(), Some(0));
+    }
+
+    #[test]
+    fn row_state_transfer_round_trip() {
+        // take_row_state/put_row_state are the shared save/restore
+        // halves of the fallback decode and the snapshot store: a row
+        // sliced out and written back elsewhere must carry its data
+        let c = cfg();
+        let mut plan = crate::nbl::plan::ModelPlan::baseline(6);
+        plan.drop_attn(0);
+        let mut arena = SlotArena::new(&plan, &c, 4).unwrap();
+        let st = batch1_state(&plan, &c, 21);
+        arena.adopt(2, &st).unwrap();
+        let out = take_row_state(&plan, &c, &arena.caches, 2, 21).unwrap();
+        assert_eq!(out.pos, 21);
+        assert!(out.caches[0].is_none(), "substituted layer must stay empty");
+        let (k_src, _) = st.caches[1].as_ref().unwrap();
+        let (k_out, _) = out.caches[1].as_ref().unwrap();
+        assert_eq!(
+            tensor_from_lit(k_out).unwrap().data(),
+            tensor_from_lit(k_src).unwrap().data()
+        );
+        // write the slice into a different row of a fresh arena
+        let mut other = SlotArena::new(&plan, &c, 4).unwrap();
+        put_row_state(&mut other.caches, &out, 3).unwrap();
+        let (k_dst, _) = other.caches[1].as_ref().unwrap();
+        let dst = tensor_from_lit(k_dst).unwrap();
+        let src = tensor_from_lit(k_src).unwrap();
+        let stride: usize = dst.shape()[1..].iter().product();
+        assert_eq!(&dst.data()[3 * stride..4 * stride], &src.data()[..stride]);
+        assert!(dst.data()[..stride].iter().all(|&v| v == 0.0), "other rows untouched");
+        // layer-count mismatch is rejected on both halves
+        let short = crate::nbl::plan::ModelPlan::baseline(2);
+        assert!(take_row_state(&short, &c, &arena.caches, 0, 0).is_err());
+    }
+
+    #[test]
+    fn cache_row_prefix_extraction() {
+        let src = lit_from_tensor(&Tensor::from_fn(vec![2, 4, 3], |i| i as f32)).unwrap();
+        let t = take_cache_row_prefix(&src, 1, 2).unwrap();
+        assert_eq!(t.shape(), &[1, 2, 3]);
+        // row 1 starts at 12; first two token entries are 12..18
+        assert_eq!(t.data(), &[12.0, 13.0, 14.0, 15.0, 16.0, 17.0]);
+        assert!(take_cache_row_prefix(&src, 2, 1).is_err());
+        assert!(take_cache_row_prefix(&src, 0, 5).is_err());
     }
 
     #[test]

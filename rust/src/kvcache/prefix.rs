@@ -1,0 +1,651 @@
+//! Prefix-aware KV reuse (DESIGN.md §Prefix cache): a token-ID radix
+//! tree mapping prompt prefixes to host-side KV snapshots.
+//!
+//! Multi-tenant traffic repeats prompt prefixes constantly — system
+//! prompts, few-shot headers, chat history — and recomputing their
+//! prefill burns the compute NBL just saved. The serving path snapshots
+//! the per-request KV cache at snap-aligned prefill boundaries
+//! (insert-on-miss, so the tree warms itself under churn), and later
+//! admissions adopt the longest cached prefix and prefill only the
+//! uncovered suffix through the cache-appending chunk ops.
+//!
+//! Budgeting: snapshots are host tensors truncated to the prefix they
+//! cover, accounted against a dedicated [`KvPool`] byte budget and
+//! LRU-evicted under pressure. Lookups hand out `Arc` references, so an
+//! eviction never invalidates an in-flight adoption — the bytes return
+//! to the budget at eviction, the data lives until the last reader
+//! drops it.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::kvcache::{take_cache_row_prefix, KvLeaseOwned, KvPool, KvState};
+use crate::model::config::ModelConfig;
+use crate::nbl::plan::ModelPlan;
+use crate::runtime::literals::lit_from_tensor;
+use crate::tensor::Tensor;
+
+/// Host-side copy of one request's KV cache truncated to a prompt
+/// prefix: the value a radix-tree entry stores and a warm admission
+/// restores. Substituted layers hold `None`, so NBL's structural KV
+/// saving applies to snapshots too.
+pub struct KvSnapshot {
+    /// Prompt tokens covered: cache entries [0, pos) are valid.
+    pub pos: usize,
+    /// Per layer: Some((k, v)) host tensors [1, pos, Hkv, dh] iff the
+    /// plan kept attention there.
+    caches: Vec<Option<(Tensor, Tensor)>>,
+    bytes: usize,
+}
+
+impl KvSnapshot {
+    /// Snapshot the first `pos` cached tokens of batch-1 `state`
+    /// (row 0). Taken at prefill/chunk boundaries, so `pos` never
+    /// exceeds `state.pos`; entries past `pos` (padding garbage or a
+    /// longer context) are dropped.
+    pub fn from_state(state: &KvState, pos: usize) -> Result<KvSnapshot> {
+        if pos == 0 || pos > state.pos {
+            return Err(Error::Serving(format!(
+                "snapshot at {pos} outside prefilled range 1..={}",
+                state.pos
+            )));
+        }
+        let mut caches = Vec::with_capacity(state.caches.len());
+        let mut bytes = 0usize;
+        for c in &state.caches {
+            match c {
+                Some((k, v)) => {
+                    let kt = take_cache_row_prefix(k, 0, pos)?;
+                    let vt = take_cache_row_prefix(v, 0, pos)?;
+                    bytes += 4 * (kt.len() + vt.len());
+                    caches.push(Some((kt, vt)));
+                }
+                None => caches.push(None),
+            }
+        }
+        Ok(KvSnapshot { pos, caches, bytes })
+    }
+
+    /// Host bytes of the truncated copy — the unit the prefix pool's
+    /// budget accounts (scales with the covered prefix, not Tmax).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Materialize a fresh batch-1 [`KvState`] at `self.pos`: every
+    /// kept layer gets a full-context row holding the snapshot prefix
+    /// (zero-padded past it), ready for suffix-only chunk prefill.
+    pub fn restore_state(&self, plan: &ModelPlan, cfg: &ModelConfig) -> Result<KvState> {
+        let mut state = KvState::empty(plan, cfg, 1, 1);
+        if state.caches.len() != self.caches.len() {
+            return Err(Error::Serving(format!(
+                "plan mismatch: snapshot has {} layers, plan {}",
+                self.caches.len(),
+                state.caches.len()
+            )));
+        }
+        for ((dst, src), lp) in state.caches.iter_mut().zip(&self.caches).zip(&plan.layers) {
+            match (src, lp.attn.needs_kv()) {
+                (Some((k, v)), true) => {
+                    *dst = Some((expand_row(k, cfg, self.pos)?, expand_row(v, cfg, self.pos)?));
+                }
+                (None, false) => {}
+                _ => {
+                    return Err(Error::Serving(
+                        "plan mismatch: KV layers differ between snapshot and plan".into(),
+                    ))
+                }
+            }
+        }
+        state.pos = self.pos;
+        Ok(state)
+    }
+}
+
+/// Zero-padded full-context literal [1, Tmax, Hkv, dh] holding a
+/// snapshot row [1, pos, Hkv, dh] in its leading entries.
+fn expand_row(src: &Tensor, cfg: &ModelConfig, pos: usize) -> Result<xla::Literal> {
+    if src.shape() != [1, pos, cfg.n_kv_heads, cfg.head_dim].as_slice() {
+        return Err(Error::Shape(format!(
+            "snapshot row {:?} vs model [1, {pos}, {}, {}]",
+            src.shape(),
+            cfg.n_kv_heads,
+            cfg.head_dim
+        )));
+    }
+    let mut full = Tensor::zeros(vec![1, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim]);
+    full.data_mut()[..src.len()].copy_from_slice(src.data());
+    lit_from_tensor(&full)
+}
+
+/// Point-in-time counters the serving gauges mirror.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixStats {
+    /// Probes whose cached prefix was actually ADOPTED into a slot
+    /// (reported by the caller via [`PrefixCache::note_adopted`] once
+    /// the adoption really happened — a probe alone proves nothing).
+    pub hits: u64,
+    /// Probes that found nothing, plus probes whose hit proved unusable
+    /// and fell back to cold prefill ([`PrefixCache::note_fallback`]).
+    pub misses: u64,
+    /// Prompt tokens served from adopted prefixes (prefill work
+    /// actually skipped).
+    pub hit_tokens: u64,
+    /// Entries published into the tree.
+    pub inserts: u64,
+    /// Entries LRU-evicted under the byte budget.
+    pub evictions: u64,
+    /// Live entries.
+    pub entries: usize,
+    /// Snapshot bytes resident (budget accounting, not Arc liveness).
+    pub bytes_in_use: usize,
+    /// Byte budget.
+    pub capacity_bytes: usize,
+}
+
+/// One radix-tree value: the snapshots for a prefix (the target's and,
+/// under speculation, the draft's — stored together so the pair can
+/// never fall out of lockstep) plus LRU/budget bookkeeping.
+struct Entry {
+    snaps: Arc<Vec<KvSnapshot>>,
+    last_used: u64,
+    /// Budget reservation; returns the bytes at eviction (the Arc'd
+    /// data itself lives until the last in-flight adoption drops it).
+    _lease: KvLeaseOwned,
+}
+
+/// Radix-tree node: `edge` labels the path from the parent (nonempty
+/// except at the root); an entry, when present, covers exactly the
+/// concatenated path from the root.
+struct Node {
+    edge: Vec<u32>,
+    children: Vec<Node>,
+    entry: Option<Entry>,
+}
+
+impl Node {
+    fn leaf(edge: Vec<u32>) -> Node {
+        Node { edge, children: Vec::new(), entry: None }
+    }
+}
+
+/// The prompt-prefix radix tree: token-ID edges, compressed (edges are
+/// split lazily on insert), snapshots at node boundaries, LRU eviction
+/// under a dedicated byte budget.
+pub struct PrefixCache {
+    root: Node,
+    pool: Arc<KvPool>,
+    /// Monotonic LRU clock (bumped per probe and per insert).
+    clock: u64,
+    entries: usize,
+    hits: u64,
+    misses: u64,
+    hit_tokens: u64,
+    inserts: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            root: Node::leaf(Vec::new()),
+            pool: Arc::new(KvPool::new(budget_bytes)),
+            clock: 0,
+            entries: 0,
+            hits: 0,
+            misses: 0,
+            hit_tokens: 0,
+            inserts: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Longest cached prefix of `tokens` no longer than `cap` (callers
+    /// cap at len-1 so a nonempty suffix remains to produce first-token
+    /// logits). Touches every matched ancestor entry for LRU purposes —
+    /// a prefix of a useful prompt is itself useful.
+    ///
+    /// Accounting: an empty result counts a miss immediately; a found
+    /// prefix counts NOTHING until the caller resolves it with
+    /// [`note_adopted`](Self::note_adopted) (it was restored into a
+    /// slot) or [`note_fallback`](Self::note_fallback) (it proved
+    /// unusable — e.g. the padded suffix bucket would cross the context
+    /// boundary — and the admission prefilled cold). Counting at probe
+    /// time would let the hit-rate gauge stay green while every
+    /// adoption silently fell back.
+    pub fn lookup(&mut self, tokens: &[u32], cap: usize) -> Option<Arc<Vec<KvSnapshot>>> {
+        self.clock += 1;
+        let best = descend(&mut self.root, tokens, 0, cap, self.clock);
+        if best.is_none() {
+            self.misses += 1;
+        }
+        best
+    }
+
+    /// A probed prefix of `tokens_covered` tokens was restored into a
+    /// slot: the prefill work was really skipped.
+    pub fn note_adopted(&mut self, tokens_covered: usize) {
+        self.hits += 1;
+        self.hit_tokens += tokens_covered as u64;
+    }
+
+    /// A probed prefix went unused (cold fallback): count it as a miss
+    /// so the hit rate reflects adoptions, not tree contents.
+    pub fn note_fallback(&mut self) {
+        self.misses += 1;
+    }
+
+    /// Longest cached prefix length (<= cap) WITHOUT touching LRU order
+    /// or the probe counters — the admission guard peeks the queue head
+    /// every scheduler iteration while a chunked machine runs, and a
+    /// waiting head must not distort stats or recency.
+    pub fn covered(&self, tokens: &[u32], cap: usize) -> usize {
+        let mut node = &self.root;
+        let mut depth = 0;
+        let mut best = 0;
+        loop {
+            if depth > 0 && node.entry.is_some() {
+                best = depth;
+            }
+            let rest = &tokens[depth..];
+            let next = node
+                .children
+                .iter()
+                .find(|c| depth + c.edge.len() <= cap && rest.starts_with(&c.edge));
+            match next {
+                Some(c) => {
+                    depth += c.edge.len();
+                    node = c;
+                }
+                None => return best,
+            }
+        }
+    }
+
+    /// LRU-touch the entry at exactly `tokens`, if present — the
+    /// publish path's cheap dedup: building a snapshot is a multi-layer
+    /// host copy of the whole covered prefix, so callers check-and-touch
+    /// BEFORE constructing one that insert would only throw away.
+    pub fn touch(&mut self, tokens: &[u32]) -> bool {
+        self.clock += 1;
+        match find_exact(&mut self.root, tokens) {
+            Some(e) => {
+                e.last_used = self.clock;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Publish snapshots covering exactly `tokens` (every snapshot's
+    /// `pos` must equal `tokens.len()`). Dedups against an existing
+    /// entry (touch, keep the resident copy), LRU-evicts under the byte
+    /// budget, and returns false when the entry cannot be stored (still
+    /// over budget with an empty tree, or malformed).
+    pub fn insert(&mut self, tokens: &[u32], snaps: Vec<KvSnapshot>) -> bool {
+        if tokens.is_empty()
+            || snaps.is_empty()
+            || snaps.iter().any(|s| s.pos != tokens.len())
+        {
+            return false;
+        }
+        self.clock += 1;
+        if let Some(e) = find_exact(&mut self.root, tokens) {
+            e.last_used = self.clock;
+            return false;
+        }
+        let bytes: usize = snaps.iter().map(|s| s.bytes()).sum();
+        if bytes > self.pool.capacity() {
+            // an entry that can NEVER fit must be refused before the
+            // eviction loop, which would otherwise drain every resident
+            // (useful) entry as collateral and only then give up
+            return false;
+        }
+        while !self.pool.would_fit(bytes) {
+            if !self.evict_lru() {
+                return false;
+            }
+        }
+        let Ok(lease) = KvPool::reserve_owned(&self.pool, bytes) else {
+            return false;
+        };
+        let node = insert_node(&mut self.root, tokens);
+        node.entry = Some(Entry {
+            snaps: Arc::new(snaps),
+            last_used: self.clock,
+            _lease: lease,
+        });
+        self.entries += 1;
+        self.inserts += 1;
+        true
+    }
+
+    /// Drop the least-recently-used entry and prune newly bare
+    /// subtrees; false when the tree holds no entries.
+    fn evict_lru(&mut self) -> bool {
+        let Some(oldest) = min_used(&self.root) else {
+            return false;
+        };
+        remove_entry(&mut self.root, oldest);
+        prune(&mut self.root);
+        self.entries -= 1;
+        self.evictions += 1;
+        true
+    }
+
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.hits,
+            misses: self.misses,
+            hit_tokens: self.hit_tokens,
+            inserts: self.inserts,
+            evictions: self.evictions,
+            entries: self.entries,
+            bytes_in_use: self.pool.in_use(),
+            capacity_bytes: self.pool.capacity(),
+        }
+    }
+}
+
+/// Walk matched edges collecting the deepest entry at depth <= cap.
+fn descend(
+    node: &mut Node,
+    rest: &[u32],
+    depth: usize,
+    cap: usize,
+    clock: u64,
+) -> Option<Arc<Vec<KvSnapshot>>> {
+    let mut best = None;
+    if depth > 0 {
+        if let Some(e) = node.entry.as_mut() {
+            e.last_used = clock;
+            best = Some(e.snaps.clone());
+        }
+    }
+    if let Some(c) = node
+        .children
+        .iter_mut()
+        .find(|c| depth + c.edge.len() <= cap && rest.starts_with(&c.edge))
+    {
+        let el = c.edge.len();
+        if let Some(deeper) = descend(c, &rest[el..], depth + el, cap, clock) {
+            best = Some(deeper);
+        }
+    }
+    best
+}
+
+/// The entry at exactly `rest` under `node`, if present (a prefix that
+/// ends mid-edge has no entry by construction).
+fn find_exact<'a>(node: &'a mut Node, rest: &[u32]) -> Option<&'a mut Entry> {
+    if rest.is_empty() {
+        return node.entry.as_mut();
+    }
+    let c = node.children.iter_mut().find(|c| rest.starts_with(&c.edge))?;
+    let el = c.edge.len();
+    find_exact(c, &rest[el..])
+}
+
+/// Radix insert: create (splitting edges as needed) and return the node
+/// whose path from the root is exactly `rest` deeper than `node`.
+fn insert_node<'a>(node: &'a mut Node, rest: &[u32]) -> &'a mut Node {
+    if rest.is_empty() {
+        return node;
+    }
+    let Some(i) = node.children.iter().position(|c| c.edge[0] == rest[0]) else {
+        node.children.push(Node::leaf(rest.to_vec()));
+        return node.children.last_mut().unwrap();
+    };
+    let common = lcp(&node.children[i].edge, rest);
+    if common == node.children[i].edge.len() {
+        return insert_node(&mut node.children[i], &rest[common..]);
+    }
+    // split the edge: an intermediate node takes the shared prefix and
+    // the old child keeps the remainder
+    let mid = Node::leaf(rest[..common].to_vec());
+    let mut old = std::mem::replace(&mut node.children[i], mid);
+    old.edge.drain(..common);
+    node.children[i].children.push(old);
+    if common == rest.len() {
+        &mut node.children[i]
+    } else {
+        node.children[i].children.push(Node::leaf(rest[common..].to_vec()));
+        node.children[i].children.last_mut().unwrap()
+    }
+}
+
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+fn min_used(node: &Node) -> Option<u64> {
+    let mut best = node.entry.as_ref().map(|e| e.last_used);
+    for c in &node.children {
+        if let Some(m) = min_used(c) {
+            best = Some(best.map_or(m, |b| b.min(m)));
+        }
+    }
+    best
+}
+
+fn remove_entry(node: &mut Node, used: u64) -> bool {
+    if node.entry.as_ref().is_some_and(|e| e.last_used == used) {
+        node.entry = None;
+        return true;
+    }
+    node.children.iter_mut().any(|c| remove_entry(c, used))
+}
+
+/// Drop subtrees that carry no entries (post-eviction cleanup; chains
+/// of entry-less intermediate nodes above a surviving entry stay —
+/// harmless, and re-merging edges is not worth the churn).
+fn prune(node: &mut Node) {
+    for c in &mut node.children {
+        prune(c);
+    }
+    node.children.retain(|c| c.entry.is_some() || !c.children.is_empty());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nbl::plan::ModelPlan;
+    use crate::runtime::literals::tensor_from_lit;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 4,
+            d_ff: 16,
+            max_ctx: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Batch-1 state with recognizable per-position cache values.
+    fn state_at(plan: &ModelPlan, c: &ModelConfig, pos: usize) -> KvState {
+        let mut st = KvState::empty(plan, c, 1, 1);
+        for (li, lp) in plan.layers.iter().enumerate() {
+            if lp.attn.needs_kv() {
+                let t = Tensor::from_fn(vec![1, c.max_ctx, c.n_kv_heads, c.head_dim], |i| {
+                    (li * 1000 + i) as f32
+                });
+                let lit = || lit_from_tensor(&t).unwrap();
+                st.caches[li] = Some((lit(), lit()));
+            }
+        }
+        st.pos = pos;
+        st
+    }
+
+    fn snap_for(plan: &ModelPlan, c: &ModelConfig, pos: usize) -> KvSnapshot {
+        KvSnapshot::from_state(&state_at(plan, c, pos), pos).unwrap()
+    }
+
+    #[test]
+    fn snapshot_truncates_and_restores() {
+        let c = cfg();
+        let mut plan = ModelPlan::baseline(2);
+        plan.drop_attn(0);
+        let st = state_at(&plan, &c, 10);
+        let snap = KvSnapshot::from_state(&st, 6).unwrap();
+        assert_eq!(snap.pos, 6);
+        // one kept layer, k+v, 6 tokens of Hkv*dh floats, 4 bytes each
+        assert_eq!(snap.bytes(), 2 * 6 * c.n_kv_heads * c.head_dim * 4);
+        // out-of-range snapshots are rejected
+        assert!(KvSnapshot::from_state(&st, 0).is_err());
+        assert!(KvSnapshot::from_state(&st, 11).is_err());
+        // restore: prefix carried, tail zero-padded, pos adopted
+        let restored = snap.restore_state(&plan, &c).unwrap();
+        assert_eq!(restored.pos, 6);
+        assert!(restored.caches[0].is_none());
+        let (k, _) = restored.caches[1].as_ref().unwrap();
+        let t = tensor_from_lit(k).unwrap();
+        assert_eq!(t.shape(), &[1, c.max_ctx, c.n_kv_heads, c.head_dim]);
+        let stride = c.n_kv_heads * c.head_dim;
+        assert_eq!(t.data()[0], 1000.0);
+        assert_eq!(t.data()[6 * stride - 1], 1000.0 + (6 * stride - 1) as f32);
+        assert!(t.data()[6 * stride..].iter().all(|&v| v == 0.0));
+        // restoring under a different kept-layer pattern is rejected
+        let full = ModelPlan::baseline(2);
+        assert!(snap.restore_state(&full, &c).is_err());
+    }
+
+    #[test]
+    fn radix_longest_match_with_edge_splits() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let mut cache = PrefixCache::new(1 << 20);
+        let long: Vec<u32> = (0..12).collect();
+        assert!(cache.insert(&long[..4], vec![snap_for(&plan, &c, 4)]));
+        assert!(cache.insert(&long[..8], vec![snap_for(&plan, &c, 8)]));
+        // diverging branch forces an edge split at depth 6
+        let mut fork = long[..6].to_vec();
+        fork.extend([90, 91, 92]);
+        assert!(cache.insert(&fork, vec![snap_for(&plan, &c, 9)]));
+        assert_eq!(cache.entries(), 3);
+        // longest match wins; cap bounds the depth
+        assert_eq!(cache.lookup(&long, 11).unwrap()[0].pos, 8);
+        assert_eq!(cache.lookup(&long, 7).unwrap()[0].pos, 4);
+        assert_eq!(cache.lookup(&fork, 8).unwrap()[0].pos, 4);
+        assert_eq!(cache.lookup(&fork, 9).unwrap()[0].pos, 9);
+        // no shared prefix at all -> miss
+        assert!(cache.lookup(&[50, 51], 1).is_none());
+        // accounting is ADOPTION-time: the four successful probes count
+        // nothing until the caller resolves them (hit vs cold fallback)
+        let s = cache.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 1);
+        cache.note_adopted(8);
+        cache.note_adopted(4);
+        cache.note_fallback();
+        let s = cache.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hit_tokens, 12);
+    }
+
+    #[test]
+    fn covered_and_touch_are_stat_free_dedup_paths() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let mut cache = PrefixCache::new(1 << 20);
+        let toks: Vec<u32> = (0..8).collect();
+        assert!(cache.insert(&toks[..4], vec![snap_for(&plan, &c, 4)]));
+        // stat-free peek: longest coverage under the cap, no counters
+        assert_eq!(cache.covered(&toks, 7), 4);
+        assert_eq!(cache.covered(&toks, 3), 0);
+        assert_eq!(cache.covered(&[9, 9], 1), 0);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        // touch dedups without building a snapshot; misses at non-entry
+        // depths (mid-edge or unknown prefixes) report absent
+        assert!(cache.touch(&toks[..4]));
+        assert!(!cache.touch(&toks[..3]));
+        assert!(!cache.touch(&toks));
+        assert_eq!(cache.stats().inserts, 1);
+    }
+
+    #[test]
+    fn insert_dedups_and_touches() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let mut cache = PrefixCache::new(1 << 20);
+        let toks: Vec<u32> = (0..4).collect();
+        assert!(cache.insert(&toks, vec![snap_for(&plan, &c, 4)]));
+        assert!(!cache.insert(&toks, vec![snap_for(&plan, &c, 4)]));
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.stats().inserts, 1);
+        // a mis-sized snapshot set is refused outright
+        assert!(!cache.insert(&toks, vec![snap_for(&plan, &c, 3)]));
+        assert!(!cache.insert(&toks, vec![]));
+    }
+
+    #[test]
+    fn lru_eviction_frees_budget_but_not_readers() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let one = snap_for(&plan, &c, 4).bytes();
+        // room for exactly two entries
+        let mut cache = PrefixCache::new(2 * one + one / 2);
+        let a: Vec<u32> = vec![1, 2, 3, 4];
+        let b: Vec<u32> = vec![5, 6, 7, 8];
+        let d: Vec<u32> = vec![9, 10, 11, 12];
+        assert!(cache.insert(&a, vec![snap_for(&plan, &c, 4)]));
+        assert!(cache.insert(&b, vec![snap_for(&plan, &c, 4)]));
+        assert_eq!(cache.stats().bytes_in_use, 2 * one);
+        // hold a reference to A, touch it, then overflow with D: the
+        // LRU victim must be B, and the held Arc must stay readable
+        let held = cache.lookup(&[1, 2, 3, 4, 99], 4).unwrap();
+        assert!(cache.insert(&d, vec![snap_for(&plan, &c, 4)]));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.bytes_in_use, 2 * one);
+        assert!(cache.lookup(&b, 4).is_none(), "LRU victim must be B");
+        assert_eq!(cache.lookup(&a, 4).unwrap()[0].pos, 4);
+        assert_eq!(cache.lookup(&d, 4).unwrap()[0].pos, 4);
+        assert_eq!(held[0].pos, 4, "evictions never invalidate readers");
+        // an entry that can NEVER fit is refused up front — without
+        // draining the resident entries as collateral
+        let big: Vec<u32> = (0..12).collect();
+        assert!(!cache.insert(&big, vec![snap_for(&plan, &c, 12)]));
+        let s = cache.stats();
+        assert_eq!(s.entries, 2, "oversized insert must not drain the tree");
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.bytes_in_use, 2 * one);
+        // same refusal on an empty cache
+        let mut tiny = PrefixCache::new(one / 2);
+        assert!(!tiny.insert(&a, vec![snap_for(&plan, &c, 4)]));
+        assert_eq!(tiny.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn paired_snapshots_stay_in_lockstep() {
+        // one entry carries the target AND draft snapshots, so eviction
+        // can never separate them (the serving lockstep invariant)
+        let c = cfg();
+        let target = ModelPlan::baseline(2);
+        let mut draft = ModelPlan::baseline(2);
+        draft.drop_attn(1);
+        let mut cache = PrefixCache::new(1 << 20);
+        let toks: Vec<u32> = (0..4).collect();
+        let pair = vec![snap_for(&target, &c, 4), snap_for(&draft, &c, 4)];
+        assert!(cache.insert(&toks, pair));
+        let got = cache.lookup(&toks, 4).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(got[0].restore_state(&target, &c).is_ok());
+        assert!(got[1].restore_state(&draft, &c).is_ok());
+        assert!(got[1].restore_state(&target, &c).is_err());
+    }
+}

@@ -131,6 +131,15 @@ pub fn stats_to_json(
         ("spec_accepted", Json::Num(g.spec_accepted as f64)),
         ("spec_acceptance_rate", Json::Num(g.acceptance_rate())),
         ("tokens_per_row_iteration", Json::Num(g.tokens_per_row_iteration())),
+        ("prefix_hits", Json::Num(g.prefix_hits as f64)),
+        ("prefix_misses", Json::Num(g.prefix_misses as f64)),
+        ("prefix_hit_rate", Json::Num(g.prefix_hit_rate())),
+        ("prefix_hit_tokens", Json::Num(g.prefix_hit_tokens as f64)),
+        ("prefix_inserts", Json::Num(g.prefix_inserts as f64)),
+        ("prefix_evictions", Json::Num(g.prefix_evictions as f64)),
+        ("prefix_entries", Json::Num(g.prefix_entries as f64)),
+        ("prefix_bytes", Json::Num(g.prefix_bytes as f64)),
+        ("prefix_capacity_bytes", Json::Num(g.prefix_capacity_bytes as f64)),
         ("kv_in_use_bytes", Json::Num(kv_in_use as f64)),
         ("kv_capacity_bytes", Json::Num(kv_capacity as f64)),
         ("kv_utilization", Json::Num(kv_util)),
@@ -207,6 +216,14 @@ mod tests {
             chunked_admissions: 2,
             chunk_stalls: 5,
             chunk_stall_s: 0.05,
+            prefix_hits: 3,
+            prefix_misses: 1,
+            prefix_hit_tokens: 192,
+            prefix_inserts: 4,
+            prefix_evictions: 1,
+            prefix_entries: 3,
+            prefix_bytes: 2048,
+            prefix_capacity_bytes: 4096,
         };
         let j = stats_to_json(&s, &g, 512, 1024);
         let back = Json::parse(&j.to_string()).unwrap();
@@ -223,6 +240,11 @@ mod tests {
         assert!((back.get("spec_acceptance_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
         let tpi = back.get("tokens_per_row_iteration").unwrap().as_f64().unwrap();
         assert!((tpi - 2.0).abs() < 1e-9);
+        assert_eq!(back.get("prefix_hits").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.get("prefix_hit_tokens").unwrap().as_usize().unwrap(), 192);
+        assert_eq!(back.get("prefix_entries").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.get("prefix_bytes").unwrap().as_usize().unwrap(), 2048);
+        assert!((back.get("prefix_hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -148,6 +148,23 @@ pub struct SchedulerGauges {
     pub spec_proposed: u64,
     /// Draft tokens the target accepted (greedy match).
     pub spec_accepted: u64,
+    /// Prefix-cache probes that adopted a cached prompt prefix
+    /// (DESIGN.md §Prefix cache).
+    pub prefix_hits: u64,
+    /// Prefix-cache probes that found nothing (cold prefill).
+    pub prefix_misses: u64,
+    /// Prompt tokens served from cached prefixes (prefill work skipped).
+    pub prefix_hit_tokens: u64,
+    /// Snapshots published into the radix tree (insert-on-miss).
+    pub prefix_inserts: u64,
+    /// Entries LRU-evicted under the prefix byte budget.
+    pub prefix_evictions: u64,
+    /// Live radix-tree entries at the last observation.
+    pub prefix_entries: usize,
+    /// Snapshot bytes resident at the last observation.
+    pub prefix_bytes: usize,
+    /// Prefix-cache byte budget (0 = cache off).
+    pub prefix_capacity_bytes: usize,
 }
 
 impl SchedulerGauges {
@@ -202,6 +219,17 @@ impl SchedulerGauges {
             return 0.0;
         }
         self.chunk_stall_s * 1e3 / self.chunk_stalls as f64
+    }
+
+    /// Fraction of admission probes that adopted a cached prefix — the
+    /// warm-traffic share the prefix cache converts from prefill compute
+    /// into a host-side row copy.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let probes = self.prefix_hits + self.prefix_misses;
+        if probes == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / probes as f64
     }
 }
 
@@ -268,6 +296,21 @@ impl MetricsHub {
         if reused {
             g.slot_reuses += 1;
         }
+    }
+
+    /// Mirror the worker-local prefix-cache counters into the gauges
+    /// (refreshed once per scheduler iteration, like `observe` — the
+    /// radix tree itself stays single-threaded on the worker).
+    pub fn observe_prefix(&self, s: &crate::kvcache::prefix::PrefixStats) {
+        let mut g = self.gauges.lock().unwrap();
+        g.prefix_hits = s.hits;
+        g.prefix_misses = s.misses;
+        g.prefix_hit_tokens = s.hit_tokens;
+        g.prefix_inserts = s.inserts;
+        g.prefix_evictions = s.evictions;
+        g.prefix_entries = s.entries;
+        g.prefix_bytes = s.bytes_in_use;
+        g.prefix_capacity_bytes = s.capacity_bytes;
     }
 
     /// Refresh the point-in-time gauges (queue depth + KV pool state).
@@ -436,6 +479,34 @@ mod tests {
         assert!((g.mean_chunk_stall_ms() - 20.0).abs() < 1e-9);
         // no interfering chunks -> a well-defined zero, not NaN
         assert_eq!(MetricsHub::new().gauges().mean_chunk_stall_ms(), 0.0);
+    }
+
+    #[test]
+    fn prefix_gauges_mirror_cache_stats() {
+        let hub = MetricsHub::new();
+        let s = crate::kvcache::prefix::PrefixStats {
+            hits: 6,
+            misses: 2,
+            hit_tokens: 384,
+            inserts: 5,
+            evictions: 1,
+            entries: 4,
+            bytes_in_use: 4096,
+            capacity_bytes: 8192,
+        };
+        hub.observe_prefix(&s);
+        let g = hub.gauges();
+        assert_eq!(g.prefix_hits, 6);
+        assert_eq!(g.prefix_misses, 2);
+        assert_eq!(g.prefix_hit_tokens, 384);
+        assert_eq!(g.prefix_inserts, 5);
+        assert_eq!(g.prefix_evictions, 1);
+        assert_eq!(g.prefix_entries, 4);
+        assert_eq!(g.prefix_bytes, 4096);
+        assert_eq!(g.prefix_capacity_bytes, 8192);
+        assert!((g.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        // no probes -> a well-defined zero, not NaN
+        assert_eq!(MetricsHub::new().gauges().prefix_hit_rate(), 0.0);
     }
 
     #[test]

@@ -18,6 +18,16 @@
 //! occupied row, one width-W target pass verifies them, and each row
 //! commits 1..=W tokens (rejected suffixes roll back via
 //! `SlotArena::set_pos`, exactly the KvState protocol of spec/mod.rs).
+//!
+//! Prefix reuse (DESIGN.md §Prefix cache): with
+//! `ServerConfig.prefix_cache_bytes` set, every admission — whole-prompt
+//! and chunked, plain and speculative — first probes a radix tree of
+//! prompt prefixes, adopts the longest cached KV snapshot into its slot,
+//! and prefills only the uncovered suffix. Prefill publishes snapshots
+//! back at snap-aligned boundaries (insert-on-miss), so the cache warms
+//! itself under churn with no separate calibration pass. One tree entry
+//! carries the target snapshot AND the draft's, so the two arenas enter
+//! decode in lockstep exactly as with cold admission.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -26,12 +36,14 @@ use std::sync::Arc;
 use crate::data::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
 use crate::executor::engine::{Engine, RowDecode, RowSpecDecode};
+use crate::kvcache::prefix::{KvSnapshot, PrefixCache};
 use crate::kvcache::{kv_bytes, slot_bytes, KvLeaseOwned, KvPool, KvState, SlotArena};
 use crate::nbl::plan::ModelPlan;
 use crate::sampling::{argmax, Sampler};
 use crate::server::api::{GenRequest, GenResponse};
 use crate::server::batcher::{Batcher, Scheduler};
 use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
+use crate::tensor::Tensor;
 use crate::util::timer::Timer;
 
 /// Worker-loop scheduling protocol.
@@ -79,6 +91,19 @@ pub struct ServerConfig {
     /// chunking (whole-prompt admission prefill — also the automatic
     /// fallback when the artifact set predates the chunk ops).
     pub prefill_chunk: usize,
+    /// Prefix-aware KV reuse (DESIGN.md §Prefix cache): host-side byte
+    /// budget for the radix-tree prompt cache. Admissions adopt the
+    /// longest cached prefix and prefill only the uncovered suffix;
+    /// prefill publishes snapshots back (insert-on-miss). 0 disables
+    /// the cache (also the automatic fallback when the artifact set
+    /// predates the cache-appending chunk ops).
+    pub prefix_cache_bytes: usize,
+    /// Snapshot granularity in tokens: snapshots land at multiples of
+    /// this, aligned UP to a multiple of the serve-time chunk when
+    /// chunking is on (so an adopted prefix re-enters the chunk ladder
+    /// exactly where a cold admission would). 0 = auto: the chunk size,
+    /// or 128 with chunking off.
+    pub prefix_snap: usize,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +115,8 @@ impl Default for ServerConfig {
             mode: BatchMode::Continuous,
             spec: None,
             prefill_chunk: 128,
+            prefix_cache_bytes: 0,
+            prefix_snap: 0,
         }
     }
 }
@@ -268,6 +295,43 @@ struct SpecState {
     width: usize,
 }
 
+/// Worker-local prefix-reuse state (DESIGN.md §Prefix cache): the radix
+/// tree of prompt prefixes -> host KV snapshots, plus the snapshot
+/// granularity resolved against the serve-time chunk. One tree entry
+/// carries the target snapshot AND the draft's under speculation, so
+/// the pair can never fall out of lockstep (the PR 4 chunk-lockstep
+/// rule, applied to snapshots).
+struct PrefixReuse {
+    cache: PrefixCache,
+    /// Snapshot positions are multiples of this many tokens.
+    snap: usize,
+}
+
+impl PrefixReuse {
+    /// Longest usable cached prefix of `prompt`, capped at len-1 so the
+    /// suffix always yields first-token logits.
+    fn probe(&mut self, prompt: &[u32]) -> Option<Arc<Vec<KvSnapshot>>> {
+        self.cache.lookup(prompt, prompt.len().saturating_sub(1))
+    }
+
+    /// Stat-free coverage peek (the guard's slip test for queue heads
+    /// waiting on the chunked machine — runs every iteration, so it
+    /// must not touch LRU order or the probe counters).
+    fn peek(&self, prompt: &[u32]) -> usize {
+        self.cache.covered(prompt, prompt.len().saturating_sub(1))
+    }
+
+    /// Resolve a probe hit: `covered > 0` means the snapshot was really
+    /// restored into a slot; 0 means the admission fell back cold.
+    fn resolve(&mut self, covered: usize) {
+        if covered > 0 {
+            self.cache.note_adopted(covered);
+        } else {
+            self.cache.note_fallback();
+        }
+    }
+}
+
 /// A multi-chunk admission in flight (DESIGN.md §Chunked prefill): the
 /// prompt is prefilled one cache-appending chunk per scheduler
 /// iteration instead of one whole blocking call, so decode rows stall
@@ -358,6 +422,32 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
             }
         }
     };
+    // prefix-aware KV reuse (DESIGN.md §Prefix cache): probe-and-adopt
+    // needs the cache-appending chunk ops to extend an adopted prefix,
+    // so stale artifacts degrade to cold prefill, never to an error
+    let mut prefix: Option<PrefixReuse> = match server.config.prefix_cache_bytes {
+        0 => None,
+        bytes if engine.supports_prefix_reuse() => {
+            let want = match server.config.prefix_snap {
+                0 if chunk > 0 => chunk,
+                0 => 128,
+                w => w,
+            };
+            // chunk-align snapshot positions: an adopted prefix then
+            // re-enters the chunk ladder exactly where a cold admission
+            // would, so the ragged tail's padded bucket can never cross
+            // the context boundary in a way cold admission could not
+            let snap = if chunk > 0 { want.div_ceil(chunk) * chunk } else { want };
+            Some(PrefixReuse { cache: PrefixCache::new(bytes), snap })
+        }
+        _ => {
+            eprintln!(
+                "server: attn_prefill_chunk ops missing from the AOT grid; \
+                 prefix cache disabled (rebuild artifacts)"
+            );
+            None
+        }
+    };
     let mut pending: Option<PendingPrefill> = None;
     let mut sched = Scheduler::new();
     let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
@@ -432,10 +522,19 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
         // chunked-prefill machine (at most one in flight); single-chunk
         // prompts admit whole, exactly as before chunking existed.
         loop {
-            if pending.is_some() && sched.head().is_none_or(|r| r.prompt.len() > chunk) {
-                // the running machine owns the chunk budget: a long head
-                // waits for it (strict FIFO among multi-chunk prompts);
-                // single-chunk heads may still slip into free slots
+            if pending.is_some()
+                && sched.head().is_none_or(|r| {
+                    // the running machine owns the chunk budget: a head
+                    // that still needs multi-chunk prefill waits for it
+                    // (strict FIFO among multi-chunk prompts). The slip
+                    // test uses the cache-UNCOVERED suffix, so a warm
+                    // long prompt admits whole between chunks exactly
+                    // like a genuinely short one — the stat-free peek
+                    // keeps a waiting head from distorting LRU/stats.
+                    let covered = prefix.as_ref().map_or(0, |px| px.peek(&r.prompt));
+                    r.prompt.len().saturating_sub(covered) > chunk
+                })
+            {
                 break;
             }
             let Some(slot) = arena_ref.free_slot() else { break };
@@ -450,15 +549,29 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
                 }
             };
             let watch = take_watch(&mut watches, req.id);
-            if chunk > 0 && req.prompt.len() > chunk {
+            // probe the prefix cache: the longest cached prefix decides
+            // how much prefill is actually left, and THAT picks the
+            // admission path (a long prompt whose suffix fits one chunk
+            // admits whole, exactly like a genuinely short prompt)
+            let hit = prefix.as_mut().and_then(|px| px.probe(&req.prompt));
+            let covered = hit.as_ref().map_or(0, |s| s[0].pos);
+            // `pending.is_none()` is the guard's invariant restated: a
+            // popped head only ever starts a machine when none runs
+            // (overwriting one would leak its reserved row); if the two
+            // ever disagreed, whole-prompt admit is the safe fallback
+            if chunk > 0
+                && pending.is_none()
+                && req.prompt.len().saturating_sub(covered) > chunk
+            {
                 pending = start_chunked(
-                    server, arena_ref, spec.as_mut(), slot, req, watch, lease, &mut replies,
+                    server, arena_ref, spec.as_mut(), slot, req, watch, lease, hit,
+                    prefix.as_mut(), chunk, &mut replies,
                 );
                 continue;
             }
             admit(
-                server, arena_ref, spec.as_mut(), slot, req, watch, lease, &mut slots,
-                &mut row_used, &mut replies,
+                server, arena_ref, spec.as_mut(), slot, req, watch, lease, hit,
+                prefix.as_mut(), &mut slots, &mut row_used, &mut replies,
             );
         }
 
@@ -466,8 +579,8 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
         // ONE cache-appending chunk, then fall through to the decode
         // iteration — in-flight rows never wait for more than one chunk
         advance_chunked(
-            server, arena_ref, spec.as_mut(), &mut pending, &mut slots, &mut row_used,
-            &mut replies, chunk,
+            server, arena_ref, spec.as_mut(), prefix.as_mut(), &mut pending, &mut slots,
+            &mut row_used, &mut replies, chunk,
         );
 
         // ---- a head that can never fit must not hang the queue (a
@@ -502,6 +615,9 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
         server
             .metrics
             .observe(sched.waiting(), server.pool.in_use(), server.pool.capacity());
+        if let Some(px) = prefix.as_ref() {
+            server.metrics.observe_prefix(&px.cache.stats());
+        }
         if arena_ref.occupancy() == 0 {
             continue;
         }
@@ -530,13 +646,89 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
     }
 }
 
-/// Prefill a newly admitted SINGLE-CHUNK request solo, sample its first
-/// token, and (unless it already finished) migrate its cache into arena
-/// row `slot` — of the target arena AND, under speculation, the draft
-/// arena. This still runs on the worker thread while the iteration loop
-/// holds, but only for prompts no longer than one chunk — the bounded
-/// stall the chunk size defines; longer prompts go through
-/// [`start_chunked`]/[`advance_chunked`] instead.
+/// Prefill a prompt into a fresh batch-1 state, adopting `snap`'s
+/// cached prefix when one is usable: restore the snapshot and run
+/// suffix-only prefill, falling back to a cold whole-prompt call when
+/// the snapshot leaves no suffix, the padded suffix bucket would cross
+/// the context boundary, or the restore/suffix prefill itself fails.
+/// Returns (state, hidden, last real row of `hidden`, adopted tokens;
+/// 0 adopted means the cold path ran).
+fn prefill_with_prefix(
+    engine: &Engine,
+    prompt: &[u32],
+    snap: Option<&KvSnapshot>,
+) -> Result<(KvState, Tensor, usize, usize)> {
+    if let Some(s) = snap {
+        let p = s.pos;
+        if p > 0 && p < prompt.len() {
+            let suffix = prompt.len() - p;
+            let fits = engine
+                .prefill_bucket(suffix)
+                .is_ok_and(|tb| p + tb <= engine.config().max_ctx);
+            if fits {
+                // the cache is an accelerator, never a correctness
+                // dependency: a failed restore or suffix prefill falls
+                // through to the cold whole-prompt call below instead
+                // of failing a request cold serving could answer
+                if let Ok(mut state) = s.restore_state(&engine.plan, engine.config()) {
+                    if let Ok(hidden) = engine.prefill_suffix(&mut state, &prompt[p..]) {
+                        return Ok((state, hidden, suffix - 1, p));
+                    }
+                }
+            }
+        }
+    }
+    let pre = engine.prefill(prompt, 1, prompt.len(), None)?;
+    Ok((pre.state, pre.hidden, prompt.len() - 1, 0))
+}
+
+/// Insert-on-miss snapshot publication: every snap-aligned boundary the
+/// prefill just crossed in (covered, state.pos] becomes a reusable
+/// prefix (target + draft snapshots in ONE entry under speculation, so
+/// eviction can never separate them). Failures are swallowed — the
+/// cache is an accelerator, never a correctness dependency.
+fn publish_prefix_snapshots(
+    px: &mut PrefixReuse,
+    prompt: &[u32],
+    covered: usize,
+    target: &KvState,
+    draft: Option<&KvState>,
+) {
+    let top = target.pos.min(prompt.len());
+    let mut p = (covered / px.snap + 1) * px.snap;
+    while p <= top {
+        // check-and-touch FIRST: a snapshot is a multi-layer host copy
+        // of the whole covered prefix, far too expensive to build just
+        // for insert's dedup to throw away on every repeated prompt
+        if px.cache.touch(&prompt[..p]) {
+            p += px.snap;
+            continue;
+        }
+        let Ok(t) = KvSnapshot::from_state(target, p) else { return };
+        let mut snaps = vec![t];
+        if let Some(d) = draft {
+            let Ok(ds) = KvSnapshot::from_state(d, p) else { return };
+            snaps.push(ds);
+        }
+        if !px.cache.insert(&prompt[..p], snaps) {
+            // capacity refusal (dedup was already handled by touch):
+            // every later boundary is strictly larger and equally
+            // doomed, so stop paying the host copies for them
+            return;
+        }
+        p += px.snap;
+    }
+}
+
+/// Prefill a newly admitted request whose uncovered suffix fits ONE
+/// chunk, sample its first token, and (unless it already finished)
+/// migrate its cache into arena row `slot` — of the target arena AND,
+/// under speculation, the draft arena. A prefix-cache hit restores the
+/// snapshot and prefills only the suffix; either way the crossed
+/// snapshot boundaries are published back. This still runs on the
+/// worker thread while the iteration loop holds, but the stall is
+/// bounded by one chunk of real prefill; prompts with longer uncovered
+/// suffixes go through [`start_chunked`]/[`advance_chunked`] instead.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     server: &Arc<Server>,
@@ -546,6 +738,8 @@ fn admit(
     req: GenRequest,
     mut watch: Stopwatch,
     lease: KvLeaseOwned,
+    hit: Option<Arc<Vec<KvSnapshot>>>,
+    mut prefix: Option<&mut PrefixReuse>,
     slots: &mut [Option<ActiveSlot>],
     row_used: &mut [bool],
     replies: &mut HashMap<u64, Sender<GenResponse>>,
@@ -558,14 +752,23 @@ fn admit(
         respond(replies, ok_response(req.id, Vec::new(), &timing));
         return;
     }
-    let pre = match engine.prefill(&req.prompt, 1, len, None) {
-        Ok(p) => p,
-        Err(e) => {
-            respond(replies, error_response(req.id, e));
-            return;
+    let (state, hidden, col, covered) =
+        match prefill_with_prefix(engine, &req.prompt, hit.as_deref().and_then(|s| s.first())) {
+            Ok(t) => t,
+            Err(e) => {
+                respond(replies, error_response(req.id, e));
+                return;
+            }
+        };
+    // hit accounting at ADOPTION time, not probe time: a hit whose
+    // suffix bucket could not fit fell back cold and must count as a
+    // miss, or the hit-rate gauge stays green while adoptions fail
+    if hit.is_some() {
+        if let Some(px) = prefix.as_deref_mut() {
+            px.resolve(covered);
         }
-    };
-    let logits = match engine.head(&pre.hidden) {
+    }
+    let logits = match engine.head(&hidden) {
         Ok(l) => l,
         Err(e) => {
             respond(replies, error_response(req.id, e));
@@ -573,7 +776,7 @@ fn admit(
         }
     };
     let mut sampler = Sampler::new(req.params.clone());
-    let first = sampler.sample(logits.at2(0, len - 1));
+    let first = sampler.sample(logits.at2(0, col));
     watch.mark_token();
     let outputs = vec![first];
     // the prefill token is free and the k-th decode step writes cache
@@ -583,30 +786,53 @@ fn admit(
         .min((cfg.max_ctx + 1).saturating_sub(len))
         .max(1);
     if Some(first) == server.config.eos || outputs.len() >= effective_max {
-        // finished on the prefill token: never occupies a slot
+        // finished on the prefill token: never occupies a slot. The
+        // prefill still publishes in plain mode; under speculation no
+        // draft state exists yet, and a target-only entry would break
+        // the pair-lockstep invariant, so spec skips it.
+        if spec.is_none() {
+            if let Some(px) = prefix {
+                publish_prefix_snapshots(px, &req.prompt, covered, &state, None);
+            }
+        }
         let timing = watch.finish(len, outputs.len());
         let resp = ok_response(req.id, outputs, &timing);
         server.metrics.record(timing);
         respond(replies, resp);
         return;
     }
-    if let Err(e) = arena.adopt(slot, &pre.state) {
+    // draft prefill BEFORE any adoption, so a draft failure leaves no
+    // half-adopted arena row behind
+    let mut draft_state: Option<KvState> = None;
+    if let Some(sp) = spec.as_deref() {
+        let dsnap = hit.as_deref().and_then(|s| s.get(1));
+        match prefill_with_prefix(&sp.engine, &req.prompt, dsnap) {
+            Ok((ds, _, _, _)) => draft_state = Some(ds),
+            Err(e) => {
+                respond(replies, error_response(req.id, e));
+                return;
+            }
+        }
+    }
+    if let Err(e) = arena.adopt(slot, &state) {
         respond(replies, error_response(req.id, e));
         return;
     }
     if let Some(sp) = spec {
-        // draft prefill + lockstep adoption into the SAME slot index
-        let adopted = sp.engine.prefill(&req.prompt, 1, len, None).and_then(|dpre| {
-            sp.arena
-                .as_mut()
-                .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
-                .and_then(|da| da.adopt(slot, &dpre.state))
-        });
+        // lockstep adoption into the SAME slot index
+        let adopted = sp
+            .arena
+            .as_mut()
+            .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
+            .and_then(|da| da.adopt(slot, draft_state.as_ref().unwrap()));
         if let Err(e) = adopted {
             arena.release(slot);
             respond(replies, error_response(req.id, e));
             return;
         }
+    }
+    if let Some(px) = prefix {
+        publish_prefix_snapshots(px, &req.prompt, covered, &state, draft_state.as_ref());
     }
     server.metrics.note_admission(row_used[slot]);
     row_used[slot] = true;
@@ -624,18 +850,25 @@ fn admit(
 /// Begin a multi-chunk admission (DESIGN.md §Chunked prefill): answer
 /// zero-token requests immediately, otherwise reserve arena row `slot`
 /// (in both arenas under speculation) and return the state machine that
-/// [`advance_chunked`] drives one chunk per iteration. Returns None if
-/// the request was answered (or the reservation failed) instead of
+/// [`advance_chunked`] drives one chunk per iteration. A prefix-cache
+/// hit seeds the machine mid-prompt: the snapshot restores into the
+/// building state and chunking starts at the covered position (the
+/// target and draft adopt atomically — a failed draft restore must not
+/// leave the pair out of lockstep, so both restart cold). Returns None
+/// if the request was answered (or the reservation failed) instead of
 /// entering prefill.
 #[allow(clippy::too_many_arguments)]
 fn start_chunked(
     server: &Arc<Server>,
     arena: &mut SlotArena,
-    spec: Option<&mut SpecState>,
+    mut spec: Option<&mut SpecState>,
     slot: usize,
     req: GenRequest,
     watch: Stopwatch,
     lease: KvLeaseOwned,
+    hit: Option<Arc<Vec<KvSnapshot>>>,
+    prefix: Option<&mut PrefixReuse>,
+    chunk: usize,
     replies: &mut HashMap<u64, Sender<GenResponse>>,
 ) -> Option<PendingPrefill> {
     let engine = &server.engine;
@@ -649,8 +882,7 @@ fn start_chunked(
         respond(replies, error_response(req.id, e));
         return None;
     }
-    let mut draft_state = None;
-    if let Some(sp) = spec {
+    if let Some(sp) = spec.as_deref_mut() {
         let reserved = sp
             .arena
             .as_mut()
@@ -661,16 +893,51 @@ fn start_chunked(
             respond(replies, error_response(req.id, e));
             return None;
         }
-        draft_state = Some(KvState::empty(&sp.engine.plan, cfg, 1, 1));
+    }
+    let draft_plan = spec.as_deref().map(|sp| &sp.engine.plan);
+    let mut done = 0usize;
+    let mut state = KvState::empty(&engine.plan, cfg, 1, 1);
+    let mut draft_state = draft_plan.map(|dp| KvState::empty(dp, cfg, 1, 1));
+    if let Some(snaps) = hit.as_deref() {
+        let p = snaps[0].pos;
+        // chunk-aligned snapshot positions re-enter the chunk ladder
+        // exactly where a cold machine would stand after p tokens, so
+        // every later chunk (and the ragged tail) stays on the grid
+        let usable = p > 0
+            && p < req.prompt.len()
+            && p % chunk == 0
+            && (draft_plan.is_none() || snaps.len() > 1);
+        if usable {
+            let warm = snaps[0].restore_state(&engine.plan, cfg).ok().and_then(|t| {
+                match draft_plan {
+                    None => Some((t, None)),
+                    Some(dp) => snaps[1].restore_state(dp, cfg).ok().map(|d| (t, Some(d))),
+                }
+            });
+            if let Some((t, d)) = warm {
+                done = p;
+                state = t;
+                if d.is_some() {
+                    draft_state = d;
+                }
+            }
+        }
+    }
+    // same adoption-time accounting as `admit`: an unusable hit (bad
+    // alignment, failed restore) seeded a cold machine = a miss
+    if hit.is_some() {
+        if let Some(px) = prefix {
+            px.resolve(done);
+        }
     }
     Some(PendingPrefill {
-        state: KvState::empty(&engine.plan, cfg, 1, 1),
+        state,
         draft_state,
         req,
         watch,
         lease,
         slot,
-        done: 0,
+        done,
     })
 }
 
@@ -679,12 +946,15 @@ fn start_chunked(
 /// token from the chunk's last real row, mark TTFT on the stopwatch
 /// that has been running since submission (the bugfix invariant: N
 /// chunk iterations of queue-adjacent prefill still count into TTFT),
-/// and adopt the built caches into the reserved slot(s).
+/// and adopt the built caches into the reserved slot(s). Snapshot
+/// boundaries the chunk crossed publish into the prefix cache as they
+/// happen — the "taken at chunk boundaries" half of insert-on-miss.
 #[allow(clippy::too_many_arguments)]
 fn advance_chunked(
     server: &Arc<Server>,
     arena: &mut SlotArena,
     mut spec: Option<&mut SpecState>,
+    prefix: Option<&mut PrefixReuse>,
     pending: &mut Option<PendingPrefill>,
     slots: &mut [Option<ActiveSlot>],
     row_used: &mut [bool],
@@ -722,6 +992,10 @@ fn advance_chunked(
         }
     };
     p.done += step;
+    if let Some(px) = prefix {
+        let before = p.done - step;
+        publish_prefix_snapshots(px, &p.req.prompt, before, &p.state, p.draft_state.as_ref());
+    }
     if p.done < len {
         return;
     }
@@ -834,7 +1108,9 @@ fn decode_iteration(
     replies: &mut HashMap<u64, Sender<GenResponse>>,
 ) {
     let engine = &server.engine;
-    let occ = arena.occupied();
+    // one small copy per iteration: the loop below mutates the arena
+    // (set_pos/release) while walking the occupied set
+    let occ: Vec<usize> = arena.occupied().to_vec();
     server.metrics.note_iteration(occ.len(), arena.bucket_batch);
 
     // ---- width selection: speculate only when every occupied row has

@@ -843,6 +843,211 @@ fn chunk_stall_gauges_observe_decode_interference() {
     handle.shutdown();
 }
 
+// ---------------------------------------------------------------------------
+// prefix-aware KV reuse (ISSUE 5: radix-tree prompt cache + snapshot adoption)
+
+#[test]
+fn prefix_snapshot_restore_matches_cold_prefill() {
+    // tentpole invariant at the engine layer: restore a snapshot taken
+    // at a prefill boundary, prefill only the suffix, adopt the result
+    // into an arena row at a NONZERO position, and greedy-decode —
+    // token-identical to a cold whole-prompt prefill
+    let engine = engine("main");
+    let cfg = engine.config();
+    let plan = nbl::nbl::plan::ModelPlan::baseline(cfg.n_layers);
+    let prompt = nbl::data::ByteTokenizer::new().encode(&long_text(150));
+    let cut = 96usize;
+
+    // cold reference: whole prefill + batch-1 cached decode
+    let cold = engine.prefill(&prompt, 1, prompt.len(), None).unwrap();
+    let mut cold_state = cold.state;
+    let logits = engine.head(&cold.hidden).unwrap();
+    let mut want = vec![nbl::sampling::argmax(logits.at2(0, prompt.len() - 1))];
+
+    // snapshot the first `cut` tokens out of a partial prefill
+    let mut base = nbl::kvcache::KvState::empty(&plan, cfg, 1, 1);
+    engine.prefill_chunk(&mut base, &prompt[..cut], cut).unwrap();
+    let snap = nbl::kvcache::prefix::KvSnapshot::from_state(&base, cut).unwrap();
+    assert!(snap.bytes() > 0);
+
+    // warm path: restore + suffix-only prefill
+    let mut state = snap.restore_state(&plan, cfg).unwrap();
+    assert_eq!(state.pos, cut);
+    let hidden = engine.prefill_suffix(&mut state, &prompt[cut..]).unwrap();
+    assert_eq!(state.pos, prompt.len());
+    let logits = engine.head(&hidden).unwrap();
+    let mut got = vec![nbl::sampling::argmax(logits.at2(0, prompt.len() - cut - 1))];
+
+    // adopt the warm state into an arena row mid-context and decode
+    // through the continuous rows path against the cold KvState
+    let mut arena = engine.new_arena(8).unwrap();
+    arena.adopt(1, &state).unwrap();
+    assert_eq!(arena.pos(1), Some(prompt.len()));
+    for _ in 0..16 {
+        let lw = engine.decode(&mut cold_state, &[*want.last().unwrap()], 1).unwrap();
+        want.push(nbl::sampling::argmax(lw.at2(0, 0)));
+        let rows = [nbl::executor::RowDecode { slot: 1, token: *got.last().unwrap() }];
+        let lg = engine.decode_rows(&mut arena, &rows).unwrap();
+        got.push(nbl::sampling::argmax(lg.at2(0, 0)));
+    }
+    assert_eq!(got, want, "prefix-adopted decode diverged from cold prefill");
+}
+
+#[test]
+fn prefix_cache_serving_matches_cold_outputs() {
+    // ISSUE 5 acceptance: greedy outputs token-identical with the prefix
+    // cache on vs off, continuous AND spec modes, under slot churn with
+    // heavily shared prefixes (10 requests, 8-row arena, staggered
+    // max_tokens, one shared 96-token system prompt)
+    let engine = Arc::new(engine("main"));
+    let shared = long_text(96);
+    let reqs: Vec<GenRequest> = (0..10u64)
+        .map(|i| {
+            let tail = format!(" case {i} of the garden walk tour");
+            let take = 8 + (i as usize % 4) * 4;
+            req(i, &format!("{shared}{}", &tail[..take]), 6 + (i as usize % 3) * 6)
+        })
+        .collect();
+    let solo_server = Server::new(engine.clone(), ServerConfig::default());
+    let solo: Vec<_> = reqs.iter().map(|r| solo_server.generate_one(r)).collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(2);
+    for (label, spec) in [("plain", None), ("spec", Some(SpecConfig { draft_plan, width: 4 }))] {
+        let cfg = ServerConfig {
+            prefix_cache_bytes: 32 << 20,
+            prefill_chunk: 32,
+            spec,
+            ..ServerConfig::default()
+        };
+        let server = Arc::new(Server::new(engine.clone(), cfg));
+        let metrics = server.metrics.clone();
+        let handle = server.clone().spawn();
+        let rxs: Vec<_> = reqs.iter().map(|r| handle.submit(r.clone())).collect();
+        for (rx, s) in rxs.into_iter().zip(&solo) {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "[{label}] {:?}", r.error);
+            assert_eq!(
+                r.tokens, s.tokens,
+                "[{label}] prefix-cached serving diverged from cold on request {}",
+                s.id
+            );
+        }
+        let g = metrics.gauges();
+        assert_eq!(g.admissions, 10, "[{label}] {g:?}");
+        assert!(g.prefix_inserts > 0, "[{label}] prefill must publish snapshots: {g:?}");
+        assert!(g.prefix_hits > 0, "[{label}] shared prefixes must hit: {g:?}");
+        assert!(g.prefix_hit_tokens > 0, "[{label}] {g:?}");
+        assert!(g.prefix_hit_rate() > 0.0, "[{label}] {g:?}");
+        assert!(g.prefix_bytes > 0, "[{label}] resident snapshots must be accounted: {g:?}");
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn prefix_warm_chunked_machine_matches_solo() {
+    // a hit whose uncovered suffix still exceeds one chunk re-enters
+    // the chunked machine mid-prompt (done = covered): outputs must
+    // stay token-identical to cold solo serving AND the warm machines
+    // must run fewer chunks than cold ones would
+    let engine = Arc::new(engine("main"));
+    let shared = long_text(64);
+    // prompts share EXACTLY the first 64 tokens, then diverge (the
+    // digit) before a long common-phrase suffix — the radix tree must
+    // stop at the divergence, not match the phrase again
+    let reqs: Vec<GenRequest> = (0..3u64)
+        .map(|i| req(i, &format!("{shared}{i} {}", long_text(76)), 8))
+        .collect();
+    let solo_server = Server::new(engine.clone(), ServerConfig::default());
+    let solo: Vec<_> = reqs.iter().map(|r| solo_server.generate_one(r)).collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+    let cfg = ServerConfig {
+        prefix_cache_bytes: 32 << 20,
+        prefill_chunk: 32,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = reqs.iter().map(|r| handle.submit(r.clone())).collect();
+    for (rx, s) in rxs.into_iter().zip(&solo) {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.tokens, s.tokens, "warm chunked machine diverged on request {}", s.id);
+    }
+    let g = metrics.gauges();
+    // prompts are 142 tokens: cold chunks 5x (32+32+32+32+14); the two
+    // warm machines adopt 64 tokens and chunk only 32+32+14
+    assert_eq!(g.chunked_admissions, 3, "{g:?}");
+    assert_eq!(g.prefix_hits, 2, "requests 2 and 3 must adopt the shared 64: {g:?}");
+    assert_eq!(g.prefix_hit_tokens, 128, "{g:?}");
+    assert_eq!(g.prefill_chunks, 5 + 3 + 3, "warm machines must skip covered chunks: {g:?}");
+    handle.shutdown();
+}
+
+#[test]
+fn warm_long_head_slips_past_running_machine() {
+    // regression (PR 5 review): the machine guard classifies the queue
+    // head by its cache-UNCOVERED suffix. A warm 139-token prompt whose
+    // cached prefix leaves an 11-token suffix must admit whole between
+    // a cold 256-token machine's chunks — NOT wait out all 8 of them —
+    // and still decode token-identically to cold solo serving.
+    let engine = Arc::new(engine("main"));
+    let shared = long_text(128);
+    let warm_req = req(3, &format!("{shared} extra bits"), 4);
+    let solo = Server::new(engine.clone(), ServerConfig::default()).generate_one(&warm_req);
+    assert!(solo.error.is_none());
+    let cfg = ServerConfig {
+        prefix_cache_bytes: 32 << 20,
+        prefill_chunk: 32,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    // prime the tree with the shared prefix, then race a cold long
+    // machine (distinct first byte -> no shared prefix) against the
+    // warm head queued right behind it
+    let p = handle.submit(req(1, &shared, 2)).recv().unwrap();
+    assert!(p.error.is_none(), "{:?}", p.error);
+    let rx_cold = handle.submit(req(2, &format!("q{}", long_text(255)), 8));
+    let rx_warm = handle.submit(warm_req);
+    let cold = rx_cold.recv().unwrap();
+    let warm = rx_warm.recv().unwrap();
+    assert!(cold.error.is_none() && warm.error.is_none());
+    assert_eq!(warm.tokens, solo.tokens, "slipped warm admission diverged");
+    let g = metrics.gauges();
+    assert_eq!(g.prefix_hits, 1, "the warm head must adopt the primed prefix: {g:?}");
+    assert!(
+        warm.ttft_ms < 0.75 * cold.ttft_ms,
+        "a warm head (11-token suffix) must not wait out the cold machine's \
+         8 chunks: warm TTFT {:.1} ms vs cold TTFT {:.1} ms",
+        warm.ttft_ms,
+        cold.ttft_ms
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn prefix_cache_disabled_reports_zero_gauges() {
+    // prefix_cache_bytes: 0 (the default) must leave the serving path
+    // untouched: no probes, no inserts, no budget
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let r = handle.submit(req(1, &long_text(96), 8)).recv().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    let g = metrics.gauges();
+    assert_eq!(g.prefix_hits + g.prefix_misses, 0);
+    assert_eq!(g.prefix_inserts, 0);
+    assert_eq!(g.prefix_capacity_bytes, 0);
+    handle.shutdown();
+}
+
 #[test]
 fn kv_pool_accounting_returns_to_zero_after_churn() {
     // invariant: reserved bytes always equal the sum of live leases, and
