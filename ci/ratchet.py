@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Floor-ratchet proposer for the perf-smoke trajectory.
+
+ci/collect_bench.py gates each run against committed floors in
+ci/bench_baseline.json but never moves them; this tool closes the loop.
+Point it at a directory of accumulated BENCH_<sha>.json artifacts
+(downloaded from the workflow's bench-json uploads) and it proposes
+tightened floors:
+
+  - for every metric listed in the baseline, gather its value across
+    all runs that report it;
+  - with at least --min-runs observations, the proposed floor is
+    min(observed) * SAFETY (0.9) — even the worst run of the window
+    clears the new floor with 10% headroom, so runner noise alone
+    cannot false-fail;
+  - a proposal is only surfaced when it RAISES a positive baseline, or
+    PROMOTES a record-only metric (baseline <= 0) that now has enough
+    positive observations to gate on.
+
+Advisory by default (prints a table, exits 0). Pass --write to apply
+the proposals to ci/bench_baseline.json in place; min_ratio and the
+schema/note fields are preserved, only baselines move.
+
+Usage:  python ci/ratchet.py [--bench-dir .] [--min-runs 3] [--write]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA = "nbl-bench/v1"
+SAFETY = 0.9  # proposed floor = worst observed run * SAFETY
+
+
+def load_runs(bench_dir):
+    """Load every BENCH_*.json trajectory artifact under bench_dir."""
+    runs = []
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                j = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(j, dict) or j.get("schema") != SCHEMA:
+            continue
+        runs.append((os.path.basename(path), j.get("benches", {})))
+    return runs
+
+
+def lookup(benches, dotted):
+    bench, _, metric = dotted.partition(".")
+    b = benches.get(bench)
+    if b is None:
+        return None
+    return b.get("metrics", {}).get(metric)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-dir", default=".", help="dir holding BENCH_<sha>.json files")
+    ap.add_argument("--baseline", default=os.path.join(REPO, "ci", "bench_baseline.json"))
+    ap.add_argument("--min-runs", type=int, default=3)
+    ap.add_argument("--write", action="store_true", help="apply proposals to the baseline file")
+    args = ap.parse_args()
+
+    runs = load_runs(args.bench_dir)
+    print(f"{len(runs)} trajectory run(s) under {args.bench_dir}")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    metrics = baseline.get("metrics", {})
+
+    proposals = []  # (dotted, old_base, new_base, n_obs, kind)
+    for dotted, gate in sorted(metrics.items()):
+        base = float(gate.get("baseline", 0.0))
+        obs = []
+        for _, benches in runs:
+            v = lookup(benches, dotted)
+            if isinstance(v, (int, float)):
+                obs.append(float(v))
+        if len(obs) < args.min_runs:
+            continue
+        proposed = min(obs) * SAFETY
+        if base > 0.0 and proposed > base:
+            proposals.append((dotted, base, proposed, len(obs), "raise"))
+        elif base <= 0.0 and proposed > 0.0 and not dotted.endswith("_ms"):
+            # latency percentiles (*_ms) are lower-is-better: a floor gate
+            # (current >= floor) would fail CI on improvement, so they stay
+            # record-only trajectory keys forever
+            proposals.append((dotted, base, proposed, len(obs), "promote"))
+
+    if not proposals:
+        print(
+            f"no ratchet proposals (need >= {args.min_runs} observations per "
+            f"metric, and a tighter floor than the committed one)"
+        )
+        return
+    print(f"{len(proposals)} proposal(s) (floor = worst-of-window * {SAFETY}):")
+    for dotted, old, new, n, kind in proposals:
+        print(f"  [{kind:7s}] {dotted}: {old:.2f} -> {new:.2f}  ({n} runs)")
+
+    if args.write:
+        for dotted, _, new, _, _ in proposals:
+            metrics[dotted]["baseline"] = round(new, 3)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.baseline}")
+    else:
+        print("(advisory run: pass --write to apply)")
+
+
+if __name__ == "__main__":
+    main()

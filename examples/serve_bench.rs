@@ -25,10 +25,20 @@
 //! warm strictly beats cold — the multiplicative win prefix reuse adds
 //! on top of batching/speculation/chunking.
 //!
+//! `--paged-compare` runs the ISSUE 6 block-pool arm: the same
+//! shared-prefix workload served twice under an IDENTICAL two-slot KV
+//! byte budget — contiguous slot-granular admission vs the paged block
+//! pool (`--block-tokens`, default 64). Asserts the paged run holds
+//! strictly more concurrent rows (peak_rows) AND that its warm prefix
+//! adoptions are zero-copy block splices (the per-layer snapshot
+//! expansion counter stays 0 while the splice counter advances). Emits
+//! the concurrency ratio that ci/bench_baseline.json floors.
+//!
 //!     cargo run --release --example serve_bench \
 //!         [-- --m 2 --requests 24 --max-tokens 48 \
 //!              --mode spec --spec-width 4 --draft-m 4 \
-//!              --chunk 128 --long-every 6 --ttft-compare | --prefix-share]
+//!              --chunk 128 --long-every 6 \
+//!              --ttft-compare | --prefix-share | --paged-compare]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -182,6 +192,144 @@ fn corpus_text(tokens: &[u32], start: usize, len: usize) -> String {
         .collect()
 }
 
+/// The ISSUE 6 paged-vs-contiguous arm: one shared-prefix short-suffix
+/// workload served twice under an IDENTICAL KV byte budget sized at
+/// exactly TWO worst-case contiguous slots. Contiguous admission can
+/// never hold more than two rows; block-granular admission charges each
+/// row only the blocks its context actually spans (and its shared
+/// prefix blocks charge NOTHING), so the paged run must reach a
+/// strictly higher peak concurrency. The warm adoptions must also be
+/// zero-copy: the per-layer snapshot expansion counter stays 0 while
+/// the block-splice counter advances — counter-verified, not inferred.
+fn run_paged_compare(
+    engine: &Arc<Engine>,
+    wb: &Workbench,
+    n_requests: usize,
+    max_tokens: usize,
+    block_tokens: usize,
+    m: usize,
+) -> anyhow::Result<()> {
+    let max_ctx = engine.config().max_ctx;
+    let per_slot = nbl::kvcache::slot_bytes(engine.config(), &engine.plan);
+    let budget = 2 * per_slot;
+    // the shared prefix sits on the default whole-prompt snap boundary
+    // (128), leaving room for the suffix + decode inside max_ctx
+    let share = 128.min(max_ctx.saturating_sub(64));
+    let suffix_len = 16usize;
+    let shared = corpus_text(&wb.calib.tokens, 0, share);
+    let prompts: Vec<String> = (0..n_requests)
+        .map(|i| {
+            let start = (share + 1 + i * 131) % (wb.calib.tokens.len() - suffix_len - 1);
+            format!("{shared}{}", corpus_text(&wb.calib.tokens, start, suffix_len))
+        })
+        .collect();
+    println!(
+        "paged-compare workload: {} requests, {share}-token shared prefix + \
+         {suffix_len}-token suffixes, {block_tokens}-token blocks, \
+         budget = 2 contiguous slots ({budget} bytes)"
+    );
+
+    let contiguous_cfg = ServerConfig {
+        kv_capacity_bytes: budget,
+        prefill_chunk: 0,
+        ..ServerConfig::default()
+    };
+    let paged_cfg = ServerConfig {
+        kv_capacity_bytes: budget,
+        kv_block_tokens: block_tokens,
+        prefill_chunk: 0,
+        prefix_cache_bytes: 64 << 20,
+        ..ServerConfig::default()
+    };
+    let cont = run_load(engine, contiguous_cfg, &[], &prompts, max_tokens)?;
+    let prime = vec![prompts[0].clone()];
+    let paged = run_load(engine, paged_cfg, &prime, &prompts, max_tokens)?;
+
+    let cg = &cont.gauges;
+    let pg = &paged.gauges;
+    let ratio = pg.peak_rows as f64 / cg.peak_rows.max(1) as f64;
+    let paged_tok_s = paged.summary.generated_tokens as f64 / paged.wall_s;
+    let cont_tok_s = cont.summary.generated_tokens as f64 / cont.wall_s;
+    println!("\n=== serve_bench results (Attn NBL-{m}, paged-compare arm) ===");
+    println!("requests (per run)       {}", prompts.len());
+    println!("peak rows contiguous     {}", cg.peak_rows);
+    println!("peak rows paged          {}", pg.peak_rows);
+    println!("concurrency ratio        {ratio:.2}x");
+    println!("contiguous tok/s         {cont_tok_s:.1}");
+    println!("paged tok/s              {paged_tok_s:.1}");
+    println!(
+        "blocks free/used/shared  {} / {} / {} of {}",
+        pg.blocks_free, pg.blocks_used, pg.blocks_shared, pg.blocks_capacity
+    );
+    println!("fragmentation            {:.3}", pg.paged_fragmentation());
+    println!("paged splices            {} ({} tokens)", pg.paged_splices, pg.paged_splice_tokens);
+    println!("cow copies               {}", pg.cow_copies);
+    println!("preemptions              {}", pg.preemptions);
+    println!("snapshot expand copies   {}", pg.prefix_expand_copies);
+    println!("prefix publish skips     {}", pg.prefix_publish_skips);
+
+    // the ISSUE 6 acceptance criteria, machine-checked
+    assert!(
+        pg.peak_rows > cg.peak_rows,
+        "paged admission must hold strictly more concurrent rows under the \
+         same {budget}-byte budget: paged {} vs contiguous {}",
+        pg.peak_rows,
+        cg.peak_rows
+    );
+    assert!(
+        pg.paged_splices > 0,
+        "the primed prefix must be adopted as block splices: {pg:?}"
+    );
+    assert_eq!(
+        pg.prefix_expand_copies, 0,
+        "paged adoption must run ZERO per-layer snapshot expansion copies: {pg:?}"
+    );
+
+    let metrics_json = Json::obj(vec![
+        ("tok_s", Json::Num(paged_tok_s)),
+        ("tok_s_contiguous", Json::Num(cont_tok_s)),
+        ("req_s", Json::Num(prompts.len() as f64 / paged.wall_s)),
+        ("concurrency_ratio", Json::Num(ratio)),
+        ("peak_rows_paged", Json::Num(pg.peak_rows as f64)),
+        ("peak_rows_contiguous", Json::Num(cg.peak_rows as f64)),
+        ("p50_ttft_ms", Json::Num(paged.summary.p50_ttft_s * 1e3)),
+        ("p95_ttft_ms", Json::Num(paged.summary.p95_ttft_s * 1e3)),
+        ("p99_ttft_ms", Json::Num(paged.summary.p99_ttft_s * 1e3)),
+        ("p50_itl_ms", Json::Num(paged.summary.p50_itl_s * 1e3)),
+        ("p95_itl_ms", Json::Num(paged.summary.p95_itl_s * 1e3)),
+        ("p99_itl_ms", Json::Num(paged.summary.p99_itl_s * 1e3)),
+        ("paged_splices", Json::Num(pg.paged_splices as f64)),
+        ("paged_splice_tokens", Json::Num(pg.paged_splice_tokens as f64)),
+        ("cow_copies", Json::Num(pg.cow_copies as f64)),
+        ("preemptions", Json::Num(pg.preemptions as f64)),
+        ("prefix_expand_copies", Json::Num(pg.prefix_expand_copies as f64)),
+        ("prefix_publish_skips", Json::Num(pg.prefix_publish_skips as f64)),
+        ("paged_fragmentation", Json::Num(pg.paged_fragmentation())),
+    ]);
+    let bench_json = Json::obj(vec![
+        ("schema", Json::Str("nbl-bench/v1".into())),
+        ("bench", Json::Str("serve_bench".into())),
+        ("mode", Json::Str("paged".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(n_requests as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("block_tokens", Json::Num(block_tokens as f64)),
+                ("share", Json::Num(share as f64)),
+                ("budget_bytes", Json::Num(budget as f64)),
+                ("m", Json::Num(m as f64)),
+            ]),
+        ),
+        ("metrics", metrics_json),
+    ]);
+    let path = nbl::report::save_json("serve_bench_paged", &bench_json)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nbench JSON written to {}", path.display());
+    println!("serve_bench OK");
+    Ok(())
+}
+
 /// The ISSUE 5 shared-prefix workload: every request is one long shared
 /// prefix (the "system prompt") plus a distinct short suffix. Served
 /// twice — cold (prefix cache off) and warm (cache on, primed by the
@@ -288,7 +436,7 @@ fn run_prefix_share(
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["ttft-compare", "prefix-share"])?;
+    let args = Args::from_env(&["ttft-compare", "prefix-share", "paged-compare"])?;
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
@@ -320,6 +468,13 @@ fn main() -> anyhow::Result<()> {
     // --- ISSUE 5 shared-prefix arm: warm-vs-cold prefix reuse, then exit
     if args.flag("prefix-share") {
         return run_prefix_share(&engine, &wb, n_requests, max_tokens, chunk, m);
+    }
+
+    // --- ISSUE 6 paged-vs-contiguous arm: block-pool admission under an
+    // identical two-slot budget, then exit
+    if args.flag("paged-compare") {
+        let block_tokens = args.get_usize("block-tokens", 64)?;
+        return run_paged_compare(&engine, &wb, n_requests, max_tokens, block_tokens, m);
     }
 
     // --- self-speculation: the draft is an NBL-heavier plan over the
@@ -375,6 +530,18 @@ fn main() -> anyhow::Result<()> {
     println!("token throughput         {:.1} tok/s", s.generated_tokens as f64 / wall);
     println!("mean TTFT                {:.1} ms", s.mean_ttft_s * 1e3);
     println!("p90 TTFT                 {:.1} ms", s.p90_ttft_s * 1e3);
+    println!(
+        "p50/p95/p99 TTFT         {:.1} / {:.1} / {:.1} ms",
+        s.p50_ttft_s * 1e3,
+        s.p95_ttft_s * 1e3,
+        s.p99_ttft_s * 1e3
+    );
+    println!(
+        "p50/p95/p99 ITL          {:.2} / {:.2} / {:.2} ms",
+        s.p50_itl_s * 1e3,
+        s.p95_itl_s * 1e3,
+        s.p99_itl_s * 1e3
+    );
     println!("p50 short-request TTFT   {p50_short:.1} ms");
     println!("prefill speed            {:.0} tok/s", s.mean_prefill_tok_s);
     println!("median decode speed      {:.0} tok/s", s.median_decode_tok_s);
@@ -449,7 +616,13 @@ fn main() -> anyhow::Result<()> {
         ("generated_tokens", Json::Num(s.generated_tokens as f64)),
         ("wall_s", Json::Num(wall)),
         ("mean_ttft_ms", Json::Num(s.mean_ttft_s * 1e3)),
+        ("p50_ttft_ms", Json::Num(s.p50_ttft_s * 1e3)),
         ("p90_ttft_ms", Json::Num(s.p90_ttft_s * 1e3)),
+        ("p95_ttft_ms", Json::Num(s.p95_ttft_s * 1e3)),
+        ("p99_ttft_ms", Json::Num(s.p99_ttft_s * 1e3)),
+        ("p50_itl_ms", Json::Num(s.p50_itl_s * 1e3)),
+        ("p95_itl_ms", Json::Num(s.p95_itl_s * 1e3)),
+        ("p99_itl_ms", Json::Num(s.p99_itl_s * 1e3)),
         ("p50_short_ttft_ms", Json::Num(p50_short)),
         ("mean_rows_per_iteration", Json::Num(g.mean_rows_per_iteration())),
         ("prefill_chunks", Json::Num(g.prefill_chunks as f64)),

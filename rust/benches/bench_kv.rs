@@ -15,6 +15,7 @@ use nbl::model::config::ModelConfig;
 use nbl::report::Table;
 use nbl::sampling::SamplingParams;
 use nbl::server::api::GenRequest;
+use nbl::server::metrics::MetricsSummary;
 use nbl::server::service::{BatchMode, Server, ServerConfig, SpecConfig};
 use nbl::util::json::Json;
 use nbl::util::timer::Timer;
@@ -91,7 +92,8 @@ fn main() {
         max_new_tokens: max_tokens,
         params: SamplingParams::greedy(),
     };
-    let run_mode = |mode: BatchMode, spec: Option<SpecConfig>| -> (f64, usize, f64, f64, f64) {
+    type ModeResult = (f64, usize, f64, f64, f64, MetricsSummary);
+    let run_mode = |mode: BatchMode, spec: Option<SpecConfig>| -> ModeResult {
         let cfg = ServerConfig { mode, spec, ..ServerConfig::default() };
         let server = Arc::new(Server::new(engine.clone(), cfg));
         let metrics = server.metrics.clone();
@@ -103,20 +105,28 @@ fn main() {
             assert!(r.error.is_none(), "{:?}", r.error);
         }
         let wall = t.elapsed_s();
-        let toks = metrics.summary().generated_tokens;
+        let summary = metrics.summary();
+        let toks = summary.generated_tokens;
         let g = metrics.gauges();
         handle.shutdown();
-        (wall, toks, g.mean_rows_per_iteration(), g.acceptance_rate(), g.tokens_per_row_iteration())
+        (
+            wall,
+            toks,
+            g.mean_rows_per_iteration(),
+            g.acceptance_rate(),
+            g.tokens_per_row_iteration(),
+            summary,
+        )
     };
-    let (wall_g, toks_g, _, _, _) = run_mode(BatchMode::ExactLength, None);
-    let (wall_c, toks_c, occ_c, _, _) = run_mode(BatchMode::Continuous, None);
+    let (wall_g, toks_g, _, _, _, _) = run_mode(BatchMode::ExactLength, None);
+    let (wall_c, toks_c, occ_c, _, _, sum_c) = run_mode(BatchMode::Continuous, None);
     // continuous + self-speculation: the draft drops attention in two
     // layers (cheaper forward, same weights) and the target verifies
     // width-4 blocks per row
     let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
     draft_plan.drop_attn(2);
     draft_plan.drop_attn(4);
-    let (wall_s, toks_s, _, acc_s, tpi_s) = run_mode(
+    let (wall_s, toks_s, _, acc_s, tpi_s, _) = run_mode(
         BatchMode::Continuous,
         Some(SpecConfig { draft_plan, width: 4 }),
     );
@@ -127,6 +137,15 @@ fn main() {
     println!("  exact-length grouping   {tps_g:8.1} tok/s  ({wall_g:.2} s)");
     println!(
         "  continuous batching     {tps_c:8.1} tok/s  ({wall_c:.2} s, {occ_c:.2} rows/iter)"
+    );
+    println!(
+        "    TTFT p50/p95/p99      {:.1} / {:.1} / {:.1} ms, ITL {:.2} / {:.2} / {:.2} ms",
+        sum_c.p50_ttft_s * 1e3,
+        sum_c.p95_ttft_s * 1e3,
+        sum_c.p99_ttft_s * 1e3,
+        sum_c.p50_itl_s * 1e3,
+        sum_c.p95_itl_s * 1e3,
+        sum_c.p99_itl_s * 1e3
     );
     println!(
         "  continuous + spec       {tps_s:8.1} tok/s  ({wall_s:.2} s, acceptance {:.0}%, \
@@ -158,6 +177,14 @@ fn main() {
                 ("speedup_cont_over_grouped", Json::Num(tps_c / tps_g.max(1e-9))),
                 ("speedup_spec_over_cont", Json::Num(tps_s / tps_c.max(1e-9))),
                 ("rows_per_iteration", Json::Num(occ_c)),
+                // latency distribution of the continuous run (record-only
+                // trajectory keys in ci/bench_baseline.json)
+                ("p50_ttft_ms", Json::Num(sum_c.p50_ttft_s * 1e3)),
+                ("p95_ttft_ms", Json::Num(sum_c.p95_ttft_s * 1e3)),
+                ("p99_ttft_ms", Json::Num(sum_c.p99_ttft_s * 1e3)),
+                ("p50_itl_ms", Json::Num(sum_c.p50_itl_s * 1e3)),
+                ("p95_itl_ms", Json::Num(sum_c.p95_itl_s * 1e3)),
+                ("p99_itl_ms", Json::Num(sum_c.p99_itl_s * 1e3)),
             ]),
         ),
     ]);

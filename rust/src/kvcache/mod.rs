@@ -16,6 +16,7 @@ use crate::nbl::plan::ModelPlan;
 use crate::runtime::literals::{lit_from_tensor, tensor_from_lit};
 use crate::tensor::Tensor;
 
+pub mod paged;
 pub mod prefix;
 
 /// Device-side KV cache produced by one prefill call (literals stay
@@ -376,10 +377,23 @@ pub fn take_cache_row(src: &xla::Literal, row: usize) -> Result<xla::Literal> {
 /// dropped, so a snapshot's byte cost scales with the prefix it covers,
 /// not with Tmax.
 pub fn take_cache_row_prefix(src: &xla::Literal, row: usize, tokens: usize) -> Result<Tensor> {
+    take_cache_row_range(src, row, 0, tokens)
+}
+
+/// Extract cache entries `[start, end)` of row `row` as a host tensor
+/// [1, end-start, ...] — the block-granular generalization of
+/// [`take_cache_row_prefix`] the paged block pool captures with (a
+/// block is a mid-row token range, not a prefix).
+pub fn take_cache_row_range(
+    src: &xla::Literal,
+    row: usize,
+    start: usize,
+    end: usize,
+) -> Result<Tensor> {
     let s = tensor_from_lit(src)?;
-    if row >= s.shape()[0] || tokens > s.shape()[1] {
+    if row >= s.shape()[0] || start >= end || end > s.shape()[1] {
         return Err(Error::Shape(format!(
-            "cache row prefix: row {row} / {tokens} tokens out of range {:?}",
+            "cache row range: row {row} / tokens [{start}, {end}) out of range {:?}",
             s.shape()
         )));
     }
@@ -387,9 +401,9 @@ pub fn take_cache_row_prefix(src: &xla::Literal, row: usize, tokens: usize) -> R
     let tok_stride: usize = s.shape()[2..].iter().product();
     let mut shape = s.shape().to_vec();
     shape[0] = 1;
-    shape[1] = tokens;
-    let start = row * row_stride;
-    let data = s.data()[start..start + tokens * tok_stride].to_vec();
+    shape[1] = end - start;
+    let base = row * row_stride + start * tok_stride;
+    let data = s.data()[base..base + (end - start) * tok_stride].to_vec();
     Tensor::new(shape, data)
 }
 
@@ -797,6 +811,25 @@ mod tests {
         assert_eq!(t.data(), &[12.0, 13.0, 14.0, 15.0, 16.0, 17.0]);
         assert!(take_cache_row_prefix(&src, 2, 1).is_err());
         assert!(take_cache_row_prefix(&src, 0, 5).is_err());
+    }
+
+    #[test]
+    fn cache_row_range_extraction() {
+        let src = lit_from_tensor(&Tensor::from_fn(vec![2, 4, 3], |i| i as f32)).unwrap();
+        // a mid-row block: tokens [1, 3) of row 1 are entries 15..21
+        let t = take_cache_row_range(&src, 1, 1, 3).unwrap();
+        assert_eq!(t.shape(), &[1, 2, 3]);
+        assert_eq!(t.data(), &[15.0, 16.0, 17.0, 18.0, 19.0, 20.0]);
+        // a prefix block agrees with take_cache_row_prefix
+        assert_eq!(
+            take_cache_row_range(&src, 0, 0, 2).unwrap().data(),
+            take_cache_row_prefix(&src, 0, 2).unwrap().data()
+        );
+        // empty, reversed, and out-of-range windows are rejected
+        assert!(take_cache_row_range(&src, 0, 2, 2).is_err());
+        assert!(take_cache_row_range(&src, 0, 3, 2).is_err());
+        assert!(take_cache_row_range(&src, 0, 2, 5).is_err());
+        assert!(take_cache_row_range(&src, 2, 0, 1).is_err());
     }
 
     #[test]

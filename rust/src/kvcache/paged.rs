@@ -1,0 +1,763 @@
+//! Paged KV block pool (DESIGN.md §Paged KV): fixed-size token blocks,
+//! per-request block tables, refcounted prefix sharing, copy-on-write,
+//! and the accounting behind scheduler preemption.
+//!
+//! The engine's AOT executables decode against full-context arena rows,
+//! so the pool here is the *admission-control* layer: blocks are the
+//! unit in which a request charges the [`KvPool`] byte budget, and a
+//! block shared from the prefix cache charges its adopters NOTHING —
+//! the bytes were paid once when the block was captured (they live in
+//! the prefix cache's own budget). That models exactly the physical
+//! sharing PagedAttention gets from block-indexed device memory: N
+//! requests over a common prefix cost one copy of its blocks, so the
+//! same KvPool budget admits strictly more concurrent requests than
+//! the contiguous worst-case-row accounting (`serve_bench
+//! --paged-compare` measures the ratio and CI gates it).
+//!
+//! Sharing is safe because shared blocks are immutable host captures
+//! ([`CapturedBlock`]): a request never writes into one. The only block
+//! a request writes is the partial tail of an adopted run, and
+//! [`PagedKv::mark_shared`] keeps a *private* frame for it — that
+//! private tail IS the copy-on-write (counted in `cow_copies`); full
+//! shared blocks stay behind `Arc`s and drop when the last table and
+//! the prefix cache let go.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::kvcache::{take_cache_row_range, KvPool, KvState};
+use crate::model::config::ModelConfig;
+use crate::nbl::plan::ModelPlan;
+use crate::runtime::literals::lit_from_tensor;
+use crate::tensor::Tensor;
+
+/// One immutable block of captured KV: per layer, host tensors
+/// [1, filled, Hkv, dh] for the tokens `[start, start+filled)` of the
+/// request that captured it (substituted layers hold `None`, so NBL's
+/// structural saving applies per block). Shared between block tables
+/// and the prefix cache by `Arc` — never mutated after capture.
+pub struct CapturedBlock {
+    /// Tokens this block holds (== block_tokens except a run's tail).
+    pub filled: usize,
+    /// Per layer: Some((k, v)) iff the capturing plan kept attention.
+    layers: Vec<Option<(Tensor, Tensor)>>,
+    /// Host bytes of the capture (f32).
+    bytes: usize,
+}
+
+impl CapturedBlock {
+    /// Capture tokens `[start, end)` of batch-1 `state` (row 0).
+    pub fn capture(state: &KvState, start: usize, end: usize) -> Result<CapturedBlock> {
+        if start >= end || end > state.pos {
+            return Err(Error::Serving(format!(
+                "block capture [{start}, {end}) outside prefilled range 0..{}",
+                state.pos
+            )));
+        }
+        let mut layers = Vec::with_capacity(state.caches.len());
+        let mut bytes = 0usize;
+        for c in &state.caches {
+            match c {
+                Some((k, v)) => {
+                    let kt = take_cache_row_range(k, 0, start, end)?;
+                    let vt = take_cache_row_range(v, 0, start, end)?;
+                    bytes += 4 * (kt.len() + vt.len());
+                    layers.push(Some((kt, vt)));
+                }
+                None => layers.push(None),
+            }
+        }
+        Ok(CapturedBlock { filled: end - start, layers, bytes })
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// A captured block run: the leading `tokens` of one request's KV as a
+/// sequence of blocks on absolute boundaries (block i covers tokens
+/// [i*block_tokens, ...)). All runs start at position 0, so two runs
+/// over a common prefix share block indices — capture with `reuse`
+/// Arc-clones every full block already resident instead of re-copying
+/// it (the incremental-publication half of zero-copy sharing).
+pub struct PagedRun {
+    /// Tokens covered: blocks concatenate to exactly this many.
+    pub tokens: usize,
+    /// Block size the run was captured at.
+    pub block_tokens: usize,
+    blocks: Vec<Arc<CapturedBlock>>,
+    bytes: usize,
+}
+
+impl PagedRun {
+    /// Capture the first `tokens` of batch-1 `state` as a block run.
+    /// Returns the run and the bytes of *newly captured* blocks — block
+    /// i is Arc-cloned from `reuse` when resident there as a full block
+    /// (full blocks are immutable and position-aligned, so identity
+    /// holds; a partial tail is never reused because the newer run may
+    /// extend past it). `new_bytes` is what an incremental publication
+    /// charges its budget: re-publishing a resident prefix costs 0.
+    pub fn capture(
+        state: &KvState,
+        tokens: usize,
+        block_tokens: usize,
+        reuse: Option<&PagedRun>,
+    ) -> Result<(PagedRun, usize)> {
+        if block_tokens == 0 || tokens == 0 || tokens > state.pos {
+            return Err(Error::Serving(format!(
+                "paged capture of {tokens} tokens (block {block_tokens}) from state at {}",
+                state.pos
+            )));
+        }
+        if let Some(r) = reuse {
+            if r.block_tokens != block_tokens {
+                return Err(Error::Serving(format!(
+                    "paged capture: reuse run has block size {} != {block_tokens}",
+                    r.block_tokens
+                )));
+            }
+        }
+        let n = tokens.div_ceil(block_tokens);
+        let mut blocks = Vec::with_capacity(n);
+        let mut bytes = 0usize;
+        let mut new_bytes = 0usize;
+        for i in 0..n {
+            let start = i * block_tokens;
+            let end = (start + block_tokens).min(tokens);
+            let full = end - start == block_tokens;
+            let resident = if full {
+                reuse.and_then(|r| {
+                    r.blocks.get(i).filter(|b| b.filled == block_tokens).cloned()
+                })
+            } else {
+                None
+            };
+            let b = match resident {
+                Some(b) => b,
+                None => {
+                    let b = Arc::new(CapturedBlock::capture(state, start, end)?);
+                    new_bytes += b.bytes;
+                    b
+                }
+            };
+            bytes += b.bytes;
+            blocks.push(b);
+        }
+        Ok((PagedRun { tokens, block_tokens, blocks, bytes }, new_bytes))
+    }
+
+    /// Total host bytes of the run (shared + newly captured).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn blocks(&self) -> &[Arc<CapturedBlock>] {
+        &self.blocks
+    }
+
+    /// Materialize a fresh batch-1 [`KvState`] at `self.tokens`: every
+    /// kept layer gets a full-context row with the run's blocks laid at
+    /// their absolute offsets (zero-padded past the run), ready for
+    /// suffix prefill / decode. This is the ONE host pass a paged
+    /// adoption performs (gauged as a splice) — no per-layer
+    /// KvSnapshot expansion copy happens on this path.
+    pub fn materialize(&self, plan: &ModelPlan, cfg: &ModelConfig) -> Result<KvState> {
+        let mut state = KvState::empty(plan, cfg, 1, 1);
+        let tok_stride = cfg.n_kv_heads * cfg.head_dim;
+        for (li, lp) in plan.layers.iter().enumerate() {
+            if !lp.attn.needs_kv() {
+                continue;
+            }
+            let mut k_full = Tensor::zeros(vec![1, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim]);
+            let mut v_full = Tensor::zeros(vec![1, cfg.max_ctx, cfg.n_kv_heads, cfg.head_dim]);
+            for (bi, b) in self.blocks.iter().enumerate() {
+                let Some((bk, bv)) = b.layers.get(li).and_then(|l| l.as_ref()) else {
+                    return Err(Error::Serving(
+                        "plan mismatch: KV layers differ between block run and plan".into(),
+                    ));
+                };
+                let at = bi * self.block_tokens * tok_stride;
+                k_full.data_mut()[at..at + bk.len()].copy_from_slice(bk.data());
+                v_full.data_mut()[at..at + bv.len()].copy_from_slice(bv.data());
+            }
+            state.caches[li] = Some((lit_from_tensor(&k_full)?, lit_from_tensor(&v_full)?));
+        }
+        state.pos = self.tokens;
+        Ok(state)
+    }
+}
+
+/// One prefix-cache value in paged mode: the target's block run and, in
+/// lockstep under speculation, the draft's (stored together so eviction
+/// can never separate the pair — the PR 4 invariant carried over).
+pub struct PagedEntry {
+    /// Prompt tokens covered (== target.tokens).
+    pub tokens: usize,
+    pub target: PagedRun,
+    pub draft: Option<PagedRun>,
+}
+
+impl PagedEntry {
+    /// Total host bytes held by the entry's runs.
+    pub fn bytes(&self) -> usize {
+        self.target.bytes + self.draft.as_ref().map_or(0, |d| d.bytes)
+    }
+}
+
+/// One logical block frame in a slot's table: a private (writable)
+/// block charged to the pool, or a shared (immutable, zero-charge)
+/// block adopted from the prefix cache.
+enum Frame {
+    Private,
+    Shared(Arc<CapturedBlock>),
+}
+
+/// One side (target or draft) of a slot's block table.
+struct Side {
+    frames: Vec<Frame>,
+    /// Tokens this side's cache actually covers (<= frames * block).
+    tokens: usize,
+}
+
+impl Side {
+    fn private_frames(&self) -> usize {
+        self.frames.iter().filter(|f| matches!(f, Frame::Private)).count()
+    }
+
+    fn shared_frames(&self) -> usize {
+        self.frames.len() - self.private_frames()
+    }
+}
+
+struct SlotTables {
+    target: Side,
+    draft: Option<Side>,
+}
+
+/// Point-in-time block-pool counters the serving gauges mirror.
+#[derive(Debug, Clone, Default)]
+pub struct PagedStats {
+    /// Block size in tokens.
+    pub block_tokens: usize,
+    /// Pool capacity in target-block units (how many target-side
+    /// blocks the whole budget could hold).
+    pub capacity_blocks: usize,
+    /// Remaining budget in target-block units.
+    pub free_blocks: usize,
+    /// Private frames resident across all tables (pool bytes held).
+    pub used_blocks: usize,
+    /// Shared frames resident across all tables (zero pool charge —
+    /// paid once by the prefix cache).
+    pub shared_blocks: usize,
+    /// Tokens actually cached across all tables (fragmentation
+    /// numerator: the rest of the allocated frames is slack).
+    pub live_tokens: usize,
+    /// Private tail frames kept at adoption so a request never writes
+    /// into a shared block — the copy-on-write count.
+    pub cow_copies: u64,
+    /// Slots evicted under block pressure for later re-admission.
+    pub preemptions: u64,
+    /// Warm adoptions that spliced a shared block run into a table.
+    pub splices: u64,
+    /// Prompt tokens covered by spliced runs (prefill work skipped
+    /// without a per-adopter snapshot expansion copy).
+    pub splice_tokens: u64,
+}
+
+impl PagedStats {
+    /// 1 - live/allocated: the token slack trapped in allocated frames
+    /// (internal fragmentation; contiguous rows waste `max_ctx - live`
+    /// per request instead).
+    pub fn fragmentation(&self) -> f64 {
+        let frames = self.used_blocks + self.shared_blocks;
+        if frames == 0 || self.block_tokens == 0 {
+            return 0.0;
+        }
+        1.0 - self.live_tokens as f64 / (frames * self.block_tokens) as f64
+    }
+}
+
+/// The block-table manager for the continuous scheduler: per-slot block
+/// tables (target + draft side) charged block-by-block against the
+/// server's [`KvPool`], with zero-charge splicing of shared prefix runs
+/// and the preemption counter the scheduler drives.
+pub struct PagedKv {
+    /// Block size in tokens (admission granularity).
+    block_tokens: usize,
+    /// Pool bytes per target-side block.
+    t_bpb: usize,
+    /// Pool bytes per draft-side block (0 without speculation).
+    d_bpb: usize,
+    pool: Arc<KvPool>,
+    tables: Vec<Option<SlotTables>>,
+    cow_copies: u64,
+    preemptions: u64,
+    splices: u64,
+    splice_tokens: u64,
+}
+
+impl PagedKv {
+    /// `t_bpb`/`d_bpb`: §H.2 bytes of one block of the target / draft
+    /// plan's KV (d_bpb = 0 disables the draft side).
+    pub fn new(
+        block_tokens: usize,
+        t_bpb: usize,
+        d_bpb: usize,
+        pool: Arc<KvPool>,
+        n_slots: usize,
+    ) -> PagedKv {
+        PagedKv {
+            block_tokens,
+            t_bpb: t_bpb.max(1),
+            d_bpb,
+            pool,
+            tables: (0..n_slots).map(|_| None).collect(),
+            cow_copies: 0,
+            preemptions: 0,
+            splices: 0,
+            splice_tokens: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Blocks needed to cover `tokens`.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Pool bytes an all-private attach at these token counts charges —
+    /// the scheduler's admission unit (replaces the contiguous
+    /// worst-case `slot_bytes`).
+    pub fn admit_bytes(&self, t_tokens: usize, d_tokens: Option<usize>) -> usize {
+        self.blocks_for(t_tokens) * self.t_bpb
+            + d_tokens.map_or(0, |d| self.blocks_for(d) * self.d_bpb)
+    }
+
+    /// True if `t_tokens`/`d_tokens` could EVER be resident (vs the
+    /// whole capacity) — the never-fits drain check.
+    pub fn would_ever_fit(&self, t_tokens: usize, d_tokens: Option<usize>) -> bool {
+        self.admit_bytes(t_tokens, d_tokens) <= self.pool.capacity()
+    }
+
+    /// Build slot `slot`'s table with all-private frames covering the
+    /// given token counts, charging the pool. Fails without side
+    /// effects when the budget does not hold.
+    pub fn attach(&mut self, slot: usize, t_tokens: usize, d_tokens: Option<usize>) -> Result<()> {
+        if self.tables[slot].is_some() {
+            return Err(Error::Serving(format!("paged slot {slot} already attached")));
+        }
+        let bytes = self.admit_bytes(t_tokens, d_tokens);
+        let t_frames = self.blocks_for(t_tokens);
+        let d_frames = d_tokens.map(|d| self.blocks_for(d));
+        self.pool.try_take(bytes)?;
+        let side = |frames: usize, tokens: usize| Side {
+            frames: (0..frames).map(|_| Frame::Private).collect(),
+            tokens,
+        };
+        self.tables[slot] = Some(SlotTables {
+            target: side(t_frames, t_tokens),
+            draft: d_tokens.map(|d| side(d_frames.unwrap_or(0), d)),
+        });
+        Ok(())
+    }
+
+    /// Splice `entry`'s shared runs into slot `slot`'s table: every
+    /// full block the entry covers swaps the slot's private frame for
+    /// the shared `Arc` and returns the private block's bytes to the
+    /// pool — N adopters of one prefix hold its blocks once. The
+    /// entry's partial tail block (if any) stays PRIVATE in the table:
+    /// the request will write into that block as it decodes, and the
+    /// kept private frame is the copy-on-write that protects the shared
+    /// capture (counted in `cow_copies`). Infallible: only releases
+    /// budget, never takes.
+    pub fn mark_shared(&mut self, slot: usize, entry: &PagedEntry) {
+        let Some(t) = self.tables[slot].as_mut() else { return };
+        let mut freed = 0usize;
+        let mut splice_one = |side: &mut Side, run: &PagedRun, bpb: usize| {
+            let mut cow = 0u64;
+            for (i, b) in run.blocks.iter().enumerate() {
+                if i >= side.frames.len() {
+                    break;
+                }
+                if b.filled == run.block_tokens {
+                    if matches!(side.frames[i], Frame::Private) {
+                        freed += bpb;
+                    }
+                    side.frames[i] = Frame::Shared(b.clone());
+                } else {
+                    // partial tail: keep the private frame (CoW)
+                    cow += 1;
+                }
+            }
+            cow
+        };
+        let mut cow = splice_one(&mut t.target, &entry.target, self.t_bpb);
+        if let (Some(ds), Some(dr)) = (t.draft.as_mut(), entry.draft.as_ref()) {
+            cow += splice_one(ds, dr, self.d_bpb);
+        }
+        self.pool.give_back(freed);
+        self.cow_copies += cow;
+        self.splices += 1;
+        self.splice_tokens += entry.tokens as u64;
+    }
+
+    /// Extend slot `slot`'s table to cover the new token counts,
+    /// appending private frames as block boundaries are crossed. False
+    /// (no side effects) when the pool cannot fund the growth — the
+    /// scheduler then preempts a victim and retries. Token counts are
+    /// monotonic (a rollback below a boundary keeps the frame: it will
+    /// be rewritten, and giving it back mid-flight would thrash).
+    pub fn grow(&mut self, slot: usize, t_tokens: usize, d_tokens: Option<usize>) -> bool {
+        let Some(t) = self.tables[slot].as_ref() else { return false };
+        let t_new = self
+            .blocks_for(t_tokens.max(t.target.tokens))
+            .saturating_sub(t.target.frames.len());
+        let d_new = match (t.draft.as_ref(), d_tokens) {
+            (Some(ds), Some(dt)) => self
+                .blocks_for(dt.max(ds.tokens))
+                .saturating_sub(ds.frames.len()),
+            _ => 0,
+        };
+        let bytes = t_new * self.t_bpb + d_new * self.d_bpb;
+        if self.pool.try_take(bytes).is_err() {
+            return false;
+        }
+        let t = self.tables[slot].as_mut().unwrap();
+        t.target.frames.extend((0..t_new).map(|_| Frame::Private));
+        t.target.tokens = t.target.tokens.max(t_tokens);
+        if let (Some(ds), Some(dt)) = (t.draft.as_mut(), d_tokens) {
+            ds.frames.extend((0..d_new).map(|_| Frame::Private));
+            ds.tokens = ds.tokens.max(dt);
+        }
+        true
+    }
+
+    /// Drop slot `slot`'s table, returning its private frames' bytes to
+    /// the pool (shared frames were never charged here; their `Arc`s
+    /// drop and the data lives while the prefix cache or other tables
+    /// still hold it).
+    pub fn release(&mut self, slot: usize) {
+        let Some(t) = self.tables[slot].take() else { return };
+        let mut bytes = t.target.private_frames() * self.t_bpb;
+        if let Some(ds) = &t.draft {
+            bytes += ds.private_frames() * self.d_bpb;
+        }
+        self.pool.give_back(bytes);
+    }
+
+    /// Evict slot `slot`'s blocks for later re-admission (the
+    /// scheduler snapshots the row state first).
+    pub fn preempt(&mut self, slot: usize) {
+        self.release(slot);
+        self.preemptions += 1;
+    }
+
+    pub fn is_attached(&self, slot: usize) -> bool {
+        self.tables.get(slot).is_some_and(|t| t.is_some())
+    }
+
+    pub fn stats(&self) -> PagedStats {
+        let mut used = 0usize;
+        let mut shared = 0usize;
+        let mut live = 0usize;
+        for t in self.tables.iter().flatten() {
+            used += t.target.private_frames();
+            shared += t.target.shared_frames();
+            live += t.target.tokens;
+            if let Some(ds) = &t.draft {
+                used += ds.private_frames();
+                shared += ds.shared_frames();
+                live += ds.tokens;
+            }
+        }
+        PagedStats {
+            block_tokens: self.block_tokens,
+            capacity_blocks: self.pool.capacity() / self.t_bpb,
+            free_blocks: (self.pool.capacity() - self.pool.in_use().min(self.pool.capacity()))
+                / self.t_bpb,
+            used_blocks: used,
+            shared_blocks: shared,
+            live_tokens: live,
+            cow_copies: self.cow_copies,
+            preemptions: self.preemptions,
+            splices: self.splices,
+            splice_tokens: self.splice_tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::kv_bytes;
+    use crate::nbl::plan::ModelPlan;
+    use crate::runtime::literals::tensor_from_lit;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 4,
+            d_ff: 16,
+            max_ctx: 16,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        }
+    }
+
+    /// Batch-1 state with recognizable per-position cache values.
+    fn state_at(plan: &ModelPlan, c: &ModelConfig, pos: usize) -> KvState {
+        let mut st = KvState::empty(plan, c, 1, 1);
+        for (li, lp) in plan.layers.iter().enumerate() {
+            if lp.attn.needs_kv() {
+                let t = Tensor::from_fn(vec![1, c.max_ctx, c.n_kv_heads, c.head_dim], |i| {
+                    (li * 1000 + i) as f32
+                });
+                let lit = || crate::runtime::literals::lit_from_tensor(&t).unwrap();
+                st.caches[li] = Some((lit(), lit()));
+            }
+        }
+        st.pos = pos;
+        st
+    }
+
+    #[test]
+    fn capture_blocks_and_materialize_round_trip() {
+        let c = cfg();
+        let mut plan = ModelPlan::baseline(2);
+        plan.drop_attn(0);
+        let st = state_at(&plan, &c, 10);
+        let (run, new_bytes) = PagedRun::capture(&st, 10, 4, None).unwrap();
+        assert_eq!(run.blocks().len(), 3); // 4 + 4 + 2
+        assert_eq!(run.blocks()[2].filled, 2);
+        assert_eq!(run.bytes(), new_bytes);
+        // one kept layer, k+v, 10 tokens of Hkv*dh f32s
+        assert_eq!(run.bytes(), 2 * 10 * c.n_kv_heads * c.head_dim * 4);
+        let back = run.materialize(&plan, &c).unwrap();
+        assert_eq!(back.pos, 10);
+        assert!(back.caches[0].is_none());
+        let (k, _) = back.caches[1].as_ref().unwrap();
+        let t = tensor_from_lit(k).unwrap();
+        let stride = c.n_kv_heads * c.head_dim;
+        assert_eq!(t.data()[0], 1000.0);
+        assert_eq!(t.data()[10 * stride - 1], 1000.0 + (10 * stride - 1) as f32);
+        assert!(t.data()[10 * stride..].iter().all(|&v| v == 0.0));
+        // materializing under a different kept-layer pattern is rejected
+        assert!(run.materialize(&ModelPlan::baseline(2), &c).is_err());
+        // out-of-range captures are rejected
+        assert!(PagedRun::capture(&st, 0, 4, None).is_err());
+        assert!(PagedRun::capture(&st, 11, 4, None).is_err());
+        assert!(PagedRun::capture(&st, 4, 0, None).is_err());
+    }
+
+    #[test]
+    fn capture_reuses_resident_full_blocks() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let st8 = state_at(&plan, &c, 8);
+        let (run8, b8) = PagedRun::capture(&st8, 8, 4, None).unwrap();
+        assert!(b8 > 0);
+        // extending the run: the two resident full blocks are Arc-cloned,
+        // only the new tail is captured
+        let st12 = state_at(&plan, &c, 12);
+        let (run12, b12) = PagedRun::capture(&st12, 12, 4, Some(&run8)).unwrap();
+        assert_eq!(run12.blocks().len(), 3);
+        assert!(Arc::ptr_eq(&run12.blocks()[0], &run8.blocks()[0]));
+        assert!(Arc::ptr_eq(&run12.blocks()[1], &run8.blocks()[1]));
+        assert_eq!(b12, run12.blocks()[2].bytes());
+        // re-publishing the exact resident prefix costs zero new bytes
+        let (_, b_again) = PagedRun::capture(&st8, 8, 4, Some(&run8)).unwrap();
+        assert_eq!(b_again, 0);
+        // a PARTIAL tail is never reused: the 10-token run's tail block
+        // holds 2 tokens and a 12-token capture must re-capture block 2
+        let (run10, _) = PagedRun::capture(&st12, 10, 4, None).unwrap();
+        let (run12b, b12b) = PagedRun::capture(&st12, 12, 4, Some(&run10)).unwrap();
+        assert!(!Arc::ptr_eq(&run12b.blocks()[2], &run10.blocks()[2]));
+        assert_eq!(b12b, run12b.blocks()[2].bytes());
+        // mismatched block size is rejected
+        assert!(PagedRun::capture(&st12, 12, 8, Some(&run8)).is_err());
+    }
+
+    #[test]
+    fn attach_grow_release_account_the_pool() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let bpb = kv_bytes(&c, plan.kv_layers(), 1, 4, 4);
+        let pool = Arc::new(KvPool::new(6 * bpb));
+        let mut pk = PagedKv::new(4, bpb, 0, pool.clone(), 4);
+        assert_eq!(pk.admit_bytes(7, None), 2 * bpb);
+        pk.attach(0, 7, None).unwrap();
+        assert_eq!(pool.in_use(), 2 * bpb);
+        assert!(pk.is_attached(0));
+        assert!(pk.attach(0, 1, None).is_err(), "double attach");
+        // growth within the covered blocks is free; crossing a boundary
+        // charges one more block
+        assert!(pk.grow(0, 8, None));
+        assert_eq!(pool.in_use(), 2 * bpb);
+        assert!(pk.grow(0, 9, None));
+        assert_eq!(pool.in_use(), 3 * bpb);
+        // second table exhausts the budget mid-growth: refused with no
+        // side effects, then preemption of slot 0 frees the blocks
+        pk.attach(1, 12, None).unwrap();
+        assert_eq!(pool.in_use(), 6 * bpb);
+        assert!(!pk.grow(1, 13, None));
+        assert_eq!(pool.in_use(), 6 * bpb);
+        pk.preempt(0);
+        assert!(!pk.is_attached(0));
+        assert_eq!(pool.in_use(), 3 * bpb);
+        assert!(pk.grow(1, 13, None));
+        let s = pk.stats();
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.used_blocks, 4);
+        assert_eq!(s.live_tokens, 13);
+        assert_eq!(s.capacity_blocks, 6);
+        assert_eq!(s.free_blocks, 2);
+        pk.release(1);
+        assert_eq!(pool.in_use(), 0);
+        // release is idempotent
+        pk.release(1);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn draft_side_charges_its_own_block_bytes() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let mut draft = ModelPlan::baseline(2);
+        draft.drop_attn(1);
+        let t_bpb = kv_bytes(&c, plan.kv_layers(), 1, 4, 4);
+        let d_bpb = kv_bytes(&c, draft.kv_layers(), 1, 4, 4);
+        let pool = Arc::new(KvPool::new(100 * t_bpb));
+        let mut pk = PagedKv::new(4, t_bpb, d_bpb, pool.clone(), 2);
+        pk.attach(0, 5, Some(5)).unwrap();
+        assert_eq!(pool.in_use(), 2 * t_bpb + 2 * d_bpb);
+        // lockstep growth extends both sides
+        assert!(pk.grow(0, 9, Some(9)));
+        assert_eq!(pool.in_use(), 3 * t_bpb + 3 * d_bpb);
+        pk.release(0);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn mark_shared_swaps_full_blocks_and_keeps_cow_tail() {
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let bpb = kv_bytes(&c, plan.kv_layers(), 1, 4, 4);
+        let pool = Arc::new(KvPool::new(100 * bpb));
+        let st = state_at(&plan, &c, 10);
+        let (run, _) = PagedRun::capture(&st, 10, 4, None).unwrap();
+        let entry = PagedEntry { tokens: 10, target: run, draft: None };
+        let mut pk = PagedKv::new(4, bpb, 0, pool.clone(), 2);
+        // prompt of 14 tokens, 10 covered by the entry: 4 frames total,
+        // blocks 0-1 become shared (bytes returned), block 2 stays
+        // private (the entry's partial tail = the CoW copy), block 3 is
+        // the request's own private growth
+        pk.attach(0, 14, None).unwrap();
+        assert_eq!(pool.in_use(), 4 * bpb);
+        pk.mark_shared(0, &entry);
+        assert_eq!(pool.in_use(), 2 * bpb, "shared blocks charge nothing");
+        let s = pk.stats();
+        assert_eq!(s.shared_blocks, 2);
+        assert_eq!(s.used_blocks, 2);
+        assert_eq!(s.cow_copies, 1);
+        assert_eq!(s.splices, 1);
+        assert_eq!(s.splice_tokens, 10);
+        // the shared capture is refcounted: entry + one table
+        assert_eq!(Arc::strong_count(&entry.target.blocks()[0]), 2);
+        // a second adopter of the same entry shares the same Arcs
+        pk.attach(1, 12, None).unwrap();
+        pk.mark_shared(1, &entry);
+        assert_eq!(Arc::strong_count(&entry.target.blocks()[0]), 3);
+        assert_eq!(pool.in_use(), 3 * bpb);
+        // release drops only private bytes and the Arc refs
+        pk.release(0);
+        assert_eq!(Arc::strong_count(&entry.target.blocks()[0]), 2);
+        assert_eq!(pool.in_use(), bpb);
+        pk.release(1);
+        assert_eq!(Arc::strong_count(&entry.target.blocks()[0]), 1);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn cow_divergence_leaves_shared_capture_untouched() {
+        // two adopters splice the same run, then each "writes" its own
+        // divergent continuation by re-capturing its private state —
+        // the shared blocks' contents must be bit-identical throughout
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let st = state_at(&plan, &c, 8);
+        let (run, _) = PagedRun::capture(&st, 8, 4, None).unwrap();
+        let before: Vec<f32> = run.blocks()[0].layers[0].as_ref().unwrap().0.data().to_vec();
+        // adopter A materializes and extends with its own values
+        let mut a = run.materialize(&plan, &c).unwrap();
+        for cache in a.caches.iter_mut().flatten() {
+            let mut kt = tensor_from_lit(&cache.0).unwrap();
+            let stride = c.n_kv_heads * c.head_dim;
+            for x in kt.data_mut()[8 * stride..10 * stride].iter_mut() {
+                *x = -1.0;
+            }
+            cache.0 = crate::runtime::literals::lit_from_tensor(&kt).unwrap();
+        }
+        a.pos = 10;
+        // adopter B likewise, different values
+        let mut b = run.materialize(&plan, &c).unwrap();
+        for cache in b.caches.iter_mut().flatten() {
+            let mut kt = tensor_from_lit(&cache.0).unwrap();
+            let stride = c.n_kv_heads * c.head_dim;
+            for x in kt.data_mut()[8 * stride..12 * stride].iter_mut() {
+                *x = -2.0;
+            }
+            cache.0 = crate::runtime::literals::lit_from_tensor(&kt).unwrap();
+        }
+        b.pos = 12;
+        let (ra, _) = PagedRun::capture(&a, 10, 4, Some(&run)).unwrap();
+        let (rb, _) = PagedRun::capture(&b, 12, 4, Some(&run)).unwrap();
+        // divergent tails are independent...
+        let ka = ra.blocks()[2].layers[0].as_ref().unwrap().0.data().to_vec();
+        let kb = rb.blocks()[2].layers[0].as_ref().unwrap().0.data().to_vec();
+        assert!(ka.iter().all(|&v| v == -1.0));
+        assert!(kb.iter().all(|&v| v == -2.0));
+        // ...while the shared prefix blocks are the SAME Arcs, unchanged
+        assert!(Arc::ptr_eq(&ra.blocks()[0], &run.blocks()[0]));
+        assert!(Arc::ptr_eq(&rb.blocks()[0], &run.blocks()[0]));
+        assert_eq!(
+            run.blocks()[0].layers[0].as_ref().unwrap().0.data(),
+            before.as_slice()
+        );
+    }
+
+    #[test]
+    fn paged_budget_admits_more_than_contiguous_rows() {
+        // the tentpole arithmetic: under one KvPool budget sized for two
+        // contiguous worst-case rows, block-granular admission at short
+        // prompt lengths fits strictly more concurrent requests
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let per_row = kv_bytes(&c, plan.kv_layers(), 1, c.max_ctx, 4);
+        let bpb = kv_bytes(&c, plan.kv_layers(), 1, 4, 4);
+        let pool = Arc::new(KvPool::new(2 * per_row));
+        let mut pk = PagedKv::new(4, bpb, 0, pool.clone(), 8);
+        // short requests: prompt 3 + a few decode tokens -> 1-2 blocks
+        let mut admitted = 0;
+        for s in 0..8 {
+            if pk.admit_bytes(3, None) <= pool.capacity() - pool.in_use()
+                && pk.attach(s, 3, None).is_ok()
+            {
+                admitted += 1;
+            }
+        }
+        assert!(
+            admitted > 2,
+            "paged admitted {admitted}, contiguous accounting caps at 2"
+        );
+        assert!(pk.stats().fragmentation() > 0.0);
+    }
+}

@@ -19,6 +19,7 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::kvcache::paged::PagedEntry;
 use crate::kvcache::{take_cache_row_prefix, KvLeaseOwned, KvPool, KvState};
 use crate::model::config::ModelConfig;
 use crate::nbl::plan::ModelPlan;
@@ -118,6 +119,41 @@ fn expand_row(src: &Tensor, cfg: &ModelConfig, pos: usize) -> Result<xla::Litera
     lit_from_tensor(&full)
 }
 
+/// One radix-tree value: legacy whole-prefix host snapshots (the
+/// target's and, under speculation, the draft's) or — in paged mode —
+/// a refcounted block-run entry whose full blocks adopters splice
+/// without any per-adopter expansion copy. Lookup hands out `Arc`
+/// clones either way, so eviction never invalidates a reader.
+#[derive(Clone)]
+pub enum PrefixValue {
+    Snaps(Arc<Vec<KvSnapshot>>),
+    Paged(Arc<PagedEntry>),
+}
+
+impl PrefixValue {
+    /// Prompt tokens the value covers.
+    pub fn tokens(&self) -> usize {
+        match self {
+            PrefixValue::Snaps(s) => s.first().map_or(0, |x| x.pos),
+            PrefixValue::Paged(e) => e.tokens,
+        }
+    }
+
+    pub fn snaps(&self) -> Option<&Arc<Vec<KvSnapshot>>> {
+        match self {
+            PrefixValue::Snaps(s) => Some(s),
+            PrefixValue::Paged(_) => None,
+        }
+    }
+
+    pub fn paged(&self) -> Option<&Arc<PagedEntry>> {
+        match self {
+            PrefixValue::Snaps(_) => None,
+            PrefixValue::Paged(e) => Some(e),
+        }
+    }
+}
+
 /// Point-in-time counters the serving gauges mirror.
 #[derive(Debug, Clone, Default)]
 pub struct PrefixStats {
@@ -135,6 +171,9 @@ pub struct PrefixStats {
     pub inserts: u64,
     /// Entries LRU-evicted under the byte budget.
     pub evictions: u64,
+    /// Publication rounds skipped because the covered run/snapshot was
+    /// already resident (the small-fix gauge: no host copy was built).
+    pub publish_skips: u64,
     /// Live entries.
     pub entries: usize,
     /// Snapshot bytes resident (budget accounting, not Arc liveness).
@@ -147,7 +186,7 @@ pub struct PrefixStats {
 /// under speculation, the draft's — stored together so the pair can
 /// never fall out of lockstep) plus LRU/budget bookkeeping.
 struct Entry {
-    snaps: Arc<Vec<KvSnapshot>>,
+    value: PrefixValue,
     last_used: u64,
     /// Budget reservation; returns the bytes at eviction (the Arc'd
     /// data itself lives until the last in-flight adoption drops it).
@@ -183,6 +222,7 @@ pub struct PrefixCache {
     hit_tokens: u64,
     inserts: u64,
     evictions: u64,
+    publish_skips: u64,
 }
 
 impl PrefixCache {
@@ -197,6 +237,7 @@ impl PrefixCache {
             hit_tokens: 0,
             inserts: 0,
             evictions: 0,
+            publish_skips: 0,
         }
     }
 
@@ -213,7 +254,7 @@ impl PrefixCache {
     /// boundary — and the admission prefilled cold). Counting at probe
     /// time would let the hit-rate gauge stay green while every
     /// adoption silently fell back.
-    pub fn lookup(&mut self, tokens: &[u32], cap: usize) -> Option<Arc<Vec<KvSnapshot>>> {
+    pub fn lookup(&mut self, tokens: &[u32], cap: usize) -> Option<PrefixValue> {
         self.clock += 1;
         let best = descend(&mut self.root, tokens, 0, cap, self.clock);
         if best.is_none() {
@@ -235,6 +276,13 @@ impl PrefixCache {
         self.misses += 1;
     }
 
+    /// A publication round found its covered prefix already resident
+    /// and skipped the host copies it would have built (the gauge for
+    /// the skip-when-resident small fix).
+    pub fn note_publish_skip(&mut self) {
+        self.publish_skips += 1;
+    }
+
     /// Longest cached prefix length (<= cap) WITHOUT touching LRU order
     /// or the probe counters — the admission guard peeks the queue head
     /// every scheduler iteration while a chunked machine runs, and a
@@ -246,6 +294,35 @@ impl PrefixCache {
         loop {
             if depth > 0 && node.entry.is_some() {
                 best = depth;
+            }
+            let rest = &tokens[depth..];
+            let next = node
+                .children
+                .iter()
+                .find(|c| depth + c.edge.len() <= cap && rest.starts_with(&c.edge));
+            match next {
+                Some(c) => {
+                    depth += c.edge.len();
+                    node = c;
+                }
+                None => return best,
+            }
+        }
+    }
+
+    /// The deepest cached value for a prefix of `tokens` (<= cap),
+    /// WITHOUT touching LRU order or the probe counters — the paged
+    /// publication path reuses the resident run's blocks to capture
+    /// only the delta, and that read must not distort stats.
+    pub fn peek_value(&self, tokens: &[u32], cap: usize) -> Option<PrefixValue> {
+        let mut node = &self.root;
+        let mut depth = 0;
+        let mut best = None;
+        loop {
+            if depth > 0 {
+                if let Some(e) = node.entry.as_ref() {
+                    best = Some(e.value.clone());
+                }
             }
             let rest = &tokens[depth..];
             let next = node
@@ -289,12 +366,34 @@ impl PrefixCache {
         {
             return false;
         }
+        let bytes: usize = snaps.iter().map(|s| s.bytes()).sum();
+        self.insert_value(tokens, PrefixValue::Snaps(Arc::new(snaps)), bytes)
+    }
+
+    /// Publish a paged block-run entry covering exactly `tokens`.
+    /// `new_bytes` is the bytes of blocks captured fresh for this entry
+    /// — blocks Arc-shared from an already-resident run were charged
+    /// when first published, so an incremental publication (and a
+    /// re-publication of a fully resident prefix) charges only the
+    /// delta. The shared blocks stay alive through the `Arc`s even if
+    /// the entry that introduced them is LRU-evicted first; the budget
+    /// therefore tracks what was *charged*, not exact liveness (see
+    /// DESIGN.md §Paged KV).
+    pub fn insert_paged(&mut self, tokens: &[u32], entry: Arc<PagedEntry>, new_bytes: usize) -> bool {
+        if tokens.is_empty() || entry.tokens != tokens.len() {
+            return false;
+        }
+        self.insert_value(tokens, PrefixValue::Paged(entry), new_bytes)
+    }
+
+    /// Shared insert tail: dedup-touch, never-fits refusal, LRU
+    /// eviction, budget lease, radix insert.
+    fn insert_value(&mut self, tokens: &[u32], value: PrefixValue, bytes: usize) -> bool {
         self.clock += 1;
         if let Some(e) = find_exact(&mut self.root, tokens) {
             e.last_used = self.clock;
             return false;
         }
-        let bytes: usize = snaps.iter().map(|s| s.bytes()).sum();
         if bytes > self.pool.capacity() {
             // an entry that can NEVER fit must be refused before the
             // eviction loop, which would otherwise drain every resident
@@ -311,7 +410,7 @@ impl PrefixCache {
         };
         let node = insert_node(&mut self.root, tokens);
         node.entry = Some(Entry {
-            snaps: Arc::new(snaps),
+            value,
             last_used: self.clock,
             _lease: lease,
         });
@@ -344,6 +443,7 @@ impl PrefixCache {
             hit_tokens: self.hit_tokens,
             inserts: self.inserts,
             evictions: self.evictions,
+            publish_skips: self.publish_skips,
             entries: self.entries,
             bytes_in_use: self.pool.in_use(),
             capacity_bytes: self.pool.capacity(),
@@ -358,12 +458,12 @@ fn descend(
     depth: usize,
     cap: usize,
     clock: u64,
-) -> Option<Arc<Vec<KvSnapshot>>> {
+) -> Option<PrefixValue> {
     let mut best = None;
     if depth > 0 {
         if let Some(e) = node.entry.as_mut() {
             e.last_used = clock;
-            best = Some(e.snaps.clone());
+            best = Some(e.value.clone());
         }
     }
     if let Some(c) = node
@@ -535,10 +635,10 @@ mod tests {
         assert!(cache.insert(&fork, vec![snap_for(&plan, &c, 9)]));
         assert_eq!(cache.entries(), 3);
         // longest match wins; cap bounds the depth
-        assert_eq!(cache.lookup(&long, 11).unwrap()[0].pos, 8);
-        assert_eq!(cache.lookup(&long, 7).unwrap()[0].pos, 4);
-        assert_eq!(cache.lookup(&fork, 8).unwrap()[0].pos, 4);
-        assert_eq!(cache.lookup(&fork, 9).unwrap()[0].pos, 9);
+        assert_eq!(cache.lookup(&long, 11).unwrap().tokens(), 8);
+        assert_eq!(cache.lookup(&long, 7).unwrap().tokens(), 4);
+        assert_eq!(cache.lookup(&fork, 8).unwrap().tokens(), 4);
+        assert_eq!(cache.lookup(&fork, 9).unwrap().tokens(), 9);
         // no shared prefix at all -> miss
         assert!(cache.lookup(&[50, 51], 1).is_none());
         // accounting is ADOPTION-time: the four successful probes count
@@ -613,9 +713,9 @@ mod tests {
         assert_eq!(s.entries, 2);
         assert_eq!(s.bytes_in_use, 2 * one);
         assert!(cache.lookup(&b, 4).is_none(), "LRU victim must be B");
-        assert_eq!(cache.lookup(&a, 4).unwrap()[0].pos, 4);
-        assert_eq!(cache.lookup(&d, 4).unwrap()[0].pos, 4);
-        assert_eq!(held[0].pos, 4, "evictions never invalidate readers");
+        assert_eq!(cache.lookup(&a, 4).unwrap().tokens(), 4);
+        assert_eq!(cache.lookup(&d, 4).unwrap().tokens(), 4);
+        assert_eq!(held.tokens(), 4, "evictions never invalidate readers");
         // an entry that can NEVER fit is refused up front — without
         // draining the resident entries as collateral
         let big: Vec<u32> = (0..12).collect();
@@ -643,9 +743,68 @@ mod tests {
         let pair = vec![snap_for(&target, &c, 4), snap_for(&draft, &c, 4)];
         assert!(cache.insert(&toks, pair));
         let got = cache.lookup(&toks, 4).unwrap();
-        assert_eq!(got.len(), 2);
-        assert!(got[0].restore_state(&target, &c).is_ok());
-        assert!(got[1].restore_state(&draft, &c).is_ok());
-        assert!(got[1].restore_state(&target, &c).is_err());
+        let snaps = got.snaps().unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert!(snaps[0].restore_state(&target, &c).is_ok());
+        assert!(snaps[1].restore_state(&draft, &c).is_ok());
+        assert!(snaps[1].restore_state(&target, &c).is_err());
+        assert!(got.paged().is_none());
+    }
+
+    #[test]
+    fn paged_entries_charge_only_their_delta() {
+        use crate::kvcache::paged::{PagedEntry, PagedRun};
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let st = state_at(&plan, &c, 8);
+        let (run4, b4) = PagedRun::capture(&st, 4, 4, None).unwrap();
+        // budget sized so both entries only fit if the extension is
+        // delta-charged (full re-charge would need b4 + b8 > budget)
+        let e4 = Arc::new(PagedEntry { tokens: 4, target: run4, draft: None });
+        let (run8, b8_delta) =
+            PagedRun::capture(&st, 8, 4, Some(&e4.target)).unwrap();
+        assert_eq!(b8_delta, b4, "one new full block");
+        let e8 = Arc::new(PagedEntry { tokens: 8, target: run8, draft: None });
+        let toks: Vec<u32> = (0..8).collect();
+        let mut cache = PrefixCache::new(2 * b4 + b4 / 2);
+        assert!(cache.insert_paged(&toks[..4], e4.clone(), b4));
+        assert!(cache.insert_paged(&toks, e8, b8_delta));
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 0, "delta charge must fit without eviction");
+        assert_eq!(s.bytes_in_use, 2 * b4);
+        // lookup returns the paged value; the snaps accessor is None
+        let got = cache.lookup(&toks, 7).unwrap();
+        assert_eq!(got.tokens(), 4);
+        assert!(got.paged().is_some());
+        assert!(got.snaps().is_none());
+        // mis-sized or empty entries are refused
+        let (bad, nb) = PagedRun::capture(&st, 4, 4, None).unwrap();
+        let bad = Arc::new(PagedEntry { tokens: 4, target: bad, draft: None });
+        assert!(!cache.insert_paged(&toks[..3], bad.clone(), nb));
+        assert!(!cache.insert_paged(&[], bad, 0));
+    }
+
+    #[test]
+    fn peek_value_is_stat_free_and_publish_skips_count() {
+        use crate::kvcache::paged::{PagedEntry, PagedRun};
+        let c = cfg();
+        let plan = ModelPlan::baseline(2);
+        let st = state_at(&plan, &c, 8);
+        let (run, nb) = PagedRun::capture(&st, 4, 4, None).unwrap();
+        let e = Arc::new(PagedEntry { tokens: 4, target: run, draft: None });
+        let toks: Vec<u32> = (0..8).collect();
+        let mut cache = PrefixCache::new(1 << 20);
+        assert!(cache.insert_paged(&toks[..4], e, nb));
+        // peek finds the deepest resident value without stats/LRU churn
+        assert_eq!(cache.peek_value(&toks, 7).unwrap().tokens(), 4);
+        assert!(cache.peek_value(&toks, 3).is_none());
+        assert!(cache.peek_value(&[9, 9], 1).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+        assert_eq!(s.publish_skips, 0);
+        cache.note_publish_skip();
+        cache.note_publish_skip();
+        assert_eq!(cache.stats().publish_skips, 2);
     }
 }

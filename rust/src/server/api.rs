@@ -111,6 +111,12 @@ pub fn stats_to_json(
         ("generated_tokens", Json::Num(s.generated_tokens as f64)),
         ("mean_ttft_ms", Json::Num(s.mean_ttft_s * 1e3)),
         ("p90_ttft_ms", Json::Num(s.p90_ttft_s * 1e3)),
+        ("p50_ttft_ms", Json::Num(s.p50_ttft_s * 1e3)),
+        ("p95_ttft_ms", Json::Num(s.p95_ttft_s * 1e3)),
+        ("p99_ttft_ms", Json::Num(s.p99_ttft_s * 1e3)),
+        ("p50_itl_ms", Json::Num(s.p50_itl_s * 1e3)),
+        ("p95_itl_ms", Json::Num(s.p95_itl_s * 1e3)),
+        ("p99_itl_ms", Json::Num(s.p99_itl_s * 1e3)),
         ("mean_prefill_tok_s", Json::Num(s.mean_prefill_tok_s)),
         ("median_decode_tok_s", Json::Num(s.median_decode_tok_s)),
         ("aggregate_tok_s", Json::Num(s.aggregate_tok_s)),
@@ -140,6 +146,20 @@ pub fn stats_to_json(
         ("prefix_entries", Json::Num(g.prefix_entries as f64)),
         ("prefix_bytes", Json::Num(g.prefix_bytes as f64)),
         ("prefix_capacity_bytes", Json::Num(g.prefix_capacity_bytes as f64)),
+        ("prefix_publish_skips", Json::Num(g.prefix_publish_skips as f64)),
+        ("prefix_expand_copies", Json::Num(g.prefix_expand_copies as f64)),
+        ("peak_rows", Json::Num(g.peak_rows as f64)),
+        ("paged_block_tokens", Json::Num(g.paged_block_tokens as f64)),
+        ("blocks_capacity", Json::Num(g.blocks_capacity as f64)),
+        ("blocks_free", Json::Num(g.blocks_free as f64)),
+        ("blocks_used", Json::Num(g.blocks_used as f64)),
+        ("blocks_shared", Json::Num(g.blocks_shared as f64)),
+        ("blocks_live_tokens", Json::Num(g.blocks_live_tokens as f64)),
+        ("cow_copies", Json::Num(g.cow_copies as f64)),
+        ("preemptions", Json::Num(g.preemptions as f64)),
+        ("paged_splices", Json::Num(g.paged_splices as f64)),
+        ("paged_splice_tokens", Json::Num(g.paged_splice_tokens as f64)),
+        ("paged_fragmentation", Json::Num(g.paged_fragmentation())),
         ("kv_in_use_bytes", Json::Num(kv_in_use as f64)),
         ("kv_capacity_bytes", Json::Num(kv_capacity as f64)),
         ("kv_utilization", Json::Num(kv_util)),
@@ -198,6 +218,12 @@ mod tests {
             mean_prefill_tok_s: 1000.0,
             median_decode_tok_s: 100.0,
             aggregate_tok_s: 50.0,
+            p50_ttft_s: 0.009,
+            p95_ttft_s: 0.021,
+            p99_ttft_s: 0.022,
+            p50_itl_s: 0.004,
+            p95_itl_s: 0.006,
+            p99_itl_s: 0.007,
         };
         let g = SchedulerGauges {
             iterations: 10,
@@ -224,6 +250,17 @@ mod tests {
             prefix_entries: 3,
             prefix_bytes: 2048,
             prefix_capacity_bytes: 4096,
+            paged_block_tokens: 64,
+            blocks_capacity: 16,
+            blocks_free: 10,
+            blocks_used: 6,
+            blocks_shared: 2,
+            blocks_live_tokens: 320,
+            cow_copies: 1,
+            preemptions: 2,
+            paged_splices: 3,
+            paged_splice_tokens: 256,
+            ..Default::default()
         };
         let j = stats_to_json(&s, &g, 512, 1024);
         let back = Json::parse(&j.to_string()).unwrap();
@@ -245,6 +282,16 @@ mod tests {
         assert_eq!(back.get("prefix_entries").unwrap().as_usize().unwrap(), 3);
         assert_eq!(back.get("prefix_bytes").unwrap().as_usize().unwrap(), 2048);
         assert!((back.get("prefix_hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+        assert!((back.get("p95_ttft_ms").unwrap().as_f64().unwrap() - 21.0).abs() < 1e-9);
+        assert!((back.get("p50_itl_ms").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        assert_eq!(back.get("paged_block_tokens").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(back.get("blocks_free").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(back.get("blocks_shared").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.get("cow_copies").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("preemptions").unwrap().as_usize().unwrap(), 2);
+        // 320 live of 8 frames * 64 tokens -> 0.375 slack
+        let frag = back.get("paged_fragmentation").unwrap().as_f64().unwrap();
+        assert!((frag - 0.375).abs() < 1e-9);
     }
 
     #[test]

@@ -113,6 +113,10 @@ pub struct SchedulerGauges {
     pub occupied_rows: u64,
     /// Sum of arena rows over iterations (occupancy denominator).
     pub bucket_rows: u64,
+    /// Max rows occupied simultaneously at any iteration — the
+    /// concurrency number `serve_bench --paged-compare` compares
+    /// between paged and contiguous admission under one KV budget.
+    pub peak_rows: usize,
     /// Requests admitted into a KV slot.
     pub admissions: u64,
     /// Admissions into a row that a finished request freed earlier
@@ -165,6 +169,33 @@ pub struct SchedulerGauges {
     pub prefix_bytes: usize,
     /// Prefix-cache byte budget (0 = cache off).
     pub prefix_capacity_bytes: usize,
+    /// Publication rounds skipped because the covered prefix was
+    /// already resident (no host copy built).
+    pub prefix_publish_skips: u64,
+    /// Per-layer KvSnapshot expansion copies performed by warm
+    /// adoptions (legacy snapshot path; stays ZERO in paged mode — the
+    /// counter `--paged-compare` verifies).
+    pub prefix_expand_copies: u64,
+    /// Paged block size in tokens (0 = paged mode off).
+    pub paged_block_tokens: usize,
+    /// KV budget in target-block units (paged mode).
+    pub blocks_capacity: usize,
+    /// Remaining budget in target-block units at the last observation.
+    pub blocks_free: usize,
+    /// Private (pool-charged) block frames resident.
+    pub blocks_used: usize,
+    /// Shared (zero-charge, prefix-cache-owned) block frames resident.
+    pub blocks_shared: usize,
+    /// Tokens actually cached across all block tables.
+    pub blocks_live_tokens: usize,
+    /// Private tail frames kept at adoption (copy-on-write count).
+    pub cow_copies: u64,
+    /// Slots evicted under block pressure for later re-admission.
+    pub preemptions: u64,
+    /// Warm adoptions that spliced a shared block run into a table.
+    pub paged_splices: u64,
+    /// Prompt tokens covered by spliced runs.
+    pub paged_splice_tokens: u64,
 }
 
 impl SchedulerGauges {
@@ -231,6 +262,17 @@ impl SchedulerGauges {
         }
         self.prefix_hits as f64 / probes as f64
     }
+
+    /// Token slack trapped in allocated block frames: 1 - live/(frames
+    /// * block). Contiguous rows waste `max_ctx - live` per request
+    /// instead; the gap between the two is the capacity paging buys.
+    pub fn paged_fragmentation(&self) -> f64 {
+        let frames = self.blocks_used + self.blocks_shared;
+        if frames == 0 || self.paged_block_tokens == 0 {
+            return 0.0;
+        }
+        1.0 - self.blocks_live_tokens as f64 / (frames * self.paged_block_tokens) as f64
+    }
 }
 
 /// Aggregates request timings across the server lifetime.
@@ -255,6 +297,31 @@ impl MetricsHub {
         g.iterations += 1;
         g.occupied_rows += occupied as u64;
         g.bucket_rows += bucket as u64;
+        g.peak_rows = g.peak_rows.max(occupied);
+    }
+
+    /// `layers` per-layer KvSnapshot expansion copies ran for one warm
+    /// adoption (the legacy snapshot restore path; paged splices never
+    /// call this, which is exactly what the zero-copy bench asserts).
+    pub fn note_prefix_expand(&self, layers: usize) {
+        self.gauges.lock().unwrap().prefix_expand_copies += layers as u64;
+    }
+
+    /// Mirror the worker-local paged block-pool counters into the
+    /// gauges (refreshed once per scheduler iteration, like
+    /// `observe_prefix`).
+    pub fn observe_paged(&self, s: &crate::kvcache::paged::PagedStats) {
+        let mut g = self.gauges.lock().unwrap();
+        g.paged_block_tokens = s.block_tokens;
+        g.blocks_capacity = s.capacity_blocks;
+        g.blocks_free = s.free_blocks;
+        g.blocks_used = s.used_blocks;
+        g.blocks_shared = s.shared_blocks;
+        g.blocks_live_tokens = s.live_tokens;
+        g.cow_copies = s.cow_copies;
+        g.preemptions = s.preemptions;
+        g.paged_splices = s.splices;
+        g.paged_splice_tokens = s.splice_tokens;
     }
 
     /// `committed` tokens were emitted by the iteration that just ran;
@@ -311,6 +378,7 @@ impl MetricsHub {
         g.prefix_entries = s.entries;
         g.prefix_bytes = s.bytes_in_use;
         g.prefix_capacity_bytes = s.capacity_bytes;
+        g.prefix_publish_skips = s.publish_skips;
     }
 
     /// Refresh the point-in-time gauges (queue depth + KV pool state).
@@ -349,13 +417,23 @@ impl MetricsHub {
             .filter(|t| !t.token_intervals.is_empty())
             .map(|t| t.decode_throughput())
             .collect();
+        // inter-token latency distribution over ALL generated tokens
+        // (flattened, so a busy request weighs by its token count, not
+        // once per request — the tail a per-request median hides)
+        let itls: Vec<f64> = ts.iter().flat_map(|t| t.token_intervals.iter().copied()).collect();
         let total_tokens: usize = ts.iter().map(|t| t.generated_tokens).sum();
         let wall: f64 = ts.iter().map(|t| t.total_s).sum();
         MetricsSummary {
             requests: ts.len(),
             generated_tokens: total_tokens,
             mean_ttft_s: mean(&ttfts),
+            p50_ttft_s: percentile(&ttfts, 50.0),
             p90_ttft_s: percentile(&ttfts, 90.0),
+            p95_ttft_s: percentile(&ttfts, 95.0),
+            p99_ttft_s: percentile(&ttfts, 99.0),
+            p50_itl_s: percentile(&itls, 50.0),
+            p95_itl_s: percentile(&itls, 95.0),
+            p99_itl_s: percentile(&itls, 99.0),
             mean_prefill_tok_s: mean(&prefill),
             median_decode_tok_s: median(&tput),
             aggregate_tok_s: total_tokens as f64 / wall.max(1e-12),
@@ -368,7 +446,14 @@ pub struct MetricsSummary {
     pub requests: usize,
     pub generated_tokens: usize,
     pub mean_ttft_s: f64,
+    pub p50_ttft_s: f64,
     pub p90_ttft_s: f64,
+    pub p95_ttft_s: f64,
+    pub p99_ttft_s: f64,
+    /// Inter-token latency percentiles over every generated token.
+    pub p50_itl_s: f64,
+    pub p95_itl_s: f64,
+    pub p99_itl_s: f64,
     pub mean_prefill_tok_s: f64,
     pub median_decode_tok_s: f64,
     pub aggregate_tok_s: f64,
@@ -490,6 +575,7 @@ mod tests {
             hit_tokens: 384,
             inserts: 5,
             evictions: 1,
+            publish_skips: 3,
             entries: 4,
             bytes_in_use: 4096,
             capacity_bytes: 8192,
@@ -501,12 +587,80 @@ mod tests {
         assert_eq!(g.prefix_hit_tokens, 384);
         assert_eq!(g.prefix_inserts, 5);
         assert_eq!(g.prefix_evictions, 1);
+        assert_eq!(g.prefix_publish_skips, 3);
         assert_eq!(g.prefix_entries, 4);
         assert_eq!(g.prefix_bytes, 4096);
         assert_eq!(g.prefix_capacity_bytes, 8192);
         assert!((g.prefix_hit_rate() - 0.75).abs() < 1e-9);
         // no probes -> a well-defined zero, not NaN
         assert_eq!(MetricsHub::new().gauges().prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn paged_gauges_mirror_pool_stats() {
+        let hub = MetricsHub::new();
+        let s = crate::kvcache::paged::PagedStats {
+            block_tokens: 64,
+            capacity_blocks: 32,
+            free_blocks: 20,
+            used_blocks: 8,
+            shared_blocks: 4,
+            live_tokens: 576,
+            cow_copies: 2,
+            preemptions: 1,
+            splices: 4,
+            splice_tokens: 512,
+        };
+        hub.observe_paged(&s);
+        hub.note_prefix_expand(6);
+        hub.note_prefix_expand(6);
+        let g = hub.gauges();
+        assert_eq!(g.paged_block_tokens, 64);
+        assert_eq!(g.blocks_capacity, 32);
+        assert_eq!(g.blocks_free, 20);
+        assert_eq!(g.blocks_used, 8);
+        assert_eq!(g.blocks_shared, 4);
+        assert_eq!(g.blocks_live_tokens, 576);
+        assert_eq!(g.cow_copies, 2);
+        assert_eq!(g.preemptions, 1);
+        assert_eq!(g.paged_splices, 4);
+        assert_eq!(g.paged_splice_tokens, 512);
+        assert_eq!(g.prefix_expand_copies, 12);
+        // 576 live of 12 frames * 64 tokens -> 25% slack
+        assert!((g.paged_fragmentation() - 0.25).abs() < 1e-9);
+        // no frames -> a well-defined zero, not NaN
+        assert_eq!(MetricsHub::new().gauges().paged_fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn peak_rows_tracks_the_high_water_mark() {
+        let hub = MetricsHub::new();
+        hub.note_iteration(2, 8);
+        hub.note_iteration(6, 8);
+        hub.note_iteration(3, 8);
+        assert_eq!(hub.gauges().peak_rows, 6);
+    }
+
+    #[test]
+    fn summary_percentiles_cover_ttft_and_itl() {
+        let hub = MetricsHub::new();
+        for i in 0..10 {
+            hub.record(RequestTiming {
+                prompt_tokens: 10,
+                generated_tokens: 3,
+                ttft_s: 0.01 * (i + 1) as f64,
+                total_s: 0.5,
+                token_intervals: vec![0.01, 0.02],
+            });
+        }
+        let s = hub.summary();
+        assert!((s.p50_ttft_s - 0.055).abs() < 1e-9);
+        assert!(s.p95_ttft_s > s.p50_ttft_s);
+        assert!(s.p99_ttft_s >= s.p95_ttft_s);
+        assert!(s.p99_ttft_s <= 0.1 + 1e-9);
+        // ITL is flattened over tokens: half 0.01, half 0.02
+        assert!((s.p50_itl_s - 0.015).abs() < 1e-9);
+        assert!((s.p99_itl_s - 0.02).abs() < 1e-6);
     }
 
     #[test]

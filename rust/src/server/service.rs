@@ -29,15 +29,18 @@
 //! carries the target snapshot AND the draft's, so the two arenas enter
 //! decode in lockstep exactly as with cold admission.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
 use crate::data::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
 use crate::executor::engine::{Engine, RowDecode, RowSpecDecode};
-use crate::kvcache::prefix::{KvSnapshot, PrefixCache};
-use crate::kvcache::{kv_bytes, slot_bytes, KvLeaseOwned, KvPool, KvState, SlotArena};
+use crate::kvcache::paged::{PagedEntry, PagedKv, PagedRun};
+use crate::kvcache::prefix::{KvSnapshot, PrefixCache, PrefixValue};
+use crate::kvcache::{
+    kv_bytes, slot_bytes, take_row_state, KvLeaseOwned, KvPool, KvState, SlotArena,
+};
 use crate::nbl::plan::ModelPlan;
 use crate::sampling::{argmax, Sampler};
 use crate::server::api::{GenRequest, GenResponse};
@@ -104,6 +107,15 @@ pub struct ServerConfig {
     /// exactly where a cold admission would). 0 = auto: the chunk size,
     /// or 128 with chunking off.
     pub prefix_snap: usize,
+    /// Paged KV admission (DESIGN.md §Paged KV): block size in tokens
+    /// for the block-pool cache. Requests charge the KV pool
+    /// block-by-block as their context grows (instead of a worst-case
+    /// contiguous row at admission), warm prefix adoptions splice
+    /// refcounted shared block runs at zero pool charge, and admission
+    /// stalls preempt the latest-admitted slot instead of wedging. 0 =
+    /// contiguous slot-granular admission (the legacy accounting).
+    /// Continuous mode only.
+    pub kv_block_tokens: usize,
 }
 
 impl Default for ServerConfig {
@@ -117,6 +129,7 @@ impl Default for ServerConfig {
             prefill_chunk: 128,
             prefix_cache_bytes: 0,
             prefix_snap: 0,
+            kv_block_tokens: 0,
         }
     }
 }
@@ -281,9 +294,35 @@ struct ActiveSlot {
     next: u32,
     /// max_new_tokens clamped to the context budget.
     effective_max: usize,
+    /// Admission order: preemption evicts the HIGHEST sequence first
+    /// (LIFO), so the oldest resident request always runs to completion
+    /// — the livelock guard for preempt-under-pressure.
+    seq: u64,
     /// Slot-granular KV reservation; returns to the pool when the
-    /// request leaves the batch.
-    _lease: KvLeaseOwned,
+    /// request leaves the batch. None in paged mode, where the pool is
+    /// charged block-by-block through [`PagedKv`] instead.
+    _lease: Option<KvLeaseOwned>,
+}
+
+/// A request evicted from its slot under block-pool pressure
+/// (DESIGN.md §Paged KV): its row caches are snapshotted host-side so
+/// re-admission restores exactly where decode stopped (token parity
+/// with an un-preempted run), at strict priority over fresh admissions.
+struct PreemptedSlot {
+    req: GenRequest,
+    sampler: Sampler,
+    outputs: Vec<u32>,
+    watch: Stopwatch,
+    next: u32,
+    effective_max: usize,
+    /// Original admission sequence, preserved across the round trip so
+    /// a resumed request cannot become the next preemption victim of a
+    /// younger one.
+    seq: u64,
+    /// Row cache at eviction (batch-1, target plan).
+    target: KvState,
+    /// Draft-arena row in lockstep (speculative mode only).
+    draft: Option<KvState>,
 }
 
 /// Draft side of speculative serving: an engine over the same weights
@@ -309,8 +348,9 @@ struct PrefixReuse {
 
 impl PrefixReuse {
     /// Longest usable cached prefix of `prompt`, capped at len-1 so the
-    /// suffix always yields first-token logits.
-    fn probe(&mut self, prompt: &[u32]) -> Option<Arc<Vec<KvSnapshot>>> {
+    /// suffix always yields first-token logits. The value is a legacy
+    /// snapshot pair or a paged block-run entry, per the publish mode.
+    fn probe(&mut self, prompt: &[u32]) -> Option<PrefixValue> {
         self.cache.lookup(prompt, prompt.len().saturating_sub(1))
     }
 
@@ -344,8 +384,10 @@ impl PrefixReuse {
 struct PendingPrefill {
     req: GenRequest,
     watch: Stopwatch,
-    /// Slot-granular KV reservation, carried into the `ActiveSlot`.
-    lease: KvLeaseOwned,
+    /// Slot-granular KV reservation, carried into the `ActiveSlot`
+    /// (None in paged mode — the machine's blocks are attached in the
+    /// block pool instead).
+    lease: Option<KvLeaseOwned>,
     /// Reserved arena row (both arenas under speculation).
     slot: usize,
     /// Batch-1 cache being built chunk by chunk (`state.pos` == tokens
@@ -355,6 +397,9 @@ struct PendingPrefill {
     draft_state: Option<KvState>,
     /// Prompt tokens prefilled so far.
     done: usize,
+    /// Paged entry this machine warm-seeded from: its covered blocks
+    /// become shared frames (`mark_shared`) at final adoption.
+    warm_paged: Option<Arc<PagedEntry>>,
 }
 
 /// Continuous-batching worker: one decode iteration per loop turn over
@@ -362,168 +407,287 @@ struct PendingPrefill {
 /// iterations without restarting the batch. With speculation enabled an
 /// iteration is draft-and-verify and commits up to W tokens per row.
 fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
-    let engine = &server.engine;
-    let mut spec: Option<SpecState> = match &server.config.spec {
-        Some(sc) if sc.width >= 2 => {
-            // snap the width onto the AOT cached-lens grid: an
-            // off-grid width would otherwise fail EVERY iteration once
-            // the fallback hits a non-bucket step
-            let width = engine.snap_verify_width(sc.width);
-            if width != sc.width {
-                eprintln!(
-                    "server: verify width {} snapped to AOT bucket {width}",
-                    sc.width
-                );
-            }
-            if width < 2 {
-                eprintln!("server: no verify bucket >= 2; serving without speculation");
-                None
-            } else {
-                match engine.with_plan(sc.draft_plan.clone()) {
-                    Ok(d) => Some(SpecState { engine: d, arena: None, width }),
-                    Err(e) => {
-                        // availability first: a bad draft plan degrades to
-                        // plain continuous serving, not refused traffic
-                        eprintln!(
-                            "server: draft plan rejected ({e}); serving without speculation"
-                        );
-                        None
+    let mut il = IterationLoop::new(server, rx);
+    while il.turn() {}
+    il.shutdown();
+}
+
+/// The continuous worker's complete per-iteration state, extracted from
+/// the former ~1,500-line `run_continuous` body (the ROADMAP refactor
+/// that unlocks preemption and future replication). Each scheduler turn
+/// is a fixed phase sequence over these fields — intake, admission
+/// (preempted resumes first), chunked prefill, starvation relief,
+/// gauges, decode — instead of a dozen loop-local variables threaded
+/// through free functions.
+struct IterationLoop<'a> {
+    server: &'a Arc<Server>,
+    rx: &'a Receiver<Submission>,
+    /// Draft engine + lockstep arena (speculative mode).
+    spec: Option<SpecState>,
+    /// Serve-time prefill chunk (0 = whole-prompt admission).
+    chunk: usize,
+    /// Radix-tree prompt-prefix cache (None = reuse off).
+    prefix: Option<PrefixReuse>,
+    /// Block-pool admission state (None = contiguous `slot_bytes`
+    /// accounting). Born with the arena, like the draft arena.
+    paged: Option<PagedKv>,
+    /// Contiguous-mode worst-case bytes per resident request (target
+    /// row + draft row under speculation).
+    per_slot: usize,
+    /// The in-flight chunked-prefill machine (at most one).
+    pending: Option<PendingPrefill>,
+    /// Preempted slots awaiting re-admission, oldest first. STRICT
+    /// priority over fresh admissions: no new request admits while one
+    /// waits, so eviction can never starve its victim (livelock guard).
+    preempted: VecDeque<PreemptedSlot>,
+    sched: Scheduler,
+    replies: HashMap<u64, Sender<GenResponse>>,
+    /// Submission-time stopwatches (TTFT includes queue wait).
+    watches: HashMap<u64, Stopwatch>,
+    arena: Option<SlotArena>,
+    slots: Vec<Option<ActiveSlot>>,
+    /// Rows that served an earlier request (slot-reuse accounting).
+    row_used: Vec<bool>,
+    /// Monotonic admission counter feeding `ActiveSlot::seq`.
+    admit_seq: u64,
+}
+
+impl<'a> IterationLoop<'a> {
+    fn new(server: &'a Arc<Server>, rx: &'a Receiver<Submission>) -> IterationLoop<'a> {
+        let engine = &server.engine;
+        let spec: Option<SpecState> = match &server.config.spec {
+            Some(sc) if sc.width >= 2 => {
+                // snap the width onto the AOT cached-lens grid: an
+                // off-grid width would otherwise fail EVERY iteration once
+                // the fallback hits a non-bucket step
+                let width = engine.snap_verify_width(sc.width);
+                if width != sc.width {
+                    eprintln!(
+                        "server: verify width {} snapped to AOT bucket {width}",
+                        sc.width
+                    );
+                }
+                if width < 2 {
+                    eprintln!("server: no verify bucket >= 2; serving without speculation");
+                    None
+                } else {
+                    match engine.with_plan(sc.draft_plan.clone()) {
+                        Ok(d) => Some(SpecState { engine: d, arena: None, width }),
+                        Err(e) => {
+                            // availability first: a bad draft plan degrades to
+                            // plain continuous serving, not refused traffic
+                            eprintln!(
+                                "server: draft plan rejected ({e}); serving without speculation"
+                            );
+                            None
+                        }
                     }
                 }
             }
-        }
-        _ => None,
-    };
-    // a resident request holds KV rows in BOTH arenas under speculation
-    let per_slot = slot_bytes(engine.config(), &engine.plan)
-        + spec
-            .as_ref()
-            .map_or(0, |sp| slot_bytes(engine.config(), &sp.engine.plan));
-    // chunked prefill: snap the configured chunk size onto the AOT
-    // prefill grid. 0 — or an artifact set that predates the
-    // attn_prefill_chunk family — disables chunking, and admissions
-    // prefill whole prompts (the fallback ladder's last rung; see
-    // DESIGN.md §Chunked prefill).
-    let chunk = match server.config.prefill_chunk {
-        0 => 0,
-        want => {
-            let c = engine.snap_chunk_len(want);
-            if c != want {
-                eprintln!("server: prefill chunk {want} snapped to AOT bucket {c}");
+            _ => None,
+        };
+        // a resident request holds KV rows in BOTH arenas under speculation
+        let per_slot = slot_bytes(engine.config(), &engine.plan)
+            + spec
+                .as_ref()
+                .map_or(0, |sp| slot_bytes(engine.config(), &sp.engine.plan));
+        // chunked prefill: snap the configured chunk size onto the AOT
+        // prefill grid. 0 — or an artifact set that predates the
+        // attn_prefill_chunk family — disables chunking, and admissions
+        // prefill whole prompts (the fallback ladder's last rung; see
+        // DESIGN.md §Chunked prefill).
+        let chunk = match server.config.prefill_chunk {
+            0 => 0,
+            want => {
+                let c = engine.snap_chunk_len(want);
+                if c != want {
+                    eprintln!("server: prefill chunk {want} snapped to AOT bucket {c}");
+                }
+                if engine.supports_chunked_prefill(1, c) {
+                    c
+                } else {
+                    eprintln!(
+                        "server: attn_prefill_chunk ops missing from the AOT grid; \
+                         admissions prefill whole prompts (rebuild artifacts)"
+                    );
+                    0
+                }
             }
-            if engine.supports_chunked_prefill(1, c) {
-                c
-            } else {
+        };
+        // prefix-aware KV reuse (DESIGN.md §Prefix cache): probe-and-adopt
+        // needs the cache-appending chunk ops to extend an adopted prefix,
+        // so stale artifacts degrade to cold prefill, never to an error
+        let prefix: Option<PrefixReuse> = match server.config.prefix_cache_bytes {
+            0 => None,
+            bytes if engine.supports_prefix_reuse() => {
+                let want = match server.config.prefix_snap {
+                    0 if chunk > 0 => chunk,
+                    0 => 128,
+                    w => w,
+                };
+                // chunk-align snapshot positions: an adopted prefix then
+                // re-enters the chunk ladder exactly where a cold admission
+                // would, so the ragged tail's padded bucket can never cross
+                // the context boundary in a way cold admission could not
+                let snap = if chunk > 0 { want.div_ceil(chunk) * chunk } else { want };
+                Some(PrefixReuse { cache: PrefixCache::new(bytes), snap })
+            }
+            _ => {
                 eprintln!(
                     "server: attn_prefill_chunk ops missing from the AOT grid; \
-                     admissions prefill whole prompts (rebuild artifacts)"
+                     prefix cache disabled (rebuild artifacts)"
                 );
-                0
+                None
             }
+        };
+        IterationLoop {
+            server,
+            rx,
+            spec,
+            chunk,
+            prefix,
+            paged: None,
+            per_slot,
+            pending: None,
+            preempted: VecDeque::new(),
+            sched: Scheduler::new(),
+            replies: HashMap::new(),
+            // stopwatches start at SUBMISSION so TTFT includes scheduler
+            // queue wait (under load the queue is where latency lives)
+            watches: HashMap::new(),
+            arena: None,
+            slots: Vec::new(),
+            row_used: Vec::new(),
+            admit_seq: 0,
         }
-    };
-    // prefix-aware KV reuse (DESIGN.md §Prefix cache): probe-and-adopt
-    // needs the cache-appending chunk ops to extend an adopted prefix,
-    // so stale artifacts degrade to cold prefill, never to an error
-    let mut prefix: Option<PrefixReuse> = match server.config.prefix_cache_bytes {
-        0 => None,
-        bytes if engine.supports_prefix_reuse() => {
-            let want = match server.config.prefix_snap {
-                0 if chunk > 0 => chunk,
-                0 => 128,
-                w => w,
-            };
-            // chunk-align snapshot positions: an adopted prefix then
-            // re-enters the chunk ladder exactly where a cold admission
-            // would, so the ragged tail's padded bucket can never cross
-            // the context boundary in a way cold admission could not
-            let snap = if chunk > 0 { want.div_ceil(chunk) * chunk } else { want };
-            Some(PrefixReuse { cache: PrefixCache::new(bytes), snap })
-        }
-        _ => {
-            eprintln!(
-                "server: attn_prefill_chunk ops missing from the AOT grid; \
-                 prefix cache disabled (rebuild artifacts)"
-            );
-            None
-        }
-    };
-    let mut pending: Option<PendingPrefill> = None;
-    let mut sched = Scheduler::new();
-    let mut replies: HashMap<u64, Sender<GenResponse>> = HashMap::new();
-    // stopwatches start at SUBMISSION so TTFT includes scheduler queue
-    // wait (under load the queue is where latency lives)
-    let mut watches: HashMap<u64, Stopwatch> = HashMap::new();
-    let mut arena: Option<SlotArena> = None;
-    let mut slots: Vec<Option<ActiveSlot>> = Vec::new();
-    // rows that served an earlier request (slot-reuse accounting)
-    let mut row_used: Vec<bool> = Vec::new();
+    }
 
-    'outer: loop {
-        // ---- intake: block when idle, poll between iterations (a
-        // pending chunked prefill is work, not idleness)
-        let idle =
-            slots.iter().all(|s| s.is_none()) && sched.waiting() == 0 && pending.is_none();
+    /// One scheduler turn. Returns false on shutdown.
+    fn turn(&mut self) -> bool {
+        if !self.intake_phase() {
+            return false;
+        }
+        if !self.ensure_arena() {
+            return true;
+        }
+        self.admission_phase();
+        self.advance_chunked();
+        self.starvation_phase();
+        self.observe();
+        self.decode_phase();
+        true
+    }
+
+    /// Intake: block when idle, poll between iterations (a pending
+    /// chunked prefill or a preempted slot is work, not idleness).
+    /// Returns false on shutdown.
+    fn intake_phase(&mut self) -> bool {
+        let idle = self.slots.iter().all(|s| s.is_none())
+            && self.sched.waiting() == 0
+            && self.pending.is_none()
+            && self.preempted.is_empty();
         if idle {
-            match rx.recv() {
+            match self.rx.recv() {
                 Ok(sub) => {
-                    if !intake(sub, &mut sched, &mut replies, &mut watches) {
-                        break 'outer;
+                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches) {
+                        return false;
                     }
                 }
-                Err(_) => break 'outer, // all senders dropped
+                Err(_) => return false, // all senders dropped
             }
         }
         loop {
-            match rx.try_recv() {
+            match self.rx.try_recv() {
                 Ok(sub) => {
-                    if !intake(sub, &mut sched, &mut replies, &mut watches) {
-                        break 'outer;
+                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches) {
+                        return false;
                     }
                 }
                 Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => break 'outer,
+                Err(TryRecvError::Disconnected) => return false,
             }
         }
+        true
+    }
 
-        // ---- lazily size the arenas from the grid on first demand (the
-        // draft arena is born together with the target's so slots stay
-        // in lockstep)
-        if arena.is_none() && sched.waiting() > 0 {
-            let built = engine.new_arena(server.config.max_batch).and_then(|a| {
-                let d = match &spec {
-                    Some(sp) => Some(sp.engine.new_arena(server.config.max_batch)?),
-                    None => None,
-                };
-                Ok((a, d))
-            });
-            match built {
-                Ok((a, d)) => {
-                    slots = (0..a.bucket_batch).map(|_| None).collect();
-                    row_used = vec![false; a.bucket_batch];
-                    if let Some(sp) = spec.as_mut() {
-                        sp.arena = d;
-                    }
-                    arena = Some(a);
+    /// Lazily size the arenas from the grid on first demand (the draft
+    /// arena — and the paged block pool — are born together with the
+    /// target's so slots stay in lockstep). Returns true when an arena
+    /// exists to run the remaining phases against.
+    fn ensure_arena(&mut self) -> bool {
+        if self.arena.is_some() {
+            return true;
+        }
+        if self.sched.waiting() == 0 {
+            return false;
+        }
+        let server = self.server;
+        let engine = &server.engine;
+        let built = engine.new_arena(server.config.max_batch).and_then(|a| {
+            let d = match &self.spec {
+                Some(sp) => Some(sp.engine.new_arena(server.config.max_batch)?),
+                None => None,
+            };
+            Ok((a, d))
+        });
+        match built {
+            Ok((a, d)) => {
+                self.slots = (0..a.bucket_batch).map(|_| None).collect();
+                self.row_used = vec![false; a.bucket_batch];
+                if let Some(sp) = self.spec.as_mut() {
+                    sp.arena = d;
                 }
-                Err(e) => {
-                    for r in sched.drain() {
-                        watches.remove(&r.id);
-                        respond(&mut replies, error_response(r.id, Error::msg(e.to_string())));
-                    }
-                    continue;
+                if server.config.kv_block_tokens > 0 {
+                    let cfg = engine.config();
+                    // clamp into (0, max_ctx]: the block is an admission
+                    // accounting unit, not an AOT grid length
+                    let bt = server.config.kv_block_tokens.clamp(1, cfg.max_ctx);
+                    let t_bpb = kv_bytes(cfg, engine.plan.kv_layers(), 1, bt, 4);
+                    let d_bpb = self
+                        .spec
+                        .as_ref()
+                        .map_or(0, |sp| kv_bytes(cfg, sp.engine.plan.kv_layers(), 1, bt, 4));
+                    self.paged = Some(PagedKv::new(
+                        bt,
+                        t_bpb,
+                        d_bpb,
+                        server.pool.clone(),
+                        a.bucket_batch,
+                    ));
                 }
+                self.arena = Some(a);
+                true
+            }
+            Err(e) => {
+                for r in self.sched.drain() {
+                    self.watches.remove(&r.id);
+                    respond(
+                        &mut self.replies,
+                        error_response(r.id, Error::msg(e.to_string())),
+                    );
+                }
+                false
             }
         }
-        let Some(arena_ref) = arena.as_mut() else { continue };
+    }
 
-        // ---- admission: oldest-first into free slots while budget
-        // holds. Prompts longer than one chunk enter the multi-iteration
-        // chunked-prefill machine (at most one in flight); single-chunk
-        // prompts admit whole, exactly as before chunking existed.
+    /// Admission: oldest-first into free slots while budget holds.
+    /// Preempted slots resume FIRST, at strict priority. Prompts longer
+    /// than one chunk enter the multi-iteration chunked-prefill machine
+    /// (at most one in flight); single-chunk prompts admit whole,
+    /// exactly as before chunking existed. In paged mode a request
+    /// charges the pool only its prompt's blocks (growth comes later,
+    /// block by block); in contiguous mode the worst-case row pair.
+    fn admission_phase(&mut self) {
+        self.resume_preempted();
+        if !self.preempted.is_empty() {
+            // strict resume priority: fresh admissions would consume the
+            // very blocks the preempted slot is waiting for (livelock)
+            return;
+        }
         loop {
-            if pending.is_some()
-                && sched.head().is_none_or(|r| {
+            if self.pending.is_some()
+                && self.sched.head().is_none_or(|r| {
                     // the running machine owns the chunk budget: a head
                     // that still needs multi-chunk prefill waits for it
                     // (strict FIFO among multi-chunk prompts). The slip
@@ -531,71 +695,194 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
                     // long prompt admits whole between chunks exactly
                     // like a genuinely short one — the stat-free peek
                     // keeps a waiting head from distorting LRU/stats.
-                    let covered = prefix.as_ref().map_or(0, |px| px.peek(&r.prompt));
-                    r.prompt.len().saturating_sub(covered) > chunk
+                    let covered = self.prefix.as_ref().map_or(0, |px| px.peek(&r.prompt));
+                    r.prompt.len().saturating_sub(covered) > self.chunk
                 })
             {
                 break;
             }
-            let Some(slot) = arena_ref.free_slot() else { break };
-            let free = arena_ref.free_slots();
-            let Some(req) = sched.next_admission(free, &server.pool, per_slot) else { break };
-            let lease = match KvPool::reserve_owned(&server.pool, per_slot) {
-                Ok(l) => l,
-                Err(_) => {
-                    // raced with an external reservation; retry next turn
-                    sched.push_front(req);
-                    break;
+            let arena = self.arena.as_ref().unwrap();
+            let Some(slot) = arena.free_slot() else { break };
+            let free = arena.free_slots();
+            // per-request admission bytes: the paged pool charges the
+            // prompt's blocks, the contiguous pool a worst-case row pair
+            let head_bytes = match (&self.paged, self.sched.head()) {
+                (Some(pk), Some(r)) => {
+                    let d = self.spec.as_ref().map(|_| r.prompt.len());
+                    pk.admit_bytes(r.prompt.len(), d)
                 }
+                _ => self.per_slot,
             };
-            let watch = take_watch(&mut watches, req.id);
+            let Some(req) = self.sched.next_admission(free, &self.server.pool, head_bytes)
+            else {
+                break;
+            };
+            let lease = match self.paged.as_mut() {
+                Some(pk) => {
+                    let d = self.spec.as_ref().map(|_| req.prompt.len());
+                    if pk.attach(slot, req.prompt.len(), d).is_err() {
+                        // raced with an external reservation; retry next turn
+                        self.sched.push_front(req);
+                        break;
+                    }
+                    None
+                }
+                None => match KvPool::reserve_owned(&self.server.pool, self.per_slot) {
+                    Ok(l) => Some(l),
+                    Err(_) => {
+                        // raced with an external reservation; retry next turn
+                        self.sched.push_front(req);
+                        break;
+                    }
+                },
+            };
+            let watch = take_watch(&mut self.watches, req.id);
             // probe the prefix cache: the longest cached prefix decides
             // how much prefill is actually left, and THAT picks the
             // admission path (a long prompt whose suffix fits one chunk
             // admits whole, exactly like a genuinely short prompt)
-            let hit = prefix.as_mut().and_then(|px| px.probe(&req.prompt));
-            let covered = hit.as_ref().map_or(0, |s| s[0].pos);
+            let hit = self.prefix.as_mut().and_then(|px| px.probe(&req.prompt));
+            let covered = hit.as_ref().map_or(0, |v| v.tokens());
             // `pending.is_none()` is the guard's invariant restated: a
             // popped head only ever starts a machine when none runs
             // (overwriting one would leak its reserved row); if the two
             // ever disagreed, whole-prompt admit is the safe fallback
-            if chunk > 0
-                && pending.is_none()
-                && req.prompt.len().saturating_sub(covered) > chunk
+            if self.chunk > 0
+                && self.pending.is_none()
+                && req.prompt.len().saturating_sub(covered) > self.chunk
             {
-                pending = start_chunked(
-                    server, arena_ref, spec.as_mut(), slot, req, watch, lease, hit,
-                    prefix.as_mut(), chunk, &mut replies,
-                );
+                let slot_taken = slot;
+                self.pending = self.start_chunked(slot, req, watch, lease, hit);
+                if self.pending.is_none() {
+                    // answered (or refused) without entering prefill:
+                    // return the attached blocks
+                    if let Some(pk) = self.paged.as_mut() {
+                        pk.release(slot_taken);
+                    }
+                }
                 continue;
             }
-            admit(
-                server, arena_ref, spec.as_mut(), slot, req, watch, lease, hit,
-                prefix.as_mut(), &mut slots, &mut row_used, &mut replies,
-            );
+            self.admit(slot, req, watch, lease, hit);
+            if self.slots[slot].is_none() {
+                // the request finished on its prefill token or failed:
+                // it never joined the batch, so its blocks go back
+                if let Some(pk) = self.paged.as_mut() {
+                    pk.release(slot);
+                }
+            }
         }
+    }
 
-        // ---- chunked prefill: advance the pending admission by exactly
-        // ONE cache-appending chunk, then fall through to the decode
-        // iteration — in-flight rows never wait for more than one chunk
-        advance_chunked(
-            server, arena_ref, spec.as_mut(), prefix.as_mut(), &mut pending, &mut slots,
-            &mut row_used, &mut replies, chunk,
-        );
+    /// Re-admit preempted slots, oldest first, while free rows and
+    /// block budget allow. A resumed request re-enters with its caches
+    /// restored at the exact positions decode stopped at and its
+    /// ORIGINAL admission sequence, so it cannot be victimized by a
+    /// younger request's growth.
+    fn resume_preempted(&mut self) {
+        while let Some(front) = self.preempted.front() {
+            let Some(pk) = self.paged.as_mut() else { break };
+            let arena = self.arena.as_mut().unwrap();
+            let Some(slot) = arena.free_slot() else { break };
+            let t_tokens = front.target.pos;
+            let d_tokens = front.draft.as_ref().map(|d| d.pos);
+            if !self.server.pool.would_fit(pk.admit_bytes(t_tokens, d_tokens)) {
+                break;
+            }
+            if pk.attach(slot, t_tokens, d_tokens).is_err() {
+                break;
+            }
+            let p = self.preempted.pop_front().unwrap();
+            if let Err(e) = arena.adopt(slot, &p.target) {
+                pk.release(slot);
+                respond(&mut self.replies, error_response(p.req.id, e));
+                continue;
+            }
+            if let Some(sp) = self.spec.as_mut() {
+                let adopted = match (sp.arena.as_mut(), p.draft.as_ref()) {
+                    (Some(da), Some(ds)) => da.adopt(slot, ds),
+                    _ => Err(Error::Serving("draft state missing at resume".into())),
+                };
+                if let Err(e) = adopted {
+                    arena.release(slot);
+                    pk.release(slot);
+                    respond(&mut self.replies, error_response(p.req.id, e));
+                    continue;
+                }
+            }
+            self.server.metrics.note_admission(self.row_used[slot]);
+            self.row_used[slot] = true;
+            self.slots[slot] = Some(ActiveSlot {
+                req: p.req,
+                sampler: p.sampler,
+                outputs: p.outputs,
+                watch: p.watch,
+                next: p.next,
+                effective_max: p.effective_max,
+                seq: p.seq,
+                _lease: None,
+            });
+        }
+    }
 
-        // ---- a head that can never fit must not hang the queue (a
-        // pending machine holds a lease and will free it; skip)
-        if pending.is_none()
-            && arena_ref.occupancy() == 0
-            && sched.waiting() > 0
-            && !server.pool.would_fit(per_slot)
-        {
-            if server.pool.in_use() == 0 {
+    /// A head that can never fit must not hang the queue (a pending
+    /// machine holds budget and will free it; a nonempty resume backlog
+    /// means decode departures are about to free blocks — wait).
+    fn starvation_phase(&mut self) {
+        if self.pending.is_some() || self.sched.waiting() == 0 {
+            return;
+        }
+        if !self.preempted.is_empty() {
+            // the resume backlog owns admission priority; if nothing is
+            // even decoding, yield so the intake thread isn't starved
+            if self.arena.as_ref().unwrap().occupancy() == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            return;
+        }
+        if self.arena.as_ref().unwrap().occupancy() > 0 {
+            return;
+        }
+        let server = self.server;
+        if let Some(pk) = self.paged.as_ref() {
+            // paged mode: drain only heads whose FULL extent (prompt +
+            // max_new_tokens, both arenas) exceeds an EMPTY pool —
+            // anything smaller is merely waiting for blocks
+            let max_ctx = server.engine.config().max_ctx;
+            loop {
+                let Some(r) = self.sched.head() else { break };
+                let t = (r.prompt.len() + r.max_new_tokens).min(max_ctx);
+                let d = self.spec.as_ref().map(|_| t);
+                if pk.would_ever_fit(t, d) {
+                    break;
+                }
+                let need = pk.admit_bytes(t, d);
                 let cap = server.pool.capacity();
-                for r in sched.drain() {
-                    watches.remove(&r.id);
+                let Some(req) = self.sched.next_admission(1, &server.pool, 0) else { break };
+                self.watches.remove(&req.id);
+                respond(
+                    &mut self.replies,
+                    error_response(
+                        req.id,
+                        Error::Serving(format!(
+                            "KV pool exhausted: request needs {need} > capacity {cap}"
+                        )),
+                    ),
+                );
+            }
+            if self.sched.waiting() > 0 && server.pool.in_use() > 0 {
+                // an external lease holds the budget; yield briefly
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            return;
+        }
+        if !server.pool.would_fit(self.per_slot) {
+            if server.pool.in_use() == 0 {
+                let per_slot = self.per_slot;
+                let cap = server.pool.capacity();
+                for r in self.sched.drain() {
+                    self.watches.remove(&r.id);
                     respond(
-                        &mut replies,
+                        &mut self.replies,
                         error_response(
                             r.id,
                             Error::Serving(format!(
@@ -609,55 +896,208 @@ fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
         }
+    }
 
-        // ---- one (possibly speculative) decode iteration over the
-        // occupied rows
+    /// Publish queue/pool/prefix/paged gauges for this iteration.
+    fn observe(&self) {
+        let server = self.server;
         server
             .metrics
-            .observe(sched.waiting(), server.pool.in_use(), server.pool.capacity());
-        if let Some(px) = prefix.as_ref() {
+            .observe(self.sched.waiting(), server.pool.in_use(), server.pool.capacity());
+        if let Some(px) = self.prefix.as_ref() {
             server.metrics.observe_prefix(&px.cache.stats());
         }
-        if arena_ref.occupancy() == 0 {
-            continue;
+        if let Some(pk) = self.paged.as_ref() {
+            server.metrics.observe_paged(&pk.stats());
         }
-        decode_iteration(server, arena_ref, spec.as_mut(), &mut slots, &mut replies);
     }
 
-    // ---- shutdown: every queued and in-flight request gets an answer
-    // (a silently dropped reply channel looks like a hung client)
-    if let Some(p) = pending.take() {
-        respond(
-            &mut replies,
-            error_response(p.req.id, Error::Serving("server shut down".into())),
-        );
+    /// One (possibly speculative) decode iteration over the occupied
+    /// rows, after guaranteeing paged block headroom for its growth.
+    fn decode_phase(&mut self) {
+        if self.arena.as_ref().unwrap().occupancy() == 0 {
+            return;
+        }
+        // worst-case per-row growth this iteration: `width` target
+        // tokens (speculative accept-all), `width - 1` draft tokens
+        let width = self
+            .spec
+            .as_ref()
+            .map_or(1, |sp| if sp.arena.is_some() { sp.width } else { 1 });
+        self.ensure_paged_capacity(width);
+        if self.arena.as_ref().unwrap().occupancy() == 0 {
+            return;
+        }
+        self.decode_iteration();
     }
-    for r in sched.drain() {
-        respond(&mut replies, error_response(r.id, Error::Serving("server shut down".into())));
-    }
-    for slot in slots.iter_mut() {
-        if let Some(a) = slot.take() {
-            let err = Error::Serving("server shut down".into());
-            respond(&mut replies, error_response(a.req.id, err));
+
+    /// Guarantee every occupied row owns blocks for the coming
+    /// iteration's worst-case growth. On block exhaustion the youngest
+    /// admission (max `seq`) is preempted — its row caches snapshot to
+    /// host, its blocks return to the pool — until the growth fits or
+    /// the growing row is itself the victim (then it IS the youngest
+    /// and simply waits preempted).
+    fn ensure_paged_capacity(&mut self, width: usize) {
+        if self.paged.is_none() {
+            return;
+        }
+        let max_ctx = self.server.engine.config().max_ctx;
+        let n = self.slots.len();
+        for s in 0..n {
+            'row: loop {
+                if self.slots[s].is_none() {
+                    break 'row;
+                }
+                let arena = self.arena.as_ref().unwrap();
+                let Some(pos) = arena.pos(s) else { break 'row };
+                let t_need = (pos + width).min(max_ctx);
+                let d_need = self.spec.as_ref().and_then(|sp| {
+                    sp.arena.as_ref().and_then(|da| {
+                        da.pos(s)
+                            .map(|dp| (dp + width.saturating_sub(1)).min(da.max_ctx))
+                    })
+                });
+                if self.paged.as_mut().unwrap().grow(s, t_need, d_need) {
+                    break 'row;
+                }
+                // out of blocks: evict the youngest admission (LIFO, so
+                // the oldest resident always runs to completion)
+                let victim = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, a)| a.as_ref().map(|a| (i, a.seq)))
+                    .max_by_key(|&(_, seq)| seq);
+                let Some((v, _)) = victim else { break 'row };
+                self.preempt_slot(v);
+                if v == s {
+                    break 'row;
+                }
+            }
         }
     }
-    for (id, tx) in replies.drain() {
-        let _ = tx.send(error_response(id, Error::Serving("server shut down".into())));
+
+    /// Evict an active slot: snapshot its row cache(s) to host tensors,
+    /// free the arena rows and paged blocks, and queue the request for
+    /// re-admission at its original priority.
+    fn preempt_slot(&mut self, slot: usize) {
+        let Some(a) = self.slots[slot].take() else { return };
+        let server = self.server;
+        let arena = self.arena.as_mut().unwrap();
+        let pos = arena.pos(slot).unwrap_or(0);
+        let taken =
+            take_row_state(&server.engine.plan, server.engine.config(), &arena.caches, slot, pos);
+        arena.release(slot);
+        let mut draft = None;
+        let mut draft_required = false;
+        if let Some(sp) = self.spec.as_mut() {
+            if let Some(da) = sp.arena.as_mut() {
+                draft_required = true;
+                if let Some(dp) = da.pos(slot) {
+                    if let Ok(ds) =
+                        take_row_state(&sp.engine.plan, sp.engine.config(), &da.caches, slot, dp)
+                    {
+                        draft = Some(ds);
+                    }
+                }
+                da.release(slot);
+            }
+        }
+        if let Some(pk) = self.paged.as_mut() {
+            pk.preempt(slot);
+        }
+        match taken {
+            Ok(target) => {
+                if draft_required && draft.is_none() {
+                    let err = Error::Serving("draft snapshot failed at preemption".into());
+                    respond(&mut self.replies, error_response(a.req.id, err));
+                    return;
+                }
+                self.preempted.push_back(PreemptedSlot {
+                    req: a.req,
+                    sampler: a.sampler,
+                    outputs: a.outputs,
+                    watch: a.watch,
+                    next: a.next,
+                    effective_max: a.effective_max,
+                    seq: a.seq,
+                    target,
+                    draft,
+                });
+            }
+            Err(e) => {
+                respond(&mut self.replies, error_response(a.req.id, e));
+            }
+        }
+    }
+
+    /// Shutdown: every queued, preempted, and in-flight request gets an
+    /// answer (a silently dropped reply channel looks like a hung
+    /// client).
+    fn shutdown(&mut self) {
+        if let Some(p) = self.pending.take() {
+            respond(
+                &mut self.replies,
+                error_response(p.req.id, Error::Serving("server shut down".into())),
+            );
+        }
+        for p in self.preempted.drain(..) {
+            respond(
+                &mut self.replies,
+                error_response(p.req.id, Error::Serving("server shut down".into())),
+            );
+        }
+        for r in self.sched.drain() {
+            let err = Error::Serving("server shut down".into());
+            respond(&mut self.replies, error_response(r.id, err));
+        }
+        for slot in self.slots.iter_mut() {
+            if let Some(a) = slot.take() {
+                let err = Error::Serving("server shut down".into());
+                respond(&mut self.replies, error_response(a.req.id, err));
+            }
+        }
+        for (id, tx) in self.replies.drain() {
+            let _ = tx.send(error_response(id, Error::Serving("server shut down".into())));
+        }
     }
 }
 
-/// Prefill a prompt into a fresh batch-1 state, adopting `snap`'s
-/// cached prefix when one is usable: restore the snapshot and run
-/// suffix-only prefill, falling back to a cold whole-prompt call when
-/// the snapshot leaves no suffix, the padded suffix bucket would cross
-/// the context boundary, or the restore/suffix prefill itself fails.
-/// Returns (state, hidden, last real row of `hidden`, adopted tokens;
-/// 0 adopted means the cold path ran).
+/// Prefill a prompt into a fresh batch-1 state, adopting a cached
+/// prefix when one is usable. A paged block `run` materializes straight
+/// into the state — no per-layer host snapshot expansion — while a
+/// legacy `snap` restores through one expansion copy per kept layer
+/// (gauged, so the bench can prove the paged path skips them). Either
+/// way only the uncovered suffix prefills; the cold whole-prompt call
+/// is the fallback when the prefix leaves no suffix, the padded suffix
+/// bucket would cross the context boundary, or the adoption itself
+/// fails. Returns (state, hidden, last real row of `hidden`, adopted
+/// tokens; 0 adopted means the cold path ran).
 fn prefill_with_prefix(
     engine: &Engine,
     prompt: &[u32],
     snap: Option<&KvSnapshot>,
+    run: Option<&PagedRun>,
+    metrics: &MetricsHub,
 ) -> Result<(KvState, Tensor, usize, usize)> {
+    if let Some(r) = run {
+        let p = r.tokens;
+        if p > 0 && p < prompt.len() {
+            let suffix = prompt.len() - p;
+            let fits = engine
+                .prefill_bucket(suffix)
+                .is_ok_and(|tb| p + tb <= engine.config().max_ctx);
+            if fits {
+                // same accelerator-not-dependency rule as the snapshot
+                // path: any failure falls through to cold prefill
+                if let Ok(mut state) = r.materialize(&engine.plan, engine.config()) {
+                    if let Ok(hidden) = engine.prefill_suffix(&mut state, &prompt[p..]) {
+                        return Ok((state, hidden, suffix - 1, p));
+                    }
+                }
+            }
+        }
+    }
     if let Some(s) = snap {
         let p = s.pos;
         if p > 0 && p < prompt.len() {
@@ -671,6 +1111,9 @@ fn prefill_with_prefix(
                 // through to the cold whole-prompt call below instead
                 // of failing a request cold serving could answer
                 if let Ok(mut state) = s.restore_state(&engine.plan, engine.config()) {
+                    // the restore just expanded one host copy per kept
+                    // layer — exactly the copies a paged splice avoids
+                    metrics.note_prefix_expand(engine.plan.kv_layers());
                     if let Ok(hidden) = engine.prefill_suffix(&mut state, &prompt[p..]) {
                         return Ok((state, hidden, suffix - 1, p));
                     }
@@ -701,6 +1144,7 @@ fn publish_prefix_snapshots(
         // of the whole covered prefix, far too expensive to build just
         // for insert's dedup to throw away on every repeated prompt
         if px.cache.touch(&prompt[..p]) {
+            px.cache.note_publish_skip();
             p += px.snap;
             continue;
         }
@@ -720,361 +1164,516 @@ fn publish_prefix_snapshots(
     }
 }
 
-/// Prefill a newly admitted request whose uncovered suffix fits ONE
-/// chunk, sample its first token, and (unless it already finished)
-/// migrate its cache into arena row `slot` — of the target arena AND,
-/// under speculation, the draft arena. A prefix-cache hit restores the
-/// snapshot and prefills only the suffix; either way the crossed
-/// snapshot boundaries are published back. This still runs on the
-/// worker thread while the iteration loop holds, but the stall is
-/// bounded by one chunk of real prefill; prompts with longer uncovered
-/// suffixes go through [`start_chunked`]/[`advance_chunked`] instead.
-#[allow(clippy::too_many_arguments)]
-fn admit(
-    server: &Arc<Server>,
-    arena: &mut SlotArena,
-    spec: Option<&mut SpecState>,
-    slot: usize,
-    req: GenRequest,
-    mut watch: Stopwatch,
-    lease: KvLeaseOwned,
-    hit: Option<Arc<Vec<KvSnapshot>>>,
-    mut prefix: Option<&mut PrefixReuse>,
-    slots: &mut [Option<ActiveSlot>],
-    row_used: &mut [bool],
-    replies: &mut HashMap<u64, Sender<GenResponse>>,
+/// Publication dispatcher: refcounted block runs when the server runs a
+/// block pool (`block_tokens` set), legacy whole-prefix snapshots
+/// otherwise.
+fn publish_prefix(
+    px: &mut PrefixReuse,
+    block_tokens: Option<usize>,
+    prompt: &[u32],
+    covered: usize,
+    target: &KvState,
+    draft: Option<&KvState>,
 ) {
-    let engine = &server.engine;
-    let cfg = engine.config();
-    let len = req.prompt.len();
-    if req.max_new_tokens == 0 {
-        let timing = watch.finish(len, 0);
-        respond(replies, ok_response(req.id, Vec::new(), &timing));
-        return;
+    match block_tokens {
+        Some(bt) => publish_prefix_paged(px, bt, prompt, covered, target, draft),
+        None => publish_prefix_snapshots(px, prompt, covered, target, draft),
     }
-    let (state, hidden, col, covered) =
-        match prefill_with_prefix(engine, &req.prompt, hit.as_deref().and_then(|s| s.first())) {
-            Ok(t) => t,
+}
+
+/// Paged publication: each crossed snap-aligned boundary becomes a
+/// refcounted block run. Capture is INCREMENTAL — full blocks already
+/// resident under the longest cached ancestor are Arc-cloned, never
+/// re-copied, and the cache budget is charged only the genuinely new
+/// bytes — so republishing a growing prefix costs one partial tail
+/// block, not the whole prefix again.
+fn publish_prefix_paged(
+    px: &mut PrefixReuse,
+    block_tokens: usize,
+    prompt: &[u32],
+    covered: usize,
+    target: &KvState,
+    draft: Option<&KvState>,
+) {
+    let top = target.pos.min(prompt.len());
+    let mut p = (covered / px.snap + 1) * px.snap;
+    while p <= top {
+        if px.cache.touch(&prompt[..p]) {
+            // the covered block run is already resident: adopters
+            // splice it zero-copy, so rebuilding it is pure waste
+            px.cache.note_publish_skip();
+            p += px.snap;
+            continue;
+        }
+        let reuse = px
+            .cache
+            .peek_value(&prompt[..p], p)
+            .and_then(|v| v.paged().cloned());
+        let Ok((trun, tnew)) =
+            PagedRun::capture(target, p, block_tokens, reuse.as_ref().map(|e| &e.target))
+        else {
+            return;
+        };
+        let mut new_bytes = tnew;
+        let mut drun = None;
+        if let Some(d) = draft {
+            let prev = reuse.as_ref().and_then(|e| e.draft.as_ref());
+            let Ok((dr, dnew)) = PagedRun::capture(d, p, block_tokens, prev) else { return };
+            new_bytes += dnew;
+            drun = Some(dr);
+        }
+        let entry = Arc::new(PagedEntry { tokens: p, target: trun, draft: drun });
+        if !px.cache.insert_paged(&prompt[..p], entry, new_bytes) {
+            // capacity refusal: every later boundary is strictly larger
+            // and equally doomed
+            return;
+        }
+        p += px.snap;
+    }
+}
+
+impl<'a> IterationLoop<'a> {
+    /// Prefill a newly admitted request whose uncovered suffix fits ONE
+    /// chunk, sample its first token, and (unless it already finished)
+    /// migrate its cache into arena row `slot` — of the target arena
+    /// AND, under speculation, the draft arena. A prefix-cache hit
+    /// adopts either a paged block run (zero-copy splice) or a legacy
+    /// snapshot restore and prefills only the suffix; either way the
+    /// crossed snapshot boundaries are published back. This still runs
+    /// on the worker thread while the iteration loop holds, but the
+    /// stall is bounded by one chunk of real prefill; prompts with
+    /// longer uncovered suffixes go through [`Self::start_chunked`] /
+    /// [`Self::advance_chunked`] instead.
+    fn admit(
+        &mut self,
+        slot: usize,
+        req: GenRequest,
+        mut watch: Stopwatch,
+        lease: Option<KvLeaseOwned>,
+        hit: Option<PrefixValue>,
+    ) {
+        self.admit_seq += 1;
+        let seq = self.admit_seq;
+        let block_tokens = self.paged.as_ref().map(|pk| pk.block_tokens());
+        let server = self.server;
+        let arena = self.arena.as_mut().unwrap();
+        let mut spec = self.spec.as_mut();
+        let mut prefix = self.prefix.as_mut();
+        let replies = &mut self.replies;
+        let engine = &server.engine;
+        let cfg = engine.config();
+        let len = req.prompt.len();
+        if req.max_new_tokens == 0 {
+            let timing = watch.finish(len, 0);
+            respond(replies, ok_response(req.id, Vec::new(), &timing));
+            return;
+        }
+        let tsnap = hit.as_ref().and_then(|v| v.snaps()).and_then(|s| s.first());
+        let trun = hit.as_ref().and_then(|v| v.paged()).map(|e| &e.target);
+        let (state, hidden, col, covered) =
+            match prefill_with_prefix(engine, &req.prompt, tsnap, trun, &server.metrics) {
+                Ok(t) => t,
+                Err(e) => {
+                    respond(replies, error_response(req.id, e));
+                    return;
+                }
+            };
+        // hit accounting at ADOPTION time, not probe time: a hit whose
+        // suffix bucket could not fit fell back cold and must count as a
+        // miss, or the hit-rate gauge stays green while adoptions fail
+        if hit.is_some() {
+            if let Some(px) = prefix.as_deref_mut() {
+                px.resolve(covered);
+            }
+        }
+        let logits = match engine.head(&hidden) {
+            Ok(l) => l,
             Err(e) => {
                 respond(replies, error_response(req.id, e));
                 return;
             }
         };
-    // hit accounting at ADOPTION time, not probe time: a hit whose
-    // suffix bucket could not fit fell back cold and must count as a
-    // miss, or the hit-rate gauge stays green while adoptions fail
-    if hit.is_some() {
-        if let Some(px) = prefix.as_deref_mut() {
-            px.resolve(covered);
+        let mut sampler = Sampler::new(req.params.clone());
+        let first = sampler.sample(logits.at2(0, col));
+        watch.mark_token();
+        let outputs = vec![first];
+        // the prefill token is free and the k-th decode step writes cache
+        // slot len+k-1, so max_ctx - len + 1 tokens fit in the context
+        let effective_max = req
+            .max_new_tokens
+            .min((cfg.max_ctx + 1).saturating_sub(len))
+            .max(1);
+        if Some(first) == server.config.eos || outputs.len() >= effective_max {
+            // finished on the prefill token: never occupies a slot. The
+            // prefill still publishes in plain mode; under speculation no
+            // draft state exists yet, and a target-only entry would break
+            // the pair-lockstep invariant, so spec skips it.
+            if spec.is_none() {
+                if let Some(px) = prefix {
+                    publish_prefix(px, block_tokens, &req.prompt, covered, &state, None);
+                }
+            }
+            let timing = watch.finish(len, outputs.len());
+            let resp = ok_response(req.id, outputs, &timing);
+            server.metrics.record(timing);
+            respond(replies, resp);
+            return;
         }
-    }
-    let logits = match engine.head(&hidden) {
-        Ok(l) => l,
-        Err(e) => {
+        // draft prefill BEFORE any adoption, so a draft failure leaves no
+        // half-adopted arena row behind
+        let mut draft_state: Option<KvState> = None;
+        if let Some(sp) = spec.as_deref() {
+            let dsnap = hit.as_ref().and_then(|v| v.snaps()).and_then(|s| s.get(1));
+            let drun = hit.as_ref().and_then(|v| v.paged()).and_then(|e| e.draft.as_ref());
+            match prefill_with_prefix(&sp.engine, &req.prompt, dsnap, drun, &server.metrics) {
+                Ok((ds, _, _, _)) => draft_state = Some(ds),
+                Err(e) => {
+                    respond(replies, error_response(req.id, e));
+                    return;
+                }
+            }
+        }
+        if let Err(e) = arena.adopt(slot, &state) {
             respond(replies, error_response(req.id, e));
             return;
         }
-    };
-    let mut sampler = Sampler::new(req.params.clone());
-    let first = sampler.sample(logits.at2(0, col));
-    watch.mark_token();
-    let outputs = vec![first];
-    // the prefill token is free and the k-th decode step writes cache
-    // slot len+k-1, so max_ctx - len + 1 tokens fit in the context
-    let effective_max = req
-        .max_new_tokens
-        .min((cfg.max_ctx + 1).saturating_sub(len))
-        .max(1);
-    if Some(first) == server.config.eos || outputs.len() >= effective_max {
-        // finished on the prefill token: never occupies a slot. The
-        // prefill still publishes in plain mode; under speculation no
-        // draft state exists yet, and a target-only entry would break
-        // the pair-lockstep invariant, so spec skips it.
-        if spec.is_none() {
-            if let Some(px) = prefix {
-                publish_prefix_snapshots(px, &req.prompt, covered, &state, None);
-            }
-        }
-        let timing = watch.finish(len, outputs.len());
-        let resp = ok_response(req.id, outputs, &timing);
-        server.metrics.record(timing);
-        respond(replies, resp);
-        return;
-    }
-    // draft prefill BEFORE any adoption, so a draft failure leaves no
-    // half-adopted arena row behind
-    let mut draft_state: Option<KvState> = None;
-    if let Some(sp) = spec.as_deref() {
-        let dsnap = hit.as_deref().and_then(|s| s.get(1));
-        match prefill_with_prefix(&sp.engine, &req.prompt, dsnap) {
-            Ok((ds, _, _, _)) => draft_state = Some(ds),
-            Err(e) => {
+        if let Some(sp) = spec {
+            // lockstep adoption into the SAME slot index
+            let adopted = sp
+                .arena
+                .as_mut()
+                .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
+                .and_then(|da| da.adopt(slot, draft_state.as_ref().unwrap()));
+            if let Err(e) = adopted {
+                arena.release(slot);
                 respond(replies, error_response(req.id, e));
                 return;
             }
         }
-    }
-    if let Err(e) = arena.adopt(slot, &state) {
-        respond(replies, error_response(req.id, e));
-        return;
-    }
-    if let Some(sp) = spec {
-        // lockstep adoption into the SAME slot index
-        let adopted = sp
-            .arena
-            .as_mut()
-            .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
-            .and_then(|da| da.adopt(slot, draft_state.as_ref().unwrap()));
-        if let Err(e) = adopted {
-            arena.release(slot);
-            respond(replies, error_response(req.id, e));
-            return;
+        // graduate the adopted prefix to shared frames: its full blocks
+        // are refcounted cache residents charging this slot ZERO pool
+        // bytes, and only the partial tail keeps a private (CoW) frame
+        if covered > 0 {
+            if let (Some(pk), Some(entry)) =
+                (self.paged.as_mut(), hit.as_ref().and_then(|v| v.paged()))
+            {
+                pk.mark_shared(slot, entry);
+            }
         }
+        if let Some(px) = prefix {
+            publish_prefix(px, block_tokens, &req.prompt, covered, &state, draft_state.as_ref());
+        }
+        server.metrics.note_admission(self.row_used[slot]);
+        self.row_used[slot] = true;
+        self.slots[slot] = Some(ActiveSlot {
+            req,
+            sampler,
+            outputs,
+            watch,
+            next: first,
+            effective_max,
+            seq,
+            _lease: lease,
+        });
     }
-    if let Some(px) = prefix {
-        publish_prefix_snapshots(px, &req.prompt, covered, &state, draft_state.as_ref());
-    }
-    server.metrics.note_admission(row_used[slot]);
-    row_used[slot] = true;
-    slots[slot] = Some(ActiveSlot {
-        req,
-        sampler,
-        outputs,
-        watch,
-        next: first,
-        effective_max,
-        _lease: lease,
-    });
-}
 
-/// Begin a multi-chunk admission (DESIGN.md §Chunked prefill): answer
-/// zero-token requests immediately, otherwise reserve arena row `slot`
-/// (in both arenas under speculation) and return the state machine that
-/// [`advance_chunked`] drives one chunk per iteration. A prefix-cache
-/// hit seeds the machine mid-prompt: the snapshot restores into the
-/// building state and chunking starts at the covered position (the
-/// target and draft adopt atomically — a failed draft restore must not
-/// leave the pair out of lockstep, so both restart cold). Returns None
-/// if the request was answered (or the reservation failed) instead of
-/// entering prefill.
-#[allow(clippy::too_many_arguments)]
-fn start_chunked(
-    server: &Arc<Server>,
-    arena: &mut SlotArena,
-    mut spec: Option<&mut SpecState>,
-    slot: usize,
-    req: GenRequest,
-    watch: Stopwatch,
-    lease: KvLeaseOwned,
-    hit: Option<Arc<Vec<KvSnapshot>>>,
-    prefix: Option<&mut PrefixReuse>,
-    chunk: usize,
-    replies: &mut HashMap<u64, Sender<GenResponse>>,
-) -> Option<PendingPrefill> {
-    let engine = &server.engine;
-    let cfg = engine.config();
-    if req.max_new_tokens == 0 {
-        let timing = watch.finish(req.prompt.len(), 0);
-        respond(replies, ok_response(req.id, Vec::new(), &timing));
-        return None;
-    }
-    if let Err(e) = arena.reserve(slot) {
-        respond(replies, error_response(req.id, e));
-        return None;
-    }
-    if let Some(sp) = spec.as_deref_mut() {
-        let reserved = sp
-            .arena
-            .as_mut()
-            .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
-            .and_then(|da| da.reserve(slot));
-        if let Err(e) = reserved {
-            arena.release(slot);
+    /// Begin a multi-chunk admission (DESIGN.md §Chunked prefill):
+    /// answer zero-token requests immediately, otherwise reserve arena
+    /// row `slot` (in both arenas under speculation) and return the
+    /// state machine that [`Self::advance_chunked`] drives one chunk
+    /// per iteration. A prefix-cache hit seeds the machine mid-prompt —
+    /// a paged block run materializes, a legacy snapshot restores — and
+    /// chunking starts at the covered position (the target and draft
+    /// adopt atomically — a failed draft restore must not leave the
+    /// pair out of lockstep, so both restart cold). Returns None if the
+    /// request was answered (or the reservation failed) instead of
+    /// entering prefill.
+    fn start_chunked(
+        &mut self,
+        slot: usize,
+        req: GenRequest,
+        watch: Stopwatch,
+        lease: Option<KvLeaseOwned>,
+        hit: Option<PrefixValue>,
+    ) -> Option<PendingPrefill> {
+        let chunk = self.chunk;
+        let server = self.server;
+        let arena = self.arena.as_mut().unwrap();
+        let mut spec = self.spec.as_mut();
+        let prefix = self.prefix.as_mut();
+        let replies = &mut self.replies;
+        let engine = &server.engine;
+        let cfg = engine.config();
+        if req.max_new_tokens == 0 {
+            let timing = watch.finish(req.prompt.len(), 0);
+            respond(replies, ok_response(req.id, Vec::new(), &timing));
+            return None;
+        }
+        if let Err(e) = arena.reserve(slot) {
             respond(replies, error_response(req.id, e));
             return None;
         }
-    }
-    let draft_plan = spec.as_deref().map(|sp| &sp.engine.plan);
-    let mut done = 0usize;
-    let mut state = KvState::empty(&engine.plan, cfg, 1, 1);
-    let mut draft_state = draft_plan.map(|dp| KvState::empty(dp, cfg, 1, 1));
-    if let Some(snaps) = hit.as_deref() {
-        let p = snaps[0].pos;
-        // chunk-aligned snapshot positions re-enter the chunk ladder
-        // exactly where a cold machine would stand after p tokens, so
-        // every later chunk (and the ragged tail) stays on the grid
-        let usable = p > 0
-            && p < req.prompt.len()
-            && p % chunk == 0
-            && (draft_plan.is_none() || snaps.len() > 1);
-        if usable {
-            let warm = snaps[0].restore_state(&engine.plan, cfg).ok().and_then(|t| {
-                match draft_plan {
-                    None => Some((t, None)),
-                    Some(dp) => snaps[1].restore_state(dp, cfg).ok().map(|d| (t, Some(d))),
-                }
-            });
-            if let Some((t, d)) = warm {
-                done = p;
-                state = t;
-                if d.is_some() {
-                    draft_state = d;
-                }
+        if let Some(sp) = spec.as_deref_mut() {
+            let reserved = sp
+                .arena
+                .as_mut()
+                .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
+                .and_then(|da| da.reserve(slot));
+            if let Err(e) = reserved {
+                arena.release(slot);
+                respond(replies, error_response(req.id, e));
+                return None;
             }
         }
-    }
-    // same adoption-time accounting as `admit`: an unusable hit (bad
-    // alignment, failed restore) seeded a cold machine = a miss
-    if hit.is_some() {
-        if let Some(px) = prefix {
-            px.resolve(done);
+        let draft_plan = spec.as_deref().map(|sp| &sp.engine.plan);
+        let mut done = 0usize;
+        let mut state = KvState::empty(&engine.plan, cfg, 1, 1);
+        let mut draft_state = draft_plan.map(|dp| KvState::empty(dp, cfg, 1, 1));
+        let mut warm_paged = None;
+        match hit.as_ref() {
+            Some(PrefixValue::Snaps(snaps)) => {
+                let p = snaps[0].pos;
+                // chunk-aligned snapshot positions re-enter the chunk
+                // ladder exactly where a cold machine would stand after
+                // p tokens, so every later chunk (and the ragged tail)
+                // stays on the grid
+                let usable = p > 0
+                    && p < req.prompt.len()
+                    && p % chunk == 0
+                    && (draft_plan.is_none() || snaps.len() > 1);
+                if usable {
+                    let warm = snaps[0].restore_state(&engine.plan, cfg).ok().and_then(|t| {
+                        match draft_plan {
+                            None => Some((t, None)),
+                            Some(dp) => {
+                                snaps[1].restore_state(dp, cfg).ok().map(|d| (t, Some(d)))
+                            }
+                        }
+                    });
+                    if let Some((t, d)) = warm {
+                        server.metrics.note_prefix_expand(engine.plan.kv_layers());
+                        if let (Some(dp), true) = (draft_plan, d.is_some()) {
+                            server.metrics.note_prefix_expand(dp.kv_layers());
+                        }
+                        done = p;
+                        state = t;
+                        if d.is_some() {
+                            draft_state = d;
+                        }
+                    }
+                }
+            }
+            Some(PrefixValue::Paged(entry)) => {
+                let p = entry.tokens;
+                // same chunk-grid rule as snapshots; the run must also
+                // carry a draft side under speculation (pair lockstep)
+                let usable = p > 0
+                    && p < req.prompt.len()
+                    && p % chunk == 0
+                    && (draft_plan.is_none() || entry.draft.is_some());
+                if usable {
+                    let warm = entry.target.materialize(&engine.plan, cfg).ok().and_then(|t| {
+                        match draft_plan {
+                            None => Some((t, None)),
+                            Some(dp) => entry
+                                .draft
+                                .as_ref()
+                                .and_then(|dr| dr.materialize(dp, cfg).ok())
+                                .map(|d| (t, Some(d))),
+                        }
+                    });
+                    if let Some((t, d)) = warm {
+                        done = p;
+                        state = t;
+                        if d.is_some() {
+                            draft_state = d;
+                        }
+                        // remembered so final adoption can graduate the
+                        // covered blocks to shared frames
+                        warm_paged = Some(entry.clone());
+                    }
+                }
+            }
+            None => {}
         }
+        // same adoption-time accounting as `admit`: an unusable hit (bad
+        // alignment, failed restore) seeded a cold machine = a miss
+        if hit.is_some() {
+            if let Some(px) = prefix {
+                px.resolve(done);
+            }
+        }
+        Some(PendingPrefill {
+            state,
+            draft_state,
+            req,
+            watch,
+            lease,
+            slot,
+            done,
+            warm_paged,
+        })
     }
-    Some(PendingPrefill {
-        state,
-        draft_state,
-        req,
-        watch,
-        lease,
-        slot,
-        done,
-    })
-}
 
-/// Run ONE chunk of the pending admission through the target — and, in
-/// lockstep, the draft — engine. On the final chunk: sample the first
-/// token from the chunk's last real row, mark TTFT on the stopwatch
-/// that has been running since submission (the bugfix invariant: N
-/// chunk iterations of queue-adjacent prefill still count into TTFT),
-/// and adopt the built caches into the reserved slot(s). Snapshot
-/// boundaries the chunk crossed publish into the prefix cache as they
-/// happen — the "taken at chunk boundaries" half of insert-on-miss.
-#[allow(clippy::too_many_arguments)]
-fn advance_chunked(
-    server: &Arc<Server>,
-    arena: &mut SlotArena,
-    mut spec: Option<&mut SpecState>,
-    prefix: Option<&mut PrefixReuse>,
-    pending: &mut Option<PendingPrefill>,
-    slots: &mut [Option<ActiveSlot>],
-    row_used: &mut [bool],
-    replies: &mut HashMap<u64, Sender<GenResponse>>,
-    chunk: usize,
-) {
-    let engine = &server.engine;
-    let Some(p) = pending.as_mut() else { return };
-    let len = p.req.prompt.len();
-    let step = chunk.min(len - p.done);
-    let ids = &p.req.prompt[p.done..p.done + step];
-    let timer = Timer::start();
-    let mut run = engine.prefill_chunk(&mut p.state, ids, step);
-    if run.is_ok() {
-        if let Some(sp) = spec.as_mut() {
-            // draft lockstep: the draft cache must cover exactly the
-            // same prefix, or the first draft-and-verify round would
-            // propose from a stale context
-            run = match p.draft_state.as_mut() {
-                Some(ds) => sp.engine.prefill_chunk(ds, ids, step).and(run),
-                None => Err(Error::Serving("draft state missing mid-prefill".into())),
-            };
+    /// Run ONE chunk of the pending admission through the target — and,
+    /// in lockstep, the draft — engine. On the final chunk: sample the
+    /// first token from the chunk's last real row, mark TTFT on the
+    /// stopwatch that has been running since submission (the bugfix
+    /// invariant: N chunk iterations of queue-adjacent prefill still
+    /// count into TTFT), and adopt the built caches into the reserved
+    /// slot(s). Snapshot boundaries the chunk crossed publish into the
+    /// prefix cache as they happen — the "taken at chunk boundaries"
+    /// half of insert-on-miss.
+    fn advance_chunked(&mut self) {
+        let chunk = self.chunk;
+        let block_tokens = self.paged.as_ref().map(|pk| pk.block_tokens());
+        let server = self.server;
+        let engine = &server.engine;
+        let Some(p) = self.pending.as_mut() else { return };
+        let arena = self.arena.as_mut().unwrap();
+        let mut spec = self.spec.as_mut();
+        let len = p.req.prompt.len();
+        let step = chunk.min(len - p.done);
+        let ids = &p.req.prompt[p.done..p.done + step];
+        let timer = Timer::start();
+        let mut run = engine.prefill_chunk(&mut p.state, ids, step);
+        if run.is_ok() {
+            if let Some(sp) = spec.as_mut() {
+                // draft lockstep: the draft cache must cover exactly the
+                // same prefix, or the first draft-and-verify round would
+                // propose from a stale context
+                run = match p.draft_state.as_mut() {
+                    Some(ds) => sp.engine.prefill_chunk(ds, ids, step).and(run),
+                    None => Err(Error::Serving("draft state missing mid-prefill".into())),
+                };
+            }
         }
-    }
-    // every chunk that runs while decode rows are live stalls the whole
-    // group for its duration — the interference gauge chunking bounds
-    server.metrics.note_prefill_chunk(arena.occupancy() > 0, timer.elapsed_s());
-    let hidden = match run {
-        Ok(h) => h,
-        Err(e) => {
-            let p = pending.take().unwrap();
-            release_reservation(arena, spec.as_deref_mut(), p.slot);
-            respond(replies, error_response(p.req.id, e));
-            return;
-        }
-    };
-    p.done += step;
-    if let Some(px) = prefix {
-        let before = p.done - step;
-        publish_prefix_snapshots(px, &p.req.prompt, before, &p.state, p.draft_state.as_ref());
-    }
-    if p.done < len {
-        return;
-    }
-
-    // ---- final chunk: first token, then adoption into the reserved row
-    let p = pending.take().unwrap();
-    // the machine completed its prefill — counted here, not at adoption:
-    // a max-context prompt whose budget is exactly the prefill token
-    // (effective_max 1) still chunked its way in
-    server.metrics.note_chunked_admission();
-    let logits = match engine.head(&hidden) {
-        Ok(l) => l,
-        Err(e) => {
-            release_reservation(arena, spec.as_deref_mut(), p.slot);
-            respond(replies, error_response(p.req.id, e));
-            return;
-        }
-    };
-    let mut watch = p.watch;
-    let mut sampler = Sampler::new(p.req.params.clone());
-    let first = sampler.sample(logits.at2(0, step - 1));
-    watch.mark_token();
-    let outputs = vec![first];
-    let cfg = engine.config();
-    // same budget as whole-prompt admission: the prefill token is free
-    // and the k-th decode write lands at len + k - 1
-    let effective_max = p
-        .req
-        .max_new_tokens
-        .min((cfg.max_ctx + 1).saturating_sub(len))
-        .max(1);
-    if Some(first) == server.config.eos || outputs.len() >= effective_max {
-        // finished on the prefill token: the reserved row never joins
-        release_reservation(arena, spec.as_deref_mut(), p.slot);
-        let timing = watch.finish(len, outputs.len());
-        let resp = ok_response(p.req.id, outputs, &timing);
-        server.metrics.record(timing);
-        respond(replies, resp);
-        return;
-    }
-    if let Err(e) = arena.adopt(p.slot, &p.state) {
-        release_reservation(arena, spec.as_deref_mut(), p.slot);
-        respond(replies, error_response(p.req.id, e));
-        return;
-    }
-    if let Some(sp) = spec.as_mut() {
-        let adopted = match (sp.arena.as_mut(), p.draft_state.as_ref()) {
-            (Some(da), Some(ds)) => da.adopt(p.slot, ds),
-            _ => Err(Error::Serving("draft arena missing at adoption".into())),
+        // every chunk that runs while decode rows are live stalls the
+        // whole group for its duration — the interference gauge
+        // chunking bounds
+        server.metrics.note_prefill_chunk(arena.occupancy() > 0, timer.elapsed_s());
+        let hidden = match run {
+            Ok(h) => h,
+            Err(e) => {
+                let p = self.pending.take().unwrap();
+                release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
+                respond(&mut self.replies, error_response(p.req.id, e));
+                return;
+            }
         };
-        if let Err(e) = adopted {
-            arena.release(p.slot);
-            if let Some(da) = sp.arena.as_mut() {
-                da.release(p.slot);
-            }
-            respond(replies, error_response(p.req.id, e));
+        p.done += step;
+        if let Some(px) = self.prefix.as_mut() {
+            let before = p.done - step;
+            publish_prefix(
+                px,
+                block_tokens,
+                &p.req.prompt,
+                before,
+                &p.state,
+                p.draft_state.as_ref(),
+            );
+        }
+        if p.done < len {
             return;
         }
+
+        // ---- final chunk: first token, then adoption into the
+        // reserved row
+        let p = self.pending.take().unwrap();
+        self.admit_seq += 1;
+        let seq = self.admit_seq;
+        // the machine completed its prefill — counted here, not at
+        // adoption: a max-context prompt whose budget is exactly the
+        // prefill token (effective_max 1) still chunked its way in
+        server.metrics.note_chunked_admission();
+        let logits = match engine.head(&hidden) {
+            Ok(l) => l,
+            Err(e) => {
+                release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
+                respond(&mut self.replies, error_response(p.req.id, e));
+                return;
+            }
+        };
+        let mut watch = p.watch;
+        let mut sampler = Sampler::new(p.req.params.clone());
+        let first = sampler.sample(logits.at2(0, step - 1));
+        watch.mark_token();
+        let outputs = vec![first];
+        let cfg = engine.config();
+        // same budget as whole-prompt admission: the prefill token is
+        // free and the k-th decode write lands at len + k - 1
+        let effective_max = p
+            .req
+            .max_new_tokens
+            .min((cfg.max_ctx + 1).saturating_sub(len))
+            .max(1);
+        if Some(first) == server.config.eos || outputs.len() >= effective_max {
+            // finished on the prefill token: the reserved row never joins
+            release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
+            let timing = watch.finish(len, outputs.len());
+            let resp = ok_response(p.req.id, outputs, &timing);
+            server.metrics.record(timing);
+            respond(&mut self.replies, resp);
+            return;
+        }
+        if let Err(e) = arena.adopt(p.slot, &p.state) {
+            release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
+            respond(&mut self.replies, error_response(p.req.id, e));
+            return;
+        }
+        if let Some(sp) = spec.as_mut() {
+            let adopted = match (sp.arena.as_mut(), p.draft_state.as_ref()) {
+                (Some(da), Some(ds)) => da.adopt(p.slot, ds),
+                _ => Err(Error::Serving("draft arena missing at adoption".into())),
+            };
+            if let Err(e) = adopted {
+                arena.release(p.slot);
+                if let Some(da) = sp.arena.as_mut() {
+                    da.release(p.slot);
+                }
+                if let Some(pk) = self.paged.as_mut() {
+                    pk.release(p.slot);
+                }
+                respond(&mut self.replies, error_response(p.req.id, e));
+                return;
+            }
+        }
+        // graduate the warm-seeded prefix blocks to shared frames (the
+        // chunked twin of `admit`'s post-adoption mark_shared)
+        if let (Some(pk), Some(entry)) = (self.paged.as_mut(), p.warm_paged.as_ref()) {
+            pk.mark_shared(p.slot, entry);
+        }
+        server.metrics.note_admission(self.row_used[p.slot]);
+        self.row_used[p.slot] = true;
+        self.slots[p.slot] = Some(ActiveSlot {
+            req: p.req,
+            sampler,
+            outputs,
+            watch,
+            next: first,
+            effective_max,
+            seq,
+            _lease: p.lease,
+        });
     }
-    server.metrics.note_admission(row_used[p.slot]);
-    row_used[p.slot] = true;
-    slots[p.slot] = Some(ActiveSlot {
-        req: p.req,
-        sampler,
-        outputs,
-        watch,
-        next: first,
-        effective_max,
-        _lease: p.lease,
-    });
 }
 
-/// Return a chunked admission's reserved row(s) to the free pool.
-fn release_reservation(arena: &mut SlotArena, spec: Option<&mut SpecState>, slot: usize) {
+/// Return a chunked admission's reserved row(s) — and, in paged mode,
+/// its attached blocks — to the free pool.
+fn release_reservation(
+    arena: &mut SlotArena,
+    spec: Option<&mut SpecState>,
+    paged: Option<&mut PagedKv>,
+    slot: usize,
+) {
     arena.release(slot);
     if let Some(sp) = spec {
         if let Some(da) = sp.arena.as_mut() {
             da.release(slot);
         }
+    }
+    if let Some(pk) = paged {
+        pk.release(slot);
     }
 }
 
@@ -1089,208 +1688,222 @@ fn context_token(a: &ActiveSlot, pos: usize) -> u32 {
     }
 }
 
-/// One scheduler iteration over the occupied rows. Plain mode commits
-/// exactly one token per row; speculative mode runs gamma batched draft
-/// steps + one width-W verify pass and commits 1..=W per row, rolling
-/// rejected suffixes back in both arenas. Exactness does not depend on
-/// draft quality: every committed token is the row's own sampler applied
-/// to target logits for the committed prefix, so greedy output is
-/// token-identical to plain serving (proposals only decide how far one
-/// iteration gets). Seeded stochastic sampling draws exactly one sample
-/// per committed token in order, but the width-W and width-1
-/// executables agree only to float tolerance, so a draw landing within
-/// ~1e-3 of a cumulative-probability edge can differ from plain mode.
-fn decode_iteration(
-    server: &Arc<Server>,
-    arena: &mut SlotArena,
-    spec: Option<&mut SpecState>,
-    slots: &mut [Option<ActiveSlot>],
-    replies: &mut HashMap<u64, Sender<GenResponse>>,
-) {
-    let engine = &server.engine;
-    // one small copy per iteration: the loop below mutates the arena
-    // (set_pos/release) while walking the occupied set
-    let occ: Vec<usize> = arena.occupied().to_vec();
-    server.metrics.note_iteration(occ.len(), arena.bucket_batch);
+impl<'a> IterationLoop<'a> {
+    /// One scheduler iteration over the occupied rows. Plain mode commits
+    /// exactly one token per row; speculative mode runs gamma batched draft
+    /// steps + one width-W verify pass and commits 1..=W per row, rolling
+    /// rejected suffixes back in both arenas. Exactness does not depend on
+    /// draft quality: every committed token is the row's own sampler applied
+    /// to target logits for the committed prefix, so greedy output is
+    /// token-identical to plain serving (proposals only decide how far one
+    /// iteration gets). Seeded stochastic sampling draws exactly one sample
+    /// per committed token in order, but the width-W and width-1
+    /// executables agree only to float tolerance, so a draw landing within
+    /// ~1e-3 of a cumulative-probability edge can differ from plain mode.
+    fn decode_iteration(&mut self) {
+        let server = self.server;
+        let arena = self.arena.as_mut().unwrap();
+        let spec = self.spec.as_mut();
+        let slots = &mut self.slots;
+        let replies = &mut self.replies;
+        let engine = &server.engine;
+        // one small copy per iteration: the loop below mutates the arena
+        // (set_pos/release) while walking the occupied set
+        let occ: Vec<usize> = arena.occupied().to_vec();
+        server.metrics.note_iteration(occ.len(), arena.bucket_batch);
 
-    // ---- width selection: speculate only when every occupied row has
-    // context room for a full verify (and the draft for its proposals);
-    // otherwise fall back to a plain width-1 iteration
-    let mut draft_engine: Option<&Engine> = None;
-    let mut draft_arena: Option<&mut SlotArena> = None;
-    let mut width = 1usize;
-    if let Some(sp) = spec {
-        let w = sp.width;
-        if let Some(da) = sp.arena.as_mut() {
-            let fits = occ.iter().all(|&s| {
-                arena.pos(s).unwrap() + w <= arena.max_ctx
-                    && da.pos(s).unwrap() + (w - 1) <= da.max_ctx
-            });
-            if fits {
-                width = w;
-            }
-            draft_engine = Some(&sp.engine);
-            draft_arena = Some(da);
-        }
-    }
-    let gamma = width - 1;
-    let n = occ.len();
-
-    // ---- draft phase: gamma batched steps over the draft arena. Each
-    // step feeds, per row, the next committed-context token the draft
-    // has not cached yet (catch-up after a rollback or a full-accept
-    // bonus), or the draft's own last prediction once caught up — only
-    // outputs past the committed context are proposals.
-    let mut fed: Vec<Vec<u32>> = (0..n).map(|_| Vec::with_capacity(gamma)).collect();
-    let mut proposals: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
-    let mut dstart: Vec<usize> = vec![0; n];
-    if gamma > 0 {
-        let dengine = draft_engine.expect("width > 1 implies a draft engine");
-        let da = draft_arena.as_mut().expect("width > 1 implies a draft arena");
-        for (i, &s) in occ.iter().enumerate() {
-            dstart[i] = da.pos(s).unwrap();
-        }
-        let mut last_out: Vec<u32> = vec![0; n];
-        for _step in 0..gamma {
-            let rows: Vec<RowDecode> = occ
-                .iter()
-                .enumerate()
-                .map(|(i, &s)| {
-                    let a = slots[s].as_ref().unwrap();
-                    let d = da.pos(s).unwrap();
-                    let l = a.req.prompt.len() + a.outputs.len();
-                    let tok = if d < l { context_token(a, d) } else { last_out[i] };
-                    fed[i].push(tok);
-                    RowDecode { slot: s, token: tok }
-                })
-                .collect();
-            let logits = match dengine.decode_rows(da, &rows) {
-                Ok(l) => l,
-                Err(e) => {
-                    fail_iteration(arena, Some(&mut **da), &occ, slots, replies, &e);
-                    return;
+        // ---- width selection: speculate only when every occupied row has
+        // context room for a full verify (and the draft for its proposals);
+        // otherwise fall back to a plain width-1 iteration
+        let mut draft_engine: Option<&Engine> = None;
+        let mut draft_arena: Option<&mut SlotArena> = None;
+        let mut width = 1usize;
+        if let Some(sp) = spec {
+            let w = sp.width;
+            if let Some(da) = sp.arena.as_mut() {
+                let fits = occ.iter().all(|&s| {
+                    arena.pos(s).unwrap() + w <= arena.max_ctx
+                        && da.pos(s).unwrap() + (w - 1) <= da.max_ctx
+                });
+                if fits {
+                    width = w;
                 }
-            };
+                draft_engine = Some(&sp.engine);
+                draft_arena = Some(da);
+            }
+        }
+        let gamma = width - 1;
+        let n = occ.len();
+
+        // ---- draft phase: gamma batched steps over the draft arena. Each
+        // step feeds, per row, the next committed-context token the draft
+        // has not cached yet (catch-up after a rollback or a full-accept
+        // bonus), or the draft's own last prediction once caught up — only
+        // outputs past the committed context are proposals.
+        let mut fed: Vec<Vec<u32>> = (0..n).map(|_| Vec::with_capacity(gamma)).collect();
+        let mut proposals: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
+        let mut dstart: Vec<usize> = vec![0; n];
+        if gamma > 0 {
+            let dengine = draft_engine.expect("width > 1 implies a draft engine");
+            let da = draft_arena.as_mut().expect("width > 1 implies a draft arena");
             for (i, &s) in occ.iter().enumerate() {
-                last_out[i] = argmax(logits.at2(i, 0));
-                let a = slots[s].as_ref().unwrap();
-                let l = a.req.prompt.len() + a.outputs.len();
-                // the token just cached sits at da.pos - 1; its successor
-                // prediction is a proposal once the context is consumed
-                if da.pos(s).unwrap() >= l {
-                    proposals[i].push(last_out[i]);
-                }
+                dstart[i] = da.pos(s).unwrap();
             }
-        }
-    }
-
-    // ---- verify phase: one width-W target pass over every row
-    let tstart: Vec<usize> = occ.iter().map(|&s| arena.pos(s).unwrap()).collect();
-    let vrows: Vec<RowSpecDecode> = occ
-        .iter()
-        .enumerate()
-        .map(|(i, &s)| {
-            let a = slots[s].as_ref().unwrap();
-            let mut tokens = Vec::with_capacity(width);
-            tokens.push(a.next);
-            tokens.extend_from_slice(&proposals[i]);
-            // rows short on proposals (draft was catching up) pad with
-            // the last token; fillers only gate continuation, committed
-            // tokens always come from the sampler over true logits
-            while tokens.len() < width {
-                tokens.push(*tokens.last().unwrap());
-            }
-            RowSpecDecode { slot: s, tokens }
-        })
-        .collect();
-    let vl = match engine.decode_rows_spec(arena, &vrows) {
-        Ok(l) => l,
-        Err(e) => {
-            let da = draft_arena.as_mut().map(|x| &mut **x);
-            fail_iteration(arena, da, &occ, slots, replies, &e);
-            return;
-        }
-    };
-
-    // ---- acceptance: commit the longest sampled prefix that agrees
-    // with the verified tokens, then roll both arenas back to it
-    let mut total_committed = 0usize;
-    let mut total_proposed = 0usize;
-    let mut total_accepted = 0usize;
-    for (i, &s) in occ.iter().enumerate() {
-        let (committed, done) = {
-            let a = slots[s].as_mut().unwrap();
-            let mut committed = 0usize;
-            let mut done = false;
-            for j in 0..width {
-                let tok = a.sampler.sample(vl.at2(i, j));
-                a.outputs.push(tok);
-                a.next = tok;
-                committed += 1;
-                if Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max {
-                    done = true;
-                    break;
-                }
-                if j + 1 < width && tok != vrows[i].tokens[j + 1] {
-                    break; // divergence: the rest of the verify is stale
-                }
-            }
-            // one amortized mark for the whole commit: W back-to-back
-            // marks would push near-zero intervals and poison the median
-            // per-token throughput
-            a.watch.mark_tokens(committed);
-            (committed, done)
-        };
-        // rejected suffix: stale cache rows beyond the committed prefix
-        // are masked by pos and overwritten by later writes
-        arena.set_pos(s, tstart[i] + committed);
-        total_committed += committed;
-        total_proposed += proposals[i].len();
-        total_accepted += (committed - 1).min(proposals[i].len());
-        if let Some(da) = draft_arena.as_mut() {
-            if gamma > 0 {
-                // re-anchor the draft on the committed context: keep the
-                // longest fed prefix that matches it (never past the last
-                // committed token, so the next round always re-feeds it)
-                let a = slots[s].as_ref().unwrap();
-                let l_new = a.req.prompt.len() + a.outputs.len();
-                let mut valid = 0usize;
-                for (k, &t) in fed[i].iter().enumerate() {
-                    let p = dstart[i] + k;
-                    if p + 1 < l_new && t == context_token(a, p) {
-                        valid += 1;
-                    } else {
-                        break;
+            let mut last_out: Vec<u32> = vec![0; n];
+            for _step in 0..gamma {
+                let rows: Vec<RowDecode> = occ
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| {
+                        let a = slots[s].as_ref().unwrap();
+                        let d = da.pos(s).unwrap();
+                        let l = a.req.prompt.len() + a.outputs.len();
+                        let tok = if d < l { context_token(a, d) } else { last_out[i] };
+                        fed[i].push(tok);
+                        RowDecode { slot: s, token: tok }
+                    })
+                    .collect();
+                let logits = match dengine.decode_rows(da, &rows) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        fail_iteration(
+                            arena,
+                            Some(&mut **da),
+                            self.paged.as_mut(),
+                            &occ,
+                            slots,
+                            replies,
+                            &e,
+                        );
+                        return;
+                    }
+                };
+                for (i, &s) in occ.iter().enumerate() {
+                    last_out[i] = argmax(logits.at2(i, 0));
+                    let a = slots[s].as_ref().unwrap();
+                    let l = a.req.prompt.len() + a.outputs.len();
+                    // the token just cached sits at da.pos - 1; its successor
+                    // prediction is a proposal once the context is consumed
+                    if da.pos(s).unwrap() >= l {
+                        proposals[i].push(last_out[i]);
                     }
                 }
-                da.set_pos(s, dstart[i] + valid);
             }
         }
-        if done {
-            // leave the batch: free the slot(s) and KV lease without
-            // disturbing the other rows
-            let a = slots[s].take().unwrap();
-            arena.release(s);
+
+        // ---- verify phase: one width-W target pass over every row
+        let tstart: Vec<usize> = occ.iter().map(|&s| arena.pos(s).unwrap()).collect();
+        let vrows: Vec<RowSpecDecode> = occ
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                let a = slots[s].as_ref().unwrap();
+                let mut tokens = Vec::with_capacity(width);
+                tokens.push(a.next);
+                tokens.extend_from_slice(&proposals[i]);
+                // rows short on proposals (draft was catching up) pad with
+                // the last token; fillers only gate continuation, committed
+                // tokens always come from the sampler over true logits
+                while tokens.len() < width {
+                    tokens.push(*tokens.last().unwrap());
+                }
+                RowSpecDecode { slot: s, tokens }
+            })
+            .collect();
+        let vl = match engine.decode_rows_spec(arena, &vrows) {
+            Ok(l) => l,
+            Err(e) => {
+                let da = draft_arena.as_mut().map(|x| &mut **x);
+                fail_iteration(arena, da, self.paged.as_mut(), &occ, slots, replies, &e);
+                return;
+            }
+        };
+
+        // ---- acceptance: commit the longest sampled prefix that agrees
+        // with the verified tokens, then roll both arenas back to it
+        let mut total_committed = 0usize;
+        let mut total_proposed = 0usize;
+        let mut total_accepted = 0usize;
+        for (i, &s) in occ.iter().enumerate() {
+            let (committed, done) = {
+                let a = slots[s].as_mut().unwrap();
+                let mut committed = 0usize;
+                let mut done = false;
+                for j in 0..width {
+                    let tok = a.sampler.sample(vl.at2(i, j));
+                    a.outputs.push(tok);
+                    a.next = tok;
+                    committed += 1;
+                    if Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max {
+                        done = true;
+                        break;
+                    }
+                    if j + 1 < width && tok != vrows[i].tokens[j + 1] {
+                        break; // divergence: the rest of the verify is stale
+                    }
+                }
+                // one amortized mark for the whole commit: W back-to-back
+                // marks would push near-zero intervals and poison the median
+                // per-token throughput
+                a.watch.mark_tokens(committed);
+                (committed, done)
+            };
+            // rejected suffix: stale cache rows beyond the committed prefix
+            // are masked by pos and overwritten by later writes
+            arena.set_pos(s, tstart[i] + committed);
+            total_committed += committed;
+            total_proposed += proposals[i].len();
+            total_accepted += (committed - 1).min(proposals[i].len());
             if let Some(da) = draft_arena.as_mut() {
-                da.release(s);
+                if gamma > 0 {
+                    // re-anchor the draft on the committed context: keep the
+                    // longest fed prefix that matches it (never past the last
+                    // committed token, so the next round always re-feeds it)
+                    let a = slots[s].as_ref().unwrap();
+                    let l_new = a.req.prompt.len() + a.outputs.len();
+                    let mut valid = 0usize;
+                    for (k, &t) in fed[i].iter().enumerate() {
+                        let p = dstart[i] + k;
+                        if p + 1 < l_new && t == context_token(a, p) {
+                            valid += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    da.set_pos(s, dstart[i] + valid);
+                }
             }
-            let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
-            let resp = ok_response(a.req.id, a.outputs, &timing);
-            server.metrics.record(timing);
-            respond(replies, resp);
+            if done {
+                // leave the batch: free the slot(s), paged blocks, and KV
+                // lease without disturbing the other rows
+                let a = slots[s].take().unwrap();
+                arena.release(s);
+                if let Some(da) = draft_arena.as_mut() {
+                    da.release(s);
+                }
+                if let Some(pk) = self.paged.as_mut() {
+                    pk.release(s);
+                }
+                let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
+                let resp = ok_response(a.req.id, a.outputs, &timing);
+                server.metrics.record(timing);
+                respond(replies, resp);
+            }
         }
-    }
-    server.metrics.note_committed(total_committed);
-    if width > 1 {
-        server.metrics.note_spec_round(total_proposed, total_accepted);
+        server.metrics.note_committed(total_committed);
+        if width > 1 {
+            server.metrics.note_spec_round(total_proposed, total_accepted);
+        }
     }
 }
 
 /// A failed iteration poisons the whole group: every resident request
-/// gets an answer and its slot back (in both arenas under speculation).
+/// gets an answer and its slot(s) — and, in paged mode, its blocks —
+/// back.
 fn fail_iteration(
     arena: &mut SlotArena,
     draft: Option<&mut SlotArena>,
+    paged: Option<&mut PagedKv>,
     occ: &[usize],
     slots: &mut [Option<ActiveSlot>],
     replies: &mut HashMap<u64, Sender<GenResponse>>,
@@ -1305,6 +1918,11 @@ fn fail_iteration(
     if let Some(da) = draft {
         for &s in occ {
             da.release(s);
+        }
+    }
+    if let Some(pk) = paged {
+        for &s in occ {
+            pk.release(s);
         }
     }
 }

@@ -1048,6 +1048,247 @@ fn prefix_cache_disabled_reports_zero_gauges() {
     handle.shutdown();
 }
 
+// ---------------------------------------------------------------------------
+// paged KV (ISSUE 6: block-pool cache, zero-copy prefix sharing,
+// copy-on-write, preemptive scheduling)
+
+#[test]
+fn paged_preemption_round_trip_matches_plain_continuous() {
+    // acceptance: under a 4-block budget, three short admissions fill
+    // the pool and the first request to cross a 16-token block boundary
+    // must evict the youngest resident (LIFO). The victim's row caches
+    // snapshot to host, it re-admits when blocks free up, and every
+    // token stream still matches an unconstrained plain server exactly.
+    let engine = Arc::new(engine("main"));
+    let plain = Arc::new(Server::new(engine.clone(), ServerConfig::default()));
+    let want = churn_workload(&plain);
+    for r in &want {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let bt = 16usize;
+    let t_bpb = nbl::kvcache::kv_bytes(engine.config(), engine.plan.kv_layers(), 1, bt, 4);
+    let cfg = ServerConfig {
+        kv_block_tokens: bt,
+        kv_capacity_bytes: 4 * t_bpb,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let got = churn_workload(&server);
+    for (g, w) in got.iter().zip(&want) {
+        assert!(g.error.is_none(), "{:?}", g.error);
+        assert_eq!(
+            g.tokens, w.tokens,
+            "request {} diverged across preempt/re-admit",
+            w.id
+        );
+    }
+    let g = metrics.gauges();
+    assert!(
+        g.preemptions >= 1,
+        "a 4-block budget under 12-request churn must force eviction: {g:?}"
+    );
+    // every preemption re-admits exactly once (all 12 requests finished)
+    assert_eq!(
+        g.admissions,
+        12 + g.preemptions,
+        "admissions must count initial admits plus resumes: {g:?}"
+    );
+    assert!(g.blocks_capacity > 0 && g.paged_block_tokens == bt, "{g:?}");
+}
+
+#[test]
+fn paged_preemption_round_trip_matches_plain_spec() {
+    // the same round trip under speculative serving: preemption must
+    // snapshot BOTH arenas' rows between verify rounds and resume them
+    // in lockstep, with outputs still equal to the plain server's.
+    let engine = Arc::new(engine("main"));
+    let plain = Arc::new(Server::new(engine.clone(), ServerConfig::default()));
+    let want = churn_workload(&plain);
+    for r in &want {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(2);
+    let bt = 16usize;
+    let t_bpb = nbl::kvcache::kv_bytes(engine.config(), engine.plan.kv_layers(), 1, bt, 4);
+    let d_bpb = nbl::kvcache::kv_bytes(engine.config(), draft_plan.kv_layers(), 1, bt, 4);
+    let cfg = ServerConfig {
+        kv_block_tokens: bt,
+        kv_capacity_bytes: 4 * t_bpb + 4 * d_bpb,
+        spec: Some(SpecConfig { draft_plan, width: 4 }),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let got = churn_workload(&server);
+    for (g, w) in got.iter().zip(&want) {
+        assert!(g.error.is_none(), "{:?}", g.error);
+        assert_eq!(
+            g.tokens, w.tokens,
+            "[spec] request {} diverged across preempt/re-admit",
+            w.id
+        );
+    }
+    let g = metrics.gauges();
+    assert!(g.spec_rounds > 0, "speculation must still run: {g:?}");
+    assert!(
+        g.preemptions >= 1,
+        "[spec] the block budget must force eviction: {g:?}"
+    );
+    assert_eq!(g.admissions, 12 + g.preemptions, "{g:?}");
+}
+
+#[test]
+fn paged_admission_outlives_contiguous_under_one_budget() {
+    // tentpole acceptance: under an IDENTICAL KV byte budget (two
+    // contiguous slots' worth), block-granular admission must hold
+    // strictly more concurrent rows than worst-case contiguous
+    // admission — short requests charge one block, not max_ctx.
+    let engine = Arc::new(engine("main"));
+    let per_slot = nbl::kvcache::slot_bytes(engine.config(), &engine.plan);
+    let budget = 2 * per_slot;
+    let run = |kv_block_tokens: usize| {
+        let cfg = ServerConfig {
+            kv_capacity_bytes: budget,
+            kv_block_tokens,
+            ..ServerConfig::default()
+        };
+        let server = Arc::new(Server::new(engine.clone(), cfg));
+        let metrics = server.metrics.clone();
+        let handle = server.clone().spawn();
+        let rxs: Vec<_> = (0..8u64)
+            .map(|i| handle.submit(req(i, "the small robot ", 8)))
+            .collect();
+        let out: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        handle.shutdown();
+        (out, metrics.gauges())
+    };
+    let (cont, cg) = run(0);
+    let (paged, pg) = run(32);
+    for (c, p) in cont.iter().zip(&paged) {
+        assert!(c.error.is_none(), "{:?}", c.error);
+        assert!(p.error.is_none(), "{:?}", p.error);
+        assert_eq!(p.tokens, c.tokens, "paged admission changed outputs");
+    }
+    assert!(cg.peak_rows <= 2, "the budget holds exactly two contiguous slots: {cg:?}");
+    assert!(
+        pg.peak_rows > cg.peak_rows,
+        "paged admission must hold strictly more concurrent rows under the \
+         same budget: paged {} vs contiguous {}",
+        pg.peak_rows,
+        cg.peak_rows
+    );
+    assert!(pg.blocks_capacity > 0 && pg.paged_block_tokens == 32, "{pg:?}");
+    assert_eq!(pg.preemptions, 0, "one-block rows must coexist without eviction: {pg:?}");
+}
+
+#[test]
+fn paged_prefix_adoption_is_zero_copy() {
+    // tentpole acceptance: a warm admission under the block pool
+    // splices cache-resident blocks into its table — ZERO per-layer
+    // snapshot expansion copies (the gauge that counts them stays 0),
+    // exactly one splice, copy-on-write only for the partial tail
+    // block — and still decodes token-identically to cold serving.
+    // Also the ISSUE 6 small fix: re-publishing a boundary whose block
+    // run is already resident must skip (and gauge the skip).
+    let engine = Arc::new(engine("main"));
+    let solo_server = Server::new(engine.clone(), ServerConfig::default());
+    let a = req(1, &long_text(100), 8);
+    let b = req(2, &format!("{}zq marble atrium run", long_text(64)), 8);
+    let c = req(3, &long_text(64), 4);
+    let solo: Vec<_> = [&a, &b, &c].iter().map(|r| solo_server.generate_one(r)).collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+    let cfg = ServerConfig {
+        prefix_cache_bytes: 32 << 20,
+        // chunking off so the snap stays EXACTLY 64 (chunking would
+        // align it up to the chunk size and move the boundary)
+        prefill_chunk: 0,
+        prefix_snap: 64,
+        // 48-token blocks: the adopted 64-token run is one full shared
+        // block plus a 16-token partial tail that must copy-on-write
+        kv_block_tokens: 48,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    // strictly sequential: A publishes the 64-token boundary, B adopts
+    // it as a block splice, C (EXACTLY the boundary, below the probe
+    // cap) prefills cold and its publication must hit the resident run
+    for (r, s) in [(a, &solo[0]), (b, &solo[1]), (c, &solo[2])] {
+        let got = handle.submit(r).recv().unwrap();
+        assert!(got.error.is_none(), "{:?}", got.error);
+        assert_eq!(got.tokens, s.tokens, "paged-warm serving diverged from cold");
+    }
+    handle.shutdown();
+    let g = metrics.gauges();
+    assert_eq!(g.prefix_inserts, 1, "only A publishes a new run: {g:?}");
+    assert_eq!(g.prefix_hits, 1, "B must adopt the published 64-token run: {g:?}");
+    assert_eq!(g.paged_splices, 1, "{g:?}");
+    assert_eq!(g.paged_splice_tokens, 64, "{g:?}");
+    assert_eq!(g.cow_copies, 1, "the 16-token tail copies on write, nothing else: {g:?}");
+    assert_eq!(
+        g.prefix_expand_copies, 0,
+        "a paged splice must never expand host snapshots: {g:?}"
+    );
+    assert!(
+        g.prefix_publish_skips >= 1,
+        "C re-publishing the resident 64-run must skip: {g:?}"
+    );
+}
+
+#[test]
+fn paged_block_accounting_returns_to_zero_after_churn() {
+    // invariant: the pool's reserved bytes always equal the private
+    // frames the tables hold, through arbitrary attach/grow/release/
+    // preempt churn, and return to exactly zero when every table drops
+    check(
+        0xB10C5,
+        30,
+        |g| {
+            let n = g.size(80);
+            (0..n)
+                .map(|_| (g.usize_in(0, 3), g.usize_in(0, 7), g.usize_in(1, 64)))
+                .collect::<Vec<(usize, usize, usize)>>()
+        },
+        |ops| {
+            const BPB: usize = 100;
+            let pool = Arc::new(KvPool::new(16 * BPB));
+            let mut pk = nbl::kvcache::paged::PagedKv::new(8, BPB, 0, pool.clone(), 8);
+            for &(kind, slot, tokens) in ops {
+                match kind {
+                    0 => {
+                        let _ = pk.attach(slot, tokens, None);
+                    }
+                    1 => {
+                        pk.grow(slot, tokens, None);
+                    }
+                    2 => pk.release(slot),
+                    _ => pk.preempt(slot),
+                }
+                let s = pk.stats();
+                if pool.in_use() != s.used_blocks * BPB {
+                    return Err(format!(
+                        "accounting drift: pool holds {} bytes, tables hold {} private blocks",
+                        pool.in_use(),
+                        s.used_blocks
+                    ));
+                }
+            }
+            for slot in 0..8 {
+                pk.release(slot);
+            }
+            if pool.in_use() != 0 {
+                return Err(format!("leaked {} bytes after churn", pool.in_use()));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn kv_pool_accounting_returns_to_zero_after_churn() {
     // invariant: reserved bytes always equal the sum of live leases, and
