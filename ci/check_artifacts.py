@@ -20,6 +20,7 @@ Run from the repo root:  python ci/check_artifacts.py [--manifest-required]
 import argparse
 import json
 import os
+import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -100,12 +101,71 @@ def check_manifest(required):
     return errors
 
 
+def rust_stats_keys():
+    """The /stats endpoint's JSON keys, parsed straight from
+    rust/src/server/api.rs `stats_to_json`.
+
+    This is a deliberately independent second parser: nbl-lint extracts
+    the same key set with its own Rust scanner (`--dump-gauges`), and CI
+    diffs the two. If either scanner rots against the source (a
+    refactor moves the function, the key literal style changes), the
+    sets diverge and the gauge gate fails loudly instead of silently
+    checking nothing.
+    """
+    path = os.path.join(REPO, "rust", "src", "server", "api.rs")
+    keys, depth, body_started, in_fn = [], 0, False, False
+    with open(path) as f:
+        for line in f:
+            if not in_fn:
+                if re.search(r"\bfn\s+stats_to_json\b", line):
+                    in_fn = True
+                else:
+                    continue
+            keys += re.findall(r'\(\s*"([A-Za-z0-9_.]+)"\s*,', line)
+            depth += line.count("{") - line.count("}")
+            if "{" in line:
+                body_started = True
+            if body_started and depth <= 0:
+                break
+    return sorted(set(keys))
+
+
+def check_gauges(dump_path):
+    """Diff nbl-lint's gauge dump against this script's own parse."""
+    with open(dump_path) as f:
+        dump = json.load(f)
+    if dump.get("schema") != "nbl-gauges/v1":
+        return [f"unexpected gauge dump schema: {dump.get('schema')!r}"]
+    lint_keys = sorted(set(dump.get("stats_keys", [])))
+    py_keys = rust_stats_keys()
+    errors = []
+    if not lint_keys:
+        errors.append("nbl-lint gauge dump lists no stats keys")
+    if not py_keys:
+        errors.append("python parse of stats_to_json found no keys")
+    if lint_keys != py_keys:
+        only_lint = sorted(set(lint_keys) - set(py_keys))
+        only_py = sorted(set(py_keys) - set(lint_keys))
+        errors.append(
+            "gauge scanners disagree on stats_to_json keys "
+            f"(nbl-lint only: {only_lint}; python only: {only_py}) — "
+            "one of the two parsers has rotted against api.rs"
+        )
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--manifest-required",
         action="store_true",
         help="fail if artifacts/manifest.json has not been built",
+    )
+    ap.add_argument(
+        "--gauges",
+        metavar="DUMP_JSON",
+        help="cross-check an `nbl-lint --dump-gauges` capture against an "
+        "independent parse of stats_to_json",
     )
     args = ap.parse_args()
 
@@ -120,6 +180,8 @@ def main():
             print(f"note: {msg}")
     else:
         errors.extend(manifest_errors)
+    if args.gauges:
+        errors.extend(check_gauges(args.gauges))
 
     if errors:
         print(f"ARTIFACT STALENESS: {len(errors)} problem(s)")

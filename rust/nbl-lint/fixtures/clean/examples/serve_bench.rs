@@ -1,0 +1,6 @@
+//! Fixture emitter: writes "tok_s", matching the floored baseline key.
+
+fn main() {
+    let tok_s = 1.0;
+    emit_metric("tok_s", tok_s);
+}

@@ -1,0 +1,13 @@
+//! Fixture: sanctioned unsafe — `#[allow(unsafe_code)]` with a SAFETY
+//! note, the shape the `unsafe` pass must accept.
+
+pub struct Engine {
+    handle: *mut u8,
+}
+
+// SAFETY: the handle is owned exclusively by Engine and the runtime
+// serializes every call through a single worker thread.
+#[allow(unsafe_code)]
+unsafe impl Send for Engine {}
+#[allow(unsafe_code)]
+unsafe impl Sync for Engine {}

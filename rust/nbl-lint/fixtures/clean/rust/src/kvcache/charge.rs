@@ -1,0 +1,17 @@
+//! Fixture: settled KvPool charges the `charge` pass must accept — a
+//! `settles(charge)` mark on the line that takes ownership of the
+//! debit, and an RAII lease wrapping the charge immediately.
+
+impl Paged {
+    pub fn attach(&mut self, slot: usize, bytes: usize) -> Result<(), Error> {
+        self.pool.try_take(bytes)?;
+        // nbl-lint: settles(charge): the table entry owns the debit; release() refunds it
+        self.tables.push((slot, bytes));
+        Ok(())
+    }
+
+    pub fn reserve(&self, bytes: usize) -> Result<KvLease<'_>, Error> {
+        self.pool.try_take(bytes)?;
+        Ok(KvLease { pool: &self.pool, bytes })
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture: a stats endpoint covering every gauge (directly or via the
+//! derived key named by the field's gauge(...) mark).
+
+pub fn stats_to_json(s: &Summary) -> String {
+    let pairs = [
+        ("requests", s.requests),
+        ("iterations", s.iterations),
+        ("kv_in_use_bytes", s.kv_in_use),
+    ];
+    render(&pairs)
+}

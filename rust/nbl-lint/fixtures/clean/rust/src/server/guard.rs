@@ -1,0 +1,17 @@
+//! Fixture: the guard is scoped out before the channel send, so the
+//! `guard` pass must accept this.
+
+pub struct Publisher {
+    inner: std::sync::Mutex<Stats>,
+    tx: std::sync::mpsc::Sender<Snapshot>,
+}
+
+impl Publisher {
+    pub fn publish(&self) {
+        let snapshot = {
+            let stats = self.inner.lock();
+            stats.snapshot()
+        };
+        self.tx.send(snapshot);
+    }
+}

@@ -1,0 +1,23 @@
+//! Fixture: hot-path code the `panic` pass must accept — errors are
+//! returned, indexing goes through .get_mut, and the one provable
+//! unwrap is annotated.
+
+pub struct Worker {
+    slots: Vec<u32>,
+}
+
+impl Worker {
+    pub fn step(&mut self, slot: usize) -> Result<u32, String> {
+        let v = self.pending().ok_or_else(|| "no pending value".to_string())?;
+        if let Some(cell) = self.slots.get_mut(slot) {
+            *cell = v;
+        }
+        // nbl-lint: allow(panic): slots is non-empty whenever pending() is Some
+        let first = self.slots.first().unwrap();
+        Ok(*first)
+    }
+
+    fn pending(&self) -> Option<u32> {
+        self.slots.first().copied()
+    }
+}

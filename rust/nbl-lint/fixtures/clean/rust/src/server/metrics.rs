@@ -1,0 +1,9 @@
+//! Fixture: every field either matches a stats key exactly or names
+//! its derived stats key with a gauge(...) mark.
+
+pub struct SchedulerGauges {
+    pub requests: u64,
+    pub iterations: u64,
+    // nbl-lint: gauge(kv_in_use_bytes)
+    pub kv_in_use: u64,
+}

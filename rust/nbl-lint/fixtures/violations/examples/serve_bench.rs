@@ -1,0 +1,7 @@
+//! Fixture emitter: writes "tok_s" only, so a floored
+//! `serve_bench_fixture.missing_metric` baseline key is a dead gate.
+
+fn main() {
+    let tok_s = 1.0;
+    emit_metric("tok_s", tok_s);
+}

@@ -1,0 +1,8 @@
+//! Fixture: bare `unsafe` with no `#[allow(unsafe_code)]` escape.
+
+pub struct Engine {
+    handle: *mut u8,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}

@@ -1,0 +1,16 @@
+//! Fixture: KvPool charges the `charge` pass must flag — an early `?`
+//! exit while the debit is live, and a charge never settled at all.
+
+impl Paged {
+    pub fn attach(&mut self, slot: usize, bytes: usize) -> Result<(), Error> {
+        self.pool.try_take(bytes)?;
+        self.ensure_frames(slot)?;
+        self.tables.push((slot, bytes));
+        Ok(())
+    }
+
+    pub fn grow(&mut self, bytes: usize) -> Result<(), Error> {
+        self.pool.try_take(bytes)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,9 @@
+//! Fixture: a stats endpoint missing a gauge the metrics struct carries.
+
+pub fn stats_to_json(s: &Summary) -> String {
+    let pairs = [
+        ("requests", s.requests),
+        ("iterations", s.iterations),
+    ];
+    render(&pairs)
+}

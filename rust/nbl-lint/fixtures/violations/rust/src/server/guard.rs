@@ -1,0 +1,14 @@
+//! Fixture: a Mutex guard held across a channel send — the deadlock
+//! shape the `guard` pass exists for.
+
+pub struct Publisher {
+    inner: std::sync::Mutex<Stats>,
+    tx: std::sync::mpsc::Sender<Snapshot>,
+}
+
+impl Publisher {
+    pub fn publish(&self) {
+        let stats = self.inner.lock();
+        self.tx.send(stats.snapshot());
+    }
+}

@@ -1,0 +1,21 @@
+//! Fixture: every construct the `panic` pass must flag on the hot path.
+
+pub struct Worker {
+    slots: Vec<u32>,
+}
+
+impl Worker {
+    pub fn step(&mut self, slot: usize) -> u32 {
+        let v = self.pending().unwrap();
+        let w = self.pending().expect("always set");
+        if v == 0 {
+            panic!("zero step");
+        }
+        self.slots[slot] = w;
+        v
+    }
+
+    fn pending(&self) -> Option<u32> {
+        self.slots.first().copied()
+    }
+}

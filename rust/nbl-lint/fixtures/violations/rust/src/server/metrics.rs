@@ -1,0 +1,7 @@
+//! Fixture: `orphan_gauge` never surfaces on the stats endpoint and
+//! has no `gauge(...)` alias mark.
+
+pub struct SchedulerGauges {
+    pub requests: u64,
+    pub orphan_gauge: u64,
+}

@@ -1,0 +1,274 @@
+//! Pass 4: gauge coherence. The stats endpoint (`stats_to_json` in
+//! rust/src/server/api.rs) is the canonical metric-name registry; this
+//! pass checks
+//!
+//!   A. every `SchedulerGauges` field in rust/src/server/metrics.rs
+//!      surfaces there under its own name, or carries a
+//!      `// nbl-lint: gauge(alias, ...)` mark naming the derived keys
+//!      it feeds (e.g. `kv_in_use` -> `kv_in_use_bytes`);
+//!   B. every floored key in ci/bench_baseline.json names a metric the
+//!      mapped nbl-bench emitter actually writes, so a renamed emitter
+//!      string can no longer silently turn a CI floor into a no-op
+//!      (the PR 5/6 string-drift bug class).
+//!
+//! `nbl-lint --dump-gauges` prints the canonical registry as JSON for
+//! ci/check_artifacts.py to cross-check with an independent parser.
+
+use crate::lexer::ScannedFile;
+use crate::passes::Finding;
+use std::path::Path;
+
+const API: &str = "rust/src/server/api.rs";
+const METRICS: &str = "rust/src/server/metrics.rs";
+const BASELINE: &str = "ci/bench_baseline.json";
+
+/// Map a bench name from a dotted baseline key to its emitter source.
+fn emitter_for(bench: &str) -> Option<&'static str> {
+    if bench.starts_with("serve_bench") {
+        Some("examples/serve_bench.rs")
+    } else if bench == "bench_kv" {
+        Some("rust/benches/bench_kv.rs")
+    } else {
+        None
+    }
+}
+
+/// Keys emitted by `stats_to_json`, in source order.
+pub fn stats_keys(root: &Path) -> Option<Vec<String>> {
+    let src = std::fs::read_to_string(root.join(API)).ok()?;
+    let f = ScannedFile::scan(API, &src);
+    let span = f
+        .fn_spans()
+        .into_iter()
+        .find(|&(s, _)| f.masked[s].contains("stats_to_json"))?;
+    let mut keys = Vec::new();
+    for raw in &f.raw[span.0..=span.1] {
+        let mut rest = raw.as_str();
+        while let Some(p) = rest.find("(\"") {
+            rest = &rest[p + 2..];
+            if let Some(q) = rest.find('"') {
+                if rest[q + 1..].starts_with(',') {
+                    keys.push(rest[..q].to_string());
+                }
+                rest = &rest[q + 1..];
+            } else {
+                break;
+            }
+        }
+    }
+    Some(keys)
+}
+
+pub fn dump_gauges_json(root: &Path) -> Option<String> {
+    let keys = stats_keys(root)?;
+    let quoted: Vec<String> = keys.iter().map(|k| format!("\"{k}\"")).collect();
+    Some(format!(
+        "{{\"schema\": \"nbl-gauges/v1\", \"stats_keys\": [{}]}}",
+        quoted.join(", ")
+    ))
+}
+
+/// `SchedulerGauges` struct fields with their 0-based line and any
+/// `gauge(...)` alias marks.
+fn gauge_fields(f: &ScannedFile) -> Vec<(String, usize, Vec<String>)> {
+    let Some(start) = f
+        .masked
+        .iter()
+        .position(|l| l.contains("struct SchedulerGauges"))
+    else {
+        return Vec::new();
+    };
+    let mut fields = Vec::new();
+    let mut depth = 0i32;
+    let mut opened = false;
+    for i in start..f.masked.len() {
+        let l = &f.masked[i];
+        if opened && depth == 1 {
+            let t = l.trim();
+            let decl = t.strip_prefix("pub ").unwrap_or(t);
+            if let Some(colon) = decl.find(':') {
+                let name = decl[..colon].trim();
+                if !name.is_empty()
+                    && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_')
+                {
+                    fields.push((name.to_string(), i, f.marks[i].gauge_aliases.clone()));
+                }
+            }
+        }
+        for c in l.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    fields
+}
+
+/// Floored (baseline > 0) dotted keys from ci/bench_baseline.json with
+/// their 0-based line numbers. Line-oriented parse of our own format:
+/// `"bench.metric": {"baseline": N, ...}`.
+fn floored_baseline_keys(text: &str) -> Vec<(String, usize)> {
+    let mut keys = Vec::new();
+    let mut in_metrics = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.contains("\"metrics\"") {
+            in_metrics = true;
+            continue;
+        }
+        if !in_metrics {
+            continue;
+        }
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix('"') else { continue };
+        let Some(q) = rest.find('"') else { continue };
+        let key = &rest[..q];
+        let Some(bp) = rest.find("\"baseline\":") else { continue };
+        let num = rest[bp + "\"baseline\":".len()..]
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+            .collect::<String>();
+        let floored = num.parse::<f64>().map(|v| v > 0.0).unwrap_or(false);
+        if floored {
+            keys.push((key.to_string(), i));
+        }
+    }
+    keys
+}
+
+pub fn gauge_pass(root: &Path, out: &mut Vec<Finding>) {
+    let Some(keys) = stats_keys(root) else {
+        // no api.rs (bare fixture tree) -> nothing to check against
+        return;
+    };
+    if keys.is_empty() {
+        out.push(Finding {
+            file: API.to_string(),
+            line: 1,
+            pass: "gauge",
+            msg: "stats_to_json found but no (\"key\", ...) entries parsed; \
+                  lint scanner and endpoint have drifted"
+                .to_string(),
+        });
+        return;
+    }
+
+    // A: every gauge field surfaces on the stats endpoint
+    if let Ok(src) = std::fs::read_to_string(root.join(METRICS)) {
+        let f = ScannedFile::scan(METRICS, &src);
+        for (name, line0, aliases) in gauge_fields(&f) {
+            if keys.iter().any(|k| k == &name) {
+                continue;
+            }
+            if !aliases.is_empty() {
+                if let Some(bad) = aliases.iter().find(|a| !keys.contains(a)) {
+                    out.push(Finding {
+                        file: METRICS.to_string(),
+                        line: line0 + 1,
+                        pass: "gauge",
+                        msg: format!(
+                            "gauge alias `{bad}` for field `{name}` is not a \
+                             stats endpoint key"
+                        ),
+                    });
+                }
+                continue;
+            }
+            out.push(Finding {
+                file: METRICS.to_string(),
+                line: line0 + 1,
+                pass: "gauge",
+                msg: format!(
+                    "SchedulerGauges field `{name}` never surfaces on the stats \
+                     endpoint; export it in stats_to_json or mark the derived \
+                     keys with `nbl-lint: gauge(key, ...)`"
+                ),
+            });
+        }
+    }
+
+    // B: floored baseline keys name metrics their emitter still writes
+    let Ok(baseline) = std::fs::read_to_string(root.join(BASELINE)) else {
+        return;
+    };
+    for (dotted, line0) in floored_baseline_keys(&baseline) {
+        let (bench, _, metric) = {
+            let mut it = dotted.splitn(2, '.');
+            let b = it.next().unwrap_or("");
+            let m = it.next().unwrap_or("");
+            (b, ".", m)
+        };
+        let Some(emitter) = emitter_for(bench) else {
+            out.push(Finding {
+                file: BASELINE.to_string(),
+                line: line0 + 1,
+                pass: "gauge",
+                msg: format!(
+                    "floored key `{dotted}` has no known emitter mapping; teach \
+                     nbl-lint (emitter_for) about this bench"
+                ),
+            });
+            continue;
+        };
+        if metric.is_empty() {
+            out.push(Finding {
+                file: BASELINE.to_string(),
+                line: line0 + 1,
+                pass: "gauge",
+                msg: format!("floored key `{dotted}` is not of the form bench.metric"),
+            });
+            continue;
+        }
+        let Ok(src) = std::fs::read_to_string(root.join(emitter)) else {
+            out.push(Finding {
+                file: BASELINE.to_string(),
+                line: line0 + 1,
+                pass: "gauge",
+                msg: format!("emitter {emitter} for floored key `{dotted}` is missing"),
+            });
+            continue;
+        };
+        if !src.contains(&format!("\"{metric}\"")) {
+            out.push(Finding {
+                file: BASELINE.to_string(),
+                line: line0 + 1,
+                pass: "gauge",
+                msg: format!(
+                    "floored key `{dotted}`: emitter {emitter} never writes \
+                     \"{metric}\" — the CI floor is a silent no-op"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floored_keys_skip_record_only() {
+        let text = "{\n \"metrics\": {\n  \"a.x\": {\"baseline\": 10.0, \"min_ratio\": 0.8},\n  \"a.y\": {\"baseline\": 0.0, \"min_ratio\": 0.8}\n }\n}\n";
+        let keys = floored_baseline_keys(text);
+        assert_eq!(keys.len(), 1);
+        assert_eq!(keys[0].0, "a.x");
+    }
+
+    #[test]
+    fn gauge_fields_pick_up_aliases() {
+        let src = "pub struct SchedulerGauges {\n    pub iterations: u64,\n    // nbl-lint: gauge(kv_in_use_bytes)\n    pub kv_in_use: u64,\n}\n";
+        let f = ScannedFile::scan("m.rs", src);
+        let fields = gauge_fields(&f);
+        assert_eq!(fields.len(), 2);
+        assert_eq!(fields[1].0, "kv_in_use");
+        assert_eq!(fields[1].2, vec!["kv_in_use_bytes".to_string()]);
+    }
+}

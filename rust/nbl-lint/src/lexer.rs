@@ -1,0 +1,445 @@
+//! A small Rust source scanner: masks strings, char literals and
+//! comments so the passes can pattern-match on code without tripping on
+//! doc text, collects `nbl-lint:` control comments, and marks
+//! `#[cfg(test)]` regions.
+//!
+//! This is NOT a parser (syn is not available offline — DESIGN.md §3);
+//! the passes are lexical by design, and ci/check_artifacts.py
+//! cross-checks the gauge extraction against an independent Python
+//! parse so scanner rot fails CI instead of silently passing.
+
+use std::collections::HashSet;
+
+/// Control comments understood by the passes:
+///   // nbl-lint: allow(panic): reason          (this or next line)
+///   // nbl-lint: settles(charge): reason       (this or next line)
+///   // nbl-lint: gauge(key_a, key_b)           (field alias, next line)
+#[derive(Debug, Default, Clone)]
+pub struct LineMarks {
+    pub allows: HashSet<String>,
+    pub settles: bool,
+    pub gauge_aliases: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ScannedFile {
+    /// Path as reported in findings (relative to the scan root).
+    pub path: String,
+    /// Raw source lines (1-indexed via `line + 1`).
+    pub raw: Vec<String>,
+    /// Source with strings/chars/comments blanked, line by line.
+    pub masked: Vec<String>,
+    /// Effective control marks per line (annotations apply to their own
+    /// line when it holds code, otherwise to the following line).
+    pub marks: Vec<LineMarks>,
+    /// True for lines inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+}
+
+impl ScannedFile {
+    pub fn scan(path: &str, src: &str) -> ScannedFile {
+        let raw: Vec<String> = src.lines().map(|l| l.to_string()).collect();
+        let (masked_text, comments) = mask(src);
+        let masked: Vec<String> = masked_text.lines().map(|l| l.to_string()).collect();
+        let n = raw.len();
+        let mut marks = vec![LineMarks::default(); n];
+        for (line, body) in comments {
+            let Some(m) = parse_mark(&body) else { continue };
+            // trailing comment -> same line; standalone comment -> next
+            let target = if line < n && !masked[line].trim().is_empty() {
+                line
+            } else {
+                line + 1
+            };
+            if target < n {
+                marks[target].allows.extend(m.allows);
+                marks[target].settles |= m.settles;
+                marks[target].gauge_aliases.extend(m.gauge_aliases);
+            }
+        }
+        let in_test = test_regions(&masked);
+        ScannedFile { path: path.to_string(), raw, masked, marks, in_test }
+    }
+
+    pub fn allowed(&self, line: usize, pass: &str) -> bool {
+        self.marks.get(line).is_some_and(|m| m.allows.contains(pass))
+    }
+
+    /// Line spans (start..=end, 0-indexed) of non-test `fn` bodies.
+    pub fn fn_spans(&self) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        let mut i = 0usize;
+        while i < self.masked.len() {
+            if self.in_test[i] || !has_fn_keyword(&self.masked[i]) {
+                i += 1;
+                continue;
+            }
+            // find the opening brace (same line or a later one), then
+            // the matching close; trait-decl `fn ...;` has none
+            let mut depth = 0i32;
+            let mut opened = false;
+            let mut end = i;
+            'outer: for (j, l) in self.masked.iter().enumerate().skip(i) {
+                for c in l.chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        ';' if !opened => break 'outer,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    end = j;
+                    break;
+                }
+                end = j;
+            }
+            if opened {
+                spans.push((i, end));
+                // continue scanning INSIDE the span too? nested fns are
+                // rare; skipping keeps one finding per outer function
+                i = end + 1;
+            } else {
+                i += 1;
+            }
+        }
+        spans
+    }
+}
+
+fn has_fn_keyword(line: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find("fn ") {
+        let at = from + p;
+        let boundary = at == 0
+            || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        if boundary {
+            return true;
+        }
+        from = at + 3;
+    }
+    false
+}
+
+fn parse_mark(comment: &str) -> Option<LineMarks> {
+    let at = comment.find("nbl-lint:")?;
+    let rest = comment[at + "nbl-lint:".len()..].trim_start();
+    let mut m = LineMarks::default();
+    if let Some(args) = rest.strip_prefix("allow(").and_then(paren_args) {
+        m.allows = args.into_iter().collect();
+    } else if rest.starts_with("settles(") {
+        m.settles = true;
+    } else if let Some(args) = rest.strip_prefix("gauge(").and_then(paren_args) {
+        m.gauge_aliases = args;
+    } else {
+        return None;
+    }
+    Some(m)
+}
+
+fn paren_args(after_open: &str) -> Option<Vec<String>> {
+    let close = after_open.find(')')?;
+    Some(
+        after_open[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    )
+}
+
+/// Blank out comments, strings and char literals, returning the masked
+/// text plus each line comment's body (for `nbl-lint:` marks).
+fn mask(src: &str) -> (String, Vec<(usize, String)>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    let push_masked = |out: &mut String, c: char| {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    };
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            out.push('\n');
+            line += 1;
+            i += 1;
+        } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < chars.len() && chars[i] != '\n' {
+                push_masked(&mut out, chars[i]);
+                i += 1;
+            }
+            comments.push((line, chars[start..i].iter().collect()));
+        } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1i32;
+            push_masked(&mut out, chars[i]);
+            push_masked(&mut out, chars[i + 1]);
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    push_masked(&mut out, chars[i]);
+                    push_masked(&mut out, chars[i + 1]);
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    push_masked(&mut out, chars[i]);
+                    push_masked(&mut out, chars[i + 1]);
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    push_masked(&mut out, chars[i]);
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = mask_string(&chars, i, &mut out, &mut line);
+        } else if (c == 'r' || c == 'b') && is_raw_or_byte_string(&chars, i) {
+            // r"..", r#".."#, b"..", br".." — skip prefix then the body
+            let mut j = i;
+            while j < chars.len() && (chars[j] == 'r' || chars[j] == 'b') {
+                push_masked(&mut out, chars[j]);
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                push_masked(&mut out, '#');
+                j += 1;
+            }
+            // opening quote
+            push_masked(&mut out, '"');
+            j += 1;
+            if hashes == 0 && chars[i] == 'b' && chars.get(i + 1) != Some(&'"')
+                && chars.get(i + 1) != Some(&'r')
+            {
+                i = j; // defensive; is_raw_or_byte_string should prevent
+                continue;
+            }
+            loop {
+                match chars.get(j) {
+                    None => break,
+                    Some('"') => {
+                        let mut k = 0usize;
+                        while k < hashes && chars.get(j + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            push_masked(&mut out, '"');
+                            for _ in 0..hashes {
+                                push_masked(&mut out, '#');
+                            }
+                            j += 1 + hashes;
+                            break;
+                        }
+                        push_masked(&mut out, '"');
+                        j += 1;
+                    }
+                    Some('\\') if hashes == 0 => {
+                        // only cooked byte strings escape; raw never
+                        push_masked(&mut out, '\\');
+                        j += 1;
+                        if let Some(&e) = chars.get(j) {
+                            if e == '\n' {
+                                line += 1;
+                            }
+                            push_masked(&mut out, e);
+                            j += 1;
+                        }
+                    }
+                    Some(&ch) => {
+                        if ch == '\n' {
+                            line += 1;
+                        }
+                        push_masked(&mut out, ch);
+                        j += 1;
+                    }
+                }
+            }
+            i = j;
+        } else if c == '\'' && is_char_literal(&chars, i) {
+            push_masked(&mut out, '\'');
+            i += 1;
+            if chars.get(i) == Some(&'\\') {
+                push_masked(&mut out, '\\');
+                i += 1;
+            }
+            while i < chars.len() && chars[i] != '\'' {
+                push_masked(&mut out, chars[i]);
+                i += 1;
+            }
+            if i < chars.len() {
+                push_masked(&mut out, '\'');
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    (out, comments)
+}
+
+fn is_raw_or_byte_string(chars: &[char], i: usize) -> bool {
+    // r" r# b" br" rb — any (r|b)+ then optional #s then a quote, with
+    // the previous char not part of an identifier (so `for_bench"` etc.
+    // never matches)
+    if i > 0 {
+        let p = chars[i - 1];
+        if p.is_alphanumeric() || p == '_' {
+            return false;
+        }
+    }
+    let mut j = i;
+    let mut prefix = 0usize;
+    while j < chars.len() && (chars[j] == 'r' || chars[j] == 'b') && prefix < 2 {
+        j += 1;
+        prefix += 1;
+    }
+    let has_r = chars[i..j].contains(&'r');
+    while chars.get(j) == Some(&'#') {
+        if !has_r {
+            return false;
+        }
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    // 'x' or '\n' etc.; a lone 'a (lifetime) has no closing quote in
+    // the next two characters
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+fn mask_string(chars: &[char], mut i: usize, out: &mut String, line: &mut usize) -> usize {
+    out.push(' '); // opening quote
+    i += 1;
+    while i < chars.len() {
+        match chars[i] {
+            '"' => {
+                out.push(' ');
+                return i + 1;
+            }
+            '\\' => {
+                out.push(' ');
+                i += 1;
+                if i < chars.len() {
+                    if chars[i] == '\n' {
+                        *line += 1;
+                        out.push('\n');
+                    } else {
+                        out.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+            '\n' => {
+                *line += 1;
+                out.push('\n');
+                i += 1;
+            }
+            _ => {
+                out.push(' ');
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (the attribute
+/// line through the close of the item's brace block).
+fn test_regions(masked: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; masked.len()];
+    let mut i = 0usize;
+    while i < masked.len() {
+        if !masked[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut opened = false;
+        let mut end = i;
+        for (j, l) in masked.iter().enumerate().skip(i) {
+            for c in l.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            end = j;
+            if opened && depth <= 0 {
+                break;
+            }
+        }
+        for t in in_test.iter_mut().take(end + 1).skip(i) {
+            *t = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_strings_and_comments() {
+        let src = "let a = \"unwrap() inside\"; // unwrap() in comment\nlet b = a.unwrap();\n";
+        let f = ScannedFile::scan("x.rs", src);
+        assert!(!f.masked[0].contains("unwrap"));
+        assert!(f.masked[1].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn masks_raw_strings_and_chars() {
+        let src = "let s = r#\"panic!(\"x\")\"#;\nlet c = '\\'';\nlet l: &'static str = \"y\";\n";
+        let f = ScannedFile::scan("x.rs", src);
+        assert!(!f.masked[0].contains("panic!"));
+        assert!(f.masked[2].contains("&'static str"));
+    }
+
+    #[test]
+    fn allow_marks_attach_to_code_lines() {
+        let src = "// nbl-lint: allow(panic): provable\nlet a = x.unwrap();\nlet b = y.unwrap(); // nbl-lint: allow(panic): also fine\n";
+        let f = ScannedFile::scan("x.rs", src);
+        assert!(f.allowed(1, "panic"));
+        assert!(f.allowed(2, "panic"));
+        assert!(!f.allowed(0, "panic"));
+    }
+
+    #[test]
+    fn test_regions_cover_mod_tests() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn live2() {}\n";
+        let f = ScannedFile::scan("x.rs", src);
+        assert!(!f.in_test[0]);
+        assert!(f.in_test[1] && f.in_test[2] && f.in_test[3] && f.in_test[4]);
+        assert!(!f.in_test[5]);
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies() {
+        let src = "fn a() {\n    body();\n}\nstruct S;\nfn b() { one_liner(); }\n";
+        let f = ScannedFile::scan("x.rs", src);
+        let spans = f.fn_spans();
+        assert_eq!(spans, vec![(0, 2), (4, 4)]);
+    }
+}

@@ -1,0 +1,187 @@
+//! nbl-lint — repo-specific invariant lints for the serving stack.
+//!
+//! Run from the repo root (see DESIGN.md §Static analysis):
+//!
+//!   cargo run --manifest-path rust/nbl-lint/Cargo.toml -- --root .
+//!   cargo run --manifest-path rust/nbl-lint/Cargo.toml -- --root . --dump-gauges
+//!
+//! Passes:
+//!   panic   hot-path panic audit over server/ executor/ kvcache/
+//!   charge  KvPool charge/refund pairing (try_take vs give_back/lease)
+//!   guard   no Mutex/RwLock guard live across blocking calls
+//!   gauge   MetricsHub <-> stats endpoint <-> bench emitter coherence
+//!   unsafe  unsafe_code allowlist over all of rust/src
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage/IO error.
+
+mod gauges;
+mod lexer;
+mod passes;
+
+use lexer::ScannedFile;
+use passes::Finding;
+use std::path::{Path, PathBuf};
+
+/// Hot-path scope for the panic/charge/guard passes.
+const HOT_DIRS: &[&str] = &["rust/src/server", "rust/src/executor", "rust/src/kvcache"];
+/// unsafe_code allowlist scope.
+const UNSAFE_DIR: &str = "rust/src";
+
+fn rs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            out.extend(rs_files(&p));
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    out
+}
+
+fn scan(root: &Path, path: &Path) -> Option<ScannedFile> {
+    let src = std::fs::read_to_string(path).ok()?;
+    let rel = path.strip_prefix(root).unwrap_or(path).display().to_string();
+    Some(ScannedFile::scan(&rel, &src))
+}
+
+pub fn run_all(root: &Path) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for d in HOT_DIRS {
+        for p in rs_files(&root.join(d)) {
+            let Some(f) = scan(root, &p) else { continue };
+            passes::panic_pass(&f, &mut out);
+            passes::charge_pass(&f, &mut out);
+            passes::guard_pass(&f, &mut out);
+        }
+    }
+    for p in rs_files(&root.join(UNSAFE_DIR)) {
+        let Some(f) = scan(root, &p) else { continue };
+        passes::unsafe_pass(&f, &mut out);
+    }
+    gauges::gauge_pass(root, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+fn main() {
+    let mut root = PathBuf::from(".");
+    let mut dump_gauges = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(r) => root = PathBuf::from(r),
+                None => {
+                    eprintln!("nbl-lint: --root needs a path");
+                    std::process::exit(2);
+                }
+            },
+            "--dump-gauges" => dump_gauges = true,
+            "--help" | "-h" => {
+                println!("usage: nbl-lint [--root <repo>] [--dump-gauges]");
+                return;
+            }
+            other => {
+                eprintln!("nbl-lint: unknown argument `{other}`");
+                std::process::exit(2);
+            }
+        }
+    }
+    if dump_gauges {
+        match gauges::dump_gauges_json(&root) {
+            Some(json) => println!("{json}"),
+            None => {
+                eprintln!(
+                    "nbl-lint: could not parse stats_to_json keys under {}",
+                    root.display()
+                );
+                std::process::exit(2);
+            }
+        }
+        return;
+    }
+    let findings = run_all(&root);
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.pass, f.msg);
+    }
+    if findings.is_empty() {
+        println!("nbl-lint: clean");
+    } else {
+        println!("nbl-lint: {} finding(s)", findings.len());
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(which: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(which)
+    }
+
+    fn by_pass<'a>(findings: &'a [Finding], pass: &str) -> Vec<&'a Finding> {
+        findings.iter().filter(|f| f.pass == pass).collect()
+    }
+
+    #[test]
+    fn violations_tree_trips_every_pass() {
+        let findings = run_all(&fixture("violations"));
+        for pass in ["panic", "charge", "guard", "gauge", "unsafe"] {
+            assert!(
+                !by_pass(&findings, pass).is_empty(),
+                "pass `{pass}` caught nothing in fixtures/violations; all: {findings:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn violations_tree_details() {
+        let findings = run_all(&fixture("violations"));
+        // panic: unwrap + expect + panic! + dynamic self-indexing
+        assert!(by_pass(&findings, "panic").len() >= 4, "{findings:?}");
+        assert!(findings
+            .iter()
+            .any(|f| f.pass == "panic" && f.file.ends_with("hot_path.rs")));
+        // charge: one early-? exit, one never-settled
+        let charges = by_pass(&findings, "charge");
+        assert_eq!(charges.len(), 2, "{charges:?}");
+        // guard: send under a live guard
+        assert!(findings
+            .iter()
+            .any(|f| f.pass == "guard" && f.file.ends_with("guard.rs")));
+        // gauge: orphan field + dead baseline floor
+        let gauges = by_pass(&findings, "gauge");
+        assert!(
+            gauges.iter().any(|f| f.file.ends_with("metrics.rs")),
+            "{gauges:?}"
+        );
+        assert!(
+            gauges.iter().any(|f| f.file.ends_with("bench_baseline.json")),
+            "{gauges:?}"
+        );
+        // unsafe: bare unsafe impl
+        assert!(findings
+            .iter()
+            .any(|f| f.pass == "unsafe" && f.file.ends_with("ffi.rs")));
+    }
+
+    #[test]
+    fn clean_tree_passes() {
+        let findings = run_all(&fixture("clean"));
+        assert!(findings.is_empty(), "expected clean, got: {findings:?}");
+    }
+
+    #[test]
+    fn dump_gauges_reads_fixture_registry() {
+        let json = gauges::dump_gauges_json(&fixture("clean")).expect("clean api.rs parses");
+        assert!(json.contains("\"nbl-gauges/v1\""), "{json}");
+        assert!(json.contains("\"requests\""), "{json}");
+    }
+}

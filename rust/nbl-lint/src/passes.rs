@@ -1,0 +1,368 @@
+//! The lexical passes over scanned files. Rule catalog and escape
+//! hatches are documented in DESIGN.md §Static analysis.
+
+use crate::lexer::ScannedFile;
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub pass: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    fn new(f: &ScannedFile, line0: usize, pass: &'static str, msg: String) -> Finding {
+        Finding { file: f.path.clone(), line: line0 + 1, pass, msg }
+    }
+}
+
+/// Pass 1: hot-path panic audit. In `server/`, `executor/`, `kvcache/`
+/// non-test code, flag panicking constructs and self-field indexing
+/// with a non-literal index. Escape: `// nbl-lint: allow(panic): why`.
+pub fn panic_pass(f: &ScannedFile, out: &mut Vec<Finding>) {
+    const TOKENS: &[(&str, &str)] = &[
+        (".unwrap()", "unwrap() on the hot path"),
+        (".expect(", "expect() on the hot path"),
+        ("panic!", "panic! on the hot path"),
+        ("unreachable!", "unreachable! on the hot path"),
+        ("todo!", "todo! on the hot path"),
+        ("unimplemented!", "unimplemented! on the hot path"),
+    ];
+    for (i, line) in f.masked.iter().enumerate() {
+        if f.in_test[i] || f.allowed(i, "panic") {
+            continue;
+        }
+        for (tok, what) in TOKENS {
+            if line.contains(tok) {
+                out.push(Finding::new(
+                    f,
+                    i,
+                    "panic",
+                    format!("{what}; return an Error or annotate `nbl-lint: allow(panic)`"),
+                ));
+                break;
+            }
+        }
+        if let Some(idx) = self_index_expr(line) {
+            out.push(Finding::new(
+                f,
+                i,
+                "panic",
+                format!(
+                    "self-field indexing `[{idx}]` can panic; use .get()/.get_mut() \
+                     or annotate `nbl-lint: allow(panic)`"
+                ),
+            ));
+        }
+    }
+}
+
+/// Detect `self.<field...>[expr]` with a non-numeric index on one line.
+fn self_index_expr(line: &str) -> Option<String> {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find("self.") {
+        let at = from + p;
+        let mut j = at + "self.".len();
+        while j < bytes.len()
+            && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_' || bytes[j] == b'.')
+        {
+            j += 1;
+        }
+        while j < bytes.len() && bytes[j] == b' ' {
+            j += 1;
+        }
+        if j < bytes.len() && bytes[j] == b'[' {
+            // find the matching close on this line
+            let mut depth = 1i32;
+            let mut k = j + 1;
+            while k < bytes.len() && depth > 0 {
+                match bytes[k] {
+                    b'[' => depth += 1,
+                    b']' => depth -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+            if depth == 0 {
+                let inner = line[j + 1..k - 1].trim();
+                let literal = !inner.is_empty() && inner.bytes().all(|b| b.is_ascii_digit());
+                // `self.x[..]` full-range slicing and literal indexes
+                // into fixed arrays can't drift with request state
+                if !literal && inner != ".." && !inner.is_empty() {
+                    return Some(inner.to_string());
+                }
+            }
+        }
+        from = at + "self.".len();
+    }
+    None
+}
+
+/// Pass 2: charge/refund pairing. A `KvPool::try_take` charge must be
+/// settled — handed to a refund path (`give_back`), wrapped in an RAII
+/// lease (`KvLease`/`KvLeaseOwned`), or explicitly marked with
+/// `// nbl-lint: settles(charge): why` at the line that takes
+/// ownership of the debit — before any `?` / `return Err` exit.
+/// A same-line `?` on the charge itself is fine: `try_take` only
+/// debits on success, so the failure exit carries no charge.
+pub fn charge_pass(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (start, end) in f.fn_spans() {
+        for c in start..=end {
+            if f.in_test[c] || !f.masked[c].contains(".try_take(") {
+                continue;
+            }
+            if f.allowed(c, "charge") {
+                continue;
+            }
+            if is_settle(f, c) {
+                continue;
+            }
+            let mut settled = false;
+            for j in c + 1..=end {
+                if is_settle(f, j) {
+                    settled = true;
+                    break;
+                }
+                let l = &f.masked[j];
+                if l.contains('?') || l.contains("return Err") {
+                    out.push(Finding::new(
+                        f,
+                        j,
+                        "charge",
+                        format!(
+                            "early exit while the KvPool charge from line {} is \
+                             unsettled; refund via give_back/lease or move the \
+                             exit before the charge",
+                            c + 1
+                        ),
+                    ));
+                    settled = true; // one finding per charge
+                    break;
+                }
+            }
+            if !settled {
+                out.push(Finding::new(
+                    f,
+                    c,
+                    "charge",
+                    "KvPool charge is never settled in this function; wrap it in a \
+                     lease or annotate the owning line with `nbl-lint: settles(charge)`"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+fn is_settle(f: &ScannedFile, line0: usize) -> bool {
+    let l = &f.masked[line0];
+    f.marks[line0].settles
+        || l.contains("give_back(")
+        || l.contains("KvLease")
+        || l.contains("KvLeaseOwned")
+}
+
+const BLOCKING_TOKENS: &[&str] = &[
+    ".send(",
+    ".recv(",
+    "recv_timeout(",
+    "read_line(",
+    "write_all(",
+    "write_fmt(",
+    ".flush(",
+    ".accept(",
+    ".decode_rows",
+    ".prefill(",
+    ".prefill_chunk(",
+    ".prefill_suffix(",
+    ".join(",
+    "sleep(",
+];
+
+const LOCK_TOKENS: &[&str] = &[".lock()", ".read()", ".write()", "lock_unpoisoned("];
+
+/// Pass 3: no Mutex/RwLock guard live across a blocking call (channel
+/// send/recv, TCP I/O, device decode/prefill, joins, sleeps) — the
+/// deadlock shape a multi-replica dispatcher would hit first.
+pub fn guard_pass(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (start, end) in f.fn_spans() {
+        let mut depth = 0i32;
+        // (birth depth) of each live guard binding
+        let mut guards: Vec<i32> = Vec::new();
+        for i in start..=end {
+            let l = &f.masked[i];
+            let opens: i32 = l.matches('{').count() as i32;
+            let closes: i32 = l.matches('}').count() as i32;
+            let is_lock = LOCK_TOKENS.iter().any(|t| l.contains(t));
+            let blocking = BLOCKING_TOKENS.iter().find(|t| l.contains(**t));
+            if !f.in_test[i] && !f.allowed(i, "guard") {
+                if let Some(tok) = blocking {
+                    if !guards.is_empty() || is_lock {
+                        out.push(Finding::new(
+                            f,
+                            i,
+                            "guard",
+                            format!(
+                                "lock guard held across blocking call `{}`; drop the \
+                                 guard (narrow scope / clone out) before blocking",
+                                tok.trim_start_matches('.').trim_end_matches('(')
+                            ),
+                        ));
+                    }
+                }
+            }
+            if l.contains("drop(") {
+                guards.clear();
+            }
+            if is_lock && l.contains("let ") && blocking.is_none() {
+                guards.push(depth + opens.min(1));
+            }
+            depth += opens - closes;
+            guards.retain(|&birth| depth >= birth);
+        }
+    }
+}
+
+/// Pass 5 (satellite b): `unsafe` is denied crate-wide; each retained
+/// impl must carry `#[allow(unsafe_code)]` with a SAFETY note.
+pub fn unsafe_pass(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (i, line) in f.masked.iter().enumerate() {
+        if f.in_test[i] || !has_word(line, "unsafe") {
+            continue;
+        }
+        let sanctioned = line.contains("#[allow(unsafe_code)]")
+            || (i > 0 && f.masked[i - 1].contains("#[allow(unsafe_code)]"))
+            || line.contains("#![deny(unsafe_code)]")
+            || line.contains("unsafe_code");
+        if !sanctioned {
+            out.push(Finding::new(
+                f,
+                i,
+                "unsafe",
+                "unsafe outside the allowlist; add #[allow(unsafe_code)] with a \
+                 SAFETY comment or remove the unsafe block"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let endb = at + word.len();
+        let left_ok =
+            at == 0 || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        let right_ok = endb >= bytes.len()
+            || !(bytes[endb].is_ascii_alphanumeric() || bytes[endb] == b'_');
+        if left_ok && right_ok {
+            return true;
+        }
+        from = endb;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::ScannedFile;
+
+    fn run(pass: fn(&ScannedFile, &mut Vec<Finding>), src: &str) -> Vec<Finding> {
+        let f = ScannedFile::scan("t.rs", src);
+        let mut out = Vec::new();
+        pass(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn panic_flags_unwrap_not_unwrap_or() {
+        let v = run(panic_pass, "fn a() { x.unwrap(); y.unwrap_or(0); }\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn panic_flags_self_indexing_with_dynamic_index() {
+        let v = run(panic_pass, "fn a(&mut self) { self.slots[slot].pos = 0; }\n");
+        assert_eq!(v.len(), 1);
+        let v = run(panic_pass, "fn a(&self) { let x = self.lut[3]; }\n");
+        assert!(v.is_empty(), "literal index is fine: {v:?}");
+    }
+
+    #[test]
+    fn panic_respects_allow() {
+        let v = run(
+            panic_pass,
+            "fn a() {\n    // nbl-lint: allow(panic): invariant\n    x.unwrap();\n}\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn charge_flags_question_mark_before_settle() {
+        let src = "fn a(&mut self) -> Result<(), E> {\n    self.pool.try_take(n)?;\n    self.other()?;\n    self.tables.give_back(n);\n    Ok(())\n}\n";
+        let v = run(charge_pass, src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn charge_ok_when_lease_wraps_immediately() {
+        let src = "fn a(&self) -> Result<KvLease, E> {\n    self.try_take(n)?;\n    Ok(KvLease { pool: self, bytes: n })\n}\n";
+        let v = run(charge_pass, src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn charge_ok_with_settles_mark() {
+        let src = "fn a(&mut self) -> Result<(), E> {\n    self.pool.try_take(n)?;\n    // nbl-lint: settles(charge): table owns the debit\n    self.install(n)?;\n    Ok(())\n}\n";
+        let v = run(charge_pass, src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn charge_flags_never_settled() {
+        let src = "fn a(&mut self) -> Result<(), E> {\n    self.pool.try_take(n)?;\n    Ok(())\n}\n";
+        let v = run(charge_pass, src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn guard_flags_send_under_live_guard() {
+        let src = "fn a(&self) {\n    let g = self.state.lock();\n    self.tx.send(g.x);\n}\n";
+        let v = run(guard_pass, src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn guard_dies_with_scope() {
+        let src = "fn a(&self) {\n    {\n        let g = self.state.lock();\n        use_it(&g);\n    }\n    self.tx.send(1);\n}\n";
+        let v = run(guard_pass, src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn guard_flags_same_line_lock_and_block() {
+        let v = run(guard_pass, "fn a(&self) { self.tx.send(self.m.lock().x); }\n");
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn unsafe_requires_allow_attr() {
+        let v = run(unsafe_pass, "unsafe impl Send for X {}\n");
+        assert_eq!(v.len(), 1);
+        let v = run(
+            unsafe_pass,
+            "#[allow(unsafe_code)] // SAFETY: handle is owned\nunsafe impl Send for X {}\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

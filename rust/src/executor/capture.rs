@@ -23,11 +23,15 @@ impl<'a> CaptureSource<'a> {
         CaptureSource { engine, tokens, n_seqs, seq_len }
     }
 
-    /// Deterministic window starts covering the stream.
+    /// Deterministic window starts covering the stream. A token stream
+    /// shorter than `seq_len` yields a short window; the shape checks
+    /// downstream turn that into a calibration error instead of a panic.
     fn window(&self, i: usize) -> &'a [u32] {
         let span = self.tokens.len().saturating_sub(self.seq_len + 1).max(1);
-        let start = (i * 2654435761usize) % span; // Fibonacci hashing stride
-        &self.tokens[start..start + self.seq_len]
+        let start = ((i * 2654435761usize) % span).min(self.tokens.len());
+        let end = (start + self.seq_len).min(self.tokens.len());
+        // nbl-lint: allow(panic): start <= end <= tokens.len() by the clamps above
+        &self.tokens[start..end]
     }
 }
 

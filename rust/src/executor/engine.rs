@@ -64,9 +64,14 @@ pub struct Engine {
     w_head: HeldBuffer,
 }
 
-// Literal members are plain host buffers on the CPU backend; the runtime
-// serializes PJRT access internally.
+// SAFETY: literal members are plain host buffers on the CPU backend and
+// the runtime serializes PJRT access internally, so sharing an Engine
+// across threads cannot race device state.
+#[allow(unsafe_code)]
 unsafe impl Send for Engine {}
+// SAFETY: see the Send impl above — all interior mutability lives
+// behind the runtime's own synchronization.
+#[allow(unsafe_code)]
 unsafe impl Sync for Engine {}
 
 impl Engine {
@@ -229,10 +234,9 @@ impl Engine {
                     let [y, k, v]: [xla::Literal; 3] = out
                         .try_into()
                         .map_err(|_| Error::Xla("attn_prefill arity".into()))?;
-                    if let Some(cb) = capture.as_deref_mut() {
-                        let x_t = x_in.as_ref().unwrap();
+                    if let (Some(cb), Some(x_t)) = (capture.as_deref_mut(), x_in.as_ref()) {
                         let y_t = tensor_from_lit(&y)?;
-                        let (xr, yr) = rows_delta(x_t, &y_t, batch, len, d);
+                        let (xr, yr) = rows_delta(x_t, &y_t, batch, len, d)?;
                         cb(li, &xr, &yr)?;
                     }
                     let caches = self.runtime.run(&init_op, &[&k, &v])?;
@@ -243,7 +247,9 @@ impl Engine {
                     x = y;
                 }
                 BlockOp::Linear(_) => {
-                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let (w, b) = lits.linear.as_ref().ok_or_else(|| {
+                        Error::Config("Linear plan block without folded weights".into())
+                    })?;
                     let out = self.runtime.run_mixed(
                         &lin_op,
                         &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
@@ -412,7 +418,9 @@ impl Engine {
                     x = y;
                 }
                 BlockOp::Linear(_) => {
-                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let (w, b) = lits.linear.as_ref().ok_or_else(|| {
+                        Error::Config("Linear plan block without folded weights".into())
+                    })?;
                     let out = self.runtime.run_mixed(
                         &lin_op,
                         &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
@@ -554,7 +562,9 @@ impl Engine {
                     x = y;
                 }
                 BlockOp::Linear(_) => {
-                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let (w, b) = lits.linear.as_ref().ok_or_else(|| {
+                        Error::Config("Linear plan block without folded weights".into())
+                    })?;
                     let out = self.runtime.run_mixed(
                         &lin_op,
                         &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
@@ -725,7 +735,9 @@ impl Engine {
             self.decode_rows_fallback(arena, rows, width)?
         };
         for r in rows {
-            let p = arena.pos(r.slot).unwrap();
+            let p = arena
+                .pos(r.slot)
+                .ok_or_else(|| Error::Serving(format!("slot {} is not occupied", r.slot)))?;
             arena.set_pos(r.slot, p + width);
         }
         Ok(logits)
@@ -746,7 +758,10 @@ impl Engine {
         let mut pos = vec![0i32; bb];
         for r in rows {
             tokens[r.slot * sw..r.slot * sw + width].copy_from_slice(&r.tokens);
-            pos[r.slot] = arena.pos(r.slot).unwrap() as i32;
+            pos[r.slot] = arena
+                .pos(r.slot)
+                .ok_or_else(|| Error::Serving(format!("slot {} is not occupied", r.slot)))?
+                as i32;
         }
         let x0 = self.weights.embed(&tokens, bb, sw)?;
         let mut x = lit_from_tensor(&x0)?;
@@ -788,7 +803,9 @@ impl Engine {
                     x = y;
                 }
                 BlockOp::Linear(_) => {
-                    let (w, b) = lits.linear.as_ref().unwrap();
+                    let (w, b) = lits.linear.as_ref().ok_or_else(|| {
+                        Error::Config("Linear plan block without folded weights".into())
+                    })?;
                     let out = self.runtime.run_mixed(
                         &lin_op,
                         &[ArgRef::Lit(&x), ArgRef::Buf(w), ArgRef::Buf(b)],
@@ -839,7 +856,9 @@ impl Engine {
         for r in rows {
             // shared row-transfer protocol (kvcache): slice the slot out
             // as a batch-1 state, decode it solo, write it back
-            let pos = arena.pos(r.slot).unwrap();
+            let pos = arena
+                .pos(r.slot)
+                .ok_or_else(|| Error::Serving(format!("slot {} is not occupied", r.slot)))?;
             let mut state = take_row_state(&self.plan, self.config(), &arena.caches, r.slot, pos)?;
             let logits = self.decode(&mut state, &r.tokens, width)?;
             for j in 0..width {
@@ -907,7 +926,7 @@ fn rows_delta(
     batch: usize,
     len: usize,
     d: usize,
-) -> (Tensor, Tensor) {
+) -> Result<(Tensor, Tensor)> {
     let mut xr = Vec::with_capacity(batch * len * d);
     let mut yr = Vec::with_capacity(batch * len * d);
     for b in 0..batch {
@@ -918,10 +937,10 @@ fn rows_delta(
             yr.extend(yo.iter().zip(xi).map(|(o, i)| o - i));
         }
     }
-    (
-        Tensor::new(vec![batch * len, d], xr).unwrap(),
-        Tensor::new(vec![batch * len, d], yr).unwrap(),
-    )
+    Ok((
+        Tensor::new(vec![batch * len, d], xr)?,
+        Tensor::new(vec![batch * len, d], yr)?,
+    ))
 }
 
 /// Slice bucket logits [Bb, Sb, V] down to [batch, s_real, V].

@@ -1,0 +1,230 @@
+//! XLA-free slot lifecycle bookkeeping for [`super::SlotArena`].
+//!
+//! The Free/Reserved/Occupied state machine, the incrementally
+//! maintained occupied-index list, and the free-head hint live here,
+//! with no literal or runtime types in sight. That split exists for the
+//! dynamic back-stops (DESIGN.md §Static analysis): the bounded-
+//! exhaustive model checker in `rust/tests/model_slot_ledger.rs` and
+//! the nightly Miri job drive this struct directly, where the arena's
+//! PJRT cache literals would be out of reach.
+//!
+//! Every method is total: out-of-range slots are reported (`false` /
+//! `Err`), never panicked on — the serving loop must survive a
+//! malformed slot index (nbl-lint pass `panic`).
+
+use crate::error::{Error, Result};
+
+/// Lifecycle of one arena row. `Reserved` is the partial-prefill state:
+/// a chunked admission has claimed the row (so later admissions cannot
+/// strand its finished prefill without a slot) but the row holds no
+/// decodable cache yet — the decode iteration skips it exactly like a
+/// free row, and adoption overwrites it whole.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    Reserved,
+    Occupied(usize),
+}
+
+/// Slot bookkeeping: which rows are free/reserved/occupied, the
+/// ascending occupied-index list the decode hot path borrows each
+/// iteration, and the O(1) free-head hint.
+///
+/// Invariants (the model checker's oracle re-derives these from a naive
+/// rescan after every operation):
+///   - `occ` holds exactly the Occupied indices, strictly ascending
+///   - `n_free` equals the number of Free rows
+///   - `free_head` is the smallest Free index, or `rows` when none
+#[derive(Debug, Clone)]
+pub struct SlotLedger {
+    rows: usize,
+    slots: Vec<SlotState>,
+    occ: Vec<usize>,
+    n_free: usize,
+    free_head: usize,
+}
+
+impl SlotLedger {
+    pub fn new(rows: usize) -> SlotLedger {
+        SlotLedger {
+            rows,
+            slots: vec![SlotState::Free; rows],
+            occ: Vec::with_capacity(rows),
+            n_free: rows,
+            free_head: 0,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Lowest-index free slot, if any (reserved rows are not free).
+    /// O(1): reads the incrementally maintained free head.
+    pub fn free_slot(&self) -> Option<usize> {
+        if self.n_free == 0 {
+            None
+        } else {
+            Some(self.free_head)
+        }
+    }
+
+    /// Number of free slots (reserved rows count as taken). O(1).
+    pub fn free_slots(&self) -> usize {
+        self.n_free
+    }
+
+    /// Indices of occupied slots (ascending); reserved rows are not
+    /// occupied — they hold no decodable cache yet. O(1): borrows the
+    /// incrementally maintained index list.
+    pub fn occupied(&self) -> &[usize] {
+        &self.occ
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occ.len()
+    }
+
+    /// State of `slot`, or None when out of range.
+    pub fn state(&self, slot: usize) -> Option<SlotState> {
+        self.slots.get(slot).copied()
+    }
+
+    /// Tokens cached in `slot` (None if free, reserved or out of range).
+    pub fn pos(&self, slot: usize) -> Option<usize> {
+        match self.slots.get(slot) {
+            Some(SlotState::Occupied(p)) => Some(*p),
+            _ => None,
+        }
+    }
+
+    pub fn is_reserved(&self, slot: usize) -> bool {
+        matches!(self.slots.get(slot), Some(SlotState::Reserved))
+    }
+
+    /// Bookkeeping for a slot leaving the Free state: when the free
+    /// head itself is claimed, advance it to the next free row
+    /// (amortized O(1) over a claim/release cycle).
+    fn note_unfree(&mut self, slot: usize) {
+        self.n_free -= 1;
+        if self.n_free == 0 {
+            self.free_head = self.rows;
+        } else if slot == self.free_head {
+            self.free_head = (slot + 1..self.rows)
+                .find(|&s| self.state(s) == Some(SlotState::Free))
+                .unwrap_or(self.rows);
+        }
+    }
+
+    /// Mark `slot` occupied at `pos` (claiming it from Free or Reserved
+    /// if needed). Returns false — with no state change — when the slot
+    /// is out of range.
+    pub fn set_pos(&mut self, slot: usize, pos: usize) -> bool {
+        let Some(&was) = self.slots.get(slot) else {
+            return false;
+        };
+        match was {
+            SlotState::Occupied(_) => {}
+            SlotState::Free | SlotState::Reserved => {
+                if was == SlotState::Free {
+                    self.note_unfree(slot);
+                }
+                let i = self.occ.partition_point(|&s| s < slot);
+                self.occ.insert(i, slot);
+            }
+        }
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = SlotState::Occupied(pos);
+        }
+        true
+    }
+
+    /// Claim a free row for an in-flight chunked prefill: the row stops
+    /// being admissible but does not join decode iterations until the
+    /// finished prefill is adopted into it.
+    pub fn reserve(&mut self, slot: usize) -> Result<()> {
+        match self.slots.get(slot) {
+            Some(SlotState::Free) => {
+                self.note_unfree(slot);
+                if let Some(s) = self.slots.get_mut(slot) {
+                    *s = SlotState::Reserved;
+                }
+                Ok(())
+            }
+            Some(_) => Err(Error::Serving(format!("slot {slot} is not free"))),
+            None => Err(Error::Serving(format!(
+                "slot {slot} out of range ({} rows)",
+                self.rows
+            ))),
+        }
+    }
+
+    /// Mark a slot free (from any state); out-of-range indices are a
+    /// no-op. Returns whether the slot was in range.
+    pub fn release(&mut self, slot: usize) -> bool {
+        let Some(&was) = self.slots.get(slot) else {
+            return false;
+        };
+        match was {
+            SlotState::Free => return true,
+            SlotState::Occupied(_) => {
+                let i = self.occ.partition_point(|&s| s < slot);
+                if self.occ.get(i) == Some(&slot) {
+                    self.occ.remove(i);
+                }
+            }
+            SlotState::Reserved => {}
+        }
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = SlotState::Free;
+        }
+        self.n_free += 1;
+        if slot < self.free_head {
+            self.free_head = slot;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_free_reserve_occupy_release() {
+        let mut l = SlotLedger::new(3);
+        assert_eq!(l.free_slot(), Some(0));
+        l.reserve(0).unwrap();
+        assert!(l.is_reserved(0));
+        assert_eq!(l.free_slot(), Some(1));
+        assert!(l.set_pos(0, 7));
+        assert_eq!(l.pos(0), Some(7));
+        assert_eq!(l.occupied(), &[0]);
+        assert!(l.release(0));
+        assert_eq!(l.free_slot(), Some(0));
+        assert_eq!(l.free_slots(), 3);
+    }
+
+    #[test]
+    fn out_of_range_is_reported_not_panicked() {
+        let mut l = SlotLedger::new(2);
+        assert!(!l.set_pos(5, 1));
+        assert!(!l.release(5));
+        assert!(l.reserve(5).is_err());
+        assert_eq!(l.pos(5), None);
+        assert_eq!(l.free_slots(), 2);
+    }
+
+    #[test]
+    fn occ_list_stays_sorted_under_churn() {
+        let mut l = SlotLedger::new(4);
+        for s in [2, 0, 3, 1] {
+            assert!(l.set_pos(s, s + 10));
+        }
+        assert_eq!(l.occupied(), &[0, 1, 2, 3]);
+        l.release(1);
+        l.release(3);
+        assert_eq!(l.occupied(), &[0, 2]);
+        assert_eq!(l.free_slot(), Some(1));
+    }
+}

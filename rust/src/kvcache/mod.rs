@@ -16,8 +16,11 @@ use crate::nbl::plan::ModelPlan;
 use crate::runtime::literals::{lit_from_tensor, tensor_from_lit};
 use crate::tensor::Tensor;
 
+pub mod ledger;
 pub mod paged;
 pub mod prefix;
+
+use ledger::{SlotLedger, SlotState};
 
 /// Device-side KV cache produced by one prefill call (literals stay
 /// attached to the PJRT runtime; on the CPU backend these are host
@@ -39,7 +42,9 @@ pub struct KvState {
     bytes: usize,
 }
 
-// Literals are plain host allocations on the CPU PJRT backend.
+// SAFETY: literals are plain host allocations on the CPU PJRT backend;
+// nothing in KvState aliases thread-local runtime state.
+#[allow(unsafe_code)]
 unsafe impl Send for KvState {}
 
 impl KvState {
@@ -73,18 +78,6 @@ impl KvState {
     }
 }
 
-/// Lifecycle of one arena row. `Reserved` is the partial-prefill state:
-/// a chunked admission has claimed the row (so later admissions cannot
-/// strand its finished prefill without a slot) but the row holds no
-/// decodable cache yet — the decode iteration skips it exactly like a
-/// free row, and `adopt` overwrites it whole.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Slot {
-    Free,
-    Reserved,
-    Occupied(usize),
-}
-
 /// Per-request KV slot arena for the continuous-batching decode group.
 ///
 /// One fixed batch bucket of rows; row r of every layer cache literal is
@@ -103,18 +96,15 @@ pub struct SlotArena {
     /// Per layer: Some((k, v)) [Bb, Tmax, Hkv, dh] iff the plan keeps
     /// attention there.
     pub caches: Vec<Option<(xla::Literal, xla::Literal)>>,
-    /// Per slot lifecycle state (position = tokens cached so far).
-    slots: Vec<Slot>,
-    /// Occupied slot indices, ascending — maintained incrementally so
-    /// the per-iteration hot path never rescans or reallocates.
-    occ: Vec<usize>,
-    /// Free-row count (reserved rows are neither free nor occupied).
-    n_free: usize,
-    /// Smallest free index; `bucket_batch` when none are free.
-    free_head: usize,
+    /// Slot lifecycle bookkeeping (Free/Reserved/Occupied, occupied
+    /// list, free head) — XLA-free so the model checker and Miri can
+    /// drive it directly; see [`ledger::SlotLedger`].
+    ledger: SlotLedger,
 }
 
-// Literals are plain host allocations on the CPU PJRT backend.
+// SAFETY: literals are plain host allocations on the CPU PJRT backend;
+// the ledger is plain owned data.
+#[allow(unsafe_code)]
 unsafe impl Send for SlotArena {}
 
 impl SlotArena {
@@ -136,26 +126,19 @@ impl SlotArena {
             bucket_batch,
             max_ctx: cfg.max_ctx,
             caches,
-            slots: vec![Slot::Free; bucket_batch],
-            occ: Vec::with_capacity(bucket_batch),
-            n_free: bucket_batch,
-            free_head: 0,
+            ledger: SlotLedger::new(bucket_batch),
         })
     }
 
     /// Lowest-index free slot, if any (reserved rows are not free).
     /// O(1): reads the incrementally maintained free head.
     pub fn free_slot(&self) -> Option<usize> {
-        if self.n_free == 0 {
-            None
-        } else {
-            Some(self.free_head)
-        }
+        self.ledger.free_slot()
     }
 
     /// Number of free slots (reserved rows count as taken). O(1).
     pub fn free_slots(&self) -> usize {
-        self.n_free
+        self.ledger.free_slots()
     }
 
     /// Indices of occupied slots (ascending); reserved rows are not
@@ -163,87 +146,40 @@ impl SlotArena {
     /// incrementally maintained index list (no per-iteration rescan or
     /// allocation on the decode hot path).
     pub fn occupied(&self) -> &[usize] {
-        &self.occ
+        self.ledger.occupied()
     }
 
     pub fn occupancy(&self) -> usize {
-        self.occ.len()
+        self.ledger.occupancy()
     }
 
     /// Tokens cached in `slot` (None if free or reserved).
     pub fn pos(&self, slot: usize) -> Option<usize> {
-        match self.slots.get(slot) {
-            Some(Slot::Occupied(p)) => Some(*p),
-            _ => None,
-        }
-    }
-
-    /// Bookkeeping for a slot leaving the Free state: when the free
-    /// head itself is claimed, advance it to the next free row
-    /// (amortized O(1) over a claim/release cycle).
-    fn note_unfree(&mut self, slot: usize) {
-        self.n_free -= 1;
-        if self.n_free == 0 {
-            self.free_head = self.bucket_batch;
-        } else if slot == self.free_head {
-            self.free_head = (slot + 1..self.bucket_batch)
-                .find(|&s| self.slots[s] == Slot::Free)
-                .unwrap_or(self.bucket_batch);
-        }
+        self.ledger.pos(slot)
     }
 
     pub fn set_pos(&mut self, slot: usize, pos: usize) {
-        match self.slots[slot] {
-            Slot::Occupied(_) => {}
-            was => {
-                if was == Slot::Free {
-                    self.note_unfree(slot);
-                }
-                let i = self.occ.partition_point(|&s| s < slot);
-                self.occ.insert(i, slot);
-            }
-        }
-        self.slots[slot] = Slot::Occupied(pos);
+        let in_range = self.ledger.set_pos(slot, pos);
+        debug_assert!(in_range, "set_pos: slot {slot} out of range");
     }
 
     /// Claim a free row for an in-flight chunked prefill: the row stops
     /// being admissible but does not join decode iterations until the
     /// finished prefill is adopted into it.
     pub fn reserve(&mut self, slot: usize) -> Result<()> {
-        match self.slots.get(slot) {
-            Some(Slot::Free) => {
-                self.note_unfree(slot);
-                self.slots[slot] = Slot::Reserved;
-                Ok(())
-            }
-            Some(_) => Err(Error::Serving(format!("slot {slot} is not free"))),
-            None => Err(Error::Serving(format!(
-                "slot {slot} out of range ({} rows)",
-                self.bucket_batch
-            ))),
-        }
+        self.ledger.reserve(slot)
     }
 
     pub fn is_reserved(&self, slot: usize) -> bool {
-        matches!(self.slots.get(slot), Some(Slot::Reserved))
+        self.ledger.is_reserved(slot)
     }
 
     /// Mark a slot free (from any state); its rows become garbage and
     /// are fully overwritten by the next `adopt` into the same slot.
+    /// Out-of-range indices are a no-op (the serving loop must survive
+    /// a malformed slot index rather than panic).
     pub fn release(&mut self, slot: usize) {
-        match self.slots[slot] {
-            Slot::Free => return,
-            Slot::Occupied(_) => {
-                let i = self.occ.partition_point(|&s| s < slot);
-                self.occ.remove(i);
-            }
-            Slot::Reserved => {}
-        }
-        self.slots[slot] = Slot::Free;
-        self.n_free += 1;
-        if slot < self.free_head {
-            self.free_head = slot;
-        }
+        self.ledger.release(slot);
     }
 
     /// Migrate a freshly prefilled batch-1 `KvState` into row `slot`
@@ -256,7 +192,7 @@ impl SlotArena {
                 self.bucket_batch
             )));
         }
-        if matches!(self.slots[slot], Slot::Occupied(_)) {
+        if matches!(self.ledger.state(slot), Some(SlotState::Occupied(_))) {
             return Err(Error::Serving(format!("slot {slot} is occupied")));
         }
         put_row_state(&mut self.caches, state, slot)?;

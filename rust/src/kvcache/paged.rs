@@ -347,8 +347,17 @@ impl PagedKv {
     /// given token counts, charging the pool. Fails without side
     /// effects when the budget does not hold.
     pub fn attach(&mut self, slot: usize, t_tokens: usize, d_tokens: Option<usize>) -> Result<()> {
-        if self.tables[slot].is_some() {
-            return Err(Error::Serving(format!("paged slot {slot} already attached")));
+        match self.tables.get(slot) {
+            Some(Some(_)) => {
+                return Err(Error::Serving(format!("paged slot {slot} already attached")))
+            }
+            None => {
+                return Err(Error::Serving(format!(
+                    "paged slot {slot} out of range ({} rows)",
+                    self.tables.len()
+                )))
+            }
+            Some(None) => {}
         }
         let bytes = self.admit_bytes(t_tokens, d_tokens);
         let t_frames = self.blocks_for(t_tokens);
@@ -358,10 +367,14 @@ impl PagedKv {
             frames: (0..frames).map(|_| Frame::Private).collect(),
             tokens,
         };
-        self.tables[slot] = Some(SlotTables {
+        let table = SlotTables {
             target: side(t_frames, t_tokens),
             draft: d_tokens.map(|d| side(d_frames.unwrap_or(0), d)),
-        });
+        };
+        if let Some(entry) = self.tables.get_mut(slot) {
+            // nbl-lint: settles(charge): the installed table owns the debit; release() refunds it
+            *entry = Some(table);
+        }
         Ok(())
     }
 
@@ -375,7 +388,7 @@ impl PagedKv {
     /// capture (counted in `cow_copies`). Infallible: only releases
     /// budget, never takes.
     pub fn mark_shared(&mut self, slot: usize, entry: &PagedEntry) {
-        let Some(t) = self.tables[slot].as_mut() else { return };
+        let Some(t) = self.tables.get_mut(slot).and_then(|t| t.as_mut()) else { return };
         let mut freed = 0usize;
         let mut splice_one = |side: &mut Side, run: &PagedRun, bpb: usize| {
             let mut cow = 0u64;
@@ -412,7 +425,7 @@ impl PagedKv {
     /// monotonic (a rollback below a boundary keeps the frame: it will
     /// be rewritten, and giving it back mid-flight would thrash).
     pub fn grow(&mut self, slot: usize, t_tokens: usize, d_tokens: Option<usize>) -> bool {
-        let Some(t) = self.tables[slot].as_ref() else { return false };
+        let Some(t) = self.tables.get(slot).and_then(|t| t.as_ref()) else { return false };
         let t_new = self
             .blocks_for(t_tokens.max(t.target.tokens))
             .saturating_sub(t.target.frames.len());
@@ -426,7 +439,14 @@ impl PagedKv {
         if self.pool.try_take(bytes).is_err() {
             return false;
         }
-        let t = self.tables[slot].as_mut().unwrap();
+        let Some(t) = self.tables.get_mut(slot).and_then(|t| t.as_mut()) else {
+            // unreachable (the table was read just above) — but if a
+            // refactor ever breaks that, refund instead of leaking the
+            // charge, so the pool identity holds
+            self.pool.give_back(bytes);
+            return false;
+        };
+        // nbl-lint: settles(charge): appended frames own the debit; release() refunds them
         t.target.frames.extend((0..t_new).map(|_| Frame::Private));
         t.target.tokens = t.target.tokens.max(t_tokens);
         if let (Some(ds), Some(dt)) = (t.draft.as_mut(), d_tokens) {
@@ -441,7 +461,7 @@ impl PagedKv {
     /// drop and the data lives while the prefix cache or other tables
     /// still hold it).
     pub fn release(&mut self, slot: usize) {
-        let Some(t) = self.tables[slot].take() else { return };
+        let Some(t) = self.tables.get_mut(slot).and_then(|t| t.take()) else { return };
         let mut bytes = t.target.private_frames() * self.t_bpb;
         if let Some(ds) = &t.draft {
             bytes += ds.private_frames() * self.d_bpb;

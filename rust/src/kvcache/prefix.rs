@@ -498,6 +498,7 @@ fn insert_node<'a>(node: &'a mut Node, rest: &[u32]) -> &'a mut Node {
     }
     let Some(i) = node.children.iter().position(|c| c.edge[0] == rest[0]) else {
         node.children.push(Node::leaf(rest.to_vec()));
+        // nbl-lint: allow(panic): last_mut of the element pushed on the previous line
         return node.children.last_mut().unwrap();
     };
     let common = lcp(&node.children[i].edge, rest);
@@ -514,6 +515,7 @@ fn insert_node<'a>(node: &'a mut Node, rest: &[u32]) -> &'a mut Node {
         &mut node.children[i]
     } else {
         node.children[i].children.push(Node::leaf(rest[common..].to_vec()));
+        // nbl-lint: allow(panic): last_mut of the element pushed on the previous line
         node.children[i].children.last_mut().unwrap()
     }
 }

@@ -22,6 +22,11 @@
 //! let out = engine.generate(&prompt_ids, 64, &SamplingParams::greedy())?;
 //! ```
 
+// Unsafe is denied crate-wide; the only sanctioned sites are the
+// Send/Sync impls over PJRT handles (each carries #[allow(unsafe_code)]
+// plus a SAFETY note, and nbl-lint's `unsafe` pass audits the set).
+#![deny(unsafe_code)]
+
 pub mod baselines;
 pub mod bench;
 pub mod data;

@@ -40,9 +40,13 @@ pub struct Runtime {
     compile_log: Mutex<Vec<(String, f64)>>,
 }
 
-// The PJRT client and executables are internally synchronized by the C
-// runtime; the Rust wrapper just holds opaque pointers.
+// SAFETY: the PJRT client and executables are internally synchronized
+// by the C runtime; the Rust wrapper just holds opaque pointers, and
+// the mutable caches sit behind their own mutexes.
+#[allow(unsafe_code)]
 unsafe impl Send for Runtime {}
+// SAFETY: see the Send impl above.
+#[allow(unsafe_code)]
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

@@ -4,7 +4,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::{mean, median, percentile};
+use crate::util::{lock_unpoisoned, mean, median, percentile};
 
 #[derive(Debug, Clone)]
 pub struct RequestTiming {
@@ -110,8 +110,10 @@ pub struct SchedulerGauges {
     /// Decode iterations run.
     pub iterations: u64,
     /// Sum of occupied rows over iterations (occupancy numerator).
+    // nbl-lint: gauge(mean_batch_occupancy, mean_rows_per_iteration)
     pub occupied_rows: u64,
     /// Sum of arena rows over iterations (occupancy denominator).
+    // nbl-lint: gauge(mean_batch_occupancy)
     pub bucket_rows: u64,
     /// Max rows occupied simultaneously at any iteration — the
     /// concurrency number `serve_bench --paged-compare` compares
@@ -125,8 +127,10 @@ pub struct SchedulerGauges {
     /// Waiting requests at the last observation.
     pub queue_depth: usize,
     /// KV-pool bytes reserved at the last observation.
+    // nbl-lint: gauge(kv_in_use_bytes)
     pub kv_in_use: usize,
     /// KV-pool capacity in bytes.
+    // nbl-lint: gauge(kv_capacity_bytes)
     pub kv_capacity: usize,
     /// Tokens committed by decode iterations (all rows, all widths).
     pub committed_tokens: u64,
@@ -145,6 +149,7 @@ pub struct SchedulerGauges {
     pub chunk_stalls: u64,
     /// Seconds decode rows spent stalled behind prefill chunks (sum of
     /// the durations counted by `chunk_stalls`).
+    // nbl-lint: gauge(chunk_stall_ms_total, chunk_stall_ms_mean)
     pub chunk_stall_s: f64,
     /// Speculative verify passes (target iterations with width > 1).
     pub spec_rounds: u64,
@@ -288,12 +293,12 @@ impl MetricsHub {
     }
 
     pub fn record(&self, t: RequestTiming) {
-        self.timings.lock().unwrap().push(t);
+        lock_unpoisoned(&self.timings).push(t);
     }
 
     /// One decode iteration ran with `occupied` of `bucket` rows live.
     pub fn note_iteration(&self, occupied: usize, bucket: usize) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.iterations += 1;
         g.occupied_rows += occupied as u64;
         g.bucket_rows += bucket as u64;
@@ -304,14 +309,14 @@ impl MetricsHub {
     /// adoption (the legacy snapshot restore path; paged splices never
     /// call this, which is exactly what the zero-copy bench asserts).
     pub fn note_prefix_expand(&self, layers: usize) {
-        self.gauges.lock().unwrap().prefix_expand_copies += layers as u64;
+        lock_unpoisoned(&self.gauges).prefix_expand_copies += layers as u64;
     }
 
     /// Mirror the worker-local paged block-pool counters into the
     /// gauges (refreshed once per scheduler iteration, like
     /// `observe_prefix`).
     pub fn observe_paged(&self, s: &crate::kvcache::paged::PagedStats) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.paged_block_tokens = s.block_tokens;
         g.blocks_capacity = s.capacity_blocks;
         g.blocks_free = s.free_blocks;
@@ -327,13 +332,13 @@ impl MetricsHub {
     /// `committed` tokens were emitted by the iteration that just ran;
     /// with speculation a single iteration commits 1..=W per row.
     pub fn note_committed(&self, committed: usize) {
-        self.gauges.lock().unwrap().committed_tokens += committed as u64;
+        lock_unpoisoned(&self.gauges).committed_tokens += committed as u64;
     }
 
     /// One speculative verify pass ran: `proposed` draft tokens entered
     /// verification and `accepted` of them matched the target.
     pub fn note_spec_round(&self, proposed: usize, accepted: usize) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.spec_rounds += 1;
         g.spec_proposed += proposed as u64;
         g.spec_accepted += accepted as u64;
@@ -342,7 +347,7 @@ impl MetricsHub {
     /// One prefill chunk ran; `stalled` = decode rows were live and
     /// waited `dt_s` seconds for it (the interference gauge).
     pub fn note_prefill_chunk(&self, stalled: bool, dt_s: f64) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.prefill_chunks += 1;
         if stalled {
             g.chunk_stalls += 1;
@@ -352,13 +357,13 @@ impl MetricsHub {
 
     /// An admission completed through the multi-chunk prefill machine.
     pub fn note_chunked_admission(&self) {
-        self.gauges.lock().unwrap().chunked_admissions += 1;
+        lock_unpoisoned(&self.gauges).chunked_admissions += 1;
     }
 
     /// A request was admitted into a slot (`reused` = the row had served
     /// an earlier, now-finished request).
     pub fn note_admission(&self, reused: bool) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.admissions += 1;
         if reused {
             g.slot_reuses += 1;
@@ -369,7 +374,7 @@ impl MetricsHub {
     /// (refreshed once per scheduler iteration, like `observe` — the
     /// radix tree itself stays single-threaded on the worker).
     pub fn observe_prefix(&self, s: &crate::kvcache::prefix::PrefixStats) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.prefix_hits = s.hits;
         g.prefix_misses = s.misses;
         g.prefix_hit_tokens = s.hit_tokens;
@@ -383,25 +388,25 @@ impl MetricsHub {
 
     /// Refresh the point-in-time gauges (queue depth + KV pool state).
     pub fn observe(&self, queue_depth: usize, kv_in_use: usize, kv_capacity: usize) {
-        let mut g = self.gauges.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gauges);
         g.queue_depth = queue_depth;
         g.kv_in_use = kv_in_use;
         g.kv_capacity = kv_capacity;
     }
 
     pub fn gauges(&self) -> SchedulerGauges {
-        self.gauges.lock().unwrap().clone()
+        lock_unpoisoned(&self.gauges).clone()
     }
 
     /// Snapshot of every recorded request timing — benches slice TTFT
     /// by prompt-length class (e.g. p50 TTFT of short requests admitted
     /// behind a long prompt, the number chunked prefill exists to lower).
     pub fn timings(&self) -> Vec<RequestTiming> {
-        self.timings.lock().unwrap().clone()
+        lock_unpoisoned(&self.timings).clone()
     }
 
     pub fn len(&self) -> usize {
-        self.timings.lock().unwrap().len()
+        lock_unpoisoned(&self.timings).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -409,7 +414,7 @@ impl MetricsHub {
     }
 
     pub fn summary(&self) -> MetricsSummary {
-        let ts = self.timings.lock().unwrap();
+        let ts = lock_unpoisoned(&self.timings);
         let ttfts: Vec<f64> = ts.iter().map(|t| t.ttft_s).collect();
         let prefill: Vec<f64> = ts.iter().map(|t| t.prefill_speed()).collect();
         let tput: Vec<f64> = ts

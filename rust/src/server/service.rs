@@ -155,7 +155,9 @@ impl Server {
     /// Synchronously serve one request (the paper's batch-1 protocol).
     pub fn generate_one(&self, req: &GenRequest) -> GenResponse {
         match self.run_group(std::slice::from_ref(req)) {
-            Ok(mut v) => v.pop().unwrap(),
+            Ok(mut v) => v.pop().unwrap_or_else(|| {
+                error_response(req.id, Error::Serving("empty response group".into()))
+            }),
             Err(e) => error_response(req.id, e),
         }
     }
@@ -701,7 +703,7 @@ impl<'a> IterationLoop<'a> {
             {
                 break;
             }
-            let arena = self.arena.as_ref().unwrap();
+            let Some(arena) = self.arena.as_ref() else { break };
             let Some(slot) = arena.free_slot() else { break };
             let free = arena.free_slots();
             // per-request admission bytes: the paged pool charges the
@@ -763,7 +765,7 @@ impl<'a> IterationLoop<'a> {
                 continue;
             }
             self.admit(slot, req, watch, lease, hit);
-            if self.slots[slot].is_none() {
+            if self.slots.get(slot).is_none_or(|s| s.is_none()) {
                 // the request finished on its prefill token or failed:
                 // it never joined the batch, so its blocks go back
                 if let Some(pk) = self.paged.as_mut() {
@@ -781,7 +783,7 @@ impl<'a> IterationLoop<'a> {
     fn resume_preempted(&mut self) {
         while let Some(front) = self.preempted.front() {
             let Some(pk) = self.paged.as_mut() else { break };
-            let arena = self.arena.as_mut().unwrap();
+            let Some(arena) = self.arena.as_mut() else { break };
             let Some(slot) = arena.free_slot() else { break };
             let t_tokens = front.target.pos;
             let d_tokens = front.draft.as_ref().map(|d| d.pos);
@@ -791,7 +793,7 @@ impl<'a> IterationLoop<'a> {
             if pk.attach(slot, t_tokens, d_tokens).is_err() {
                 break;
             }
-            let p = self.preempted.pop_front().unwrap();
+            let Some(p) = self.preempted.pop_front() else { break };
             if let Err(e) = arena.adopt(slot, &p.target) {
                 pk.release(slot);
                 respond(&mut self.replies, error_response(p.req.id, e));
@@ -809,18 +811,34 @@ impl<'a> IterationLoop<'a> {
                     continue;
                 }
             }
-            self.server.metrics.note_admission(self.row_used[slot]);
-            self.row_used[slot] = true;
-            self.slots[slot] = Some(ActiveSlot {
-                req: p.req,
-                sampler: p.sampler,
-                outputs: p.outputs,
-                watch: p.watch,
-                next: p.next,
-                effective_max: p.effective_max,
-                seq: p.seq,
-                _lease: None,
-            });
+            self.install_slot(
+                slot,
+                ActiveSlot {
+                    req: p.req,
+                    sampler: p.sampler,
+                    outputs: p.outputs,
+                    watch: p.watch,
+                    next: p.next,
+                    effective_max: p.effective_max,
+                    seq: p.seq,
+                    _lease: None,
+                },
+            );
+        }
+    }
+
+    /// Install a newly admitted (or resumed) request into scheduler row
+    /// `slot`, noting row reuse for the churn gauge. Bounds-checked: the
+    /// slot index always comes from the arena's free list, which is
+    /// sized in lockstep with `self.slots`.
+    fn install_slot(&mut self, slot: usize, active: ActiveSlot) {
+        let reused = self.row_used.get(slot).copied().unwrap_or(false);
+        self.server.metrics.note_admission(reused);
+        if let Some(u) = self.row_used.get_mut(slot) {
+            *u = true;
+        }
+        if let Some(entry) = self.slots.get_mut(slot) {
+            *entry = Some(active);
         }
     }
 
@@ -834,12 +852,12 @@ impl<'a> IterationLoop<'a> {
         if !self.preempted.is_empty() {
             // the resume backlog owns admission priority; if nothing is
             // even decoding, yield so the intake thread isn't starved
-            if self.arena.as_ref().unwrap().occupancy() == 0 {
+            if self.arena.as_ref().map_or(0, |a| a.occupancy()) == 0 {
                 std::thread::sleep(std::time::Duration::from_millis(2));
             }
             return;
         }
-        if self.arena.as_ref().unwrap().occupancy() > 0 {
+        if self.arena.as_ref().map_or(0, |a| a.occupancy()) > 0 {
             return;
         }
         let server = self.server;
@@ -915,7 +933,7 @@ impl<'a> IterationLoop<'a> {
     /// One (possibly speculative) decode iteration over the occupied
     /// rows, after guaranteeing paged block headroom for its growth.
     fn decode_phase(&mut self) {
-        if self.arena.as_ref().unwrap().occupancy() == 0 {
+        if self.arena.as_ref().map_or(0, |a| a.occupancy()) == 0 {
             return;
         }
         // worst-case per-row growth this iteration: `width` target
@@ -925,7 +943,7 @@ impl<'a> IterationLoop<'a> {
             .as_ref()
             .map_or(1, |sp| if sp.arena.is_some() { sp.width } else { 1 });
         self.ensure_paged_capacity(width);
-        if self.arena.as_ref().unwrap().occupancy() == 0 {
+        if self.arena.as_ref().map_or(0, |a| a.occupancy()) == 0 {
             return;
         }
         self.decode_iteration();
@@ -945,10 +963,10 @@ impl<'a> IterationLoop<'a> {
         let n = self.slots.len();
         for s in 0..n {
             'row: loop {
-                if self.slots[s].is_none() {
+                if self.slots.get(s).is_none_or(|a| a.is_none()) {
                     break 'row;
                 }
-                let arena = self.arena.as_ref().unwrap();
+                let Some(arena) = self.arena.as_ref() else { return };
                 let Some(pos) = arena.pos(s) else { break 'row };
                 let t_need = (pos + width).min(max_ctx);
                 let d_need = self.spec.as_ref().and_then(|sp| {
@@ -957,7 +975,9 @@ impl<'a> IterationLoop<'a> {
                             .map(|dp| (dp + width.saturating_sub(1)).min(da.max_ctx))
                     })
                 });
-                if self.paged.as_mut().unwrap().grow(s, t_need, d_need) {
+                // `paged` was checked non-None at fn entry; a None here
+                // (impossible) degrades to the preemption path below
+                if self.paged.as_mut().is_some_and(|pk| pk.grow(s, t_need, d_need)) {
                     break 'row;
                 }
                 // out of blocks: evict the youngest admission (LIFO, so
@@ -981,9 +1001,9 @@ impl<'a> IterationLoop<'a> {
     /// free the arena rows and paged blocks, and queue the request for
     /// re-admission at its original priority.
     fn preempt_slot(&mut self, slot: usize) {
-        let Some(a) = self.slots[slot].take() else { return };
         let server = self.server;
-        let arena = self.arena.as_mut().unwrap();
+        let Some(arena) = self.arena.as_mut() else { return };
+        let Some(a) = self.slots.get_mut(slot).and_then(|s| s.take()) else { return };
         let pos = arena.pos(slot).unwrap_or(0);
         let taken =
             take_row_state(&server.engine.plan, server.engine.config(), &arena.caches, slot, pos);
@@ -1256,7 +1276,11 @@ impl<'a> IterationLoop<'a> {
         let seq = self.admit_seq;
         let block_tokens = self.paged.as_ref().map(|pk| pk.block_tokens());
         let server = self.server;
-        let arena = self.arena.as_mut().unwrap();
+        let Some(arena) = self.arena.as_mut() else {
+            let err = Error::Serving("arena missing at admission".into());
+            respond(&mut self.replies, error_response(req.id, err));
+            return;
+        };
         let mut spec = self.spec.as_mut();
         let mut prefix = self.prefix.as_mut();
         let replies = &mut self.replies;
@@ -1339,11 +1363,10 @@ impl<'a> IterationLoop<'a> {
         }
         if let Some(sp) = spec {
             // lockstep adoption into the SAME slot index
-            let adopted = sp
-                .arena
-                .as_mut()
-                .ok_or_else(|| Error::Serving("draft arena missing at admission".into()))
-                .and_then(|da| da.adopt(slot, draft_state.as_ref().unwrap()));
+            let adopted = match (sp.arena.as_mut(), draft_state.as_ref()) {
+                (Some(da), Some(ds)) => da.adopt(slot, ds),
+                _ => Err(Error::Serving("draft arena missing at admission".into())),
+            };
             if let Err(e) = adopted {
                 arena.release(slot);
                 respond(replies, error_response(req.id, e));
@@ -1363,18 +1386,19 @@ impl<'a> IterationLoop<'a> {
         if let Some(px) = prefix {
             publish_prefix(px, block_tokens, &req.prompt, covered, &state, draft_state.as_ref());
         }
-        server.metrics.note_admission(self.row_used[slot]);
-        self.row_used[slot] = true;
-        self.slots[slot] = Some(ActiveSlot {
-            req,
-            sampler,
-            outputs,
-            watch,
-            next: first,
-            effective_max,
-            seq,
-            _lease: lease,
-        });
+        self.install_slot(
+            slot,
+            ActiveSlot {
+                req,
+                sampler,
+                outputs,
+                watch,
+                next: first,
+                effective_max,
+                seq,
+                _lease: lease,
+            },
+        );
     }
 
     /// Begin a multi-chunk admission (DESIGN.md §Chunked prefill):
@@ -1398,7 +1422,11 @@ impl<'a> IterationLoop<'a> {
     ) -> Option<PendingPrefill> {
         let chunk = self.chunk;
         let server = self.server;
-        let arena = self.arena.as_mut().unwrap();
+        let Some(arena) = self.arena.as_mut() else {
+            let err = Error::Serving("arena missing at admission".into());
+            respond(&mut self.replies, error_response(req.id, err));
+            return None;
+        };
         let mut spec = self.spec.as_mut();
         let prefix = self.prefix.as_mut();
         let replies = &mut self.replies;
@@ -1529,8 +1557,8 @@ impl<'a> IterationLoop<'a> {
         let block_tokens = self.paged.as_ref().map(|pk| pk.block_tokens());
         let server = self.server;
         let engine = &server.engine;
+        let Some(arena) = self.arena.as_mut() else { return };
         let Some(p) = self.pending.as_mut() else { return };
-        let arena = self.arena.as_mut().unwrap();
         let mut spec = self.spec.as_mut();
         let len = p.req.prompt.len();
         let step = chunk.min(len - p.done);
@@ -1555,7 +1583,7 @@ impl<'a> IterationLoop<'a> {
         let hidden = match run {
             Ok(h) => h,
             Err(e) => {
-                let p = self.pending.take().unwrap();
+                let Some(p) = self.pending.take() else { return };
                 release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
                 respond(&mut self.replies, error_response(p.req.id, e));
                 return;
@@ -1579,7 +1607,7 @@ impl<'a> IterationLoop<'a> {
 
         // ---- final chunk: first token, then adoption into the
         // reserved row
-        let p = self.pending.take().unwrap();
+        let Some(p) = self.pending.take() else { return };
         self.admit_seq += 1;
         let seq = self.admit_seq;
         // the machine completed its prefill — counted here, not at
@@ -1643,18 +1671,19 @@ impl<'a> IterationLoop<'a> {
         if let (Some(pk), Some(entry)) = (self.paged.as_mut(), p.warm_paged.as_ref()) {
             pk.mark_shared(p.slot, entry);
         }
-        server.metrics.note_admission(self.row_used[p.slot]);
-        self.row_used[p.slot] = true;
-        self.slots[p.slot] = Some(ActiveSlot {
-            req: p.req,
-            sampler,
-            outputs,
-            watch,
-            next: first,
-            effective_max,
-            seq,
-            _lease: p.lease,
-        });
+        self.install_slot(
+            p.slot,
+            ActiveSlot {
+                req: p.req,
+                sampler,
+                outputs,
+                watch,
+                next: first,
+                effective_max,
+                seq,
+                _lease: p.lease,
+            },
+        );
     }
 }
 
@@ -1702,7 +1731,7 @@ impl<'a> IterationLoop<'a> {
     /// ~1e-3 of a cumulative-probability edge can differ from plain mode.
     fn decode_iteration(&mut self) {
         let server = self.server;
-        let arena = self.arena.as_mut().unwrap();
+        let Some(arena) = self.arena.as_mut() else { return };
         let spec = self.spec.as_mut();
         let slots = &mut self.slots;
         let replies = &mut self.replies;
@@ -1722,8 +1751,10 @@ impl<'a> IterationLoop<'a> {
             let w = sp.width;
             if let Some(da) = sp.arena.as_mut() {
                 let fits = occ.iter().all(|&s| {
-                    arena.pos(s).unwrap() + w <= arena.max_ctx
-                        && da.pos(s).unwrap() + (w - 1) <= da.max_ctx
+                    let (Some(tp), Some(dp)) = (arena.pos(s), da.pos(s)) else {
+                        return false;
+                    };
+                    tp + w <= arena.max_ctx && dp + (w - 1) <= da.max_ctx
                 });
                 if fits {
                     width = w;
@@ -1744,10 +1775,14 @@ impl<'a> IterationLoop<'a> {
         let mut proposals: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
         let mut dstart: Vec<usize> = vec![0; n];
         if gamma > 0 {
+            // nbl-lint: allow(panic): gamma > 0 only in the width-selection branch that saw the engine
             let dengine = draft_engine.expect("width > 1 implies a draft engine");
+            // nbl-lint: allow(panic): gamma > 0 only in the width-selection branch that saw the arena
             let da = draft_arena.as_mut().expect("width > 1 implies a draft arena");
             for (i, &s) in occ.iter().enumerate() {
-                dstart[i] = da.pos(s).unwrap();
+                // occupied target rows are lockstep-occupied in the draft
+                // arena; 0 (unreachable) degrades to a full re-feed
+                dstart[i] = da.pos(s).unwrap_or(0);
             }
             let mut last_out: Vec<u32> = vec![0; n];
             for _step in 0..gamma {
@@ -1755,8 +1790,9 @@ impl<'a> IterationLoop<'a> {
                     .iter()
                     .enumerate()
                     .map(|(i, &s)| {
+                        // nbl-lint: allow(panic): rows in `occ` hold an ActiveSlot (slots/arena lockstep)
                         let a = slots[s].as_ref().unwrap();
-                        let d = da.pos(s).unwrap();
+                        let d = da.pos(s).unwrap_or(0);
                         let l = a.req.prompt.len() + a.outputs.len();
                         let tok = if d < l { context_token(a, d) } else { last_out[i] };
                         fed[i].push(tok);
@@ -1780,11 +1816,12 @@ impl<'a> IterationLoop<'a> {
                 };
                 for (i, &s) in occ.iter().enumerate() {
                     last_out[i] = argmax(logits.at2(i, 0));
+                    // nbl-lint: allow(panic): rows in `occ` hold an ActiveSlot (slots/arena lockstep)
                     let a = slots[s].as_ref().unwrap();
                     let l = a.req.prompt.len() + a.outputs.len();
                     // the token just cached sits at da.pos - 1; its successor
                     // prediction is a proposal once the context is consumed
-                    if da.pos(s).unwrap() >= l {
+                    if da.pos(s).unwrap_or(0) >= l {
                         proposals[i].push(last_out[i]);
                     }
                 }
@@ -1792,11 +1829,13 @@ impl<'a> IterationLoop<'a> {
         }
 
         // ---- verify phase: one width-W target pass over every row
-        let tstart: Vec<usize> = occ.iter().map(|&s| arena.pos(s).unwrap()).collect();
+        // `occ` rows are occupied by construction, so pos() is Some
+        let tstart: Vec<usize> = occ.iter().map(|&s| arena.pos(s).unwrap_or(0)).collect();
         let vrows: Vec<RowSpecDecode> = occ
             .iter()
             .enumerate()
             .map(|(i, &s)| {
+                // nbl-lint: allow(panic): rows in `occ` hold an ActiveSlot (slots/arena lockstep)
                 let a = slots[s].as_ref().unwrap();
                 let mut tokens = Vec::with_capacity(width);
                 tokens.push(a.next);
@@ -1805,7 +1844,7 @@ impl<'a> IterationLoop<'a> {
                 // the last token; fillers only gate continuation, committed
                 // tokens always come from the sampler over true logits
                 while tokens.len() < width {
-                    tokens.push(*tokens.last().unwrap());
+                    tokens.push(*tokens.last().unwrap_or(&a.next));
                 }
                 RowSpecDecode { slot: s, tokens }
             })
@@ -1826,6 +1865,7 @@ impl<'a> IterationLoop<'a> {
         let mut total_accepted = 0usize;
         for (i, &s) in occ.iter().enumerate() {
             let (committed, done) = {
+                // nbl-lint: allow(panic): rows in `occ` hold an ActiveSlot (slots/arena lockstep)
                 let a = slots[s].as_mut().unwrap();
                 let mut committed = 0usize;
                 let mut done = false;
@@ -1859,6 +1899,7 @@ impl<'a> IterationLoop<'a> {
                     // re-anchor the draft on the committed context: keep the
                     // longest fed prefix that matches it (never past the last
                     // committed token, so the next round always re-feeds it)
+                    // nbl-lint: allow(panic): rows in `occ` hold an ActiveSlot (slots/arena lockstep)
                     let a = slots[s].as_ref().unwrap();
                     let l_new = a.req.prompt.len() + a.outputs.len();
                     let mut valid = 0usize;
@@ -1876,7 +1917,7 @@ impl<'a> IterationLoop<'a> {
             if done {
                 // leave the batch: free the slot(s), paged blocks, and KV
                 // lease without disturbing the other rows
-                let a = slots[s].take().unwrap();
+                let Some(a) = slots[s].take() else { continue };
                 arena.release(s);
                 if let Some(da) = draft_arena.as_mut() {
                     da.release(s);

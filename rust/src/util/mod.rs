@@ -11,6 +11,15 @@ pub use json::Json;
 pub use rng::Rng;
 pub use timer::Timer;
 
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking: our metric/state mutexes hold plain counters, so the
+/// invariant a poisoning panic could have broken is "a count is one
+/// off", which beats killing the worker loop (nbl-lint pass `panic`
+/// bans `.lock().unwrap()` on the hot path).
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Mean of a slice (0.0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

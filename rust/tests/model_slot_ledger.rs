@@ -1,0 +1,197 @@
+//! Bounded-exhaustive model check of the slot-lifecycle state machine
+//! (DESIGN.md §Static analysis, dynamic back-stops).
+//!
+//! [`SlotLedger`] maintains three derived quantities incrementally —
+//! the ascending occupied-index list, the free count, and the O(1)
+//! free-head hint — and the serving loop trusts all three every
+//! iteration. This harness drives EVERY op sequence up to a bounded
+//! depth (reserve / set_pos / release over every slot, including a
+//! deliberately out-of-range index) against a naive oracle that
+//! re-scans a plain state vector from scratch, comparing return values
+//! and every public observation after every step. A divergence prints
+//! the exact op trace that produced it.
+//!
+//! Depth/width are small by default so the check rides in tier-1; the
+//! nightly model-check job sets `NBL_MODEL_EXHAUSTIVE=1` for the deep
+//! configuration (run it `--release`). Everything here is XLA-free, so
+//! the nightly Miri job can interpret it too.
+
+use nbl::kvcache::ledger::{SlotLedger, SlotState};
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Reserve(usize),
+    SetPos(usize, usize),
+    Release(usize),
+}
+
+/// Naive reference model: a bare state vector, every derived quantity
+/// re-derived by a full rescan (the invariant definitions, literally).
+#[derive(Clone)]
+struct Naive {
+    rows: usize,
+    slots: Vec<SlotState>,
+}
+
+impl Naive {
+    fn new(rows: usize) -> Naive {
+        Naive { rows, slots: vec![SlotState::Free; rows] }
+    }
+
+    fn occupied(&self) -> Vec<usize> {
+        (0..self.rows)
+            .filter(|&s| matches!(self.slots[s], SlotState::Occupied(_)))
+            .collect()
+    }
+
+    fn free(&self) -> Vec<usize> {
+        (0..self.rows).filter(|&s| self.slots[s] == SlotState::Free).collect()
+    }
+
+    /// Apply `op`; returns whether it should succeed.
+    fn apply(&mut self, op: Op) -> bool {
+        match op {
+            Op::Reserve(s) => {
+                if s >= self.rows || self.slots[s] != SlotState::Free {
+                    return false;
+                }
+                self.slots[s] = SlotState::Reserved;
+                true
+            }
+            Op::SetPos(s, p) => {
+                if s >= self.rows {
+                    return false;
+                }
+                self.slots[s] = SlotState::Occupied(p);
+                true
+            }
+            Op::Release(s) => {
+                if s >= self.rows {
+                    return false;
+                }
+                self.slots[s] = SlotState::Free;
+                true
+            }
+        }
+    }
+}
+
+/// Compare every public observation of the ledger against the oracle.
+fn assert_agrees(l: &SlotLedger, n: &Naive, trace: &[Op]) {
+    assert!(
+        l.occupied().windows(2).all(|w| w[0] < w[1]),
+        "occ not strictly ascending after {trace:?}: {:?}",
+        l.occupied()
+    );
+    assert_eq!(l.occupied(), n.occupied().as_slice(), "occ diverged after {trace:?}");
+    assert_eq!(l.occupancy(), n.occupied().len(), "occupancy diverged after {trace:?}");
+    let free = n.free();
+    assert_eq!(l.free_slots(), free.len(), "free count diverged after {trace:?}");
+    assert_eq!(l.free_slot(), free.first().copied(), "free head diverged after {trace:?}");
+    assert_eq!(l.rows(), n.rows);
+    // probe one index past the end too: out-of-range must read as None
+    for s in 0..n.rows + 1 {
+        assert_eq!(l.state(s), n.slots.get(s).copied(), "state({s}) diverged after {trace:?}");
+        let want_pos = match n.slots.get(s) {
+            Some(SlotState::Occupied(p)) => Some(*p),
+            _ => None,
+        };
+        assert_eq!(l.pos(s), want_pos, "pos({s}) diverged after {trace:?}");
+        assert_eq!(
+            l.is_reserved(s),
+            matches!(n.slots.get(s), Some(SlotState::Reserved)),
+            "is_reserved({s}) diverged after {trace:?}"
+        );
+    }
+}
+
+/// The op alphabet at one tree node: every action on every slot, plus
+/// the out-of-range index `rows`. `set_pos` takes a depth-dependent
+/// position so stale-position bugs cannot hide behind equal values.
+fn alphabet(rows: usize, depth: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(3 * (rows + 1));
+    for s in 0..=rows {
+        ops.push(Op::Reserve(s));
+        ops.push(Op::SetPos(s, depth + 1));
+        ops.push(Op::Release(s));
+    }
+    ops
+}
+
+fn dfs(l: &SlotLedger, n: &Naive, depth_left: usize, trace: &mut Vec<Op>, visited: &mut u64) {
+    if depth_left == 0 {
+        return;
+    }
+    for op in alphabet(n.rows, trace.len()) {
+        let mut l2 = l.clone();
+        let mut n2 = n.clone();
+        let want = n2.apply(op);
+        let got = match op {
+            Op::Reserve(s) => l2.reserve(s).is_ok(),
+            Op::SetPos(s, p) => l2.set_pos(s, p),
+            Op::Release(s) => l2.release(s),
+        };
+        trace.push(op);
+        assert_eq!(got, want, "return value diverged after {trace:?}");
+        assert_agrees(&l2, &n2, trace);
+        *visited += 1;
+        dfs(&l2, &n2, depth_left - 1, trace, visited);
+        trace.pop();
+    }
+}
+
+fn exhaustive() -> bool {
+    std::env::var("NBL_MODEL_EXHAUSTIVE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+#[test]
+fn model_ledger_bounded_exhaustive_matches_oracle() {
+    // 2 rows / depth 4 visits ~6.6k states in well under a second; the
+    // nightly exhaustive configuration (3 rows / depth 6) visits ~3M
+    // and wants --release.
+    let (rows, depth) = if exhaustive() { (3, 6) } else { (2, 4) };
+    let ledger = SlotLedger::new(rows);
+    let naive = Naive::new(rows);
+    let mut visited = 0u64;
+    dfs(&ledger, &naive, depth, &mut Vec::new(), &mut visited);
+    let floor = if exhaustive() { 1_000_000 } else { 5_000 };
+    assert!(visited >= floor, "model check degenerated: only {visited} states visited");
+}
+
+#[test]
+fn model_ledger_long_random_walk_matches_oracle() {
+    // breadth where the DFS has depth: one deterministic 20k-op walk
+    // over a wider ledger, same oracle, same full-observation compare.
+    let rows = 5usize;
+    let mut l = SlotLedger::new(rows);
+    let mut n = Naive::new(rows);
+    let mut x = 0x2545F4914F6CDD1Du64;
+    let mut window: Vec<Op> = Vec::new();
+    for i in 0..20_000usize {
+        // xorshift*: deterministic, no external RNG dep
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        let r = (x.wrapping_mul(0x2545F4914F6CDD1D) >> 32) as usize;
+        let s = r % (rows + 1); // includes the out-of-range index
+        let op = match (r / 7) % 3 {
+            0 => Op::Reserve(s),
+            1 => Op::SetPos(s, i),
+            _ => Op::Release(s),
+        };
+        let want = n.apply(op);
+        let got = match op {
+            Op::Reserve(s) => l.reserve(s).is_ok(),
+            Op::SetPos(s, p) => l.set_pos(s, p),
+            Op::Release(s) => l.release(s),
+        };
+        // keep a short trailing window so a failure prints actionable
+        // context instead of 20k ops
+        if window.len() == 16 {
+            window.remove(0);
+        }
+        window.push(op);
+        assert_eq!(got, want, "return value diverged at step {i}, tail {window:?}");
+        assert_agrees(&l, &n, &window);
+    }
+}

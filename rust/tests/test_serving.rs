@@ -1290,6 +1290,127 @@ fn paged_block_accounting_returns_to_zero_after_churn() {
 }
 
 #[test]
+fn paged_accounting_survives_error_injection_churn() {
+    // error-injection extension of the churn invariant above: every
+    // FAILED attach/grow (slot already attached, slot out of range,
+    // ask over budget) and every mid-sequence preemption must leave
+    // the pool identity intact — pool bytes equal private frames times
+    // bytes-per-block, on both the target and draft sides. An
+    // independent naive oracle predicts each op's outcome, so an op
+    // that "fails" but still moves the pool (or succeeds when it
+    // should not have) is caught at the op that broke it.
+    check(
+        0xE44012,
+        30,
+        |g| {
+            let n = g.size(80);
+            (0..n)
+                .map(|_| {
+                    (
+                        g.usize_in(0, 4),
+                        // slot 8 is out of range on an 8-row table:
+                        // deliberate error injection
+                        g.usize_in(0, 8),
+                        g.usize_in(1, 64),
+                        g.usize_in(1, 48),
+                    )
+                })
+                .collect::<Vec<(usize, usize, usize, usize)>>()
+        },
+        |ops| {
+            const BT: usize = 4; // block size in tokens
+            const BPB: usize = 100; // same both sides: used_blocks * BPB stays exact
+            const CAP: usize = 24 * BPB;
+            let blocks = |tokens: usize| (tokens + BT - 1) / BT;
+            let pool = Arc::new(KvPool::new(CAP));
+            let mut pk = nbl::kvcache::paged::PagedKv::new(BT, BPB, BPB, pool.clone(), 8);
+            // oracle state: (target frames, draft frames, target tokens,
+            // draft tokens) per attached slot
+            let mut model: [Option<(usize, usize, usize, usize)>; 8] = Default::default();
+            let held = |m: &[Option<(usize, usize, usize, usize)>; 8]| -> usize {
+                m.iter().flatten().map(|&(tf, df, _, _)| (tf + df) * BPB).sum()
+            };
+            for &(kind, slot, t, d) in ops {
+                match kind {
+                    0 | 4 => {
+                        // kind 4 inflates the ask so over-budget attach
+                        // failures are common, not incidental
+                        let t = if kind == 4 { t * 8 } else { t };
+                        let want = match model.get(slot) {
+                            Some(None) => {
+                                let bytes = (blocks(t) + blocks(d)) * BPB;
+                                pool.in_use() + bytes <= CAP
+                            }
+                            _ => false, // already attached or out of range
+                        };
+                        let got = pk.attach(slot, t, Some(d)).is_ok();
+                        if got != want {
+                            return Err(format!("attach({slot},{t},{d}) ok={got}, oracle {want}"));
+                        }
+                        if got {
+                            model[slot] = Some((blocks(t), blocks(d), t, d));
+                        }
+                    }
+                    1 => {
+                        let want = match model.get(slot) {
+                            Some(Some((tf, df, tt, dt))) => {
+                                let t_new = blocks(t.max(*tt)).saturating_sub(*tf);
+                                let d_new = blocks(d.max(*dt)).saturating_sub(*df);
+                                if pool.in_use() + (t_new + d_new) * BPB <= CAP {
+                                    Some((tf + t_new, df + d_new, t.max(*tt), d.max(*dt)))
+                                } else {
+                                    None
+                                }
+                            }
+                            _ => None, // unattached or out of range
+                        };
+                        let got = pk.grow(slot, t, Some(d));
+                        if got != want.is_some() {
+                            return Err(format!(
+                                "grow({slot},{t},{d}) ok={got}, oracle {}",
+                                want.is_some()
+                            ));
+                        }
+                        if let Some(next) = want {
+                            model[slot] = Some(next);
+                        }
+                    }
+                    2 => {
+                        pk.release(slot);
+                        if let Some(m) = model.get_mut(slot) {
+                            *m = None;
+                        }
+                    }
+                    _ => {
+                        pk.preempt(slot);
+                        if let Some(m) = model.get_mut(slot) {
+                            *m = None;
+                        }
+                    }
+                }
+                let s = pk.stats();
+                if pool.in_use() != s.used_blocks * BPB || pool.in_use() != held(&model) {
+                    return Err(format!(
+                        "identity broken after kind {kind} on slot {slot}: pool {} bytes, \
+                         tables {} blocks, oracle {} bytes",
+                        pool.in_use(),
+                        s.used_blocks,
+                        held(&model)
+                    ));
+                }
+            }
+            for slot in 0..8 {
+                pk.release(slot);
+            }
+            if pool.in_use() != 0 {
+                return Err(format!("leaked {} bytes after churn", pool.in_use()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn kv_pool_accounting_returns_to_zero_after_churn() {
     // invariant: reserved bytes always equal the sum of live leases, and
     // return to exactly zero after arbitrary join/leave churn
