@@ -130,6 +130,20 @@ def rust_stats_keys():
     return sorted(set(keys))
 
 
+# The observability keys the stats endpoint contracts to expose
+# (mirrored by REQUIRED_OBSERVABILITY_KEYS in
+# rust/nbl-lint/src/gauges.rs — keep in sync): TTFT attribution
+# percentiles, flight-recorder ring counters, timing-retention
+# counters, and per-iteration phase gauges.
+REQUIRED_OBSERVABILITY_KEYS = frozenset(
+    [f"{agg}_{phase}_ms" for agg in ("mean", "p50", "p95", "p99")
+     for phase in ("queue", "prefill", "stall", "park")]
+    + ["timings_retained", "timings_dropped", "timings_capacity"]
+    + ["trace_events", "trace_dropped", "trace_capacity"]
+    + [f"phase_{p}_ms" for p in ("intake", "admission", "chunked", "observe", "decode")]
+)
+
+
 def check_gauges(dump_path):
     """Diff nbl-lint's gauge dump against this script's own parse."""
     with open(dump_path) as f:
@@ -150,6 +164,13 @@ def check_gauges(dump_path):
             "gauge scanners disagree on stats_to_json keys "
             f"(nbl-lint only: {only_lint}; python only: {only_py}) — "
             "one of the two parsers has rotted against api.rs"
+        )
+    missing_obs = sorted(REQUIRED_OBSERVABILITY_KEYS - set(py_keys))
+    if missing_obs:
+        errors.append(
+            "stats_to_json dropped required observability key(s) "
+            f"{missing_obs} (TTFT attribution / trace / retention / phase "
+            "surface, DESIGN.md §Observability)"
         )
     return errors
 

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Flight-recorder artifact gate: validate a Chrome-trace JSON export.
+
+The serve_bench `--trace` arm writes the recorder's Perfetto/Chrome
+trace (DESIGN.md §Observability). A malformed export fails OPEN in the
+viewer — Perfetto silently drops unbalanced or mis-ordered events and
+renders whatever is left, so a recorder regression would look like "the
+server did less work", not like an error. This gate checks the
+invariants the exporter guarantees by construction:
+
+  1. the file is JSON with a non-empty `traceEvents` array;
+  2. every event carries name/ph/ts/pid/tid, ph is B, E, or i, and ts
+     is a non-negative number;
+  3. ts is globally non-decreasing (the exporter sorts with a
+     same-microsecond class tie-break);
+  4. per (pid, tid) lane, B/E events form a valid LIFO stack with
+     matching names, and every stack is empty at end-of-trace (the
+     complete-span ring emits both edges of a span or neither);
+  5. (--require) every named span family actually occurred — the mixed
+     trace workload must exercise admission, chunked prefill, decode,
+     speculation, and preemption, or a scheduler hook has regressed.
+
+Run from the repo root:
+  python ci/check_trace.py rust/reports/serve_trace.json \
+      --require submit,queue,admit_warm,admit_chunked,prefill_chunk
+"""
+
+import argparse
+import json
+import numbers
+import sys
+
+PHASES = {"B", "E", "i"}
+REQUIRED_FIELDS = ("name", "ph", "ts", "pid", "tid")
+
+
+def check_events(events, require):
+    errors = []
+    if not isinstance(events, list) or not events:
+        return ["traceEvents is empty or not an array"]
+
+    last_ts = None
+    stacks = {}  # (pid, tid) -> [name, ...]
+    seen = set()
+    spans = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        missing = [f for f in REQUIRED_FIELDS if f not in ev]
+        if missing:
+            errors.append(f"event {i}: missing field(s) {missing}")
+            continue
+        name, ph, ts = ev["name"], ev["ph"], ev["ts"]
+        if ph not in PHASES:
+            errors.append(f"event {i} ({name}): bad ph {ph!r}")
+            continue
+        if not isinstance(ts, numbers.Real) or ts < 0:
+            errors.append(f"event {i} ({name}): bad ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(
+                f"event {i} ({name}): ts {ts} decreases from {last_ts} — "
+                "the exporter's sort has regressed"
+            )
+        last_ts = ts
+
+        lane = (ev["pid"], ev["tid"])
+        stack = stacks.setdefault(lane, [])
+        if ph == "B":
+            stack.append(name)
+            spans += 1
+            seen.add(name)
+        elif ph == "E":
+            if not stack:
+                errors.append(f"event {i} ({name}): E with no open span on lane {lane}")
+            elif stack[-1] != name:
+                errors.append(
+                    f"event {i}: E({name}) closes B({stack[-1]}) on lane {lane} — "
+                    "spans must nest"
+                )
+                stack.pop()
+            else:
+                stack.pop()
+        else:  # instant
+            seen.add(name)
+
+    for lane, stack in sorted(stacks.items()):
+        if stack:
+            errors.append(f"lane {lane}: {len(stack)} unclosed span(s) {stack}")
+
+    missing = sorted(set(require) - seen)
+    if missing:
+        errors.append(
+            f"required span kind(s) never occurred: {missing} "
+            f"(trace has {sorted(seen)})"
+        )
+    return errors, spans, seen
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON file (serve_bench --trace output)")
+    ap.add_argument(
+        "--require",
+        default="",
+        help="comma-separated span/instant names that must appear at least once",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"TRACE INVALID: cannot load {args.trace}: {e}")
+        sys.exit(1)
+
+    require = [r for r in args.require.split(",") if r]
+    result = check_events(data.get("traceEvents"), require)
+    if isinstance(result, list):  # early-out error shape
+        errors, spans, seen = result, 0, set()
+    else:
+        errors, spans, seen = result
+
+    if errors:
+        print(f"TRACE INVALID: {len(errors)} problem(s) in {args.trace}")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    n = len(data["traceEvents"])
+    print(
+        f"trace OK: {n} events, {spans} complete spans, "
+        f"{len(seen)} distinct kinds ({', '.join(sorted(seen))})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,13 @@
 //! expansion counter stays 0 while the splice counter advances). Emits
 //! the concurrency ratio that ci/bench_baseline.json floors.
 //!
+//! `--trace <path>` runs the ISSUE 8 flight-recorder arm instead: one
+//! mixed workload with speculation, chunked prefill, warm prefix
+//! admissions, AND a paged budget tight enough to preempt — every span
+//! family in a single Chrome-trace JSON (open it in Perfetto or
+//! chrome://tracing), written to `path` and validated by
+//! ci/check_trace.py. `--trace-events` sizes the ring (default 65536).
+//!
 //!     cargo run --release --example serve_bench \
 //!         [-- --m 2 --requests 24 --max-tokens 48 \
 //!              --mode spec --spec-width 4 --draft-m 4 \
@@ -68,6 +75,9 @@ struct LoadResult {
     summary: MetricsSummary,
     gauges: SchedulerGauges,
     timings: Vec<RequestTiming>,
+    /// Chrome-trace JSON fetched over TCP (`{"trace": true}`) before
+    /// shutdown — `Some` only when the load ran with `fetch_trace`.
+    trace_json: Option<String>,
 }
 
 impl LoadResult {
@@ -95,6 +105,7 @@ fn run_load(
     prime: &[String],
     prompts: &[String],
     max_tokens: usize,
+    fetch_trace: bool,
 ) -> anyhow::Result<LoadResult> {
     let server = Arc::new(Server::new(engine.clone(), cfg));
     let metrics = server.metrics.clone();
@@ -163,6 +174,19 @@ fn run_load(
         ttfts_ms.extend(ttft);
     }
     let wall_s = t_all.elapsed_s();
+    // the flight recorder lives in the server the front-end owns, so the
+    // export must happen while the front-end is still up
+    let trace_json = if fetch_trace {
+        let stream = TcpStream::connect(front.addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, r#"{{"trace": true}}"#)?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Some(line.trim().to_string())
+    } else {
+        None
+    };
     front.shutdown();
     Ok(LoadResult {
         wall_s,
@@ -171,6 +195,7 @@ fn run_load(
         summary: metrics.summary(),
         gauges: metrics.gauges(),
         timings: metrics.timings(),
+        trace_json,
     })
 }
 
@@ -241,9 +266,9 @@ fn run_paged_compare(
         prefix_cache_bytes: 64 << 20,
         ..ServerConfig::default()
     };
-    let cont = run_load(engine, contiguous_cfg, &[], &prompts, max_tokens)?;
+    let cont = run_load(engine, contiguous_cfg, &[], &prompts, max_tokens, false)?;
     let prime = vec![prompts[0].clone()];
-    let paged = run_load(engine, paged_cfg, &prime, &prompts, max_tokens)?;
+    let paged = run_load(engine, paged_cfg, &prime, &prompts, max_tokens, false)?;
 
     let cg = &cont.gauges;
     let pg = &paged.gauges;
@@ -310,6 +335,7 @@ fn run_paged_compare(
         ("schema", Json::Str("nbl-bench/v1".into())),
         ("bench", Json::Str("serve_bench".into())),
         ("mode", Json::Str("paged".into())),
+        ("provenance", nbl::report::provenance()),
         (
             "config",
             Json::obj(vec![
@@ -326,6 +352,158 @@ fn run_paged_compare(
     let path = nbl::report::save_json("serve_bench_paged", &bench_json)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("\nbench JSON written to {}", path.display());
+    println!("serve_bench OK");
+    Ok(())
+}
+
+/// The ISSUE 8 flight-recorder arm (`--trace <path>`): ONE mixed
+/// workload engineered to exercise every span family at once —
+/// self-speculative decode (`spec_draft`/`spec_verify`), chunked
+/// prefill of long cold prompts (`admit_chunked`/`prefill_chunk`),
+/// warm shared-prefix admissions (`admit_warm`, primed), and a paged
+/// two-slot KV budget tight enough that decode growth must preempt
+/// (`preempt`/`park`/`resume`). The Chrome-trace JSON is fetched over
+/// TCP (`{"trace": true}`) before the front-end shuts down, written to
+/// `path` for ci/check_trace.py, and the required span kinds are
+/// machine-checked here too — a trace missing any of them means a
+/// recorder hook regressed, not that the workload got lucky.
+#[allow(clippy::too_many_arguments)]
+fn run_trace(
+    engine: &Arc<Engine>,
+    wb: &Workbench,
+    n_requests: usize,
+    max_tokens: usize,
+    chunk: usize,
+    spec_width: usize,
+    block_tokens: usize,
+    trace_events: usize,
+    m: usize,
+    path: &str,
+) -> anyhow::Result<()> {
+    let max_ctx = engine.config().max_ctx;
+    let n_layers = engine.config().n_layers;
+    // same self-speculative draft as the spec arm: the SAME weights
+    // under an NBL-heavier plan
+    let draft_m = (m + 2).min(n_layers - 1).max(1);
+    let draft_plan = wb
+        .report
+        .plan_attn_nbl(draft_m, Criterion::CcaBound)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // workload: warm shared-prefix shorts, with every 6th request a
+    // max-context cold prompt whose uncovered suffix spans multiple
+    // chunks (the chunked-prefill machine), all under a 2-slot paged
+    // budget so concurrent decode growth exhausts the block pool
+    let snap = if chunk > 0 { chunk } else { 128 };
+    let share = (2 * snap).min(max_ctx.saturating_sub(64));
+    let suffix_len = 16usize;
+    let shared = corpus_text(&wb.calib.tokens, 0, share);
+    let long_every = 6usize;
+    let prompts: Vec<String> = (0..n_requests)
+        .map(|i| {
+            if long_every > 0 && i % long_every == 0 {
+                let start = (share + 1 + i * 997) % (wb.calib.tokens.len() - max_ctx - 1);
+                corpus_text(&wb.calib.tokens, start, max_ctx)
+            } else {
+                let start = (share + 1 + i * 131) % (wb.calib.tokens.len() - suffix_len - 1);
+                format!("{shared}{}", corpus_text(&wb.calib.tokens, start, suffix_len))
+            }
+        })
+        .collect();
+    let per_slot = nbl::kvcache::slot_bytes(engine.config(), &engine.plan);
+    let budget = 2 * per_slot;
+    println!(
+        "trace workload: {n_requests} requests ({share}-token shared prefix, \
+         max-context long every {long_every}), chunk {chunk}, spec width \
+         {spec_width}, {block_tokens}-token blocks, budget = 2 contiguous \
+         slots ({budget} bytes), ring = {trace_events} events"
+    );
+
+    let cfg = ServerConfig {
+        kv_capacity_bytes: budget,
+        spec: Some(SpecConfig { draft_plan, width: spec_width }),
+        prefill_chunk: chunk,
+        prefix_cache_bytes: 64 << 20,
+        kv_block_tokens: block_tokens,
+        trace_events,
+        ..ServerConfig::default()
+    };
+    let prime_start = (share + 7) % (wb.calib.tokens.len() - suffix_len - 1);
+    let prime = vec![format!(
+        "{shared}{}",
+        corpus_text(&wb.calib.tokens, prime_start, suffix_len)
+    )];
+    let res = run_load(engine, cfg, &prime, &prompts, max_tokens, true)?;
+
+    let trace_text = res.trace_json.expect("trace arm always fetches the recorder");
+    let out = std::path::Path::new(path);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, &trace_text)?;
+
+    let j = Json::parse(&trace_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let events = j
+        .get("traceEvents")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .as_arr()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut by_name: std::collections::BTreeMap<String, usize> = Default::default();
+    for ev in events {
+        if ev.get("ph").map_err(|e| anyhow::anyhow!("{e}"))?.as_str().unwrap_or("") == "E" {
+            continue; // count each span once, at its B (instants are "i")
+        }
+        let name = ev
+            .get("name")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_str()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        *by_name.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    let g = &res.gauges;
+    println!("\n=== serve_bench results (Attn NBL-{m}, trace arm) ===");
+    println!("trace events exported    {}", events.len());
+    for (name, count) in &by_name {
+        println!("  {name:<16} {count}");
+    }
+    println!("preemptions              {}", g.preemptions);
+    println!("prefill chunks           {}", g.prefill_chunks);
+    println!("spec rounds              {}", g.spec_rounds);
+    println!("prefix hits              {}", g.prefix_hits);
+
+    // the ISSUE 8 acceptance criterion, machine-checked: the one trace
+    // covers admission (cold+warm+chunked), chunked prefill, decode,
+    // speculation, and preemption/parking/resume
+    assert!(
+        g.preemptions > 0,
+        "the 2-slot paged budget must force at least one preemption"
+    );
+    let required = [
+        "submit",
+        "queue",
+        "admit_warm",
+        "admit_chunked",
+        "prefill_chunk",
+        "decode",
+        "spec_draft",
+        "spec_verify",
+        "preempt",
+        "park",
+        "resume",
+        "finish",
+    ];
+    for name in required {
+        assert!(
+            by_name.contains_key(name),
+            "trace must contain at least one '{name}' event; got {:?}",
+            by_name.keys().collect::<Vec<_>>()
+        );
+    }
+
+    println!("\ntrace JSON written to {}", out.display());
     println!("serve_bench OK");
     Ok(())
 }
@@ -368,9 +546,9 @@ fn run_prefix_share(
         prefix_cache_bytes: 64 << 20,
         ..ServerConfig::default()
     };
-    let cold = run_load(engine, cold_cfg, &[], &prompts, max_tokens)?;
+    let cold = run_load(engine, cold_cfg, &[], &prompts, max_tokens, false)?;
     let prime = vec![prompts[0].clone()];
-    let warm = run_load(engine, warm_cfg, &prime, &prompts, max_tokens)?;
+    let warm = run_load(engine, warm_cfg, &prime, &prompts, max_tokens, false)?;
 
     let p50_cold = percentile(&cold.ttfts_ms, 50.0);
     let p50_warm = percentile(&warm.ttfts_ms, 50.0);
@@ -416,6 +594,7 @@ fn run_prefix_share(
         ("schema", Json::Str("nbl-bench/v1".into())),
         ("bench", Json::Str("serve_bench".into())),
         ("mode", Json::Str("prefix".into())),
+        ("provenance", nbl::report::provenance()),
         (
             "config",
             Json::obj(vec![
@@ -464,6 +643,25 @@ fn main() -> anyhow::Result<()> {
     };
     println!("serving plan: {} [{}]", plan.kind.label(), plan.describe());
     let engine = Arc::new(wb.engine.with_plan(plan).map_err(|e| anyhow::anyhow!("{e}"))?);
+
+    // --- ISSUE 8 flight-recorder arm: one spec+chunked+paged workload
+    // with the trace ring on, exported for ci/check_trace.py, then exit
+    if let Some(path) = args.get("trace") {
+        let block_tokens = args.get_usize("block-tokens", 64)?;
+        let trace_events = args.get_usize("trace-events", 65536)?;
+        return run_trace(
+            &engine,
+            &wb,
+            n_requests,
+            max_tokens,
+            chunk,
+            spec_width,
+            block_tokens,
+            trace_events,
+            m,
+            path,
+        );
+    }
 
     // --- ISSUE 5 shared-prefix arm: warm-vs-cold prefix reuse, then exit
     if args.flag("prefix-share") {
@@ -515,7 +713,7 @@ fn main() -> anyhow::Result<()> {
 
     let server_cfg = ServerConfig { mode, spec, prefill_chunk: chunk, ..ServerConfig::default() };
     println!("mode: {mode:?}, prefill chunk: {chunk} (0 = whole-prompt)");
-    let res = run_load(&engine, server_cfg.clone(), &[], &prompts, max_tokens)?;
+    let res = run_load(&engine, server_cfg.clone(), &[], &prompts, max_tokens, false)?;
 
     // --- report
     let s = &res.summary;
@@ -592,7 +790,7 @@ fn main() -> anyhow::Result<()> {
     let mut p50_short_unchunked = None;
     if ttft_compare && mode == BatchMode::Continuous {
         let whole_cfg = ServerConfig { prefill_chunk: 0, ..server_cfg };
-        let whole = run_load(&engine, whole_cfg, &[], &prompts, max_tokens)?;
+        let whole = run_load(&engine, whole_cfg, &[], &prompts, max_tokens, false)?;
         let p50_whole = whole.p50_short_ttft_ms();
         p50_short_unchunked = Some(p50_whole);
         println!("\n[ttft-compare] p50 short-request TTFT");
@@ -638,6 +836,7 @@ fn main() -> anyhow::Result<()> {
         ("schema", Json::Str("nbl-bench/v1".into())),
         ("bench", Json::Str("serve_bench".into())),
         ("mode", Json::Str(mode_name.clone())),
+        ("provenance", nbl::report::provenance()),
         (
             "config",
             Json::obj(vec![

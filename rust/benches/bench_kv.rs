@@ -161,6 +161,7 @@ fn main() {
     let bench_json = Json::obj(vec![
         ("schema", Json::Str("nbl-bench/v1".into())),
         ("bench", Json::Str("bench_kv".into())),
+        ("provenance", nbl::report::provenance()),
         (
             "config",
             Json::obj(vec![

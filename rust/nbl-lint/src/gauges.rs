@@ -9,7 +9,11 @@
 //!   B. every floored key in ci/bench_baseline.json names a metric the
 //!      mapped nbl-bench emitter actually writes, so a renamed emitter
 //!      string can no longer silently turn a CI floor into a no-op
-//!      (the PR 5/6 string-drift bug class).
+//!      (the PR 5/6 string-drift bug class);
+//!   C. the ISSUE 8 observability key families (TTFT attribution,
+//!      flight-recorder counters, timing-retention counters, per-phase
+//!      gauges) are all present — a rename or revert in stats_to_json
+//!      fails here instead of silently dropping a dashboard column.
 //!
 //! `nbl-lint --dump-gauges` prints the canonical registry as JSON for
 //! ci/check_artifacts.py to cross-check with an independent parser.
@@ -21,6 +25,40 @@ use std::path::Path;
 const API: &str = "rust/src/server/api.rs";
 const METRICS: &str = "rust/src/server/metrics.rs";
 const BASELINE: &str = "ci/bench_baseline.json";
+
+/// Stats keys the observability surface contracts to expose (mirrored
+/// by ci/check_artifacts.py REQUIRED_OBSERVABILITY_KEYS — keep in
+/// sync): per-request TTFT attribution percentiles, flight-recorder
+/// ring counters, bounded-retention counters, and per-phase gauges.
+const REQUIRED_OBSERVABILITY_KEYS: &[&str] = &[
+    "mean_queue_ms",
+    "p50_queue_ms",
+    "p95_queue_ms",
+    "p99_queue_ms",
+    "mean_prefill_ms",
+    "p50_prefill_ms",
+    "p95_prefill_ms",
+    "p99_prefill_ms",
+    "mean_stall_ms",
+    "p50_stall_ms",
+    "p95_stall_ms",
+    "p99_stall_ms",
+    "mean_park_ms",
+    "p50_park_ms",
+    "p95_park_ms",
+    "p99_park_ms",
+    "timings_retained",
+    "timings_dropped",
+    "timings_capacity",
+    "trace_events",
+    "trace_dropped",
+    "trace_capacity",
+    "phase_intake_ms",
+    "phase_admission_ms",
+    "phase_chunked_ms",
+    "phase_observe_ms",
+    "phase_decode_ms",
+];
 
 /// Map a bench name from a dotted baseline key to its emitter source.
 fn emitter_for(bench: &str) -> Option<&'static str> {
@@ -195,6 +233,22 @@ pub fn gauge_pass(root: &Path, out: &mut Vec<Finding>) {
         }
     }
 
+    // C: the observability surface keeps its contracted key families
+    for want in REQUIRED_OBSERVABILITY_KEYS {
+        if !keys.iter().any(|k| k == want) {
+            out.push(Finding {
+                file: API.to_string(),
+                line: 1,
+                pass: "gauge",
+                msg: format!(
+                    "stats_to_json no longer emits required observability key \
+                     `{want}` (TTFT attribution / trace / retention / phase \
+                     surface, DESIGN.md §Observability)"
+                ),
+            });
+        }
+    }
+
     // B: floored baseline keys name metrics their emitter still writes
     let Ok(baseline) = std::fs::read_to_string(root.join(BASELINE)) else {
         return;
@@ -260,6 +314,17 @@ mod tests {
         let keys = floored_baseline_keys(text);
         assert_eq!(keys.len(), 1);
         assert_eq!(keys[0].0, "a.x");
+    }
+
+    #[test]
+    fn required_observability_keys_are_distinct() {
+        // the contract list is consumed as a set diff against the parsed
+        // endpoint keys; a duplicate would mask a genuinely missing key
+        let mut seen = std::collections::BTreeSet::new();
+        for k in REQUIRED_OBSERVABILITY_KEYS {
+            assert!(seen.insert(*k), "duplicate required key {k}");
+        }
+        assert!(seen.len() >= 27);
     }
 
     #[test]

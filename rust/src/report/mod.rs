@@ -101,6 +101,36 @@ pub fn save_json(id: &str, j: &Json) -> Result<PathBuf> {
     Ok(path)
 }
 
+/// Provenance block every bench artifact embeds: which commit produced
+/// the numbers, when, and whether the fast (CI-scale) profile was on.
+/// Best-effort by design — a detached tarball build reports "unknown"
+/// rather than failing the bench.
+pub fn provenance() -> Json {
+    let git_sha = std::env::var("GITHUB_SHA")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(|| {
+            std::process::Command::new("git")
+                .args(["rev-parse", "--short", "HEAD"])
+                .output()
+                .ok()
+                .filter(|o| o.status.success())
+                .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+                .filter(|s| !s.is_empty())
+        })
+        .unwrap_or_else(|| "unknown".to_string());
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let nbl_fast = std::env::var("NBL_FAST").is_ok_and(|v| v == "1");
+    Json::obj(vec![
+        ("git_sha", Json::Str(git_sha)),
+        ("unix_time", Json::Num(unix_time as f64)),
+        ("nbl_fast", Json::Bool(nbl_fast)),
+    ])
+}
+
 /// Format a ratio like the paper ("1.27"), with 1 = baseline.
 pub fn ratio(x: f64) -> String {
     format!("{x:.2}")
@@ -145,5 +175,14 @@ mod tests {
     fn formatters() {
         assert_eq!(ratio(1.266), "1.27");
         assert_eq!(pct(0.702), "70.2");
+    }
+
+    #[test]
+    fn provenance_is_serializable() {
+        let p = provenance();
+        assert!(!p.get("git_sha").unwrap().as_str().unwrap().is_empty());
+        assert!(p.get("unix_time").unwrap().as_f64().unwrap() >= 0.0);
+        let back = Json::parse(&p.to_string()).unwrap();
+        assert!(back.get("nbl_fast").unwrap().as_bool().is_ok());
     }
 }

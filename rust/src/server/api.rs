@@ -4,6 +4,7 @@
 use crate::error::{Error, Result};
 use crate::sampling::SamplingParams;
 use crate::server::metrics::{MetricsSummary, SchedulerGauges};
+use crate::server::trace::TraceStats;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -91,6 +92,15 @@ pub fn is_stats_request(j: &Json) -> bool {
         .unwrap_or(false)
 }
 
+/// True if a wire line is a flight-recorder export query
+/// ({"trace": true}): the reply is a Chrome-trace JSON object built
+/// from the ring's current contents.
+pub fn is_trace_request(j: &Json) -> bool {
+    j.opt("trace")
+        .and_then(|v| v.as_bool().ok())
+        .unwrap_or(false)
+}
+
 /// Wire form of the stats endpoint: request/latency summary plus the
 /// scheduler's continuous-batching gauges (queue depth, per-iteration
 /// batch occupancy, KV-pool utilization). `kv_in_use`/`kv_capacity` are
@@ -100,6 +110,7 @@ pub fn stats_to_json(
     g: &SchedulerGauges,
     kv_in_use: usize,
     kv_capacity: usize,
+    t: &TraceStats,
 ) -> Json {
     let kv_util = if kv_capacity == 0 {
         0.0
@@ -117,6 +128,35 @@ pub fn stats_to_json(
         ("p50_itl_ms", Json::Num(s.p50_itl_s * 1e3)),
         ("p95_itl_ms", Json::Num(s.p95_itl_s * 1e3)),
         ("p99_itl_ms", Json::Num(s.p99_itl_s * 1e3)),
+        // TTFT attribution (queue + prefill + stall == ttft per request;
+        // park is lifetime parking, outside the identity)
+        ("mean_queue_ms", Json::Num(s.mean_queue_s * 1e3)),
+        ("p50_queue_ms", Json::Num(s.p50_queue_s * 1e3)),
+        ("p95_queue_ms", Json::Num(s.p95_queue_s * 1e3)),
+        ("p99_queue_ms", Json::Num(s.p99_queue_s * 1e3)),
+        ("mean_prefill_ms", Json::Num(s.mean_prefill_s * 1e3)),
+        ("p50_prefill_ms", Json::Num(s.p50_prefill_s * 1e3)),
+        ("p95_prefill_ms", Json::Num(s.p95_prefill_s * 1e3)),
+        ("p99_prefill_ms", Json::Num(s.p99_prefill_s * 1e3)),
+        ("mean_stall_ms", Json::Num(s.mean_stall_s * 1e3)),
+        ("p50_stall_ms", Json::Num(s.p50_stall_s * 1e3)),
+        ("p95_stall_ms", Json::Num(s.p95_stall_s * 1e3)),
+        ("p99_stall_ms", Json::Num(s.p99_stall_s * 1e3)),
+        ("mean_park_ms", Json::Num(s.mean_park_s * 1e3)),
+        ("p50_park_ms", Json::Num(s.p50_park_s * 1e3)),
+        ("p95_park_ms", Json::Num(s.p95_park_s * 1e3)),
+        ("p99_park_ms", Json::Num(s.p99_park_s * 1e3)),
+        ("timings_retained", Json::Num(s.timings_retained as f64)),
+        ("timings_dropped", Json::Num(s.timings_dropped as f64)),
+        ("timings_capacity", Json::Num(s.timings_capacity as f64)),
+        ("trace_events", Json::Num(t.recorded as f64)),
+        ("trace_dropped", Json::Num(t.dropped as f64)),
+        ("trace_capacity", Json::Num(t.capacity as f64)),
+        ("phase_intake_ms", Json::Num(g.phase_intake_s * 1e3)),
+        ("phase_admission_ms", Json::Num(g.phase_admission_s * 1e3)),
+        ("phase_chunked_ms", Json::Num(g.phase_chunked_s * 1e3)),
+        ("phase_observe_ms", Json::Num(g.phase_observe_s * 1e3)),
+        ("phase_decode_ms", Json::Num(g.phase_decode_s * 1e3)),
         ("mean_prefill_tok_s", Json::Num(s.mean_prefill_tok_s)),
         ("median_decode_tok_s", Json::Num(s.median_decode_tok_s)),
         ("aggregate_tok_s", Json::Num(s.aggregate_tok_s)),
@@ -224,6 +264,15 @@ mod tests {
             p50_itl_s: 0.004,
             p95_itl_s: 0.006,
             p99_itl_s: 0.007,
+            mean_queue_s: 0.002,
+            p95_queue_s: 0.003,
+            mean_prefill_s: 0.006,
+            mean_stall_s: 0.002,
+            mean_park_s: 0.001,
+            timings_retained: 4,
+            timings_dropped: 0,
+            timings_capacity: 4096,
+            ..Default::default()
         };
         let g = SchedulerGauges {
             iterations: 10,
@@ -260,9 +309,12 @@ mod tests {
             preemptions: 2,
             paged_splices: 3,
             paged_splice_tokens: 256,
+            phase_intake_s: 0.5,
+            phase_decode_s: 1.5,
             ..Default::default()
         };
-        let j = stats_to_json(&s, &g, 512, 1024);
+        let t = TraceStats { capacity: 1024, recorded: 200, dropped: 8 };
+        let j = stats_to_json(&s, &g, 512, 1024, &t);
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("requests").unwrap().as_usize().unwrap(), 4);
         assert_eq!(back.get("queue_depth").unwrap().as_usize().unwrap(), 1);
@@ -292,6 +344,26 @@ mod tests {
         // 320 live of 8 frames * 64 tokens -> 0.375 slack
         let frag = back.get("paged_fragmentation").unwrap().as_f64().unwrap();
         assert!((frag - 0.375).abs() < 1e-9);
+        // TTFT attribution, retention, phase, and trace keys
+        assert!((back.get("mean_queue_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!((back.get("p95_queue_ms").unwrap().as_f64().unwrap() - 3.0).abs() < 1e-9);
+        assert!((back.get("mean_prefill_ms").unwrap().as_f64().unwrap() - 6.0).abs() < 1e-9);
+        assert!((back.get("mean_stall_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        assert!((back.get("mean_park_ms").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert_eq!(back.get("timings_retained").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(back.get("timings_capacity").unwrap().as_usize().unwrap(), 4096);
+        assert_eq!(back.get("trace_events").unwrap().as_usize().unwrap(), 200);
+        assert_eq!(back.get("trace_dropped").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(back.get("trace_capacity").unwrap().as_usize().unwrap(), 1024);
+        assert!((back.get("phase_intake_ms").unwrap().as_f64().unwrap() - 500.0).abs() < 1e-9);
+        assert!((back.get("phase_decode_ms").unwrap().as_f64().unwrap() - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_request_detected() {
+        assert!(is_trace_request(&Json::parse(r#"{"trace": true}"#).unwrap()));
+        assert!(!is_trace_request(&Json::parse(r#"{"trace": false}"#).unwrap()));
+        assert!(!is_trace_request(&Json::parse(r#"{"stats": true}"#).unwrap()));
     }
 
     #[test]

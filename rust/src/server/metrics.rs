@@ -1,12 +1,14 @@
 //! Serving metrics: TTFT, TPOT, prefill speed and throughput in the
 //! paper's §4.1 definitions.
 
+use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::{lock_unpoisoned, mean, median, percentile};
+use crate::util::hist::StreamingHistogram;
+use crate::util::{lock_unpoisoned, median};
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RequestTiming {
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
@@ -14,6 +16,20 @@ pub struct RequestTiming {
     pub ttft_s: f64,
     /// total request wall time, seconds
     pub total_s: f64,
+    /// TTFT attribution (DESIGN.md §Observability): time waiting in the
+    /// FIFO before admission started...
+    pub queue_s: f64,
+    /// ...prefill compute (whole-prompt, warm-suffix, or the sum of the
+    /// chunks)...
+    pub prefill_s: f64,
+    /// ...and everything else before the first token: iterations spent
+    /// behind other requests' chunks/decodes between our own chunks.
+    /// `queue_s + prefill_s + stall_s == ttft_s` by construction.
+    pub stall_s: f64,
+    /// Lifetime seconds spent preempted (KV pages reclaimed, request
+    /// parked host-side). Parking only hits requests that already
+    /// emitted a first token, so it is NOT part of the TTFT identity.
+    pub park_s: f64,
     /// per-generated-token intervals, seconds
     pub token_intervals: Vec<f64>,
 }
@@ -38,12 +54,24 @@ impl RequestTiming {
     }
 }
 
-/// Per-request stopwatch used by the generation loop.
+/// Per-request stopwatch used by the generation loop. Besides TTFT and
+/// inter-token intervals it carries the phase-attribution accumulators:
+/// the scheduler marks admission once (`mark_admitted`), charges prefill
+/// compute as it happens (`add_prefill`), and brackets preemption
+/// parking (`park_begin`/`park_end`); `finish` folds them into the
+/// queue/prefill/stall breakdown.
 pub struct Stopwatch {
     start: Instant,
     first_token: Option<f64>,
     last_mark: f64,
     intervals: Vec<f64>,
+    /// seconds from submit to the scheduler picking the request up
+    admitted: Option<f64>,
+    /// accumulated prefill compute seconds (pre-first-token)
+    prefill_s: f64,
+    /// accumulated parked seconds
+    park_s: f64,
+    park_since: Option<f64>,
 }
 
 impl Default for Stopwatch {
@@ -59,7 +87,53 @@ impl Stopwatch {
             first_token: None,
             last_mark: 0.0,
             intervals: Vec::new(),
+            admitted: None,
+            prefill_s: 0.0,
+            park_s: 0.0,
+            park_since: None,
         }
+    }
+
+    /// Seconds since the request was submitted.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// The scheduler dequeued this request and admission work began.
+    /// First call wins — the sync paths that never queue leave it unset
+    /// and `finish` attributes zero queue time.
+    pub fn mark_admitted(&mut self) {
+        if self.admitted.is_none() {
+            self.admitted = Some(self.elapsed_s());
+        }
+    }
+
+    /// Queue wait so far (0.0 before `mark_admitted`).
+    pub fn queue_s(&self) -> f64 {
+        self.admitted.unwrap_or(0.0)
+    }
+
+    /// Charge `dt_s` seconds of prefill compute (whole-prompt call, a
+    /// warm-prefix restore + suffix, or one chunk).
+    pub fn add_prefill(&mut self, dt_s: f64) {
+        self.prefill_s += dt_s.max(0.0);
+    }
+
+    /// The request was preempted: KV reclaimed, parked host-side.
+    pub fn park_begin(&mut self) {
+        if self.park_since.is_none() {
+            self.park_since = Some(self.elapsed_s());
+        }
+    }
+
+    /// The request was re-admitted; returns this episode's park seconds.
+    pub fn park_end(&mut self) -> f64 {
+        let Some(since) = self.park_since.take() else {
+            return 0.0;
+        };
+        let dt = (self.elapsed_s() - since).max(0.0);
+        self.park_s += dt;
+        dt
     }
 
     pub fn mark_token(&mut self) {
@@ -90,13 +164,28 @@ impl Stopwatch {
         self.last_mark = now;
     }
 
-    pub fn finish(self, prompt_tokens: usize, generated_tokens: usize) -> RequestTiming {
+    pub fn finish(mut self, prompt_tokens: usize, generated_tokens: usize) -> RequestTiming {
         let total = self.start.elapsed().as_secs_f64();
+        let ttft = self.first_token.unwrap_or(total);
+        // attribution identity: queue + prefill + stall == ttft. Queue
+        // and prefill are measured sub-intervals of [0, ttft] (clamped
+        // against clock jitter); stall is the remainder — iterations the
+        // request sat admitted-but-not-prefilling behind other work.
+        let queue = self.queue_s().min(ttft);
+        let prefill = self.prefill_s.min(ttft - queue);
+        let stall = (ttft - queue - prefill).max(0.0);
+        if self.park_since.is_some() {
+            self.park_end(); // request died while parked: close the episode
+        }
         RequestTiming {
             prompt_tokens,
             generated_tokens,
-            ttft_s: self.first_token.unwrap_or(total),
+            ttft_s: ttft,
             total_s: total,
+            queue_s: queue,
+            prefill_s: prefill,
+            stall_s: stall,
+            park_s: self.park_s,
             token_intervals: self.intervals,
         }
     }
@@ -201,6 +290,23 @@ pub struct SchedulerGauges {
     pub paged_splices: u64,
     /// Prompt tokens covered by spliced runs.
     pub paged_splice_tokens: u64,
+    /// Cumulative worker-loop phase seconds (one sample per turn; the
+    /// flight recorder's per-iteration spans are the zoomed-in view).
+    /// Intake includes the idle block waiting for the next submission.
+    // nbl-lint: gauge(phase_intake_ms)
+    pub phase_intake_s: f64,
+    /// Admission-phase seconds (probe + whole-prompt/warm prefills).
+    // nbl-lint: gauge(phase_admission_ms)
+    pub phase_admission_s: f64,
+    /// Chunked-prefill-advance seconds (at most one chunk per turn).
+    // nbl-lint: gauge(phase_chunked_ms)
+    pub phase_chunked_s: f64,
+    /// Gauge-refresh/observation seconds.
+    // nbl-lint: gauge(phase_observe_ms)
+    pub phase_observe_s: f64,
+    /// Decode-iteration seconds (draft + verify in spec mode).
+    // nbl-lint: gauge(phase_decode_ms)
+    pub phase_decode_s: f64,
 }
 
 impl SchedulerGauges {
@@ -280,20 +386,96 @@ impl SchedulerGauges {
     }
 }
 
+/// Default raw-timing retention window (`ServerConfig.timing_retention`
+/// overrides; 0 = unbounded for offline analysis runs).
+pub const DEFAULT_TIMING_RETENTION: usize = 4096;
+
+/// Bounded raw-timing window. Percentile aggregation no longer reads
+/// this — it exists for the benches, which slice TTFT by prompt-length
+/// class from `timings()`. Oldest entries drop first once the cap is
+/// hit, with the drop count surfaced as a gauge.
+struct TimingStore {
+    items: VecDeque<RequestTiming>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Lifetime aggregates: O(1)-memory streaming histograms per latency
+/// family plus running totals. Never dropped, so the stats endpoint's
+/// percentiles cover every request the server ever finished, not just
+/// the retained window. `Clone` so `summary()` can snapshot under the
+/// lock and compute after releasing it.
+#[derive(Clone, Default)]
+struct Agg {
+    requests: u64,
+    generated_tokens: u64,
+    wall_s: f64,
+    prefill_speed_sum: f64,
+    ttft: StreamingHistogram,
+    itl: StreamingHistogram,
+    queue: StreamingHistogram,
+    prefill: StreamingHistogram,
+    stall: StreamingHistogram,
+    park: StreamingHistogram,
+    decode_tput: StreamingHistogram,
+}
+
 /// Aggregates request timings across the server lifetime.
-#[derive(Default)]
 pub struct MetricsHub {
-    timings: Mutex<Vec<RequestTiming>>,
+    timings: Mutex<TimingStore>,
+    agg: Mutex<Agg>,
     gauges: Mutex<SchedulerGauges>,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MetricsHub {
     pub fn new() -> MetricsHub {
-        MetricsHub::default()
+        MetricsHub::with_retention(DEFAULT_TIMING_RETENTION)
+    }
+
+    /// `cap` bounds the raw `RequestTiming` window (0 = unbounded).
+    pub fn with_retention(cap: usize) -> MetricsHub {
+        MetricsHub {
+            timings: Mutex::new(TimingStore {
+                items: VecDeque::new(),
+                cap,
+                dropped: 0,
+            }),
+            agg: Mutex::new(Agg::default()),
+            gauges: Mutex::new(SchedulerGauges::default()),
+        }
     }
 
     pub fn record(&self, t: RequestTiming) {
-        lock_unpoisoned(&self.timings).push(t);
+        {
+            let mut a = lock_unpoisoned(&self.agg);
+            a.requests += 1;
+            a.generated_tokens += t.generated_tokens as u64;
+            a.wall_s += t.total_s;
+            a.prefill_speed_sum += t.prefill_speed();
+            a.ttft.record(t.ttft_s);
+            a.queue.record(t.queue_s);
+            a.prefill.record(t.prefill_s);
+            a.stall.record(t.stall_s);
+            a.park.record(t.park_s);
+            if !t.token_intervals.is_empty() {
+                a.decode_tput.record(t.decode_throughput());
+            }
+            for &dt in &t.token_intervals {
+                a.itl.record(dt);
+            }
+        }
+        let mut store = lock_unpoisoned(&self.timings);
+        if store.cap > 0 && store.items.len() >= store.cap {
+            store.items.pop_front();
+            store.dropped += 1;
+        }
+        store.items.push_back(t);
     }
 
     /// One decode iteration ran with `occupied` of `bucket` rows live.
@@ -394,60 +576,102 @@ impl MetricsHub {
         g.kv_capacity = kv_capacity;
     }
 
+    /// One worker-loop turn finished; charge its phase durations (one
+    /// hub lock per turn, not one per phase).
+    pub fn note_phases(
+        &self,
+        intake_s: f64,
+        admission_s: f64,
+        chunked_s: f64,
+        observe_s: f64,
+        decode_s: f64,
+    ) {
+        let mut g = lock_unpoisoned(&self.gauges);
+        g.phase_intake_s += intake_s;
+        g.phase_admission_s += admission_s;
+        g.phase_chunked_s += chunked_s;
+        g.phase_observe_s += observe_s;
+        g.phase_decode_s += decode_s;
+    }
+
     pub fn gauges(&self) -> SchedulerGauges {
         lock_unpoisoned(&self.gauges).clone()
     }
 
-    /// Snapshot of every recorded request timing — benches slice TTFT
-    /// by prompt-length class (e.g. p50 TTFT of short requests admitted
-    /// behind a long prompt, the number chunked prefill exists to lower).
+    /// Snapshot of the retained request-timing window — benches slice
+    /// TTFT by prompt-length class (e.g. p50 TTFT of short requests
+    /// admitted behind a long prompt, the number chunked prefill exists
+    /// to lower). Bounded by the retention cap; the summary percentiles
+    /// come from the lifetime histograms instead.
     pub fn timings(&self) -> Vec<RequestTiming> {
-        lock_unpoisoned(&self.timings).clone()
+        lock_unpoisoned(&self.timings).items.iter().cloned().collect()
     }
 
+    /// Retained timing count (≤ the retention cap).
     pub fn len(&self) -> usize {
-        lock_unpoisoned(&self.timings).len()
+        lock_unpoisoned(&self.timings).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Summarize the lifetime aggregates. Percentiles come from the
+    /// streaming histograms (±~3% bucket tolerance, exact at 0/1
+    /// samples); the snapshot is cloned under the lock and the heavy
+    /// quantile walks + JSON serialization happen after release
+    /// (no-guard-across-blocking, nbl-lint pass `guard`).
     pub fn summary(&self) -> MetricsSummary {
-        let ts = lock_unpoisoned(&self.timings);
-        let ttfts: Vec<f64> = ts.iter().map(|t| t.ttft_s).collect();
-        let prefill: Vec<f64> = ts.iter().map(|t| t.prefill_speed()).collect();
-        let tput: Vec<f64> = ts
-            .iter()
-            .filter(|t| !t.token_intervals.is_empty())
-            .map(|t| t.decode_throughput())
-            .collect();
-        // inter-token latency distribution over ALL generated tokens
-        // (flattened, so a busy request weighs by its token count, not
-        // once per request — the tail a per-request median hides)
-        let itls: Vec<f64> = ts.iter().flat_map(|t| t.token_intervals.iter().copied()).collect();
-        let total_tokens: usize = ts.iter().map(|t| t.generated_tokens).sum();
-        let wall: f64 = ts.iter().map(|t| t.total_s).sum();
+        let a = { lock_unpoisoned(&self.agg).clone() };
+        let (retained, dropped, cap) = {
+            let store = lock_unpoisoned(&self.timings);
+            (store.items.len(), store.dropped, store.cap)
+        };
         MetricsSummary {
-            requests: ts.len(),
-            generated_tokens: total_tokens,
-            mean_ttft_s: mean(&ttfts),
-            p50_ttft_s: percentile(&ttfts, 50.0),
-            p90_ttft_s: percentile(&ttfts, 90.0),
-            p95_ttft_s: percentile(&ttfts, 95.0),
-            p99_ttft_s: percentile(&ttfts, 99.0),
-            p50_itl_s: percentile(&itls, 50.0),
-            p95_itl_s: percentile(&itls, 95.0),
-            p99_itl_s: percentile(&itls, 99.0),
-            mean_prefill_tok_s: mean(&prefill),
-            median_decode_tok_s: median(&tput),
-            aggregate_tok_s: total_tokens as f64 / wall.max(1e-12),
+            requests: a.requests as usize,
+            generated_tokens: a.generated_tokens as usize,
+            mean_ttft_s: a.ttft.mean(),
+            p50_ttft_s: a.ttft.quantile(50.0),
+            p90_ttft_s: a.ttft.quantile(90.0),
+            p95_ttft_s: a.ttft.quantile(95.0),
+            p99_ttft_s: a.ttft.quantile(99.0),
+            p50_itl_s: a.itl.quantile(50.0),
+            p95_itl_s: a.itl.quantile(95.0),
+            p99_itl_s: a.itl.quantile(99.0),
+            mean_prefill_tok_s: if a.requests == 0 {
+                0.0
+            } else {
+                a.prefill_speed_sum / a.requests as f64
+            },
+            median_decode_tok_s: a.decode_tput.quantile(50.0),
+            aggregate_tok_s: a.generated_tokens as f64 / a.wall_s.max(1e-12),
+            mean_queue_s: a.queue.mean(),
+            p50_queue_s: a.queue.quantile(50.0),
+            p95_queue_s: a.queue.quantile(95.0),
+            p99_queue_s: a.queue.quantile(99.0),
+            mean_prefill_s: a.prefill.mean(),
+            p50_prefill_s: a.prefill.quantile(50.0),
+            p95_prefill_s: a.prefill.quantile(95.0),
+            p99_prefill_s: a.prefill.quantile(99.0),
+            mean_stall_s: a.stall.mean(),
+            p50_stall_s: a.stall.quantile(50.0),
+            p95_stall_s: a.stall.quantile(95.0),
+            p99_stall_s: a.stall.quantile(99.0),
+            mean_park_s: a.park.mean(),
+            p50_park_s: a.park.quantile(50.0),
+            p95_park_s: a.park.quantile(95.0),
+            p99_park_s: a.park.quantile(99.0),
+            timings_retained: retained,
+            timings_dropped: dropped,
+            timings_capacity: cap,
         }
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct MetricsSummary {
+    /// Lifetime finished-request count (a running counter — NOT bounded
+    /// by the timing-retention window).
     pub requests: usize,
     pub generated_tokens: usize,
     pub mean_ttft_s: f64,
@@ -462,6 +686,28 @@ pub struct MetricsSummary {
     pub mean_prefill_tok_s: f64,
     pub median_decode_tok_s: f64,
     pub aggregate_tok_s: f64,
+    /// TTFT attribution aggregates (queue + prefill + stall == ttft
+    /// per request; park is lifetime parking, outside the identity).
+    pub mean_queue_s: f64,
+    pub p50_queue_s: f64,
+    pub p95_queue_s: f64,
+    pub p99_queue_s: f64,
+    pub mean_prefill_s: f64,
+    pub p50_prefill_s: f64,
+    pub p95_prefill_s: f64,
+    pub p99_prefill_s: f64,
+    pub mean_stall_s: f64,
+    pub p50_stall_s: f64,
+    pub p95_stall_s: f64,
+    pub p99_stall_s: f64,
+    pub mean_park_s: f64,
+    pub p50_park_s: f64,
+    pub p95_park_s: f64,
+    pub p99_park_s: f64,
+    /// Raw-timing window occupancy / overflow / configured cap.
+    pub timings_retained: usize,
+    pub timings_dropped: u64,
+    pub timings_capacity: usize,
 }
 
 #[cfg(test)]
@@ -476,9 +722,70 @@ mod tests {
             ttft_s: 0.5,
             total_s: 1.0,
             token_intervals: vec![0.1, 0.2, 0.1],
+            ..Default::default()
         };
         assert!((t.prefill_speed() - 200.0).abs() < 1e-9);
         assert!((t.decode_throughput() - 10.0).abs() < 1e-9); // median of 10,5,10
+    }
+
+    #[test]
+    fn stopwatch_attribution_sums_to_ttft() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        sw.mark_admitted();
+        let queued = sw.queue_s();
+        assert!(queued >= 0.003);
+        sw.mark_admitted(); // idempotent: first call wins
+        assert_eq!(sw.queue_s(), queued);
+        sw.add_prefill(0.001);
+        sw.add_prefill(0.002);
+        std::thread::sleep(std::time::Duration::from_millis(4));
+        sw.mark_token();
+        let t = sw.finish(10, 1);
+        assert!((t.queue_s - queued).abs() < 1e-9);
+        assert!((t.prefill_s - 0.003).abs() < 1e-9);
+        // the identity the regression test in test_serving relies on
+        let sum = t.queue_s + t.prefill_s + t.stall_s;
+        assert!(
+            (sum - t.ttft_s).abs() < 1e-9,
+            "queue {} + prefill {} + stall {} != ttft {}",
+            t.queue_s,
+            t.prefill_s,
+            t.stall_s,
+            t.ttft_s
+        );
+        assert!(t.stall_s > 0.0);
+        assert_eq!(t.park_s, 0.0);
+    }
+
+    #[test]
+    fn stopwatch_clamps_degenerate_attribution() {
+        // sync path: never admitted, prefill charged over-generously —
+        // the identity still holds via clamping
+        let mut sw = Stopwatch::new();
+        sw.add_prefill(1e9);
+        sw.mark_token();
+        let t = sw.finish(4, 1);
+        assert_eq!(t.queue_s, 0.0);
+        assert!((t.queue_s + t.prefill_s + t.stall_s - t.ttft_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_tracks_park_episodes() {
+        let mut sw = Stopwatch::new();
+        sw.mark_token();
+        sw.park_begin();
+        sw.park_begin(); // nested begin is a no-op
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        let episode = sw.park_end();
+        assert!(episode >= 0.003);
+        assert_eq!(sw.park_end(), 0.0, "no open episode");
+        sw.park_begin(); // request dies while parked
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let t = sw.finish(4, 1);
+        assert!(t.park_s >= episode + 0.002, "finish closes the open episode");
+        // parking happens post-first-token: outside the TTFT identity
+        assert!((t.queue_s + t.prefill_s + t.stall_s - t.ttft_s).abs() < 1e-12);
     }
 
     #[test]
@@ -656,16 +963,22 @@ mod tests {
                 ttft_s: 0.01 * (i + 1) as f64,
                 total_s: 0.5,
                 token_intervals: vec![0.01, 0.02],
+                ..Default::default()
             });
         }
         let s = hub.summary();
-        assert!((s.p50_ttft_s - 0.055).abs() < 1e-9);
+        // histogram-backed percentiles report a bucket representative
+        // (±~3.3%) of a sample at the rank, without the raw path's
+        // between-sample interpolation: the p50 of 0.01..=0.10 lands on
+        // the 0.05 or 0.06 sample rather than exactly 0.055
+        assert!((0.045..=0.066).contains(&s.p50_ttft_s), "p50 {}", s.p50_ttft_s);
         assert!(s.p95_ttft_s > s.p50_ttft_s);
         assert!(s.p99_ttft_s >= s.p95_ttft_s);
-        assert!(s.p99_ttft_s <= 0.1 + 1e-9);
-        // ITL is flattened over tokens: half 0.01, half 0.02
-        assert!((s.p50_itl_s - 0.015).abs() < 1e-9);
-        assert!((s.p99_itl_s - 0.02).abs() < 1e-6);
+        assert!(s.p99_ttft_s <= 0.1 + 1e-9, "max clamp bounds p99");
+        // ITL is flattened over tokens: half 0.01, half 0.02 — the
+        // median sits on either mode depending on rank convention
+        assert!((0.0095..=0.021).contains(&s.p50_itl_s), "p50 itl {}", s.p50_itl_s);
+        assert!((s.p99_itl_s - 0.02).abs() / 0.02 < 0.05);
     }
 
     #[test]
@@ -678,12 +991,87 @@ mod tests {
                 ttft_s: 0.1,
                 total_s: 0.6,
                 token_intervals: vec![0.1; 4],
+                ..Default::default()
             });
         }
         let s = hub.summary();
         assert_eq!(s.requests, 3);
         assert_eq!(s.generated_tokens, 15);
+        // means and totals stay exact (sums, not histograms)
         assert!((s.mean_prefill_tok_s - 100.0).abs() < 1e-9);
-        assert!((s.median_decode_tok_s - 10.0).abs() < 1e-6);
+        // the histogram-backed median is within bucket tolerance
+        assert!((s.median_decode_tok_s - 10.0).abs() / 10.0 < 0.05);
+        assert!((s.aggregate_tok_s - 15.0 / 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attribution_percentiles_surface_in_summary() {
+        let hub = MetricsHub::new();
+        for i in 0..8 {
+            hub.record(RequestTiming {
+                prompt_tokens: 10,
+                generated_tokens: 2,
+                ttft_s: 0.1,
+                total_s: 0.2,
+                queue_s: 0.04,
+                prefill_s: 0.05,
+                stall_s: 0.01,
+                park_s: if i % 2 == 0 { 0.02 } else { 0.0 },
+                token_intervals: vec![0.05],
+                ..Default::default()
+            });
+        }
+        let s = hub.summary();
+        assert!((s.mean_queue_s - 0.04).abs() < 1e-9, "means are exact");
+        assert!((s.p50_queue_s - 0.04).abs() / 0.04 < 0.05);
+        assert!((s.p95_prefill_s - 0.05).abs() / 0.05 < 0.05);
+        assert!((s.mean_stall_s - 0.01).abs() < 1e-9);
+        assert!((s.mean_park_s - 0.01).abs() < 1e-9);
+        assert!(s.p99_park_s > 0.0);
+    }
+
+    #[test]
+    fn timing_retention_is_bounded_and_counted() {
+        let hub = MetricsHub::with_retention(4);
+        for i in 0..10 {
+            hub.record(RequestTiming {
+                prompt_tokens: i,
+                generated_tokens: 1,
+                ttft_s: 0.01,
+                total_s: 0.02,
+                token_intervals: vec![0.01],
+                ..Default::default()
+            });
+        }
+        assert_eq!(hub.len(), 4);
+        let kept: Vec<usize> = hub.timings().iter().map(|t| t.prompt_tokens).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest entries drop first");
+        let s = hub.summary();
+        // the lifetime aggregates are NOT bounded by the window
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.generated_tokens, 10);
+        assert_eq!(s.timings_retained, 4);
+        assert_eq!(s.timings_dropped, 6);
+        assert_eq!(s.timings_capacity, 4);
+        // cap 0 = unbounded
+        let unbounded = MetricsHub::with_retention(0);
+        for _ in 0..10 {
+            unbounded.record(RequestTiming::default());
+        }
+        assert_eq!(unbounded.len(), 10);
+        assert_eq!(unbounded.summary().timings_dropped, 0);
+    }
+
+    #[test]
+    fn phase_gauges_accumulate_per_turn() {
+        let hub = MetricsHub::new();
+        hub.note_phases(0.5, 0.01, 0.002, 0.001, 0.08);
+        hub.note_phases(0.1, 0.0, 0.0, 0.001, 0.07);
+        let g = hub.gauges();
+        assert!((g.phase_intake_s - 0.6).abs() < 1e-12);
+        assert!((g.phase_admission_s - 0.01).abs() < 1e-12);
+        assert!((g.phase_chunked_s - 0.002).abs() < 1e-12);
+        assert!((g.phase_observe_s - 0.002).abs() < 1e-12);
+        assert!((g.phase_decode_s - 0.15).abs() < 1e-12);
     }
 }

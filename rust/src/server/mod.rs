@@ -20,8 +20,10 @@ pub mod batcher;
 pub mod metrics;
 pub mod service;
 pub mod tcp;
+pub mod trace;
 
 pub use api::{GenRequest, GenResponse};
 pub use batcher::{Batcher, Scheduler};
 pub use metrics::{MetricsHub, RequestTiming, SchedulerGauges};
 pub use service::{BatchMode, Server, ServerConfig, SpecConfig};
+pub use trace::{SpanKind, TraceRecorder, TraceStats};

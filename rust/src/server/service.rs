@@ -46,6 +46,7 @@ use crate::sampling::{argmax, Sampler};
 use crate::server::api::{GenRequest, GenResponse};
 use crate::server::batcher::{Batcher, Scheduler};
 use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
+use crate::server::trace::{SpanKind, TraceRecorder};
 use crate::tensor::Tensor;
 use crate::util::timer::Timer;
 
@@ -116,6 +117,15 @@ pub struct ServerConfig {
     /// contiguous slot-granular admission (the legacy accounting).
     /// Continuous mode only.
     pub kv_block_tokens: usize,
+    /// Flight-recorder ring capacity in events (DESIGN.md
+    /// §Observability). 0 disables tracing entirely: every hook is a
+    /// branch on a plain field — no clock read, no lock, no allocation
+    /// on the hot path.
+    pub trace_events: usize,
+    /// Raw `RequestTiming` retention window for `MetricsHub::timings()`
+    /// (0 = unbounded, for offline analysis runs). Summary percentiles
+    /// come from the lifetime streaming histograms regardless.
+    pub timing_retention: usize,
 }
 
 impl Default for ServerConfig {
@@ -130,6 +140,8 @@ impl Default for ServerConfig {
             prefix_cache_bytes: 0,
             prefix_snap: 0,
             kv_block_tokens: 0,
+            trace_events: 0,
+            timing_retention: crate::server::metrics::DEFAULT_TIMING_RETENTION,
         }
     }
 }
@@ -139,16 +151,20 @@ pub struct Server {
     pub config: ServerConfig,
     pub metrics: Arc<MetricsHub>,
     pub pool: Arc<KvPool>,
+    /// Flight recorder (disabled ring when `trace_events == 0`).
+    pub trace: Arc<TraceRecorder>,
 }
 
 impl Server {
     pub fn new(engine: Arc<Engine>, config: ServerConfig) -> Server {
         let pool = Arc::new(KvPool::new(config.kv_capacity_bytes));
+        let trace = Arc::new(TraceRecorder::new(config.trace_events));
         Server {
             engine,
-            config,
-            metrics: Arc::new(MetricsHub::new()),
+            metrics: Arc::new(MetricsHub::with_retention(config.timing_retention)),
             pool,
+            trace,
+            config,
         }
     }
 
@@ -218,7 +234,14 @@ impl Server {
         let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); n];
         let mut done: Vec<bool> = group.iter().map(|r| r.max_new_tokens == 0).collect();
 
-        // prefill + first token
+        // prefill + first token. The group runs one batched prefill, so
+        // each request's attribution charges the full call (its TTFT
+        // really did wait for the whole batch); queue time ended when
+        // the group formed.
+        for w in watches.iter_mut() {
+            w.mark_admitted();
+        }
+        let prefill_timer = Timer::start();
         let mut ids = Vec::with_capacity(n * len);
         for r in group {
             ids.extend_from_slice(&r.prompt);
@@ -226,6 +249,10 @@ impl Server {
         let pre = self.engine.prefill(&ids, n, len, None)?;
         let mut state = pre.state;
         let logits = self.engine.head(&pre.hidden)?;
+        let prefill_s = prefill_timer.elapsed_s();
+        for w in watches.iter_mut() {
+            w.add_prefill(prefill_s);
+        }
         let mut next: Vec<u32> = (0..n)
             .map(|b| samplers[b].sample(logits.at2(b, len - 1)))
             .collect();
@@ -402,6 +429,9 @@ struct PendingPrefill {
     /// Paged entry this machine warm-seeded from: its covered blocks
     /// become shared frames (`mark_shared`) at final adoption.
     warm_paged: Option<Arc<PagedEntry>>,
+    /// Recorder timestamp when the machine started — the final chunk
+    /// closes the `admit_chunked` span back to it (0 when tracing off).
+    t0_us: u64,
 }
 
 /// Continuous-batching worker: one decode iteration per loop turn over
@@ -452,6 +482,9 @@ struct IterationLoop<'a> {
     row_used: Vec<bool>,
     /// Monotonic admission counter feeding `ActiveSlot::seq`.
     admit_seq: u64,
+    /// Scheduler-turn counter: stamps every trace event with the
+    /// iteration it happened in (`SpanRecord::iter`).
+    turns: u64,
 }
 
 impl<'a> IterationLoop<'a> {
@@ -561,22 +594,59 @@ impl<'a> IterationLoop<'a> {
             slots: Vec::new(),
             row_used: Vec::new(),
             admit_seq: 0,
+            turns: 0,
         }
     }
 
-    /// One scheduler turn. Returns false on shutdown.
+    /// One scheduler turn. Returns false on shutdown. Each phase is
+    /// bracketed twice: a `Timer` feeding the always-on cumulative phase
+    /// gauges (one `note_phases` hub lock per turn), and — only when the
+    /// flight recorder is enabled — a worker-lane trace span. Intake
+    /// includes the idle block waiting for the next submission.
     fn turn(&mut self) -> bool {
+        let server = self.server;
+        self.turns += 1;
+        let iter = self.turns;
+        let timer = Timer::start();
+        let t0 = server.trace.begin();
         if !self.intake_phase() {
             return false;
         }
+        server.trace.span(SpanKind::Intake, 0, iter, t0, 0);
+        let intake_s = timer.elapsed_s();
         if !self.ensure_arena() {
+            server.metrics.note_phases(intake_s, 0.0, 0.0, 0.0, 0.0);
             return true;
         }
+        let timer = Timer::start();
+        let t0 = server.trace.begin();
         self.admission_phase();
+        server.trace.span(SpanKind::Admission, 0, iter, t0, 0);
+        let admission_s = timer.elapsed_s();
+        let timer = Timer::start();
+        let t0 = server.trace.begin();
         self.advance_chunked();
+        server.trace.span(SpanKind::AdvanceChunked, 0, iter, t0, 0);
+        let chunked_s = timer.elapsed_s();
+        // starvation relief is a scheduler bookkeeping pass; its (tiny)
+        // cost is charged to the observe phase
+        let timer = Timer::start();
+        let t0 = server.trace.begin();
         self.starvation_phase();
         self.observe();
+        server.trace.span(SpanKind::Observe, 0, iter, t0, 0);
+        let observe_s = timer.elapsed_s();
+        let occupied = self.slots.iter().filter(|s| s.is_some()).count() as u64;
+        let timer = Timer::start();
+        let t0 = server.trace.begin();
         self.decode_phase();
+        if occupied > 0 {
+            // skip the span on empty turns (chunk-only iterations):
+            // zero-row "decode" spans would only churn the ring
+            server.trace.span(SpanKind::Decode, 0, iter, t0, occupied);
+        }
+        let decode_s = timer.elapsed_s();
+        server.metrics.note_phases(intake_s, admission_s, chunked_s, observe_s, decode_s);
         true
     }
 
@@ -591,7 +661,8 @@ impl<'a> IterationLoop<'a> {
         if idle {
             match self.rx.recv() {
                 Ok(sub) => {
-                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches) {
+                    let tr = &self.server.trace;
+                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches, tr) {
                         return false;
                     }
                 }
@@ -601,7 +672,8 @@ impl<'a> IterationLoop<'a> {
         loop {
             match self.rx.try_recv() {
                 Ok(sub) => {
-                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches) {
+                    let tr = &self.server.trace;
+                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches, tr) {
                         return false;
                     }
                 }
@@ -739,6 +811,10 @@ impl<'a> IterationLoop<'a> {
                 },
             };
             let watch = take_watch(&mut self.watches, req.id);
+            // queue span: submit → this dequeue, backdated off the watch
+            self.server
+                .trace
+                .span_backdated(SpanKind::Queue, req.id, self.turns, watch.queue_s(), 0);
             // probe the prefix cache: the longest cached prefix decides
             // how much prefill is actually left, and THAT picks the
             // admission path (a long prompt whose suffix fits one chunk
@@ -793,7 +869,19 @@ impl<'a> IterationLoop<'a> {
             if pk.attach(slot, t_tokens, d_tokens).is_err() {
                 break;
             }
-            let Some(p) = self.preempted.pop_front() else { break };
+            let Some(mut p) = self.preempted.pop_front() else { break };
+            // the park episode ends at un-parking regardless of whether
+            // the adoption below succeeds (a failure errors the request)
+            let parked_s = p.watch.park_end();
+            self.server
+                .trace
+                .span_backdated(SpanKind::Park, p.req.id, self.turns, parked_s, 0);
+            self.server.trace.instant(
+                SpanKind::Resume,
+                p.req.id,
+                self.turns,
+                p.outputs.len() as u64,
+            );
             if let Err(e) = arena.adopt(slot, &p.target) {
                 pk.release(slot);
                 respond(&mut self.replies, error_response(p.req.id, e));
@@ -1003,7 +1091,7 @@ impl<'a> IterationLoop<'a> {
     fn preempt_slot(&mut self, slot: usize) {
         let server = self.server;
         let Some(arena) = self.arena.as_mut() else { return };
-        let Some(a) = self.slots.get_mut(slot).and_then(|s| s.take()) else { return };
+        let Some(mut a) = self.slots.get_mut(slot).and_then(|s| s.take()) else { return };
         let pos = arena.pos(slot).unwrap_or(0);
         let taken =
             take_row_state(&server.engine.plan, server.engine.config(), &arena.caches, slot, pos);
@@ -1033,6 +1121,12 @@ impl<'a> IterationLoop<'a> {
                     respond(&mut self.replies, error_response(a.req.id, err));
                     return;
                 }
+                // park starts only once the snapshot actually succeeded
+                // (a failed eviction errors the request instead)
+                a.watch.park_begin();
+                server
+                    .trace
+                    .instant(SpanKind::Preempt, a.req.id, self.turns, pos as u64);
                 self.preempted.push_back(PreemptedSlot {
                     req: a.req,
                     sampler: a.sampler,
@@ -1274,8 +1368,10 @@ impl<'a> IterationLoop<'a> {
     ) {
         self.admit_seq += 1;
         let seq = self.admit_seq;
+        let iter = self.turns;
         let block_tokens = self.paged.as_ref().map(|pk| pk.block_tokens());
         let server = self.server;
+        let admit_t0 = server.trace.begin();
         let Some(arena) = self.arena.as_mut() else {
             let err = Error::Serving("arena missing at admission".into());
             respond(&mut self.replies, error_response(req.id, err));
@@ -1294,6 +1390,7 @@ impl<'a> IterationLoop<'a> {
         }
         let tsnap = hit.as_ref().and_then(|v| v.snaps()).and_then(|s| s.first());
         let trun = hit.as_ref().and_then(|v| v.paged()).map(|e| &e.target);
+        let prefill_timer = Timer::start();
         let (state, hidden, col, covered) =
             match prefill_with_prefix(engine, &req.prompt, tsnap, trun, &server.metrics) {
                 Ok(t) => t,
@@ -1302,6 +1399,9 @@ impl<'a> IterationLoop<'a> {
                     return;
                 }
             };
+        // pre-first-token prefill compute (warm restore + suffix, or the
+        // cold whole-prompt call) — the `prefill_s` attribution slice
+        watch.add_prefill(prefill_timer.elapsed_s());
         // hit accounting at ADOPTION time, not probe time: a hit whose
         // suffix bucket could not fit fell back cold and must count as a
         // miss, or the hit-rate gauge stays green while adoptions fail
@@ -1337,7 +1437,10 @@ impl<'a> IterationLoop<'a> {
                     publish_prefix(px, block_tokens, &req.prompt, covered, &state, None);
                 }
             }
+            let kind = if covered > 0 { SpanKind::AdmitWarm } else { SpanKind::AdmitCold };
+            server.trace.span(kind, req.id, iter, admit_t0, covered as u64);
             let timing = watch.finish(len, outputs.len());
+            server.trace.instant(SpanKind::Finish, req.id, iter, outputs.len() as u64);
             let resp = ok_response(req.id, outputs, &timing);
             server.metrics.record(timing);
             respond(replies, resp);
@@ -1386,6 +1489,8 @@ impl<'a> IterationLoop<'a> {
         if let Some(px) = prefix {
             publish_prefix(px, block_tokens, &req.prompt, covered, &state, draft_state.as_ref());
         }
+        let kind = if covered > 0 { SpanKind::AdmitWarm } else { SpanKind::AdmitCold };
+        server.trace.span(kind, req.id, iter, admit_t0, covered as u64);
         self.install_slot(
             slot,
             ActiveSlot {
@@ -1416,12 +1521,13 @@ impl<'a> IterationLoop<'a> {
         &mut self,
         slot: usize,
         req: GenRequest,
-        watch: Stopwatch,
+        mut watch: Stopwatch,
         lease: Option<KvLeaseOwned>,
         hit: Option<PrefixValue>,
     ) -> Option<PendingPrefill> {
         let chunk = self.chunk;
         let server = self.server;
+        let t0_us = server.trace.begin();
         let Some(arena) = self.arena.as_mut() else {
             let err = Error::Serving("arena missing at admission".into());
             respond(&mut self.replies, error_response(req.id, err));
@@ -1458,6 +1564,7 @@ impl<'a> IterationLoop<'a> {
         let mut state = KvState::empty(&engine.plan, cfg, 1, 1);
         let mut draft_state = draft_plan.map(|dp| KvState::empty(dp, cfg, 1, 1));
         let mut warm_paged = None;
+        let warm_timer = Timer::start();
         match hit.as_ref() {
             Some(PrefixValue::Snaps(snaps)) => {
                 let p = snaps[0].pos;
@@ -1524,6 +1631,11 @@ impl<'a> IterationLoop<'a> {
             }
             None => {}
         }
+        if done > 0 {
+            // a warm seed's restore/materialize is prefill work the
+            // machine no longer has to do chunk by chunk — charge it
+            watch.add_prefill(warm_timer.elapsed_s());
+        }
         // same adoption-time accounting as `admit`: an unusable hit (bad
         // alignment, failed restore) seeded a cold machine = a miss
         if hit.is_some() {
@@ -1540,6 +1652,7 @@ impl<'a> IterationLoop<'a> {
             slot,
             done,
             warm_paged,
+            t0_us,
         })
     }
 
@@ -1560,10 +1673,12 @@ impl<'a> IterationLoop<'a> {
         let Some(arena) = self.arena.as_mut() else { return };
         let Some(p) = self.pending.as_mut() else { return };
         let mut spec = self.spec.as_mut();
+        let iter = self.turns;
         let len = p.req.prompt.len();
         let step = chunk.min(len - p.done);
         let ids = &p.req.prompt[p.done..p.done + step];
         let timer = Timer::start();
+        let c0 = server.trace.begin();
         let mut run = engine.prefill_chunk(&mut p.state, ids, step);
         if run.is_ok() {
             if let Some(sp) = spec.as_mut() {
@@ -1580,11 +1695,15 @@ impl<'a> IterationLoop<'a> {
         // whole group for its duration — the interference gauge
         // chunking bounds
         server.metrics.note_prefill_chunk(arena.occupancy() > 0, timer.elapsed_s());
+        server.trace.span(SpanKind::PrefillChunk, p.req.id, iter, c0, step as u64);
+        // each chunk is pre-first-token prefill compute for THIS request
+        p.watch.add_prefill(timer.elapsed_s());
         let hidden = match run {
             Ok(h) => h,
             Err(e) => {
                 let Some(p) = self.pending.take() else { return };
                 release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
+                server.trace.instant(SpanKind::ErrorEvt, p.req.id, iter, 0);
                 respond(&mut self.replies, error_response(p.req.id, e));
                 return;
             }
@@ -1614,10 +1733,13 @@ impl<'a> IterationLoop<'a> {
         // adoption: a max-context prompt whose budget is exactly the
         // prefill token (effective_max 1) still chunked its way in
         server.metrics.note_chunked_admission();
+        // the whole machine's lifetime, start_chunked → final chunk
+        server.trace.span(SpanKind::AdmitChunked, p.req.id, iter, p.t0_us, len as u64);
         let logits = match engine.head(&hidden) {
             Ok(l) => l,
             Err(e) => {
                 release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
+                server.trace.instant(SpanKind::ErrorEvt, p.req.id, iter, 0);
                 respond(&mut self.replies, error_response(p.req.id, e));
                 return;
             }
@@ -1639,6 +1761,7 @@ impl<'a> IterationLoop<'a> {
             // finished on the prefill token: the reserved row never joins
             release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
             let timing = watch.finish(len, outputs.len());
+            server.trace.instant(SpanKind::Finish, p.req.id, iter, outputs.len() as u64);
             let resp = ok_response(p.req.id, outputs, &timing);
             server.metrics.record(timing);
             respond(&mut self.replies, resp);
@@ -1731,6 +1854,7 @@ impl<'a> IterationLoop<'a> {
     /// ~1e-3 of a cumulative-probability edge can differ from plain mode.
     fn decode_iteration(&mut self) {
         let server = self.server;
+        let iter = self.turns;
         let Some(arena) = self.arena.as_mut() else { return };
         let spec = self.spec.as_mut();
         let slots = &mut self.slots;
@@ -1775,6 +1899,7 @@ impl<'a> IterationLoop<'a> {
         let mut proposals: Vec<Vec<u32>> = (0..n).map(|_| Vec::new()).collect();
         let mut dstart: Vec<usize> = vec![0; n];
         if gamma > 0 {
+            let d0 = server.trace.begin();
             // nbl-lint: allow(panic): gamma > 0 only in the width-selection branch that saw the engine
             let dengine = draft_engine.expect("width > 1 implies a draft engine");
             // nbl-lint: allow(panic): gamma > 0 only in the width-selection branch that saw the arena
@@ -1810,6 +1935,8 @@ impl<'a> IterationLoop<'a> {
                             slots,
                             replies,
                             &e,
+                            &server.trace,
+                            iter,
                         );
                         return;
                     }
@@ -1826,6 +1953,8 @@ impl<'a> IterationLoop<'a> {
                     }
                 }
             }
+            let proposed: u64 = proposals.iter().map(|p| p.len() as u64).sum();
+            server.trace.span(SpanKind::SpecDraft, 0, iter, d0, proposed);
         }
 
         // ---- verify phase: one width-W target pass over every row
@@ -1849,14 +1978,30 @@ impl<'a> IterationLoop<'a> {
                 RowSpecDecode { slot: s, tokens }
             })
             .collect();
+        let v0 = server.trace.begin();
         let vl = match engine.decode_rows_spec(arena, &vrows) {
             Ok(l) => l,
             Err(e) => {
                 let da = draft_arena.as_mut().map(|x| &mut **x);
-                fail_iteration(arena, da, self.paged.as_mut(), &occ, slots, replies, &e);
+                fail_iteration(
+                    arena,
+                    da,
+                    self.paged.as_mut(),
+                    &occ,
+                    slots,
+                    replies,
+                    &e,
+                    &server.trace,
+                    iter,
+                );
                 return;
             }
         };
+        if width > 1 {
+            // the verify pass proper (plain width-1 iterations are
+            // already the decode phase span)
+            server.trace.span(SpanKind::SpecVerify, 0, iter, v0, n as u64);
+        }
 
         // ---- acceptance: commit the longest sampled prefix that agrees
         // with the verified tokens, then roll both arenas back to it
@@ -1926,6 +2071,9 @@ impl<'a> IterationLoop<'a> {
                     pk.release(s);
                 }
                 let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
+                server
+                    .trace
+                    .instant(SpanKind::Finish, a.req.id, iter, a.outputs.len() as u64);
                 let resp = ok_response(a.req.id, a.outputs, &timing);
                 server.metrics.record(timing);
                 respond(replies, resp);
@@ -1941,6 +2089,7 @@ impl<'a> IterationLoop<'a> {
 /// A failed iteration poisons the whole group: every resident request
 /// gets an answer and its slot(s) — and, in paged mode, its blocks —
 /// back.
+#[allow(clippy::too_many_arguments)]
 fn fail_iteration(
     arena: &mut SlotArena,
     draft: Option<&mut SlotArena>,
@@ -1949,10 +2098,13 @@ fn fail_iteration(
     slots: &mut [Option<ActiveSlot>],
     replies: &mut HashMap<u64, Sender<GenResponse>>,
     e: &Error,
+    trace: &TraceRecorder,
+    iter: u64,
 ) {
     for &s in occ {
         if let Some(a) = slots[s].take() {
             arena.release(s);
+            trace.instant(SpanKind::ErrorEvt, a.req.id, iter, 0);
             respond(replies, error_response(a.req.id, Error::msg(e.to_string())));
         }
     }
@@ -2035,10 +2187,12 @@ fn intake(
     sched: &mut Scheduler,
     replies: &mut HashMap<u64, Sender<GenResponse>>,
     watches: &mut HashMap<u64, Stopwatch>,
+    trace: &TraceRecorder,
 ) -> bool {
     match sub {
         Submission::Shutdown => false,
         Submission::Request(req, reply, watch) => {
+            trace.instant(SpanKind::Submit, req.id, 0, req.prompt.len() as u64);
             replies.insert(req.id, reply);
             watches.insert(req.id, watch);
             sched.push(req);
@@ -2054,7 +2208,12 @@ fn intake(
 /// fresh stopwatch (under-reporting beats killing the worker).
 fn take_watch(watches: &mut HashMap<u64, Stopwatch>, id: u64) -> Stopwatch {
     match watches.remove(&id) {
-        Some(w) => w,
+        Some(mut w) => {
+            // the single choke point every admission path passes through:
+            // queue wait ends here (first call wins inside the watch)
+            w.mark_admitted();
+            w
+        }
         None => {
             debug_assert!(false, "request {id} has no submission stopwatch");
             eprintln!(

@@ -115,16 +115,30 @@ fn handle_conn(
             continue;
         }
         let parsed = Json::parse(&line);
-        // stats endpoint: answered from the hub, never enters the queue
+        // stats endpoint: answered from the hub, never enters the queue.
+        // Snapshots are cloned out of the hub FIRST so no hub lock is
+        // held across JSON serialization or the socket write (a slow
+        // reader must never stall the worker's metric updates).
         if let Ok(j) = &parsed {
             if crate::server::api::is_stats_request(j) {
+                let summary = server.metrics.summary();
+                let gauges = server.metrics.gauges();
+                let trace = server.trace.stats();
                 let stats = crate::server::api::stats_to_json(
-                    &server.metrics.summary(),
-                    &server.metrics.gauges(),
+                    &summary,
+                    &gauges,
                     server.pool.in_use(),
                     server.pool.capacity(),
+                    &trace,
                 );
                 writeln!(writer, "{stats}")?;
+                continue;
+            }
+            // flight-recorder export: one Chrome-trace JSON object per
+            // line, same snapshot-then-serialize discipline
+            if crate::server::api::is_trace_request(j) {
+                let trace = server.trace.export_chrome();
+                writeln!(writer, "{trace}")?;
                 continue;
             }
         }

@@ -1,0 +1,526 @@
+//! Flight recorder: a bounded ring-buffer journal of typed span events.
+//!
+//! Every request's life — submit → admit {cold, warm-prefix, chunked} →
+//! prefill chunks → decode iterations → spec draft/verify rounds →
+//! preempt/park → resume → finish/error — is recorded as fixed-size
+//! `SpanRecord`s in a preallocated ring (DESIGN.md §Observability).
+//! Recording is opt-in via `ServerConfig.trace_events` (0 = off); when
+//! disabled every hook is a branch on a plain field — no `Instant::now`,
+//! no lock, no allocation on the hot path.
+//!
+//! Two design choices keep the export trivially valid Chrome-trace JSON:
+//!
+//! 1. The ring stores *complete* spans (start + duration), pushed when
+//!    the span ends. B/E event pairs are generated at export time from
+//!    one record, so begin/end balance holds by construction even after
+//!    the ring overwrites arbitrary records: span intervals per lane
+//!    form a laminar family, and any subset of a laminar family is
+//!    still properly nested.
+//! 2. Export sorts events by `(ts, class, duration)` with E before B at
+//!    equal timestamps, longer spans opening first and shorter spans
+//!    closing first — so microsecond-tie nesting (a decode span and its
+//!    first spec-draft span starting in the same µs) still yields a
+//!    stack-valid event stream.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::lock_unpoisoned;
+
+/// Typed event vocabulary. Spans carry a duration; instants are
+/// zero-width markers. Request-lane events render under `tid = request
+/// id`; worker-lane events (the iteration loop's phases) under `tid = 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    // request lane: spans
+    /// submit → admission (the time a request waited in the FIFO)
+    Queue,
+    /// whole-prompt prefill admission, no cache hit
+    AdmitCold,
+    /// admission that adopted a cached prefix and prefilled the suffix
+    AdmitWarm,
+    /// multi-iteration chunked admission, start → final chunk
+    AdmitChunked,
+    /// one prefill chunk inside a chunked admission
+    PrefillChunk,
+    /// preempt → resume (KV pages reclaimed, request parked host-side)
+    Park,
+    // worker lane: per-iteration phases
+    Intake,
+    Admission,
+    AdvanceChunked,
+    Observe,
+    Decode,
+    /// gamma draft steps inside a decode iteration (spec mode)
+    SpecDraft,
+    /// widened verify pass inside a decode iteration (spec mode)
+    SpecVerify,
+    // instants
+    Submit,
+    Preempt,
+    Resume,
+    Finish,
+    ErrorEvt,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::AdmitCold => "admit_cold",
+            SpanKind::AdmitWarm => "admit_warm",
+            SpanKind::AdmitChunked => "admit_chunked",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::Park => "park",
+            SpanKind::Intake => "intake",
+            SpanKind::Admission => "admission",
+            SpanKind::AdvanceChunked => "advance_chunked",
+            SpanKind::Observe => "observe",
+            SpanKind::Decode => "decode",
+            SpanKind::SpecDraft => "spec_draft",
+            SpanKind::SpecVerify => "spec_verify",
+            SpanKind::Submit => "submit",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Resume => "resume",
+            SpanKind::Finish => "finish",
+            SpanKind::ErrorEvt => "error",
+        }
+    }
+
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Submit
+                | SpanKind::Preempt
+                | SpanKind::Resume
+                | SpanKind::Finish
+                | SpanKind::ErrorEvt
+        )
+    }
+
+    /// Worker-lane events describe the iteration loop itself and render
+    /// on tid 0; everything else renders on the request's own lane.
+    fn worker_lane(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Intake
+                | SpanKind::Admission
+                | SpanKind::AdvanceChunked
+                | SpanKind::Observe
+                | SpanKind::Decode
+                | SpanKind::SpecDraft
+                | SpanKind::SpecVerify
+        )
+    }
+}
+
+/// One complete event: fixed-size, `Copy`, no heap — the ring is a
+/// preallocated `Vec<SpanRecord>` that never reallocates.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    /// request id (0 for worker-lane events not tied to one request)
+    pub req: u64,
+    /// iteration-loop turn counter at record time
+    pub iter: u64,
+    /// start, microseconds since the recorder's epoch
+    pub t0_us: u64,
+    /// width (0 for instants)
+    pub dur_us: u64,
+    /// kind-specific payload: tokens for prefill/decode spans, accepted
+    /// count for spec verify, parked bytes for preempt — see DESIGN.md
+    pub arg: u64,
+}
+
+/// Counters surfaced on the stats endpoint (`trace_*` keys).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceStats {
+    pub capacity: usize,
+    pub recorded: u64,
+    pub dropped: u64,
+}
+
+struct Ring {
+    events: Vec<SpanRecord>,
+    /// next overwrite position once `events` is full
+    head: usize,
+    recorded: u64,
+    dropped: u64,
+}
+
+/// The recorder itself. `capacity == 0` disables every hook before it
+/// reads the clock or touches the lock.
+pub struct TraceRecorder {
+    capacity: usize,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl TraceRecorder {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                events: Vec::with_capacity(capacity),
+                head: 0,
+                recorded: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Disabled recorder (`trace_events = 0`): all hooks early-return.
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Timestamp a span start. Returns 0 without reading the clock when
+    /// tracing is off — the matching `span()` call discards it.
+    #[inline]
+    pub fn begin(&self) -> u64 {
+        if self.capacity == 0 {
+            return 0;
+        }
+        self.now_us()
+    }
+
+    /// Record a span opened by `begin()`, ending now.
+    #[inline]
+    pub fn span(&self, kind: SpanKind, req: u64, iter: u64, t0_us: u64, arg: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let end = self.now_us();
+        self.push(SpanRecord {
+            kind,
+            req,
+            iter,
+            t0_us,
+            dur_us: end.saturating_sub(t0_us),
+            arg,
+        });
+    }
+
+    /// Record a span that ends now and started `dur_s` seconds ago —
+    /// for intervals whose start predates the hook (queue wait measured
+    /// by the request's stopwatch, park time measured at resume).
+    #[inline]
+    pub fn span_backdated(&self, kind: SpanKind, req: u64, iter: u64, dur_s: f64, arg: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let end = self.now_us();
+        // clamp to the recorder's epoch so t0 + dur == end stays exact
+        let dur_us = (dur_s.max(0.0) * 1e6) as u64;
+        let t0_us = end.saturating_sub(dur_us);
+        self.push(SpanRecord { kind, req, iter, t0_us, dur_us: end - t0_us, arg });
+    }
+
+    /// Record a zero-width marker.
+    #[inline]
+    pub fn instant(&self, kind: SpanKind, req: u64, iter: u64, arg: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let t0_us = self.now_us();
+        self.push(SpanRecord { kind, req, iter, t0_us, dur_us: 0, arg });
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let mut ring = lock_unpoisoned(&self.ring);
+        if ring.events.len() < self.capacity {
+            ring.events.push(rec);
+        } else {
+            // overwrite-oldest: the flight recorder keeps the most
+            // recent window, which is the one you want after an incident
+            let head = ring.head;
+            ring.events[head] = rec;
+            ring.head = (head + 1) % self.capacity;
+            ring.dropped += 1;
+        }
+        ring.recorded += 1;
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        let ring = lock_unpoisoned(&self.ring);
+        TraceStats {
+            capacity: self.capacity,
+            recorded: ring.recorded,
+            dropped: ring.dropped,
+        }
+    }
+
+    /// Snapshot the ring in record order (oldest first).
+    fn snapshot(&self) -> Vec<SpanRecord> {
+        let ring = lock_unpoisoned(&self.ring);
+        let mut out = Vec::with_capacity(ring.events.len());
+        out.extend_from_slice(&ring.events[ring.head..]);
+        out.extend_from_slice(&ring.events[..ring.head]);
+        out
+    }
+
+    /// Export as Chrome-trace JSON (`chrome://tracing`, Perfetto).
+    ///
+    /// The ring is snapshotted under the lock and released before any
+    /// JSON is built — serialization cost never blocks recording
+    /// (no-guard-across-blocking, nbl-lint pass `guard`).
+    pub fn export_chrome(&self) -> Json {
+        let records = self.snapshot();
+
+        // (ts, class, tiebreak, idx_key, event). class orders same-µs
+        // events into a stack-valid stream: ends close before new begins
+        // open (E=0 < B=1), instants float after (2). Among same-ts B's
+        // the longer span opens first; among same-ts E's the shorter
+        // closes first. When even durations tie (two spans sharing both
+        // endpoints at µs resolution), the ring index breaks it: spans
+        // are pushed at END time by one worker thread, so on any lane
+        // the inner span lands in the ring before its enclosing one —
+        // E's replay in push order (inner closes first), B's in reverse
+        // (outer opens first). Zero-width spans render 1µs wide so their
+        // B still precedes their E.
+        let mut events: Vec<(u64, u8, u64, u64, Json)> = Vec::with_capacity(records.len() * 2);
+        for (idx, r) in records.iter().enumerate() {
+            let tid = if r.kind.worker_lane() { 0 } else { r.req };
+            let cat = if r.kind.worker_lane() { "worker" } else { "request" };
+            let args = Json::obj(vec![
+                ("req", Json::Num(r.req as f64)),
+                ("iter", Json::Num(r.iter as f64)),
+                ("arg", Json::Num(r.arg as f64)),
+            ]);
+            let base = |ph: &str, ts: u64| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.kind.name().into())),
+                    ("cat", Json::Str(cat.into())),
+                    ("ph", Json::Str(ph.into())),
+                    ("ts", Json::Num(ts as f64)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(tid as f64)),
+                    ("args", args.clone()),
+                ])
+            };
+            if r.kind.is_instant() {
+                let mut j = base("i", r.t0_us);
+                j.set("s", Json::Str("t".into()));
+                events.push((r.t0_us, 2, 0, 0, j));
+            } else {
+                let dur = r.dur_us.max(1);
+                let end = r.t0_us + dur;
+                let b_idx = u64::MAX - idx as u64;
+                events.push((r.t0_us, 1, u64::MAX - dur, b_idx, base("B", r.t0_us)));
+                events.push((end, 0, dur, idx as u64, base("E", end)));
+            }
+        }
+        events.sort_by(|a, b| (a.0, a.1, a.2, a.3).cmp(&(b.0, b.1, b.2, b.3)));
+
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events.into_iter().map(|e| e.4).collect())),
+            ("displayTimeUnit", Json::Str("ms".into())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(j: &Json, ph: &str) -> Vec<String> {
+        j.get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str().unwrap() == ph)
+            .map(|e| e.get("name").unwrap().as_str().unwrap().to_string())
+            .collect()
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let t = TraceRecorder::disabled();
+        assert!(!t.enabled());
+        assert_eq!(t.begin(), 0);
+        t.span(SpanKind::Decode, 1, 1, 0, 4);
+        t.instant(SpanKind::Submit, 1, 0, 0);
+        t.span_backdated(SpanKind::Queue, 1, 0, 0.5, 0);
+        let s = t.stats();
+        assert_eq!((s.capacity, s.recorded, s.dropped), (0, 0, 0));
+        let j = t.export_chrome();
+        assert_eq!(j.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn spans_export_balanced_and_sorted() {
+        let t = TraceRecorder::new(64);
+        t.instant(SpanKind::Submit, 7, 0, 0);
+        let t0 = t.begin();
+        t.span(SpanKind::AdmitCold, 7, 1, t0, 16);
+        let t1 = t.begin();
+        t.span(SpanKind::Decode, 7, 2, t1, 1);
+        t.instant(SpanKind::Finish, 7, 3, 0);
+        let j = t.export_chrome();
+        let b = names(&j, "B");
+        let e = names(&j, "E");
+        assert_eq!(b.len(), 2);
+        assert_eq!(b, e, "every B has a matching E in order");
+        assert_eq!(names(&j, "i"), vec!["submit", "finish"]);
+        // timestamps globally non-decreasing
+        let ts: Vec<f64> = j
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|ev| ev.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "unsorted ts: {ts:?}");
+    }
+
+    #[test]
+    fn same_microsecond_nesting_stays_stack_valid() {
+        // an outer decode span and an inner spec_draft span that share
+        // start and end microseconds: the tie-break must open the outer
+        // first and close the inner first
+        let t = TraceRecorder::new(16);
+        t.push(SpanRecord {
+            kind: SpanKind::SpecDraft,
+            req: 0,
+            iter: 1,
+            t0_us: 100,
+            dur_us: 50,
+            arg: 0,
+        });
+        t.push(SpanRecord {
+            kind: SpanKind::Decode,
+            req: 0,
+            iter: 1,
+            t0_us: 100,
+            dur_us: 150,
+            arg: 0,
+        });
+        let j = t.export_chrome();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let seq: Vec<(String, String)> = evs
+            .iter()
+            .map(|ev| {
+                (
+                    ev.get("ph").unwrap().as_str().unwrap().to_string(),
+                    ev.get("name").unwrap().as_str().unwrap().to_string(),
+                )
+            })
+            .collect();
+        // replay the stream against a stack: B pushes, E must match top
+        let mut stack = Vec::new();
+        for (ph, name) in &seq {
+            match ph.as_str() {
+                "B" => stack.push(name.clone()),
+                "E" => assert_eq!(stack.pop().as_ref(), Some(name), "stream {seq:?}"),
+                _ => {}
+            }
+        }
+        assert!(stack.is_empty());
+        assert_eq!(seq[0], ("B".into(), "decode".into()), "outer opens first");
+    }
+
+    #[test]
+    fn zero_width_and_identical_interval_spans_stay_stack_valid() {
+        // sub-µs spans collapse to dur 0 at record time, and an inner
+        // span can share BOTH endpoints with its enclosing span; the
+        // exporter's 1µs floor + ring-index tie-break must keep the
+        // stream a valid LIFO per lane in both cases
+        let t = TraceRecorder::new(16);
+        // zero-width queue span (admission on the same µs as submit)
+        t.push(SpanRecord {
+            kind: SpanKind::Queue,
+            req: 5,
+            iter: 0,
+            t0_us: 100,
+            dur_us: 0,
+            arg: 0,
+        });
+        // identical-interval pair: inner prefill_chunk pushed first
+        // (spans land in the ring at END time, inner ends first)
+        t.push(SpanRecord {
+            kind: SpanKind::PrefillChunk,
+            req: 5,
+            iter: 1,
+            t0_us: 200,
+            dur_us: 40,
+            arg: 8,
+        });
+        t.push(SpanRecord {
+            kind: SpanKind::AdmitChunked,
+            req: 5,
+            iter: 1,
+            t0_us: 200,
+            dur_us: 40,
+            arg: 8,
+        });
+        let j = t.export_chrome();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let mut stack: Vec<String> = Vec::new();
+        let mut last_ts = 0.0f64;
+        for ev in &evs {
+            let ts = ev.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= last_ts, "ts must stay non-decreasing");
+            last_ts = ts;
+            let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+            match ev.get("ph").unwrap().as_str().unwrap() {
+                "B" => stack.push(name),
+                "E" => assert_eq!(stack.pop(), Some(name), "LIFO violated"),
+                _ => {}
+            }
+        }
+        assert!(stack.is_empty(), "unclosed spans: {stack:?}");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let t = TraceRecorder::new(4);
+        for i in 0..10u64 {
+            t.push(SpanRecord {
+                kind: SpanKind::Decode,
+                req: i,
+                iter: i,
+                t0_us: i * 100,
+                dur_us: 10,
+                arg: 0,
+            });
+        }
+        let s = t.stats();
+        assert_eq!((s.capacity, s.recorded, s.dropped), (4, 10, 6));
+        let kept = t.snapshot();
+        let reqs: Vec<u64> = kept.iter().map(|r| r.req).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9], "most recent window survives, in order");
+        // a post-overwrite export is still balanced
+        let j = t.export_chrome();
+        assert_eq!(names(&j, "B"), names(&j, "E"));
+    }
+
+    #[test]
+    fn backdated_span_lands_before_its_end() {
+        let t = TraceRecorder::new(8);
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        t.span_backdated(SpanKind::Queue, 3, 0, 0.010, 0);
+        let end = t.now_us();
+        let rec = t.snapshot()[0];
+        assert_eq!(rec.kind, SpanKind::Queue);
+        assert_eq!(rec.dur_us, 10_000);
+        assert!(rec.t0_us + rec.dur_us <= end, "span ends at record time");
+        // a backdated span longer than the recorder's life clamps to
+        // the epoch instead of underflowing
+        t.span_backdated(SpanKind::Park, 3, 0, 1e6, 0);
+        let rec = t.snapshot()[1];
+        assert_eq!(rec.t0_us, 0);
+        assert!(rec.t0_us + rec.dur_us <= t.now_us());
+    }
+}

@@ -2,6 +2,7 @@
 //! criterion are available offline — see DESIGN.md §3).
 
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod proptest;
 pub mod rng;
@@ -43,7 +44,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a stray NaN from a degenerate timing must not panic
+    // the stats path (it sorts last and only perturbs p100)
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() as f64 - 1.0);
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -77,5 +80,40 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std_dev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let xs = [3.25];
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 3.25);
+        }
+        assert_eq!(mean(&xs), 3.25);
+        assert_eq!(median(&xs), 3.25);
+        assert_eq!(std_dev(&xs), 0.0);
+    }
+
+    #[test]
+    fn unsorted_input_is_sorted_internally() {
+        let shuffled = [4.0, 1.0, 3.0, 2.0];
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        for p in [0.0, 10.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&shuffled, p), percentile(&sorted, p));
+        }
+        assert_eq!(median(&shuffled), 2.5);
+        // the input slice itself is untouched (percentile sorts a copy)
+        assert_eq!(shuffled, [4.0, 1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_tolerates_nan() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert!((percentile(&xs, 25.0) - 20.0).abs() < 1e-12);
+        assert!((percentile(&xs, 90.0) - 46.0).abs() < 1e-12);
+        // NaN sorts last under total_cmp instead of panicking
+        let with_nan = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert_eq!(percentile(&with_nan, 50.0), 2.0);
     }
 }

@@ -1450,3 +1450,134 @@ fn kv_pool_accounting_returns_to_zero_after_churn() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// observability: flight recorder + TTFT attribution (DESIGN.md §Observability)
+
+#[test]
+fn ttft_attribution_sums_to_ttft() {
+    // acceptance: queue + prefill + stall must reconstruct TTFT within
+    // 1% for EVERY request (park is lifetime parking, excluded — a
+    // request preempted after its first token still has exact TTFT
+    // attribution). The identity holds by construction in
+    // Stopwatch::finish; this guards the wiring: a phase that stops
+    // feeding its stopwatch shows up as attribution drift here.
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let metrics = server.metrics.clone();
+    let got = churn_workload(&server);
+    for r in &got {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let timings = metrics.timings();
+    assert_eq!(timings.len(), 12);
+    for t in &timings {
+        let parts = t.queue_s + t.prefill_s + t.stall_s;
+        let tol = (t.ttft_s * 0.01).max(1e-9);
+        assert!(
+            (parts - t.ttft_s).abs() <= tol,
+            "attribution drifted: queue {} + prefill {} + stall {} = {parts} \
+             vs ttft {}",
+            t.queue_s,
+            t.prefill_s,
+            t.stall_s,
+            t.ttft_s
+        );
+        assert!(t.queue_s >= 0.0 && t.prefill_s >= 0.0 && t.stall_s >= 0.0 && t.park_s >= 0.0);
+        // prefill work really happened and was charged somewhere
+        assert!(t.ttft_s > 0.0);
+    }
+    // the summary's streaming-histogram percentiles see the same data
+    let s = metrics.summary();
+    assert!(s.mean_queue_s >= 0.0 && s.mean_prefill_s > 0.0);
+}
+
+#[test]
+fn trace_records_span_families_through_server() {
+    // a real mixed workload through the worker with the recorder on:
+    // the export must be balanced per lane, time-ordered, and contain
+    // the lifecycle families every request passes through
+    let cfg = ServerConfig { trace_events: 4096, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(Arc::new(engine("main")), cfg));
+    let trace = server.trace.clone();
+    let got = churn_workload(&server);
+    for r in &got {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let st = trace.stats();
+    assert!(st.recorded > 0, "recorder saw no events");
+    assert_eq!(st.capacity, 4096);
+
+    let j = trace.export_chrome();
+    let events = j.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    assert!(!events.is_empty());
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut stacks: std::collections::BTreeMap<(usize, usize), Vec<String>> = Default::default();
+    let mut seen = std::collections::BTreeSet::new();
+    for ev in &events {
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "export must be time-ordered");
+        last_ts = ts;
+        let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+        let lane = (
+            ev.get("pid").unwrap().as_usize().unwrap(),
+            ev.get("tid").unwrap().as_usize().unwrap(),
+        );
+        match ev.get("ph").unwrap().as_str().unwrap() {
+            "B" => {
+                stacks.entry(lane).or_default().push(name.clone());
+                seen.insert(name);
+            }
+            "E" => {
+                let top = stacks.entry(lane).or_default().pop();
+                assert_eq!(top.as_deref(), Some(name.as_str()), "spans must nest per lane");
+            }
+            "i" => {
+                seen.insert(name);
+            }
+            ph => panic!("unexpected ph {ph:?}"),
+        }
+    }
+    for (lane, stack) in &stacks {
+        assert!(stack.is_empty(), "lane {lane:?} left open spans {stack:?}");
+    }
+    for want in ["submit", "queue", "decode", "finish", "intake", "admission"] {
+        assert!(seen.contains(want), "missing '{want}' events; saw {seen:?}");
+    }
+}
+
+#[test]
+fn trace_disabled_is_inert_through_server() {
+    // trace_events = 0 (the default) must record nothing — the hot path
+    // stays a branch on a plain field, and the export is empty
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let trace = server.trace.clone();
+    let got = churn_workload(&server);
+    for r in &got {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let st = trace.stats();
+    assert_eq!((st.capacity, st.recorded, st.dropped), (0, 0, 0));
+    let j = trace.export_chrome();
+    assert!(j.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn timing_retention_bounds_raw_samples_through_server() {
+    // bounded MetricsHub: with a 4-sample retention window, a 12-request
+    // workload keeps only the 4 newest raw timings and counts the rest
+    // dropped — while the lifetime histograms still summarize all 12
+    let cfg = ServerConfig { timing_retention: 4, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(Arc::new(engine("main")), cfg));
+    let metrics = server.metrics.clone();
+    let got = churn_workload(&server);
+    for r in &got {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    assert_eq!(metrics.timings().len(), 4);
+    let s = metrics.summary();
+    assert_eq!(s.requests, 12, "lifetime counters must survive the window");
+    assert_eq!(s.timings_retained, 4);
+    assert_eq!(s.timings_dropped, 8);
+    assert_eq!(s.timings_capacity, 4);
+    assert!(s.mean_ttft_s > 0.0, "histogram summaries cover all requests");
+}
