@@ -141,6 +141,10 @@ REQUIRED_OBSERVABILITY_KEYS = frozenset(
     + ["timings_retained", "timings_dropped", "timings_capacity"]
     + ["trace_events", "trace_dropped", "trace_capacity"]
     + [f"phase_{p}_ms" for p in ("intake", "admission", "chunked", "observe", "decode")]
+    # streaming front end (DESIGN.md §Streaming front end): request
+    # teardown counters, fair-queue occupancy, and deadline SLOs
+    + ["cancelled", "expired", "shed", "tenants_active"]
+    + ["goodput_tok_s", "slo_attainment"]
 )
 
 

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Streaming-protocol artifact gate: replay a captured JSONL session.
+
+The serve_bench `--stream-capture` arm records every line a streaming
+client received (plus the `{"cancel": id}` frames it sent, at their
+send positions) against a live server. A framing regression would not
+crash that client — it tolerates whatever arrives — so this gate
+replays the capture offline and enforces the invariants the front end
+guarantees by construction (DESIGN.md §Streaming front end):
+
+  1. every line is a JSON object: token/done/error frames carry a
+     "frame" key; lines without one must be a client cancel frame or a
+     legacy one-shot reply (mixed sessions are part of the protocol);
+  2. per request id, token frame indices are dense and strictly
+     increasing from 0 — no gaps, no reordering, no duplicates;
+  3. per request id, EXACTLY one terminal frame (done or error), and no
+     frame of any kind follows it;
+  4. a done terminal's "tokens" array matches the token frames streamed
+     before it one for one (the parity rung of the fallback ladder);
+  5. a cancel frame is acknowledged: once `{"cancel": id}` appears, the
+     stream for that id still ends in exactly one terminal frame, and
+     that terminal is an error (the typed cancelled response).
+
+Run from the repo root:
+  python ci/check_stream.py rust/reports/stream_capture.jsonl --require-cancel
+"""
+
+import argparse
+import json
+import sys
+
+TERMINALS = {"done", "error"}
+
+
+def check_lines(lines, require_cancel):
+    errors = []
+    token_counts = {}  # id -> token frames seen so far
+    terminals = {}  # id -> terminal frame kind
+    cancelled = set()  # ids with a client cancel frame on record
+    streams = set()
+
+    for i, raw in enumerate(lines):
+        where = f"line {i + 1}"
+        try:
+            j = json.loads(raw)
+        except json.JSONDecodeError as e:
+            errors.append(f"{where}: invalid JSON ({e})")
+            continue
+        if not isinstance(j, dict):
+            errors.append(f"{where}: not a JSON object")
+            continue
+
+        if "frame" not in j:
+            if "cancel" in j:
+                rid = j["cancel"]
+                if not isinstance(rid, int):
+                    errors.append(f"{where}: cancel id must be an integer, got {rid!r}")
+                    continue
+                cancelled.add(rid)
+            # else: a legacy one-shot reply interleaved in the session —
+            # in protocol, nothing to check beyond being a JSON object
+            continue
+
+        frame, rid = j["frame"], j.get("id")
+        if not isinstance(rid, int):
+            errors.append(f"{where}: {frame} frame without an integer id")
+            continue
+        if rid in terminals:
+            errors.append(
+                f"{where}: {frame} frame for id {rid} AFTER its terminal "
+                f"{terminals[rid]} frame — the terminal must be last"
+            )
+            continue
+        streams.add(rid)
+
+        if frame == "token":
+            missing = [k for k in ("index", "token", "text") if k not in j]
+            if missing:
+                errors.append(f"{where}: token frame missing {missing}")
+                continue
+            expect = token_counts.get(rid, 0)
+            if j["index"] != expect:
+                errors.append(
+                    f"{where}: id {rid} token index {j['index']} — expected "
+                    f"{expect} (indices must be dense and strictly increasing)"
+                )
+            token_counts[rid] = token_counts.get(rid, 0) + 1
+        elif frame in TERMINALS:
+            terminals[rid] = frame
+            if frame == "done":
+                toks = j.get("tokens")
+                if not isinstance(toks, list):
+                    errors.append(f"{where}: done frame for id {rid} without a tokens array")
+                elif len(toks) != token_counts.get(rid, 0):
+                    errors.append(
+                        f"{where}: id {rid} done frame carries {len(toks)} tokens "
+                        f"but {token_counts.get(rid, 0)} were streamed — parity broken"
+                    )
+                if rid in cancelled:
+                    errors.append(
+                        f"{where}: id {rid} was cancelled but finished with a done "
+                        "frame — cancellation must surface as the typed error"
+                    )
+        else:
+            errors.append(f"{where}: unknown frame kind {frame!r}")
+
+    for rid in sorted(streams - set(terminals)):
+        errors.append(f"id {rid}: stream never reached a terminal frame")
+    for rid in sorted(cancelled - streams):
+        errors.append(f"id {rid}: cancel frame for a request that never streamed")
+    if not streams:
+        errors.append("capture contains no streamed requests at all")
+    if require_cancel and not (cancelled & streams):
+        errors.append("capture exercises no cancelled stream (--require-cancel)")
+    return errors, streams, cancelled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("capture", help="JSONL capture (serve_bench --stream-capture output)")
+    ap.add_argument(
+        "--require-cancel",
+        action="store_true",
+        help="fail unless at least one streamed request was cancelled",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.capture) as f:
+            lines = [ln for ln in (l.strip() for l in f) if ln]
+    except OSError as e:
+        print(f"STREAM INVALID: cannot read {args.capture}: {e}")
+        sys.exit(1)
+    if not lines:
+        print(f"STREAM INVALID: {args.capture} is empty")
+        sys.exit(1)
+
+    errors, streams, cancelled = check_lines(lines, args.require_cancel)
+    if errors:
+        print(f"STREAM INVALID: {len(errors)} problem(s) in {args.capture}")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    print(
+        f"stream OK: {len(lines)} lines, {len(streams)} streamed request(s), "
+        f"{len(cancelled & streams)} cancelled"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,14 @@ Advisory by default (prints a table, exits 0). Pass --write to apply
 the proposals to ci/bench_baseline.json in place; min_ratio and the
 schema/note fields are preserved, only baselines move.
 
-Usage:  python ci/ratchet.py [--bench-dir .] [--min-runs 3] [--write]
+The promotion rule itself lives in propose() and is unit-tested by
+`python ci/ratchet.py --self-test` (run as a blocking CI step): in
+particular, record-only higher-is-better SLO/goodput keys
+(serve_bench_burst.slo_attainment, serve_bench_burst.goodput_tok_s)
+must graduate to floors once observed, while *_ms latency keys must
+never be promoted.
+
+Usage:  python ci/ratchet.py [--bench-dir .] [--min-runs 3] [--write | --self-test]
 """
 
 import argparse
@@ -57,13 +64,78 @@ def lookup(benches, dotted):
     return b.get("metrics", {}).get(metric)
 
 
+def propose(dotted, base, obs, min_runs):
+    """The promotion rule, isolated so --self-test can pin it down.
+
+    Returns (new_floor, kind) — kind "raise" or "promote" — or None when
+    the committed gate should stand:
+      - fewer than min_runs observations: not enough trajectory;
+      - base > 0: only a RAISE (proposed > base) is surfaced, floors
+        never move down;
+      - base <= 0 (record-only): PROMOTE to a floor once the window is
+        all positive — except *_ms latency keys, which are
+        lower-is-better and would fail CI on improvement under a
+        `current >= floor` gate, so they stay record-only forever.
+    """
+    obs = [float(v) for v in obs if isinstance(v, (int, float))]
+    if len(obs) < min_runs:
+        return None
+    proposed = min(obs) * SAFETY
+    if base > 0.0 and proposed > base:
+        return proposed, "raise"
+    if base <= 0.0 and proposed > 0.0 and not dotted.endswith("_ms"):
+        return proposed, "promote"
+    return None
+
+
+def self_test():
+    """Unit-test the promotion rule; exits nonzero on the first failure."""
+    cases = [
+        # (name, dotted, base, obs, min_runs, expected)
+        ("raise a positive floor", "b.tok_s", 10.0, [20.0, 18.0, 25.0], 3,
+         (18.0 * SAFETY, "raise")),
+        ("never lower a floor", "b.tok_s", 10.0, [9.0, 9.5, 9.2], 3, None),
+        ("worst-of-window rules", "b.tok_s", 10.0, [100.0, 100.0, 10.0], 3, None),
+        ("promote record-only throughput", "b.goodput_tok_s", 0.0,
+         [50.0, 40.0, 60.0], 3, (40.0 * SAFETY, "promote")),
+        ("promote record-only SLO ratio", "serve_bench_burst.slo_attainment", 0.0,
+         [1.0, 0.9, 0.95], 3, (0.9 * SAFETY, "promote")),
+        ("never promote latency keys", "b.p95_ttft_ms", 0.0,
+         [5.0, 6.0, 7.0], 3, None),
+        ("never promote a zero window", "b.goodput_tok_s", 0.0,
+         [0.0, 0.0, 0.0], 3, None),
+        ("respect min-runs", "b.tok_s", 10.0, [20.0, 21.0], 3, None),
+        ("ignore non-numeric observations", "b.tok_s", 10.0,
+         [20.0, None, "n/a", 18.0], 3, None),
+    ]
+    failures = 0
+    for name, dotted, base, obs, min_runs, expected in cases:
+        got = propose(dotted, base, obs, min_runs)
+        ok = (got == expected) if expected is None else (
+            got is not None
+            and got[1] == expected[1]
+            and abs(got[0] - expected[0]) < 1e-9
+        )
+        print(f"  {'ok' if ok else 'FAIL'}: {name} -> {got}")
+        failures += 0 if ok else 1
+    if failures:
+        print(f"ratchet self-test: {failures} case(s) FAILED")
+        raise SystemExit(1)
+    print(f"ratchet self-test OK ({len(cases)} cases)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench-dir", default=".", help="dir holding BENCH_<sha>.json files")
     ap.add_argument("--baseline", default=os.path.join(REPO, "ci", "bench_baseline.json"))
     ap.add_argument("--min-runs", type=int, default=3)
     ap.add_argument("--write", action="store_true", help="apply proposals to the baseline file")
+    ap.add_argument("--self-test", action="store_true", help="unit-test the promotion rule and exit")
     args = ap.parse_args()
+
+    if args.self_test:
+        self_test()
+        return
 
     runs = load_runs(args.bench_dir)
     print(f"{len(runs)} trajectory run(s) under {args.bench_dir}")
@@ -74,21 +146,11 @@ def main():
     proposals = []  # (dotted, old_base, new_base, n_obs, kind)
     for dotted, gate in sorted(metrics.items()):
         base = float(gate.get("baseline", 0.0))
-        obs = []
-        for _, benches in runs:
-            v = lookup(benches, dotted)
-            if isinstance(v, (int, float)):
-                obs.append(float(v))
-        if len(obs) < args.min_runs:
-            continue
-        proposed = min(obs) * SAFETY
-        if base > 0.0 and proposed > base:
-            proposals.append((dotted, base, proposed, len(obs), "raise"))
-        elif base <= 0.0 and proposed > 0.0 and not dotted.endswith("_ms"):
-            # latency percentiles (*_ms) are lower-is-better: a floor gate
-            # (current >= floor) would fail CI on improvement, so they stay
-            # record-only trajectory keys forever
-            proposals.append((dotted, base, proposed, len(obs), "promote"))
+        obs = [lookup(benches, dotted) for _, benches in runs]
+        obs = [float(v) for v in obs if isinstance(v, (int, float))]
+        result = propose(dotted, base, obs, args.min_runs)
+        if result is not None:
+            proposals.append((dotted, base, result[0], len(obs), result[1]))
 
     if not proposals:
         print(

@@ -41,6 +41,20 @@
 //! chrome://tracing), written to `path` and validated by
 //! ci/check_trace.py. `--trace-events` sizes the ring (default 65536).
 //!
+//! `--burst` runs the ISSUE 9 fairness arm: a bulk tenant dumps its
+//! whole batch at t=0 while an interactive tenant's short requests
+//! arrive on a deterministic pseudo-Poisson trickle, served twice on
+//! two decode slots — FIFO vs weighted-fair (live tenant at 4x DRR
+//! weight). Asserts weighted-fair strictly cuts the interactive p95
+//! TTFT, and emits the SLO attainment (% live requests with TTFT <=
+//! `--slo-ms`) plus goodput that ci/bench_baseline.json floors.
+//!
+//! `--stream-capture <path>` runs the ISSUE 9 streaming arm: live
+//! streamed sessions (one-shot parity replay + a mid-decode cancel) in
+//! both plain and self-speculative modes, every received JSONL line
+//! captured verbatim to `path` for ci/check_stream.py's frame-order
+//! replay.
+//!
 //!     cargo run --release --example serve_bench \
 //!         [-- --m 2 --requests 24 --max-tokens 48 \
 //!              --mode spec --spec-width 4 --draft-m 4 \
@@ -614,8 +628,503 @@ fn run_prefix_share(
     Ok(())
 }
 
+/// Tagged one-shot client for the burst arm: waits out its arrival
+/// offset, then submits a single request carrying the fairness fields
+/// (tenant, DRR weight, a loose deadline so the goodput/SLO metrics
+/// engage without any shedding) and returns the server-reported TTFT
+/// plus the generated token count.
+fn burst_client(
+    addr: std::net::SocketAddr,
+    id: usize,
+    prompt: String,
+    max_tokens: usize,
+    tenant: &'static str,
+    weight: u64,
+    delay_ms: f64,
+) -> anyhow::Result<(f64, usize)> {
+    if delay_ms > 0.0 {
+        std::thread::sleep(std::time::Duration::from_micros((delay_ms * 1e3) as u64));
+    }
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        r#"{{"id": {id}, "prompt": "{prompt}", "max_tokens": {max_tokens}, "tenant": "{tenant}", "weight": {weight}, "deadline_ms": 60000}}"#
+    )?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if j.opt("error").is_some() {
+        anyhow::bail!("server error: {line}");
+    }
+    let ttft = j
+        .get("ttft_ms")
+        .and_then(|v| v.as_f64())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let n_tokens = j
+        .get("tokens")
+        .and_then(|v| v.as_arr().map(|a| a.len()))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok((ttft, n_tokens))
+}
+
+struct BurstRun {
+    live_ttfts_ms: Vec<f64>,
+    bulk_ttfts_ms: Vec<f64>,
+    generated_tokens: usize,
+    wall_s: f64,
+    summary: MetricsSummary,
+    gauges: SchedulerGauges,
+}
+
+/// One burst run: bulk requests all land at t=0, live requests trickle
+/// in on the (shared) pseudo-Poisson schedule, every request on its own
+/// connection so arrival order — not connection order — decides queue
+/// position. `fair` tags the two classes as separate tenants with the
+/// live lane at 4x weight; untagged, every request lands in one DRR
+/// lane, which degenerates to exact FIFO — the baseline policy.
+fn run_burst_once(
+    engine: &Arc<Engine>,
+    fair: bool,
+    bulk: &[String],
+    live: &[String],
+    live_arrivals_ms: &[f64],
+    bulk_max: usize,
+    live_max: usize,
+) -> anyhow::Result<BurstRun> {
+    // two decode slots: scarce enough that the bulk burst saturates the
+    // server and the queueing policy alone decides who waits
+    let cfg = ServerConfig { max_batch: 2, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine.clone(), cfg));
+    let metrics = server.metrics.clone();
+    let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let t_all = Timer::start();
+    type Client = std::thread::JoinHandle<anyhow::Result<(f64, usize)>>;
+    let mut threads: Vec<(bool, Client)> = Vec::new();
+    for (i, p) in bulk.iter().enumerate() {
+        let (addr, p) = (front.addr, p.clone());
+        let tenant = if fair { "bulk" } else { "" };
+        threads.push((
+            false,
+            std::thread::spawn(move || burst_client(addr, 10_000 + i, p, bulk_max, tenant, 1, 0.0)),
+        ));
+    }
+    for (i, p) in live.iter().enumerate() {
+        let (addr, p) = (front.addr, p.clone());
+        let tenant = if fair { "live" } else { "" };
+        let weight = if fair { 4 } else { 1 };
+        let delay = live_arrivals_ms[i];
+        threads.push((
+            true,
+            std::thread::spawn(move || {
+                burst_client(addr, 20_000 + i, p, live_max, tenant, weight, delay)
+            }),
+        ));
+    }
+    let mut live_ttfts = Vec::new();
+    let mut bulk_ttfts = Vec::new();
+    let mut tokens = 0usize;
+    for (is_live, t) in threads {
+        let (ttft, n) = t.join().unwrap()?;
+        tokens += n;
+        if is_live {
+            live_ttfts.push(ttft);
+        } else {
+            bulk_ttfts.push(ttft);
+        }
+    }
+    let wall_s = t_all.elapsed_s();
+    front.shutdown();
+    Ok(BurstRun {
+        live_ttfts_ms: live_ttfts,
+        bulk_ttfts_ms: bulk_ttfts,
+        generated_tokens: tokens,
+        wall_s,
+        summary: metrics.summary(),
+        gauges: metrics.gauges(),
+    })
+}
+
+/// The ISSUE 9 fairness arm (`--burst`): a bulk tenant dumps its whole
+/// batch at t=0 (long prompts, long decodes) while an interactive
+/// tenant's short requests arrive on a deterministic pseudo-Poisson
+/// trickle. Served twice on two decode slots — FIFO (everyone in one
+/// lane) vs weighted-fair (live tenant at 4x DRR weight) — with
+/// identical prompts and arrival offsets. Weighted-fair must cut the
+/// interactive tenant's p95 TTFT strictly below FIFO's (the ISSUE 9
+/// acceptance criterion), and the arm emits the SLO attainment (% live
+/// requests with TTFT <= `--slo-ms`) and server-side goodput that
+/// ci/bench_baseline.json floors.
+fn run_burst(
+    engine: &Arc<Engine>,
+    wb: &Workbench,
+    n_requests: usize,
+    max_tokens: usize,
+    slo_ms: f64,
+    m: usize,
+) -> anyhow::Result<()> {
+    let max_ctx = engine.config().max_ctx;
+    let bulk_len = 192.min(max_ctx.saturating_sub(max_tokens + 8)).max(16);
+    let live_len = 16usize;
+    let live_max = (max_tokens / 4).max(4);
+    let corpus = &wb.calib.tokens;
+    let bulk: Vec<String> = (0..n_requests)
+        .map(|i| corpus_text(corpus, (i * 997) % (corpus.len() - bulk_len - 1), bulk_len))
+        .collect();
+    let live: Vec<String> = (0..n_requests)
+        .map(|i| corpus_text(corpus, (7 + i * 131) % (corpus.len() - live_len - 1), live_len))
+        .collect();
+    // deterministic pseudo-Poisson arrivals (LCG uniforms through an
+    // exponential quantile, mean gap 30ms): bursty like real traffic,
+    // yet identical across both runs and across machines — the two
+    // policies see the SAME offered load
+    let mut state: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut arrivals = Vec::with_capacity(n_requests);
+    let mut t_ms = 0.0f64;
+    for _ in 0..n_requests {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let u = ((state >> 33) as f64 + 1.0) / (1u64 << 31) as f64;
+        t_ms += -u.ln() * 30.0;
+        arrivals.push(t_ms);
+    }
+    println!(
+        "burst workload: {n_requests} bulk ({bulk_len}-token prompts, {max_tokens} \
+         tokens) at t=0 + {n_requests} live ({live_len}-token prompts, {live_max} \
+         tokens) over {:.0} ms, 2 slots, SLO = {slo_ms:.0} ms TTFT",
+        arrivals.last().copied().unwrap_or(0.0)
+    );
+
+    let fifo = run_burst_once(engine, false, &bulk, &live, &arrivals, max_tokens, live_max)?;
+    let wfs = run_burst_once(engine, true, &bulk, &live, &arrivals, max_tokens, live_max)?;
+
+    let fifo_p95 = percentile(&fifo.live_ttfts_ms, 95.0);
+    let wfs_p95 = percentile(&wfs.live_ttfts_ms, 95.0);
+    let ratio = fifo_p95 / wfs_p95.max(1e-9);
+    let attainment = |ttfts: &[f64]| {
+        ttfts.iter().filter(|&&t| t <= slo_ms).count() as f64 / ttfts.len().max(1) as f64
+    };
+    let slo_fifo = attainment(&fifo.live_ttfts_ms);
+    let slo_wfs = attainment(&wfs.live_ttfts_ms);
+    let tok_s = wfs.generated_tokens as f64 / wfs.wall_s;
+
+    println!("\n=== serve_bench results (Attn NBL-{m}, burst arm) ===");
+    println!("requests (per run)       {} bulk + {} live", bulk.len(), live.len());
+    println!(
+        "live p50 TTFT            fifo {:.1} ms, wfs {:.1} ms",
+        percentile(&fifo.live_ttfts_ms, 50.0),
+        percentile(&wfs.live_ttfts_ms, 50.0)
+    );
+    println!("live p95 TTFT            fifo {fifo_p95:.1} ms, wfs {wfs_p95:.1} ms");
+    println!("wfs-over-fifo p95 TTFT   {ratio:.2}x");
+    println!(
+        "live SLO attainment      fifo {:.0}%, wfs {:.0}%",
+        slo_fifo * 100.0,
+        slo_wfs * 100.0
+    );
+    println!("bulk p95 TTFT (wfs)      {:.1} ms", percentile(&wfs.bulk_ttfts_ms, 95.0));
+    println!("token throughput (wfs)   {tok_s:.1} tok/s");
+    println!("goodput (wfs)            {:.1} tok/s", wfs.summary.goodput_tok_s);
+    println!("server SLO attainment    {:.2}", wfs.summary.slo_attainment);
+    println!(
+        "shed/expired/cancelled   {} / {} / {}",
+        wfs.gauges.shed, wfs.gauges.expired, wfs.gauges.cancelled
+    );
+
+    // the ISSUE 9 acceptance criterion, machine-checked: under the same
+    // bursty load, weighted-fair strictly beats FIFO on the interactive
+    // tenant's tail TTFT
+    assert!(
+        ratio > 1.0,
+        "weighted-fair must cut the live tenant's p95 TTFT strictly below \
+         FIFO's: wfs {wfs_p95:.1} vs fifo {fifo_p95:.1} ms"
+    );
+    assert_eq!(
+        wfs.summary.requests,
+        bulk.len() + live.len(),
+        "every request must finish (deadlines are loose — nothing sheds)"
+    );
+    assert!(
+        wfs.summary.goodput_tok_s > 0.0,
+        "deadline-carrying requests must register goodput"
+    );
+
+    let metrics_json = Json::obj(vec![
+        ("slo_attainment", Json::Num(slo_wfs)),
+        ("slo_attainment_fifo", Json::Num(slo_fifo)),
+        ("wfs_over_fifo_ttft_p95", Json::Num(ratio)),
+        ("live_p50_ttft_ms", Json::Num(percentile(&wfs.live_ttfts_ms, 50.0))),
+        ("live_p95_ttft_ms", Json::Num(wfs_p95)),
+        ("live_p95_ttft_ms_fifo", Json::Num(fifo_p95)),
+        ("bulk_p95_ttft_ms", Json::Num(percentile(&wfs.bulk_ttfts_ms, 95.0))),
+        ("goodput_tok_s", Json::Num(wfs.summary.goodput_tok_s)),
+        ("server_slo_attainment", Json::Num(wfs.summary.slo_attainment)),
+        ("tok_s", Json::Num(tok_s)),
+        ("req_s", Json::Num(wfs.summary.requests as f64 / wfs.wall_s)),
+        ("shed", Json::Num(wfs.gauges.shed as f64)),
+        ("expired", Json::Num(wfs.gauges.expired as f64)),
+        ("cancelled", Json::Num(wfs.gauges.cancelled as f64)),
+    ]);
+    let bench_json = Json::obj(vec![
+        ("schema", Json::Str("nbl-bench/v1".into())),
+        ("bench", Json::Str("serve_bench".into())),
+        ("mode", Json::Str("burst".into())),
+        ("provenance", nbl::report::provenance()),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num((2 * n_requests) as f64)),
+                ("bulk_len", Json::Num(bulk_len as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("live_max_tokens", Json::Num(live_max as f64)),
+                ("slo_ms", Json::Num(slo_ms)),
+                ("max_batch", Json::Num(2.0)),
+                ("m", Json::Num(m as f64)),
+            ]),
+        ),
+        ("metrics", metrics_json),
+    ]);
+    let path = nbl::report::save_json("serve_bench_burst", &bench_json)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nbench JSON written to {}", path.display());
+    println!("serve_bench OK");
+    Ok(())
+}
+
+/// Drive one streamed request on an open connection: submit, then read
+/// frames until the terminal, capturing every received line verbatim
+/// for ci/check_stream.py. When `cancel_after` is Some(n), a
+/// `{"cancel": id}` frame is written (and captured at its send
+/// position) right after the n-th token frame. Returns the streamed
+/// token values, the concatenated per-frame text pieces, and the
+/// terminal frame.
+fn drive_stream(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    capture: &mut Vec<String>,
+    id: usize,
+    prompt: &str,
+    max_tokens: usize,
+    cancel_after: Option<usize>,
+) -> anyhow::Result<(Vec<usize>, String, Json)> {
+    writeln!(
+        writer,
+        r#"{{"id": {id}, "prompt": "{prompt}", "max_tokens": {max_tokens}, "stream": true}}"#
+    )?;
+    let mut tokens = Vec::new();
+    let mut text = String::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => anyhow::bail!("connection closed mid-stream"),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        capture.push(line.trim().to_string());
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let frame = j
+            .get("frame")
+            .and_then(|f| f.as_str().map(str::to_string))
+            .map_err(|e| anyhow::anyhow!("non-frame line mid-stream ({e}): {line}"))?;
+        let fid = j.get("id").and_then(|v| v.as_usize()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(fid == id, "frame for a foreign request: {line}");
+        if frame != "token" {
+            return Ok((tokens, text, j)); // done | error: the terminal
+        }
+        let index = j.get("index").and_then(|v| v.as_usize()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            index == tokens.len(),
+            "token index must be dense and monotone: got {index} after {} tokens",
+            tokens.len()
+        );
+        tokens.push(j.get("token").and_then(|v| v.as_usize()).map_err(|e| anyhow::anyhow!("{e}"))?);
+        text.push_str(
+            j.get("text").and_then(|v| v.as_str()).map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+        if cancel_after == Some(tokens.len()) {
+            let cancel = format!(r#"{{"cancel": {id}}}"#);
+            writeln!(writer, "{cancel}")?;
+            capture.push(cancel);
+        }
+    }
+}
+
+/// One full streaming session against a fresh server: a one-shot
+/// reference reply, a streamed replay that must match it byte for byte
+/// (greedy sampling, same engine), and a streamed request cancelled
+/// after its first token frame. Every line the client receives — plus
+/// the cancel frame it sends — lands in `capture` verbatim.
+fn stream_session(
+    engine: &Arc<Engine>,
+    cfg: ServerConfig,
+    label: &str,
+    corpus: &[u32],
+    max_tokens: usize,
+    id_base: usize,
+    capture: &mut Vec<String>,
+) -> anyhow::Result<()> {
+    let server = Arc::new(Server::new(engine.clone(), cfg));
+    let metrics = server.metrics.clone();
+    let front = TcpFrontend::start(server, "127.0.0.1:0").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let stream = TcpStream::connect(front.addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    // (a) one-shot reference: the legacy shape, no "frame" key. Captured
+    // too — the checker must tolerate mixed legacy/streamed sessions.
+    let prompt = corpus_text(corpus, 3, 24);
+    let id = id_base + 1;
+    writeln!(writer, r#"{{"id": {id}, "prompt": "{prompt}", "max_tokens": {max_tokens}}}"#)?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    capture.push(line.trim().to_string());
+    let oneshot = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(oneshot.opt("error").is_none(), "[{label}] one-shot reference failed: {line}");
+    let ref_tokens: Vec<usize> = oneshot
+        .get("tokens")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .as_arr()
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .iter()
+        .map(|t| t.as_usize())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ref_text = oneshot
+        .get("text")
+        .and_then(|t| t.as_str().map(str::to_string))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // (b) streamed replay of the same prompt: concatenated token frames
+    // must equal the one-shot reply — the parity acceptance criterion
+    let (tokens, text, done) =
+        drive_stream(&mut reader, &mut writer, capture, id_base + 2, &prompt, max_tokens, None)?;
+    let done_kind = done.get("frame").and_then(|f| f.as_str().map(str::to_string)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(done_kind == "done", "[{label}] uncancelled stream must end in a done frame: {done}");
+    anyhow::ensure!(
+        tokens == ref_tokens,
+        "[{label}] streamed tokens diverge from the one-shot reply"
+    );
+    anyhow::ensure!(
+        text == ref_text,
+        "[{label}] concatenated stream text must be byte-identical to the one-shot text"
+    );
+    let done_text = done
+        .get("text")
+        .and_then(|t| t.as_str().map(str::to_string))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(done_text == ref_text, "[{label}] terminal frame text diverges");
+
+    // (c) streamed and cancelled after the first token frame: the
+    // terminal must be the typed cancelled error, far short of the
+    // token budget — the slot freed mid-decode
+    let long_max = engine.config().max_ctx.saturating_sub(32).max(64);
+    let (cancelled_tokens, _, term) = drive_stream(
+        &mut reader,
+        &mut writer,
+        capture,
+        id_base + 3,
+        &prompt,
+        long_max,
+        Some(1),
+    )?;
+    let term_kind = term.get("frame").and_then(|f| f.as_str().map(str::to_string)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(term_kind == "error", "[{label}] cancelled stream must end in an error frame: {term}");
+    let term_err = term
+        .get("error")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        term_err.contains("cancelled"),
+        "[{label}] terminal must carry the typed cancelled error, got: {term_err}"
+    );
+    anyhow::ensure!(
+        cancelled_tokens.len() < long_max,
+        "[{label}] cancel must stop generation short of the {long_max}-token budget"
+    );
+
+    // the scheduler must agree the stream was torn down, not finished
+    let g = metrics.gauges();
+    anyhow::ensure!(g.cancelled == 1, "[{label}] cancelled gauge must be 1, got {}", g.cancelled);
+    front.shutdown();
+    println!(
+        "  [{label}] parity over {} tokens; cancel stopped {} of {long_max}",
+        ref_tokens.len(),
+        cancelled_tokens.len()
+    );
+    Ok(())
+}
+
+/// The ISSUE 9 streaming arm (`--stream-capture <path>`): live
+/// streaming sessions against the real server — a one-shot parity
+/// replay plus a mid-decode cancel — in BOTH plain continuous and
+/// self-speculative modes. Parity and cancellation are asserted inline;
+/// every received line is captured verbatim to `path` as JSONL so
+/// ci/check_stream.py can replay the session and enforce the
+/// frame-order invariants offline.
+fn run_stream_capture(
+    engine: &Arc<Engine>,
+    wb: &Workbench,
+    max_tokens: usize,
+    spec_width: usize,
+    m: usize,
+    path: &str,
+) -> anyhow::Result<()> {
+    let n_layers = engine.config().n_layers;
+    let draft_m = (m + 2).min(n_layers - 1).max(1);
+    let draft_plan = wb
+        .report
+        .plan_attn_nbl(draft_m, Criterion::CcaBound)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut capture = Vec::new();
+    println!("stream-capture: parity + cancel sessions, plain and spec modes");
+    stream_session(
+        engine,
+        ServerConfig::default(),
+        "plain",
+        &wb.calib.tokens,
+        max_tokens,
+        100,
+        &mut capture,
+    )?;
+    stream_session(
+        engine,
+        ServerConfig {
+            spec: Some(SpecConfig { draft_plan, width: spec_width }),
+            ..ServerConfig::default()
+        },
+        "spec",
+        &wb.calib.tokens,
+        max_tokens,
+        200,
+        &mut capture,
+    )?;
+
+    let out = std::path::Path::new(path);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, capture.join("\n") + "\n")?;
+    println!("\n=== serve_bench results (Attn NBL-{m}, stream-capture arm) ===");
+    println!("captured lines           {}", capture.len());
+    println!("capture written to {}", out.display());
+    println!("serve_bench OK");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["ttft-compare", "prefix-share", "paged-compare"])?;
+    let args = Args::from_env(&["ttft-compare", "prefix-share", "paged-compare", "burst"])?;
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
@@ -673,6 +1182,19 @@ fn main() -> anyhow::Result<()> {
     if args.flag("paged-compare") {
         let block_tokens = args.get_usize("block-tokens", 64)?;
         return run_paged_compare(&engine, &wb, n_requests, max_tokens, block_tokens, m);
+    }
+
+    // --- ISSUE 9 fairness arm: bursty two-tenant load served FIFO vs
+    // weighted-fair, then exit
+    if args.flag("burst") {
+        let slo_ms = args.get_f64("slo-ms", 1500.0)?;
+        return run_burst(&engine, &wb, n_requests, max_tokens, slo_ms, m);
+    }
+
+    // --- ISSUE 9 streaming arm: captured parity + cancel sessions for
+    // ci/check_stream.py, then exit
+    if let Some(path) = args.get("stream-capture") {
+        return run_stream_capture(&engine, &wb, max_tokens, spec_width, m, path);
     }
 
     // --- self-speculation: the draft is an NBL-heavier plan over the

@@ -91,6 +91,10 @@ fn main() {
         prompt: vec![(id % 200) as u32 + 1; 8 + (id as usize % 4) * 8],
         max_new_tokens: max_tokens,
         params: SamplingParams::greedy(),
+        tenant: String::new(),
+        weight: 1,
+        deadline_ms: None,
+        stream: false,
     };
     type ModeResult = (f64, usize, f64, f64, f64, MetricsSummary);
     let run_mode = |mode: BatchMode, spec: Option<SpecConfig>| -> ModeResult {

@@ -1,11 +1,52 @@
 //! Fixture: a stats endpoint covering every gauge (directly or via the
-//! derived key named by the field's gauge(...) mark).
+//! derived key named by the field's gauge(...) mark) AND the full
+//! contracted observability surface (REQUIRED_OBSERVABILITY_KEYS in
+//! src/gauges.rs — check C must stay silent on this tree).
 
 pub fn stats_to_json(s: &Summary) -> String {
     let pairs = [
         ("requests", s.requests),
         ("iterations", s.iterations),
         ("kv_in_use_bytes", s.kv_in_use),
+        // TTFT attribution percentiles
+        ("mean_queue_ms", s.mean_queue_ms),
+        ("p50_queue_ms", s.p50_queue_ms),
+        ("p95_queue_ms", s.p95_queue_ms),
+        ("p99_queue_ms", s.p99_queue_ms),
+        ("mean_prefill_ms", s.mean_prefill_ms),
+        ("p50_prefill_ms", s.p50_prefill_ms),
+        ("p95_prefill_ms", s.p95_prefill_ms),
+        ("p99_prefill_ms", s.p99_prefill_ms),
+        ("mean_stall_ms", s.mean_stall_ms),
+        ("p50_stall_ms", s.p50_stall_ms),
+        ("p95_stall_ms", s.p95_stall_ms),
+        ("p99_stall_ms", s.p99_stall_ms),
+        ("mean_park_ms", s.mean_park_ms),
+        ("p50_park_ms", s.p50_park_ms),
+        ("p95_park_ms", s.p95_park_ms),
+        ("p99_park_ms", s.p99_park_ms),
+        // bounded-retention counters
+        ("timings_retained", s.timings_retained),
+        ("timings_dropped", s.timings_dropped),
+        ("timings_capacity", s.timings_capacity),
+        // flight-recorder ring counters
+        ("trace_events", s.trace_events),
+        ("trace_dropped", s.trace_dropped),
+        ("trace_capacity", s.trace_capacity),
+        // per-phase worker gauges
+        ("phase_intake_ms", s.phase_intake_ms),
+        ("phase_admission_ms", s.phase_admission_ms),
+        ("phase_chunked_ms", s.phase_chunked_ms),
+        ("phase_observe_ms", s.phase_observe_ms),
+        ("phase_decode_ms", s.phase_decode_ms),
+        // streaming front end: teardown counters, fair-queue occupancy,
+        // deadline SLOs
+        ("cancelled", s.cancelled),
+        ("expired", s.expired),
+        ("shed", s.shed),
+        ("tenants_active", s.tenants_active),
+        ("goodput_tok_s", s.goodput_tok_s),
+        ("slo_attainment", s.slo_attainment),
     ];
     render(&pairs)
 }

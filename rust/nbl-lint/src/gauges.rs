@@ -58,6 +58,14 @@ const REQUIRED_OBSERVABILITY_KEYS: &[&str] = &[
     "phase_chunked_ms",
     "phase_observe_ms",
     "phase_decode_ms",
+    // streaming front end (DESIGN.md §Streaming front end): request
+    // teardown counters, fair-queue occupancy, and deadline SLOs
+    "cancelled",
+    "expired",
+    "shed",
+    "tenants_active",
+    "goodput_tok_s",
+    "slo_attainment",
 ];
 
 /// Map a bench name from a dotted baseline key to its emitter source.
@@ -324,7 +332,7 @@ mod tests {
         for k in REQUIRED_OBSERVABILITY_KEYS {
             assert!(seen.insert(*k), "duplicate required key {k}");
         }
-        assert!(seen.len() >= 27);
+        assert!(seen.len() >= 33);
     }
 
     #[test]

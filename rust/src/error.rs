@@ -27,6 +27,17 @@ pub enum Error {
     #[error("serving error: {0}")]
     Serving(String),
 
+    /// The client walked away (explicit cancel frame or disconnect);
+    /// typed so front ends and tests can match it without string
+    /// comparison.
+    #[error("request cancelled")]
+    Cancelled,
+
+    /// The request's submission-relative deadline passed before it
+    /// finished — shed from the queue or preempted mid-decode.
+    #[error("deadline exceeded")]
+    DeadlineExceeded,
+
     #[error("config error: {0}")]
     Config(String),
 

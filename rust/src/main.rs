@@ -189,6 +189,10 @@ fn generate(args: &Args) -> nbl::error::Result<()> {
                 } else {
                     SamplingParams::greedy()
                 },
+                tenant: String::new(),
+                weight: 1,
+                deadline_ms: None,
+                stream: false,
             });
             let label = if m == 0 { "baseline".into() } else { format!("{name}-{m}") };
             println!("[{label:>9}] {:?}", r.text);

@@ -13,11 +13,22 @@ pub struct GenRequest {
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     pub params: SamplingParams,
+    /// fairness tag: requests sharing a tenant share one DRR queue
+    /// ("" = default tenant)
+    pub tenant: String,
+    /// deficit-round-robin weight (quantum multiplier), clamped >= 1
+    pub weight: u64,
+    /// wall-clock budget measured from submit; None = no deadline
+    pub deadline_ms: Option<u64>,
+    /// opt-in per-token JSONL frames instead of a one-shot reply
+    pub stream: bool,
 }
 
 impl GenRequest {
     /// Parse the wire form: {"id":1,"prompt":"text","max_tokens":32,
     /// "temperature":0.0,"top_k":0}  (prompt_ids may replace prompt).
+    /// Optional serving fields: "tenant" (fair-queue tag), "weight"
+    /// (DRR quantum multiplier, >= 1), "deadline_ms", "stream".
     pub fn from_json(j: &Json) -> Result<GenRequest> {
         let id = j.get("id")?.as_usize()? as u64;
         let prompt = if let Some(text) = j.opt("prompt") {
@@ -46,11 +57,28 @@ impl GenRequest {
             Some(v) => v.as_usize()? as u64,
             None => id,
         };
+        let tenant = match j.opt("tenant") {
+            Some(v) => v.as_str()?.to_string(),
+            None => String::new(),
+        };
+        let weight = match j.opt("weight") {
+            Some(v) => (v.as_usize()? as u64).max(1),
+            None => 1,
+        };
+        let deadline_ms = match j.opt("deadline_ms") {
+            Some(v) => Some(v.as_usize()? as u64),
+            None => None,
+        };
+        let stream = j.opt("stream").and_then(|v| v.as_bool().ok()).unwrap_or(false);
         Ok(GenRequest {
             id,
             prompt,
             max_new_tokens,
             params: SamplingParams { temperature, top_k, seed },
+            tenant,
+            weight,
+            deadline_ms,
+            stream,
         })
     }
 }
@@ -99,6 +127,48 @@ pub fn is_trace_request(j: &Json) -> bool {
     j.opt("trace")
         .and_then(|v| v.as_bool().ok())
         .unwrap_or(false)
+}
+
+/// Parse a cancellation frame ({"cancel": <id>}); returns the id of the
+/// request the client wants aborted, or None for any other line.
+pub fn cancel_request_id(j: &Json) -> Option<u64> {
+    j.opt("cancel").and_then(|v| v.as_usize().ok()).map(|id| id as u64)
+}
+
+/// One streamed token, emitted as its own JSONL line when the request
+/// opted in with {"stream":true}. `index` is 0-based and strictly
+/// increasing per request — ci/check_stream.py enforces monotonicity.
+pub fn token_frame(id: u64, index: usize, token: u32, text: &str) -> Json {
+    Json::obj(vec![
+        ("frame", Json::Str("token".into())),
+        ("id", Json::Num(id as f64)),
+        ("index", Json::Num(index as f64)),
+        ("token", Json::Num(token as f64)),
+        ("text", Json::Str(text.into())),
+    ])
+}
+
+/// One committed token forwarded on a streaming request's sink channel
+/// (service -> front end). The front end renders it as a
+/// [`token_frame`] line; `index` is the position in the request's
+/// output sequence, so concatenating sink tokens in order reproduces
+/// the one-shot reply exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamToken {
+    pub id: u64,
+    pub index: usize,
+    pub token: u32,
+}
+
+/// Terminal frame of a streamed request: the full one-shot response body
+/// tagged "done" (success) or "error" (typed failure, including
+/// "cancelled" and "deadline exceeded"). Exactly one terminal frame is
+/// emitted per streamed request.
+pub fn terminal_frame(resp: &GenResponse) -> Json {
+    let mut j = resp.to_json();
+    let tag = if resp.error.is_some() { "error" } else { "done" };
+    j.set("frame", Json::Str(tag.into()));
+    j
 }
 
 /// Wire form of the stats endpoint: request/latency summary plus the
@@ -160,12 +230,24 @@ pub fn stats_to_json(
         ("mean_prefill_tok_s", Json::Num(s.mean_prefill_tok_s)),
         ("median_decode_tok_s", Json::Num(s.median_decode_tok_s)),
         ("aggregate_tok_s", Json::Num(s.aggregate_tok_s)),
+        // SLO summary: goodput counts only tokens whose request met its
+        // deadline; attainment is met / (met + missed + expired + shed)
+        // over requests that carried a deadline (1.0 when none did)
+        ("goodput_tok_s", Json::Num(s.goodput_tok_s)),
+        ("slo_attainment", Json::Num(s.slo_attainment)),
         ("queue_depth", Json::Num(g.queue_depth as f64)),
         ("iterations", Json::Num(g.iterations as f64)),
         ("mean_batch_occupancy", Json::Num(g.mean_occupancy())),
         ("mean_rows_per_iteration", Json::Num(g.mean_rows_per_iteration())),
         ("admissions", Json::Num(g.admissions as f64)),
         ("slot_reuses", Json::Num(g.slot_reuses as f64)),
+        // front-end lifecycle counters: client-aborted, deadline-expired
+        // mid-flight, and shed-from-queue requests; tenants_active is
+        // the number of tenants with queued or running work
+        ("cancelled", Json::Num(g.cancelled as f64)),
+        ("expired", Json::Num(g.expired as f64)),
+        ("shed", Json::Num(g.shed as f64)),
+        ("tenants_active", Json::Num(g.tenants_active as f64)),
         ("committed_tokens", Json::Num(g.committed_tokens as f64)),
         ("prefill_chunks", Json::Num(g.prefill_chunks as f64)),
         ("chunked_admissions", Json::Num(g.chunked_admissions as f64)),
@@ -221,6 +303,70 @@ mod tests {
         assert_eq!(r.prompt, vec![97, 98, 99]);
         assert_eq!(r.max_new_tokens, 5);
         assert_eq!(r.params.top_k, 3);
+        // serving fields default to: anonymous tenant, weight 1, no
+        // deadline, one-shot reply
+        assert_eq!(r.tenant, "");
+        assert_eq!(r.weight, 1);
+        assert_eq!(r.deadline_ms, None);
+        assert!(!r.stream);
+    }
+
+    #[test]
+    fn serving_fields_parsed_and_weight_clamped() {
+        let j = Json::parse(
+            r#"{"id": 2, "prompt": "x", "tenant": "bulk", "weight": 4,
+                "deadline_ms": 250, "stream": true}"#,
+        )
+        .unwrap();
+        let r = GenRequest::from_json(&j).unwrap();
+        assert_eq!(r.tenant, "bulk");
+        assert_eq!(r.weight, 4);
+        assert_eq!(r.deadline_ms, Some(250));
+        assert!(r.stream);
+        // weight 0 would stall its DRR queue forever — clamp to 1
+        let j = Json::parse(r#"{"id": 3, "prompt": "x", "weight": 0}"#).unwrap();
+        assert_eq!(GenRequest::from_json(&j).unwrap().weight, 1);
+    }
+
+    #[test]
+    fn cancel_frame_parsed() {
+        assert_eq!(
+            cancel_request_id(&Json::parse(r#"{"cancel": 42}"#).unwrap()),
+            Some(42)
+        );
+        assert_eq!(
+            cancel_request_id(&Json::parse(r#"{"id": 1, "prompt": "x"}"#).unwrap()),
+            None
+        );
+        assert_eq!(cancel_request_id(&Json::parse(r#"{"stats": true}"#).unwrap()), None);
+    }
+
+    #[test]
+    fn stream_frames_serialize() {
+        let f = token_frame(5, 2, 97, "a");
+        let back = Json::parse(&f.to_string()).unwrap();
+        assert_eq!(back.get("frame").unwrap().as_str().unwrap(), "token");
+        assert_eq!(back.get("id").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(back.get("index").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.get("token").unwrap().as_usize().unwrap(), 97);
+        assert_eq!(back.get("text").unwrap().as_str().unwrap(), "a");
+
+        let ok = GenResponse {
+            id: 5,
+            tokens: vec![97],
+            text: "a".into(),
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+            error: None,
+        };
+        let t = Json::parse(&terminal_frame(&ok).to_string()).unwrap();
+        assert_eq!(t.get("frame").unwrap().as_str().unwrap(), "done");
+        assert!(t.opt("error").is_none());
+
+        let err = GenResponse { error: Some("cancelled".into()), ..ok };
+        let t = Json::parse(&terminal_frame(&err).to_string()).unwrap();
+        assert_eq!(t.get("frame").unwrap().as_str().unwrap(), "error");
+        assert_eq!(t.get("error").unwrap().as_str().unwrap(), "cancelled");
     }
 
     #[test]
@@ -272,6 +418,8 @@ mod tests {
             timings_retained: 4,
             timings_dropped: 0,
             timings_capacity: 4096,
+            goodput_tok_s: 45.0,
+            slo_attainment: 0.9,
             ..Default::default()
         };
         let g = SchedulerGauges {
@@ -311,6 +459,10 @@ mod tests {
             paged_splice_tokens: 256,
             phase_intake_s: 0.5,
             phase_decode_s: 1.5,
+            cancelled: 3,
+            expired: 1,
+            shed: 2,
+            tenants_active: 2,
             ..Default::default()
         };
         let t = TraceStats { capacity: 1024, recorded: 200, dropped: 8 };
@@ -357,6 +509,13 @@ mod tests {
         assert_eq!(back.get("trace_capacity").unwrap().as_usize().unwrap(), 1024);
         assert!((back.get("phase_intake_ms").unwrap().as_f64().unwrap() - 500.0).abs() < 1e-9);
         assert!((back.get("phase_decode_ms").unwrap().as_f64().unwrap() - 1500.0).abs() < 1e-9);
+        // front-end lifecycle + SLO keys
+        assert_eq!(back.get("cancelled").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(back.get("expired").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("shed").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.get("tenants_active").unwrap().as_usize().unwrap(), 2);
+        assert!((back.get("goodput_tok_s").unwrap().as_f64().unwrap() - 45.0).abs() < 1e-9);
+        assert!((back.get("slo_attainment").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-9);
     }
 
     #[test]

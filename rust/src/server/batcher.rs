@@ -1,26 +1,47 @@
 //! Request admission: the iteration-level [`Scheduler`] (continuous
-//! batching, DESIGN.md §Serving) and the legacy exact-length [`Batcher`]
-//! (the lockstep run-to-completion baseline the benches compare against).
+//! batching with deficit-round-robin tenant fairness, DESIGN.md
+//! §Serving and §Streaming front end) and the legacy exact-length
+//! [`Batcher`] (the lockstep run-to-completion baseline the benches
+//! compare against).
 //!
-//! Both are strictly FIFO at the head — the oldest waiting request is
-//! always served first, so neither can starve a request. The scheduler
-//! admits one request at a time into a free KV *slot* whenever the pool
-//! budget allows; the batcher forms whole same-length groups.
+//! The scheduler is FIFO *within* a tenant and weighted-round-robin
+//! *across* tenants: each non-empty tenant queue gets up to `weight`
+//! admissions per rotation, so a bulk tenant flooding the intake cannot
+//! starve an interactive one, and every non-empty queue advances at
+//! least once per round (no starvation by construction; see the
+//! property test in tests/test_serving.rs). With a single tenant the
+//! policy degenerates to the original strict FIFO. The batcher is
+//! strictly FIFO at the head and forms whole same-length groups.
 
 use std::collections::VecDeque;
 
 use crate::kvcache::KvPool;
 use crate::server::api::GenRequest;
 
+/// One tenant's FIFO lane inside the DRR rotation.
+struct TenantQueue {
+    name: String,
+    /// Admissions this tenant may take per rotation (DRR quantum with a
+    /// unit cost per request). Refreshed from the most recent request so
+    /// clients can re-weight a tenant without restarting the server.
+    weight: u64,
+    queue: VecDeque<GenRequest>,
+}
+
 /// Iteration-level admission queue for continuous batching.
 ///
-/// Head-of-queue discipline: `next_admission` only ever pops the front,
-/// and only when a decode slot is free AND the request's KV-slot bytes
-/// fit the pool budget. A head that does not fit blocks younger requests
-/// (FIFO fairness — no starvation by construction; see the property test
-/// in tests/test_serving.rs).
+/// Head-of-queue discipline per tenant: `next_admission` only ever pops
+/// the front of the *currently selected* tenant queue, and only when a
+/// decode slot is free AND the request's KV-slot bytes fit the pool
+/// budget. `head()` always names the one request `next_admission` would
+/// pop, so the worker's peek-then-pop pattern (chunked-prefill slip
+/// test, starvation drain) stays race-free.
 pub struct Scheduler {
-    queue: VecDeque<GenRequest>,
+    tenants: Vec<TenantQueue>,
+    /// Rotation position: index of the tenant currently being served.
+    current: usize,
+    /// Admissions the current tenant may still take this rotation.
+    credits: u64,
 }
 
 impl Default for Scheduler {
@@ -31,48 +52,151 @@ impl Default for Scheduler {
 
 impl Scheduler {
     pub fn new() -> Scheduler {
-        Scheduler { queue: VecDeque::new() }
+        Scheduler { tenants: Vec::new(), current: 0, credits: 0 }
+    }
+
+    fn tenant_index(&mut self, name: &str, weight: u64) -> usize {
+        if let Some(i) = self.tenants.iter().position(|t| t.name == name) {
+            self.tenants[i].weight = weight.max(1);
+            return i;
+        }
+        self.tenants.push(TenantQueue {
+            name: name.to_string(),
+            weight: weight.max(1),
+            queue: VecDeque::new(),
+        });
+        self.tenants.len() - 1
+    }
+
+    /// Re-establish the invariant behind `head()`: whenever any request
+    /// is queued, `current` points at a non-empty tenant queue with at
+    /// least one credit left. Advances the rotation (refreshing credits
+    /// from the tenant's weight) when the current lane is empty or out
+    /// of credits.
+    fn fix_current(&mut self) {
+        let n = self.tenants.len();
+        if n == 0 || self.waiting() == 0 {
+            self.credits = 0;
+            return;
+        }
+        if self.current < n && !self.tenants[self.current].queue.is_empty() && self.credits > 0 {
+            return;
+        }
+        let start = if self.current < n { self.current } else { 0 };
+        for step in 1..=n {
+            let i = (start + step) % n;
+            if !self.tenants[i].queue.is_empty() {
+                self.current = i;
+                self.credits = self.tenants[i].weight.max(1);
+                return;
+            }
+        }
     }
 
     pub fn push(&mut self, req: GenRequest) {
-        self.queue.push_back(req);
+        let i = self.tenant_index(&req.tenant.clone(), req.weight);
+        self.tenants[i].queue.push_back(req);
+        self.fix_current();
     }
 
-    /// Put a request back at the head (admission raced with another pool
-    /// user and lost — retry next iteration, still oldest-first).
+    /// Put a request back at the head of its tenant's lane (admission
+    /// raced with another pool user and lost — retry next iteration,
+    /// still oldest-first). The rotation snaps back to that tenant and
+    /// the spent credit is refunded, so a lost race costs no fairness.
     pub fn push_front(&mut self, req: GenRequest) {
-        self.queue.push_front(req);
+        let i = self.tenant_index(&req.tenant.clone(), req.weight);
+        self.tenants[i].queue.push_front(req);
+        self.current = i;
+        self.credits = self.credits.saturating_add(1);
     }
 
-    /// The oldest waiting request — the only admissible one under the
-    /// head-of-queue discipline. The worker peeks it to decide whether
-    /// the head must wait for the in-flight chunked prefill (multi-chunk
-    /// prompts run one machine at a time) before popping anything.
+    /// The request `next_admission` would pop right now — the front of
+    /// the DRR-selected tenant queue. The worker peeks it to decide
+    /// whether the head must wait for the in-flight chunked prefill
+    /// (multi-chunk prompts run one machine at a time) before popping
+    /// anything.
     pub fn head(&self) -> Option<&GenRequest> {
-        self.queue.front()
+        self.tenants.get(self.current).and_then(|t| t.queue.front())
     }
 
     pub fn waiting(&self) -> usize {
-        self.queue.len()
+        self.tenants.iter().map(|t| t.queue.len()).sum()
     }
 
-    /// Oldest waiting request, if one can be admitted right now.
+    /// Number of tenants with at least one queued request.
+    pub fn waiting_tenants(&self) -> usize {
+        self.tenants.iter().filter(|t| !t.queue.is_empty()).count()
+    }
+
+    /// Names of tenants with queued work (for the tenants_active gauge,
+    /// unioned with the tenants of running slots by the caller).
+    pub fn tenant_names(&self) -> impl Iterator<Item = &str> {
+        self.tenants
+            .iter()
+            .filter(|t| !t.queue.is_empty())
+            .map(|t| t.name.as_str())
+    }
+
+    /// The DRR-selected request, if one can be admitted right now.
     pub fn next_admission(
         &mut self,
         free_slots: usize,
         pool: &KvPool,
         slot_bytes: usize,
     ) -> Option<GenRequest> {
-        if free_slots == 0 || self.queue.is_empty() || !pool.would_fit(slot_bytes) {
+        if free_slots == 0 || self.waiting() == 0 || !pool.would_fit(slot_bytes) {
             return None;
         }
-        self.queue.pop_front()
+        let req = self.tenants.get_mut(self.current)?.queue.pop_front()?;
+        self.credits = self.credits.saturating_sub(1);
+        self.fix_current();
+        Some(req)
+    }
+
+    /// Remove a queued request by id (client cancelled before
+    /// admission). Returns it so the caller can respond.
+    pub fn remove(&mut self, id: u64) -> Option<GenRequest> {
+        for t in &mut self.tenants {
+            if let Some(pos) = t.queue.iter().position(|r| r.id == id) {
+                let req = t.queue.remove(pos);
+                self.fix_current();
+                return req;
+            }
+        }
+        None
+    }
+
+    /// Remove every queued request matching `expired` (deadline already
+    /// blown pre-admission — the shed path). Returns them oldest-first
+    /// per tenant so each still gets its typed error response.
+    pub fn shed_expired(&mut self, expired: impl Fn(&GenRequest) -> bool) -> Vec<GenRequest> {
+        let mut out = Vec::new();
+        for t in &mut self.tenants {
+            let mut kept = VecDeque::with_capacity(t.queue.len());
+            for r in t.queue.drain(..) {
+                if expired(&r) {
+                    out.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            t.queue = kept;
+        }
+        if !out.is_empty() {
+            self.fix_current();
+        }
+        out
     }
 
     /// Drain every queued request (shutdown path: each one still gets a
     /// response).
     pub fn drain(&mut self) -> Vec<GenRequest> {
-        self.queue.drain(..).collect()
+        let mut out = Vec::new();
+        for t in &mut self.tenants {
+            out.extend(t.queue.drain(..));
+        }
+        self.credits = 0;
+        out
     }
 }
 
@@ -124,6 +248,18 @@ mod tests {
             prompt: vec![1; len],
             max_new_tokens: 4,
             params: SamplingParams::greedy(),
+            tenant: String::new(),
+            weight: 1,
+            deadline_ms: None,
+            stream: false,
+        }
+    }
+
+    fn tenant_req(id: u64, tenant: &str, weight: u64) -> GenRequest {
+        GenRequest {
+            tenant: tenant.into(),
+            weight,
+            ..req(id, 8)
         }
     }
 
@@ -182,6 +318,82 @@ mod tests {
         assert_eq!(s.waiting(), 2);
         drop(_lease);
         assert_eq!(s.next_admission(1, &pool, 60).unwrap().id, 1);
+    }
+
+    #[test]
+    fn drr_interleaves_tenants_by_weight() {
+        let pool = KvPool::new(1 << 30);
+        let mut s = Scheduler::new();
+        for id in 0..6 {
+            s.push(tenant_req(id, "bulk", 1));
+        }
+        for id in 10..13 {
+            s.push(tenant_req(id, "live", 2));
+        }
+        // rotation: 1 bulk admission, then 2 live, repeating while both
+        // lanes are non-empty; bulk drains its backlog only after live
+        // is idle — live is never stuck behind the bulk flood
+        let mut order = Vec::new();
+        while let Some(r) = s.next_admission(1, &pool, 0) {
+            order.push(r.id);
+        }
+        assert_eq!(order, vec![0, 10, 11, 1, 12, 2, 3, 4, 5]);
+        assert_eq!(s.waiting(), 0);
+    }
+
+    #[test]
+    fn head_always_names_the_next_admission() {
+        let pool = KvPool::new(1 << 30);
+        let mut s = Scheduler::new();
+        for id in 0..4 {
+            s.push(tenant_req(id, "bulk", 1));
+        }
+        for id in 10..12 {
+            s.push(tenant_req(id, "live", 3));
+        }
+        while s.waiting() > 0 {
+            let peeked = s.head().map(|r| r.id);
+            let popped = s.next_admission(1, &pool, 0).map(|r| r.id);
+            assert_eq!(peeked, popped, "peek-then-pop must agree");
+        }
+        assert!(s.head().is_none());
+    }
+
+    #[test]
+    fn push_front_refunds_the_lost_race() {
+        let pool = KvPool::new(1 << 30);
+        let mut s = Scheduler::new();
+        s.push(tenant_req(1, "bulk", 1));
+        s.push(tenant_req(2, "live", 1));
+        let a = s.next_admission(1, &pool, 0).unwrap();
+        assert_eq!(a.id, 1);
+        // the admission lost a pool race: the request goes back to the
+        // head of its own lane and is the next head again
+        s.push_front(a);
+        assert_eq!(s.head().unwrap().id, 1);
+        assert_eq!(s.next_admission(1, &pool, 0).unwrap().id, 1);
+        assert_eq!(s.next_admission(1, &pool, 0).unwrap().id, 2);
+    }
+
+    #[test]
+    fn remove_and_shed_drop_queued_requests() {
+        let mut s = Scheduler::new();
+        for id in 0..3 {
+            s.push(tenant_req(id, "bulk", 1));
+        }
+        s.push({
+            let mut r = tenant_req(7, "live", 1);
+            r.deadline_ms = Some(5);
+            r
+        });
+        assert_eq!(s.waiting_tenants(), 2);
+        assert_eq!(s.remove(1).unwrap().id, 1);
+        assert!(s.remove(99).is_none());
+        let shed = s.shed_expired(|r| r.deadline_ms.is_some());
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7]);
+        assert_eq!(s.waiting(), 2);
+        assert_eq!(s.waiting_tenants(), 1);
+        assert_eq!(s.tenant_names().collect::<Vec<_>>(), vec!["bulk"]);
     }
 
     #[test]

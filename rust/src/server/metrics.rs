@@ -32,6 +32,10 @@ pub struct RequestTiming {
     pub park_s: f64,
     /// per-generated-token intervals, seconds
     pub token_intervals: Vec<f64>,
+    /// Deadline outcome: None = the request carried no deadline,
+    /// Some(met) = it did and finished in/over budget. Set by the
+    /// scheduler at finish time; drives goodput and SLO attainment.
+    pub deadline_met: Option<bool>,
 }
 
 impl RequestTiming {
@@ -187,6 +191,7 @@ impl Stopwatch {
             stall_s: stall,
             park_s: self.park_s,
             token_intervals: self.intervals,
+            deadline_met: None,
         }
     }
 }
@@ -290,6 +295,17 @@ pub struct SchedulerGauges {
     pub paged_splices: u64,
     /// Prompt tokens covered by spliced runs.
     pub paged_splice_tokens: u64,
+    /// Requests aborted by the client (explicit cancel frame or
+    /// writer-side disconnect), in any lifecycle state.
+    pub cancelled: u64,
+    /// Requests whose deadline expired mid-flight (active decode,
+    /// chunked prefill, or parked) — terminated with a typed error.
+    pub expired: u64,
+    /// Requests shed from the intake queue because their deadline was
+    /// already blown before admission (never touched the KV pool).
+    pub shed: u64,
+    /// Tenants with queued or running work at the last observation.
+    pub tenants_active: usize,
     /// Cumulative worker-loop phase seconds (one sample per turn; the
     /// flight recorder's per-iteration spans are the zoomed-in view).
     /// Intake includes the idle block waiting for the next submission.
@@ -411,6 +427,12 @@ struct Agg {
     generated_tokens: u64,
     wall_s: f64,
     prefill_speed_sum: f64,
+    /// requests that carried a deadline (finished, expired, or shed)
+    deadline_total: u64,
+    /// deadline-carrying requests that finished within budget
+    deadline_met: u64,
+    /// generated tokens from requests that met (or carried no) deadline
+    goodput_tokens: u64,
     ttft: StreamingHistogram,
     itl: StreamingHistogram,
     queue: StreamingHistogram,
@@ -458,6 +480,16 @@ impl MetricsHub {
             a.generated_tokens += t.generated_tokens as u64;
             a.wall_s += t.total_s;
             a.prefill_speed_sum += t.prefill_speed();
+            match t.deadline_met {
+                None => a.goodput_tokens += t.generated_tokens as u64,
+                Some(met) => {
+                    a.deadline_total += 1;
+                    if met {
+                        a.deadline_met += 1;
+                        a.goodput_tokens += t.generated_tokens as u64;
+                    }
+                }
+            }
             a.ttft.record(t.ttft_s);
             a.queue.record(t.queue_s);
             a.prefill.record(t.prefill_s);
@@ -568,12 +600,41 @@ impl MetricsHub {
         g.prefix_publish_skips = s.publish_skips;
     }
 
-    /// Refresh the point-in-time gauges (queue depth + KV pool state).
-    pub fn observe(&self, queue_depth: usize, kv_in_use: usize, kv_capacity: usize) {
+    /// A request was aborted by its client (cancel frame or writer-side
+    /// disconnect). Cancellations are the client walking away, not an
+    /// SLO miss, so they touch no deadline accounting.
+    pub fn note_cancelled(&self) {
+        lock_unpoisoned(&self.gauges).cancelled += 1;
+    }
+
+    /// A deadline-carrying request blew its budget mid-flight and was
+    /// terminated; counts as an SLO miss.
+    pub fn note_expired(&self) {
+        lock_unpoisoned(&self.gauges).expired += 1;
+        lock_unpoisoned(&self.agg).deadline_total += 1;
+    }
+
+    /// A deadline-carrying request was dropped from the intake queue
+    /// with its budget already blown; counts as an SLO miss.
+    pub fn note_shed(&self) {
+        lock_unpoisoned(&self.gauges).shed += 1;
+        lock_unpoisoned(&self.agg).deadline_total += 1;
+    }
+
+    /// Refresh the point-in-time gauges (queue depth, KV pool state,
+    /// tenants with queued or running work).
+    pub fn observe(
+        &self,
+        queue_depth: usize,
+        kv_in_use: usize,
+        kv_capacity: usize,
+        tenants_active: usize,
+    ) {
         let mut g = lock_unpoisoned(&self.gauges);
         g.queue_depth = queue_depth;
         g.kv_in_use = kv_in_use;
         g.kv_capacity = kv_capacity;
+        g.tenants_active = tenants_active;
     }
 
     /// One worker-loop turn finished; charge its phase durations (one
@@ -664,6 +725,12 @@ impl MetricsHub {
             timings_retained: retained,
             timings_dropped: dropped,
             timings_capacity: cap,
+            goodput_tok_s: a.goodput_tokens as f64 / a.wall_s.max(1e-12),
+            slo_attainment: if a.deadline_total == 0 {
+                1.0
+            } else {
+                a.deadline_met as f64 / a.deadline_total as f64
+            },
         }
     }
 }
@@ -708,6 +775,12 @@ pub struct MetricsSummary {
     pub timings_retained: usize,
     pub timings_dropped: u64,
     pub timings_capacity: usize,
+    /// Tokens/s from requests that met (or carried no) deadline — the
+    /// throughput that actually counted toward client SLOs.
+    pub goodput_tok_s: f64,
+    /// Met / total over deadline-carrying requests (finished + expired
+    /// + shed); 1.0 when no request carried a deadline.
+    pub slo_attainment: f64,
 }
 
 #[cfg(test)]
@@ -807,7 +880,7 @@ mod tests {
         hub.note_iteration(6, 8);
         hub.note_admission(false);
         hub.note_admission(true);
-        hub.observe(3, 500, 1000);
+        hub.observe(3, 500, 1000, 2);
         let g = hub.gauges();
         assert_eq!(g.iterations, 2);
         assert!((g.mean_occupancy() - 0.5).abs() < 1e-9);
@@ -815,7 +888,50 @@ mod tests {
         assert_eq!(g.admissions, 2);
         assert_eq!(g.slot_reuses, 1);
         assert_eq!(g.queue_depth, 3);
+        assert_eq!(g.tenants_active, 2);
         assert!((g.kv_utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lifecycle_counters_and_slo_accounting() {
+        let hub = MetricsHub::new();
+        // no deadline anywhere: attainment is trivially perfect and all
+        // tokens are goodput
+        hub.record(RequestTiming {
+            generated_tokens: 10,
+            total_s: 1.0,
+            ..Default::default()
+        });
+        let s = hub.summary();
+        assert!((s.slo_attainment - 1.0).abs() < 1e-12);
+        assert!((s.goodput_tok_s - 10.0).abs() < 1e-9);
+
+        // one met, one missed, one expired mid-flight, one shed from the
+        // queue: attainment = 1 / 4; only met/no-deadline tokens count
+        hub.record(RequestTiming {
+            generated_tokens: 8,
+            total_s: 1.0,
+            deadline_met: Some(true),
+            ..Default::default()
+        });
+        hub.record(RequestTiming {
+            generated_tokens: 6,
+            total_s: 1.0,
+            deadline_met: Some(false),
+            ..Default::default()
+        });
+        hub.note_expired();
+        hub.note_shed();
+        hub.note_cancelled();
+        let s = hub.summary();
+        assert!((s.slo_attainment - 0.25).abs() < 1e-12);
+        // 10 (no deadline) + 8 (met) over 3s of wall; the missed 6 are
+        // excluded from goodput
+        assert!((s.goodput_tok_s - 6.0).abs() < 1e-9);
+        let g = hub.gauges();
+        assert_eq!(g.cancelled, 1);
+        assert_eq!(g.expired, 1);
+        assert_eq!(g.shed, 1);
     }
 
     #[test]

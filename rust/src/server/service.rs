@@ -43,7 +43,7 @@ use crate::kvcache::{
 };
 use crate::nbl::plan::ModelPlan;
 use crate::sampling::{argmax, Sampler};
-use crate::server::api::{GenRequest, GenResponse};
+use crate::server::api::{GenRequest, GenResponse, StreamToken};
 use crate::server::batcher::{Batcher, Scheduler};
 use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
 use crate::server::trace::{SpanKind, TraceRecorder};
@@ -290,7 +290,8 @@ impl Server {
         // finalize
         let mut responses = Vec::with_capacity(n);
         for (b, (req, sw)) in group.iter().zip(watches.into_iter()).enumerate() {
-            let timing = sw.finish(len, outputs[b].len());
+            let mut timing = sw.finish(len, outputs[b].len());
+            timing.deadline_met = deadline_met(req.deadline_ms, &timing);
             let resp = ok_response(req.id, std::mem::take(&mut outputs[b]), &timing);
             self.metrics.record(timing);
             responses.push(resp);
@@ -476,6 +477,10 @@ struct IterationLoop<'a> {
     replies: HashMap<u64, Sender<GenResponse>>,
     /// Submission-time stopwatches (TTFT includes queue wait).
     watches: HashMap<u64, Stopwatch>,
+    /// Streaming sinks, keyed like `replies`: each committed token is
+    /// forwarded as it lands. Entries whose reply was already answered
+    /// are pruned once per turn in `observe`.
+    sinks: HashMap<u64, Sender<StreamToken>>,
     arena: Option<SlotArena>,
     slots: Vec<Option<ActiveSlot>>,
     /// Rows that served an earlier request (slot-reuse accounting).
@@ -590,6 +595,7 @@ impl<'a> IterationLoop<'a> {
             // stopwatches start at SUBMISSION so TTFT includes scheduler
             // queue wait (under load the queue is where latency lives)
             watches: HashMap::new(),
+            sinks: HashMap::new(),
             arena: None,
             slots: Vec::new(),
             row_used: Vec::new(),
@@ -628,10 +634,12 @@ impl<'a> IterationLoop<'a> {
         self.advance_chunked();
         server.trace.span(SpanKind::AdvanceChunked, 0, iter, t0, 0);
         let chunked_s = timer.elapsed_s();
-        // starvation relief is a scheduler bookkeeping pass; its (tiny)
-        // cost is charged to the observe phase
+        // starvation relief and deadline enforcement are scheduler
+        // bookkeeping passes; their (tiny) cost is charged to the
+        // observe phase
         let timer = Timer::start();
         let t0 = server.trace.begin();
+        self.expire_inflight();
         self.starvation_phase();
         self.observe();
         server.trace.span(SpanKind::Observe, 0, iter, t0, 0);
@@ -652,17 +660,29 @@ impl<'a> IterationLoop<'a> {
 
     /// Intake: block when idle, poll between iterations (a pending
     /// chunked prefill or a preempted slot is work, not idleness).
-    /// Returns false on shutdown.
+    /// Cancellations drained here tear down before admission runs, and
+    /// queued requests whose deadline already passed are shed — both
+    /// halves of the ISSUE's intake-side lifecycle checks. Returns
+    /// false on shutdown.
     fn intake_phase(&mut self) -> bool {
         let idle = self.slots.iter().all(|s| s.is_none())
             && self.sched.waiting() == 0
             && self.pending.is_none()
             && self.preempted.is_empty();
+        let mut cancels: Vec<u64> = Vec::new();
         if idle {
             match self.rx.recv() {
                 Ok(sub) => {
                     let tr = &self.server.trace;
-                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches, tr) {
+                    if !intake(
+                        sub,
+                        &mut self.sched,
+                        &mut self.replies,
+                        &mut self.watches,
+                        &mut self.sinks,
+                        &mut cancels,
+                        tr,
+                    ) {
                         return false;
                     }
                 }
@@ -673,7 +693,15 @@ impl<'a> IterationLoop<'a> {
             match self.rx.try_recv() {
                 Ok(sub) => {
                     let tr = &self.server.trace;
-                    if !intake(sub, &mut self.sched, &mut self.replies, &mut self.watches, tr) {
+                    if !intake(
+                        sub,
+                        &mut self.sched,
+                        &mut self.replies,
+                        &mut self.watches,
+                        &mut self.sinks,
+                        &mut cancels,
+                        tr,
+                    ) {
                         return false;
                     }
                 }
@@ -681,6 +709,10 @@ impl<'a> IterationLoop<'a> {
                 Err(TryRecvError::Disconnected) => return false,
             }
         }
+        for id in cancels {
+            self.cancel_request(id);
+        }
+        self.shed_expired_queued();
         true
     }
 
@@ -930,6 +962,163 @@ impl<'a> IterationLoop<'a> {
         }
     }
 
+    /// Free an active slot's arena row(s) — target AND draft under
+    /// speculation — and its paged blocks, returning the departing
+    /// request so the caller can decide the terminal answer. This is
+    /// the same release sequence a natural EOS departure runs inside
+    /// `decode_iteration`, factored out so cancellation and deadline
+    /// expiry free resources through the identical path.
+    fn release_active(&mut self, slot: usize) -> Option<ActiveSlot> {
+        let a = self.slots.get_mut(slot).and_then(|s| s.take())?;
+        if let Some(arena) = self.arena.as_mut() {
+            arena.release(slot);
+        }
+        if let Some(sp) = self.spec.as_mut() {
+            if let Some(da) = sp.arena.as_mut() {
+                da.release(slot);
+            }
+        }
+        if let Some(pk) = self.paged.as_mut() {
+            pk.release(slot);
+        }
+        Some(a)
+    }
+
+    /// Tear down request `id` wherever it currently lives — queued,
+    /// chunk-prefilling, parked, or decoding — and answer it with a
+    /// typed [`Error::Cancelled`]. The freed slot re-enters the free
+    /// list immediately, so a queued request admits into it on THIS
+    /// turn's admission phase (the one-iteration reclaim guarantee).
+    /// Unknown ids are a no-op: the cancel raced the final token and
+    /// the client already has its answer.
+    fn cancel_request(&mut self, id: u64) {
+        let server = self.server;
+        let iter = self.turns;
+        // queued: drop from its tenant lane before it costs any prefill
+        if let Some(r) = self.sched.remove(id) {
+            self.watches.remove(&r.id);
+            self.sinks.remove(&id);
+            server.metrics.note_cancelled();
+            server.trace.instant(SpanKind::Cancel, id, iter, 0);
+            respond(&mut self.replies, error_response(id, Error::Cancelled));
+            return;
+        }
+        // mid-chunked-prefill: the machine owns reserved row(s) and, in
+        // paged mode, attached blocks — all returned here
+        if self.pending.as_ref().is_some_and(|p| p.req.id == id) {
+            if let Some(p) = self.pending.take() {
+                if let Some(arena) = self.arena.as_mut() {
+                    release_reservation(arena, self.spec.as_mut(), self.paged.as_mut(), p.slot);
+                }
+                self.sinks.remove(&id);
+                server.metrics.note_cancelled();
+                server.trace.instant(SpanKind::Cancel, id, iter, p.done as u64);
+                respond(&mut self.replies, error_response(id, Error::Cancelled));
+            }
+            return;
+        }
+        // parked: holds no arena rows or blocks (preemption freed them);
+        // the host-side snapshots just drop
+        if let Some(i) = self.preempted.iter().position(|p| p.req.id == id) {
+            if let Some(p) = self.preempted.remove(i) {
+                self.sinks.remove(&id);
+                server.metrics.note_cancelled();
+                server.trace.instant(SpanKind::Cancel, id, iter, p.outputs.len() as u64);
+                respond(&mut self.replies, error_response(id, Error::Cancelled));
+            }
+            return;
+        }
+        // decoding: the same departure path EOS takes
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|a| a.req.id == id));
+        if let Some(a) = slot.and_then(|s| self.release_active(s)) {
+            self.sinks.remove(&id);
+            server.metrics.note_cancelled();
+            server.trace.instant(SpanKind::Cancel, id, iter, a.outputs.len() as u64);
+            respond(&mut self.replies, error_response(id, Error::Cancelled));
+        }
+    }
+
+    /// Intake-side deadline shed: a queued request whose deadline
+    /// already passed can never meet it — drop it before it costs a
+    /// prefill. Sheds count into deadline-SLO attainment (they ARE
+    /// missed deadlines), unlike cancellations.
+    fn shed_expired_queued(&mut self) {
+        let watches = &self.watches;
+        let shed = self.sched.shed_expired(|r| {
+            r.deadline_ms.is_some_and(|d| {
+                watches.get(&r.id).is_some_and(|w| w.elapsed_s() * 1e3 > d as f64)
+            })
+        });
+        for r in shed {
+            self.watches.remove(&r.id);
+            self.sinks.remove(&r.id);
+            self.server.metrics.note_shed();
+            self.server
+                .trace
+                .instant(SpanKind::Shed, r.id, self.turns, r.deadline_ms.unwrap_or(0));
+            respond(&mut self.replies, error_response(r.id, Error::DeadlineExceeded));
+        }
+    }
+
+    /// Observe-side deadline enforcement: preempt — with a typed error,
+    /// through the normal release path — any in-flight request whose
+    /// deadline has passed, whether it is decoding, chunk-prefilling,
+    /// or parked. Expiring a decode frees its slot(s) for the next
+    /// admission phase, so an expired straggler can no longer hold a
+    /// row that a within-deadline request is queued for.
+    fn expire_inflight(&mut self) {
+        let iter = self.turns;
+        let over = |deadline_ms: Option<u64>, w: &Stopwatch| {
+            deadline_ms.is_some_and(|d| w.elapsed_s() * 1e3 > d as f64)
+        };
+        let hit: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, a)| {
+                a.as_ref().filter(|a| over(a.req.deadline_ms, &a.watch)).map(|_| s)
+            })
+            .collect();
+        for s in hit {
+            if let Some(a) = self.release_active(s) {
+                self.sinks.remove(&a.req.id);
+                self.server.metrics.note_expired();
+                self.server
+                    .trace
+                    .instant(SpanKind::Expire, a.req.id, iter, a.outputs.len() as u64);
+                respond(&mut self.replies, error_response(a.req.id, Error::DeadlineExceeded));
+            }
+        }
+        if self.pending.as_ref().is_some_and(|p| over(p.req.deadline_ms, &p.watch)) {
+            if let Some(p) = self.pending.take() {
+                if let Some(arena) = self.arena.as_mut() {
+                    release_reservation(arena, self.spec.as_mut(), self.paged.as_mut(), p.slot);
+                }
+                self.sinks.remove(&p.req.id);
+                self.server.metrics.note_expired();
+                self.server.trace.instant(SpanKind::Expire, p.req.id, iter, p.done as u64);
+                respond(&mut self.replies, error_response(p.req.id, Error::DeadlineExceeded));
+            }
+        }
+        let mut keep = VecDeque::with_capacity(self.preempted.len());
+        for p in self.preempted.drain(..) {
+            if over(p.req.deadline_ms, &p.watch) {
+                self.sinks.remove(&p.req.id);
+                self.server.metrics.note_expired();
+                self.server
+                    .trace
+                    .instant(SpanKind::Expire, p.req.id, iter, p.outputs.len() as u64);
+                respond(&mut self.replies, error_response(p.req.id, Error::DeadlineExceeded));
+            } else {
+                keep.push_back(p);
+            }
+        }
+        self.preempted = keep;
+    }
+
     /// A head that can never fit must not hang the queue (a pending
     /// machine holds budget and will free it; a nonempty resume backlog
     /// means decode departures are about to free blocks — wait).
@@ -1004,12 +1193,33 @@ impl<'a> IterationLoop<'a> {
         }
     }
 
-    /// Publish queue/pool/prefix/paged gauges for this iteration.
-    fn observe(&self) {
+    /// Publish queue/pool/prefix/paged/tenant gauges for this
+    /// iteration, and prune sinks whose request was already answered
+    /// (terminal paths drop the reply; the sink follows here — one
+    /// retain over a tiny map per turn keeps every departure path free
+    /// of sink bookkeeping).
+    fn observe(&mut self) {
         let server = self.server;
-        server
-            .metrics
-            .observe(self.sched.waiting(), server.pool.in_use(), server.pool.capacity());
+        let replies = &self.replies;
+        self.sinks.retain(|id, _| replies.contains_key(id));
+        // distinct tenants with work anywhere in the system: queued,
+        // decoding, chunk-prefilling, or parked
+        let mut tenants: std::collections::HashSet<&str> = self.sched.tenant_names().collect();
+        for a in self.slots.iter().flatten() {
+            tenants.insert(a.req.tenant.as_str());
+        }
+        if let Some(p) = self.pending.as_ref() {
+            tenants.insert(p.req.tenant.as_str());
+        }
+        for p in &self.preempted {
+            tenants.insert(p.req.tenant.as_str());
+        }
+        server.metrics.observe(
+            self.sched.waiting(),
+            server.pool.in_use(),
+            server.pool.capacity(),
+            tenants.len(),
+        );
         if let Some(px) = self.prefix.as_ref() {
             server.metrics.observe_prefix(&px.cache.stats());
         }
@@ -1420,6 +1630,7 @@ impl<'a> IterationLoop<'a> {
         let mut sampler = Sampler::new(req.params.clone());
         let first = sampler.sample(logits.at2(0, col));
         watch.mark_token();
+        emit_token(&self.sinks, req.id, 0, first);
         let outputs = vec![first];
         // the prefill token is free and the k-th decode step writes cache
         // slot len+k-1, so max_ctx - len + 1 tokens fit in the context
@@ -1439,7 +1650,8 @@ impl<'a> IterationLoop<'a> {
             }
             let kind = if covered > 0 { SpanKind::AdmitWarm } else { SpanKind::AdmitCold };
             server.trace.span(kind, req.id, iter, admit_t0, covered as u64);
-            let timing = watch.finish(len, outputs.len());
+            let mut timing = watch.finish(len, outputs.len());
+            timing.deadline_met = deadline_met(req.deadline_ms, &timing);
             server.trace.instant(SpanKind::Finish, req.id, iter, outputs.len() as u64);
             let resp = ok_response(req.id, outputs, &timing);
             server.metrics.record(timing);
@@ -1748,6 +1960,7 @@ impl<'a> IterationLoop<'a> {
         let mut sampler = Sampler::new(p.req.params.clone());
         let first = sampler.sample(logits.at2(0, step - 1));
         watch.mark_token();
+        emit_token(&self.sinks, p.req.id, 0, first);
         let outputs = vec![first];
         let cfg = engine.config();
         // same budget as whole-prompt admission: the prefill token is
@@ -1760,7 +1973,8 @@ impl<'a> IterationLoop<'a> {
         if Some(first) == server.config.eos || outputs.len() >= effective_max {
             // finished on the prefill token: the reserved row never joins
             release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
-            let timing = watch.finish(len, outputs.len());
+            let mut timing = watch.finish(len, outputs.len());
+            timing.deadline_met = deadline_met(p.req.deadline_ms, &timing);
             server.trace.instant(SpanKind::Finish, p.req.id, iter, outputs.len() as u64);
             let resp = ok_response(p.req.id, outputs, &timing);
             server.metrics.record(timing);
@@ -1859,6 +2073,7 @@ impl<'a> IterationLoop<'a> {
         let spec = self.spec.as_mut();
         let slots = &mut self.slots;
         let replies = &mut self.replies;
+        let sinks = &self.sinks;
         let engine = &server.engine;
         // one small copy per iteration: the loop below mutates the arena
         // (set_pos/release) while walking the occupied set
@@ -2017,6 +2232,7 @@ impl<'a> IterationLoop<'a> {
                 for j in 0..width {
                     let tok = a.sampler.sample(vl.at2(i, j));
                     a.outputs.push(tok);
+                    emit_token(sinks, a.req.id, a.outputs.len() - 1, tok);
                     a.next = tok;
                     committed += 1;
                     if Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max {
@@ -2070,7 +2286,8 @@ impl<'a> IterationLoop<'a> {
                 if let Some(pk) = self.paged.as_mut() {
                     pk.release(s);
                 }
-                let timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
+                let mut timing = a.watch.finish(a.req.prompt.len(), a.outputs.len());
+                timing.deadline_met = deadline_met(a.req.deadline_ms, &timing);
                 server
                     .trace
                     .instant(SpanKind::Finish, a.req.id, iter, a.outputs.len() as u64);
@@ -2142,7 +2359,12 @@ fn run_exact_length(server: &Arc<Server>, rx: &Receiver<Submission>) {
         for s in pending {
             match s {
                 Submission::Shutdown => shutdown = true,
-                Submission::Request(req, reply, watch) => {
+                // the legacy lockstep protocol runs groups to completion
+                // and has no per-request teardown; cancellation is a
+                // continuous-mode feature (the front end still answers
+                // correctly — the request simply completes)
+                Submission::Cancel(_) => {}
+                Submission::Request(req, reply, watch, _sink) => {
                     replies.insert(req.id, reply);
                     watches.insert(req.id, watch);
                     batcher.push(req);
@@ -2181,20 +2403,31 @@ fn run_exact_length(server: &Arc<Server>, rx: &Receiver<Submission>) {
     }
 }
 
-/// Returns false on an explicit shutdown submission.
+/// Returns false on an explicit shutdown submission. Cancellations are
+/// only buffered here: tearing one down needs the whole iteration
+/// state (slots, arenas, the chunked machine), which the caller owns.
 fn intake(
     sub: Submission,
     sched: &mut Scheduler,
     replies: &mut HashMap<u64, Sender<GenResponse>>,
     watches: &mut HashMap<u64, Stopwatch>,
+    sinks: &mut HashMap<u64, Sender<StreamToken>>,
+    cancels: &mut Vec<u64>,
     trace: &TraceRecorder,
 ) -> bool {
     match sub {
         Submission::Shutdown => false,
-        Submission::Request(req, reply, watch) => {
+        Submission::Cancel(id) => {
+            cancels.push(id);
+            true
+        }
+        Submission::Request(req, reply, watch, sink) => {
             trace.instant(SpanKind::Submit, req.id, 0, req.prompt.len() as u64);
             replies.insert(req.id, reply);
             watches.insert(req.id, watch);
+            if let Some(s) = sink {
+                sinks.insert(req.id, s);
+            }
             sched.push(req);
             true
         }
@@ -2231,10 +2464,33 @@ fn respond(replies: &mut HashMap<u64, Sender<GenResponse>>, resp: GenResponse) {
     }
 }
 
+/// Forward one committed token on the request's streaming sink, if it
+/// has one. Send failures (receiver gone) are ignored: client
+/// disconnect is the front end's job to detect, and it answers with a
+/// cancel submission — the scheduler never blocks on a slow reader.
+fn emit_token(sinks: &HashMap<u64, Sender<StreamToken>>, id: u64, index: usize, token: u32) {
+    if let Some(tx) = sinks.get(&id) {
+        let _ = tx.send(StreamToken { id, index, token });
+    }
+}
+
+/// Did a finished request meet its submission-relative deadline? None
+/// when it never carried one: SLO attainment divides over deadlined
+/// requests only, while goodput counts deadline-free requests
+/// unconditionally (see `MetricsHub::record`).
+fn deadline_met(deadline_ms: Option<u64>, t: &RequestTiming) -> Option<bool> {
+    deadline_ms.map(|d| t.total_s * 1e3 <= d as f64)
+}
+
 enum Submission {
     // the stopwatch is started by the SUBMITTING thread, so TTFT always
-    // includes channel + scheduler queue wait in every mode
-    Request(GenRequest, Sender<GenResponse>, Stopwatch),
+    // includes channel + scheduler queue wait in every mode; the
+    // optional sink receives each committed token as the scheduler
+    // commits it (streaming front end)
+    Request(GenRequest, Sender<GenResponse>, Stopwatch, Option<Sender<StreamToken>>),
+    // abort a request wherever it currently lives; unknown ids are a
+    // no-op (the cancel raced the final token)
+    Cancel(u64),
     Shutdown,
 }
 
@@ -2248,8 +2504,33 @@ impl ServerHandle {
     /// stopwatch starts here, on the submitting thread.
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
         let (tx, rx) = channel();
-        let _ = self.tx.send(Submission::Request(req, tx, Stopwatch::new()));
+        let _ = self.tx.send(Submission::Request(req, tx, Stopwatch::new(), None));
         rx
+    }
+
+    /// Submit a streaming request: every committed token is forwarded
+    /// on `sink` as the scheduler commits it (continuous mode; the
+    /// legacy exact-length worker answers one-shot and the front end
+    /// synthesizes the frames). The terminal response still arrives on
+    /// the returned receiver, after the last sink token.
+    pub fn submit_streaming(
+        &self,
+        req: GenRequest,
+        sink: Sender<StreamToken>,
+    ) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Submission::Request(req, tx, Stopwatch::new(), Some(sink)));
+        rx
+    }
+
+    /// Cancel request `id`: wherever it lives — queued, chunk-
+    /// prefilling, parked, or decoding — it is torn down through the
+    /// normal release path (slot freed in both arenas, paged blocks
+    /// returned) and answered with a typed [`Error::Cancelled`].
+    /// Unknown ids are a no-op: the cancel raced the final token and
+    /// the client already has its answer.
+    pub fn cancel(&self, id: u64) {
+        let _ = self.tx.send(Submission::Cancel(id));
     }
 
     pub fn submit_blocking(&self, req: GenRequest) -> Result<GenResponse> {

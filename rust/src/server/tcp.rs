@@ -1,13 +1,29 @@
-//! TCP front-end: newline-delimited JSON requests/responses.
+//! TCP front-end: newline-delimited JSON requests/responses, with
+//! opt-in per-token streaming (DESIGN.md §Streaming front end).
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"id": 1, "prompt": "the small robot ", "max_tokens": 32}
 //!   <- {"id": 1, "text": "...", "tokens": [...], "ttft_ms": ..., ...}
+//!   -> {"id": 2, "prompt": "...", "max_tokens": 32, "stream": true}
+//!   <- {"frame": "token", "id": 2, "index": 0, "token": ..., "text": ...}
+//!   <- ... one line per committed token, `index` strictly increasing ...
+//!   <- {"frame": "done", "id": 2, "text": "...", "tokens": [...], ...}
+//!   -> {"cancel": 2}       (mid-stream: abort; terminal frame becomes
+//!                           {"frame": "error", ..., "error": "request
+//!                           cancelled"}. No token frames follow the
+//!                           terminal frame.)
 //!   -> {"stats": true}
 //!   <- {"requests": ..., "queue_depth": ..., "mean_batch_occupancy":
 //!      ..., "kv_utilization": ..., "spec_acceptance_rate": ...,
-//!      "tokens_per_row_iteration": ..., ...}  (see api::stats_to_json;
-//!      the spec_* gauges stay 0 unless ServerConfig.spec is set)
+//!      "tokens_per_row_iteration", "slo_attainment", ...}  (see
+//!      api::stats_to_json; spec_* gauges stay 0 unless
+//!      ServerConfig.spec is set)
+//!
+//! Legacy one-shot requests (no "stream" key) are answered exactly as
+//! before — a single response line with no "frame" key — so existing
+//! clients never see a frame they do not expect. Closing the socket
+//! mid-stream cancels the in-flight request: the scheduler frees its
+//! slot(s) through the normal release path within one iteration.
 //!
 //! One OS thread per connection (connection counts here are benchmark-
 //! scale); generation itself is funneled through the server worker, so
@@ -17,10 +33,15 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::TryRecvError;
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::data::tokenizer::ByteTokenizer;
 use crate::error::Result;
-use crate::server::api::{GenRequest, GenResponse};
+use crate::server::api::{
+    cancel_request_id, terminal_frame, token_frame, GenRequest, GenResponse,
+};
 use crate::server::service::{Server, ServerHandle};
 use crate::util::json::Json;
 
@@ -142,14 +163,125 @@ fn handle_conn(
                 continue;
             }
         }
-        let resp = match parsed.and_then(|j| GenRequest::from_json(&j)) {
-            Ok(req) => handle
-                .submit_blocking(req)
-                .unwrap_or_else(|e| err_resp(0, &e.to_string())),
-            Err(e) => err_resp(0, &e.to_string()),
-        };
-        writeln!(writer, "{}", resp.to_json())?;
+        // a stale cancel frame between requests: the stream it aimed at
+        // already emitted its terminal frame, so forwarding is at most
+        // a no-op in the scheduler — consume the line silently (a reply
+        // here would interleave with the next request's frames)
+        if let Ok(j) = &parsed {
+            if let Some(id) = cancel_request_id(j) {
+                handle.cancel(id);
+                continue;
+            }
+        }
+        match parsed.and_then(|j| GenRequest::from_json(&j)) {
+            Ok(req) if req.stream => {
+                stream_request(&mut reader, &mut writer, handle, req, stop)?;
+            }
+            Ok(req) => {
+                let resp = handle
+                    .submit_blocking(req)
+                    .unwrap_or_else(|e| err_resp(0, &e.to_string()));
+                writeln!(writer, "{}", resp.to_json())?;
+            }
+            Err(e) => {
+                writeln!(writer, "{}", err_resp(0, &e.to_string()).to_json())?;
+            }
+        }
     }
+}
+
+/// Serve one streamed request: forward committed tokens as JSONL
+/// `token` frames the moment the scheduler commits them, watch the
+/// socket for a `{"cancel": id}` frame or a disconnect while the
+/// stream runs, and close with exactly one terminal frame (`done` or
+/// `error`). Tokens the scheduler never streamed — the legacy
+/// exact-length worker answers one-shot — are framed from the final
+/// response before the terminal frame, so concatenated token frames
+/// equal the one-shot reply in EVERY mode (the fallback ladder's
+/// parity rung).
+fn stream_request(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    handle: &ServerHandle,
+    req: GenRequest,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let id = req.id;
+    let tok = ByteTokenizer::new();
+    let (sink_tx, sink_rx) = std::sync::mpsc::channel();
+    let reply = handle.submit_streaming(req, sink_tx);
+    // tight poll while streaming so token frames flush promptly; the
+    // caller's 100ms idle cadence is restored before returning
+    reader.get_ref().set_read_timeout(Some(Duration::from_millis(5)))?;
+    let mut streamed = 0usize;
+    let mut cancelled = false;
+    let mut line = String::new();
+    let resp: GenResponse = loop {
+        // server shutting down: ask the worker to abort so the terminal
+        // error arrives promptly instead of after a full generation
+        if stop.load(Ordering::Relaxed) && !cancelled {
+            cancelled = true;
+            handle.cancel(id);
+        }
+        while let Ok(t) = sink_rx.try_recv() {
+            let piece = tok.decode(&[t.token]);
+            writeln!(writer, "{}", token_frame(t.id, t.index, t.token, &piece))?;
+            streamed = t.index + 1;
+        }
+        match reply.try_recv() {
+            Ok(r) => break r,
+            Err(TryRecvError::Disconnected) => break err_resp(id, "server shut down"),
+            Err(TryRecvError::Empty) => {}
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                // peer hung up mid-stream: free the slot(s), then drain
+                // the terminal so the worker never blocks — there is no
+                // one left to write frames to
+                handle.cancel(id);
+                let _ = reply.recv_timeout(Duration::from_secs(5));
+                reader.get_ref().set_read_timeout(Some(Duration::from_millis(100)))?;
+                return Ok(());
+            }
+            Ok(_) => {
+                if let Ok(j) = Json::parse(&line) {
+                    if cancel_request_id(&j) == Some(id) && !cancelled {
+                        cancelled = true;
+                        handle.cancel(id);
+                    }
+                    // anything else mid-stream is out of protocol for
+                    // this sequential front end; the line is dropped
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => {
+                handle.cancel(id);
+                let _ = reply.recv_timeout(Duration::from_secs(5));
+                return Err(e.into());
+            }
+        }
+    };
+    // stragglers that raced the terminal response (mpsc preserves send
+    // order, so indices can only move forward)
+    while let Ok(t) = sink_rx.try_recv() {
+        let piece = tok.decode(&[t.token]);
+        writeln!(writer, "{}", token_frame(t.id, t.index, t.token, &piece))?;
+        streamed = t.index + 1;
+    }
+    // top-up: tokens committed but never streamed (the exact-length
+    // worker, or a race between the last commit and the terminal)
+    if resp.error.is_none() {
+        for (i, &t) in resp.tokens.iter().enumerate().skip(streamed) {
+            let piece = tok.decode(&[t]);
+            writeln!(writer, "{}", token_frame(id, i, t, &piece))?;
+        }
+    }
+    writeln!(writer, "{}", terminal_frame(&resp))?;
+    reader.get_ref().set_read_timeout(Some(Duration::from_millis(100)))?;
+    Ok(())
 }
 
 fn err_resp(id: u64, msg: &str) -> GenResponse {

@@ -62,6 +62,12 @@ pub enum SpanKind {
     Resume,
     Finish,
     ErrorEvt,
+    /// client cancelled the request (explicit frame or disconnect)
+    Cancel,
+    /// per-request deadline exceeded mid-flight (active/pending/parked)
+    Expire,
+    /// deadline already blown while still queued — dropped pre-admission
+    Shed,
 }
 
 impl SpanKind {
@@ -85,6 +91,9 @@ impl SpanKind {
             SpanKind::Resume => "resume",
             SpanKind::Finish => "finish",
             SpanKind::ErrorEvt => "error",
+            SpanKind::Cancel => "cancel",
+            SpanKind::Expire => "expire",
+            SpanKind::Shed => "shed",
         }
     }
 
@@ -96,6 +105,9 @@ impl SpanKind {
                 | SpanKind::Resume
                 | SpanKind::Finish
                 | SpanKind::ErrorEvt
+                | SpanKind::Cancel
+                | SpanKind::Expire
+                | SpanKind::Shed
         )
     }
 
@@ -504,6 +516,25 @@ mod tests {
         // a post-overwrite export is still balanced
         let j = t.export_chrome();
         assert_eq!(names(&j, "B"), names(&j, "E"));
+    }
+
+    #[test]
+    fn cancel_expire_shed_are_request_lane_instants() {
+        for (kind, name) in [
+            (SpanKind::Cancel, "cancel"),
+            (SpanKind::Expire, "expire"),
+            (SpanKind::Shed, "shed"),
+        ] {
+            assert!(kind.is_instant(), "{name} must be zero-width");
+            assert!(!kind.worker_lane(), "{name} renders on the request lane");
+            assert_eq!(kind.name(), name);
+        }
+        let t = TraceRecorder::new(8);
+        t.instant(SpanKind::Cancel, 9, 2, 0);
+        t.instant(SpanKind::Expire, 10, 2, 0);
+        t.instant(SpanKind::Shed, 11, 2, 0);
+        let j = t.export_chrome();
+        assert_eq!(names(&j, "i"), vec!["cancel", "expire", "shed"]);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! and quantization.
 
 use std::io::{BufRead, BufReader, Write};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 
 use nbl::executor::Engine;
 use nbl::kvcache::KvPool;
@@ -12,7 +12,7 @@ use nbl::model::Artifacts;
 use nbl::quant::{quantize_weights, QuantConfig};
 use nbl::runtime::Runtime;
 use nbl::sampling::SamplingParams;
-use nbl::server::api::GenRequest;
+use nbl::server::api::{GenRequest, StreamToken};
 use nbl::server::service::{BatchMode, Server, ServerConfig, SpecConfig};
 use nbl::server::tcp::TcpFrontend;
 use nbl::server::Scheduler;
@@ -31,7 +31,29 @@ fn req(id: u64, prompt: &str, n: usize) -> GenRequest {
         prompt: nbl::data::ByteTokenizer::new().encode(prompt),
         max_new_tokens: n,
         params: SamplingParams::greedy(),
+        tenant: String::new(),
+        weight: 1,
+        deadline_ms: None,
+        stream: false,
     }
+}
+
+/// A streaming variant of [`req`]: same request, but every committed
+/// token is also forwarded on a per-request sink as it lands.
+fn stream_req(id: u64, prompt: &str, n: usize) -> GenRequest {
+    GenRequest { stream: true, ..req(id, prompt, n) }
+}
+
+/// Drain a streaming sink after its terminal response arrived. The
+/// frames must all carry the request id with dense 0-based indices.
+fn drain_sink(id: u64, rx: &mpsc::Receiver<StreamToken>) -> Vec<u32> {
+    let mut toks = Vec::new();
+    while let Ok(t) = rx.try_recv() {
+        assert_eq!(t.id, id, "sink frames must carry their request id");
+        assert_eq!(t.index, toks.len(), "stream indices must be dense and ordered");
+        toks.push(t.token);
+    }
+    toks
 }
 
 #[test]
@@ -352,8 +374,7 @@ fn scheduler_never_starves_the_oldest_request() {
                     sched.push(GenRequest {
                         id: next_id,
                         prompt: vec![1; 8 + (next_id as usize % 5)],
-                        max_new_tokens: 4,
-                        params: SamplingParams::greedy(),
+                        ..req(next_id, "x", 4)
                     });
                     next_id += 1;
                 } else {
@@ -1580,4 +1601,363 @@ fn timing_retention_bounds_raw_samples_through_server() {
     assert_eq!(s.timings_dropped, 8);
     assert_eq!(s.timings_capacity, 4);
     assert!(s.mean_ttft_s > 0.0, "histogram summaries cover all requests");
+}
+
+// ---------------------------------------------------------------------------
+// streaming front end (ISSUE 9: per-token sinks, cancellation, deadlines,
+// weighted-fair intake — DESIGN.md §Streaming front end)
+
+#[test]
+fn streamed_tokens_match_one_shot_reply_exactly() {
+    // tentpole acceptance: the per-token sink is a byte-exact view of
+    // the one-shot reply — same tokens, dense 0-based indices — in
+    // plain AND speculative continuous serving, with non-streaming
+    // traffic interleaved on the same worker.
+    let engine = Arc::new(engine("main"));
+    let solo_server = Server::new(engine.clone(), ServerConfig::default());
+    let prompts = ["the small robot ", "a hidden garden of ", "ring ", "the quiet river "];
+    let solo: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| solo_server.generate_one(&req(i as u64, p, 16)))
+        .collect();
+    for s in &solo {
+        assert!(s.error.is_none(), "{:?}", s.error);
+    }
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(2);
+    for (label, spec) in [("plain", None), ("spec", Some(SpecConfig { draft_plan, width: 4 }))] {
+        let cfg = ServerConfig { spec, ..ServerConfig::default() };
+        let server = Arc::new(Server::new(engine.clone(), cfg));
+        let handle = server.clone().spawn();
+        // even ids stream, odd ids use the one-shot path, concurrently
+        let mut sinks = Vec::new();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                if i % 2 == 0 {
+                    let (tx, srx) = mpsc::channel();
+                    sinks.push((i, srx));
+                    handle.submit_streaming(stream_req(i as u64, p, 16), tx)
+                } else {
+                    handle.submit(req(i as u64, p, 16))
+                }
+            })
+            .collect();
+        let got: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        for (g, s) in got.iter().zip(&solo) {
+            assert!(g.error.is_none(), "[{label}] {:?}", g.error);
+            assert_eq!(g.tokens, s.tokens, "[{label}] request {} diverged", s.id);
+        }
+        for (i, srx) in &sinks {
+            let streamed = drain_sink(*i as u64, srx);
+            assert_eq!(
+                &streamed, &got[*i].tokens,
+                "[{label}] the sink for request {i} must carry every committed token"
+            );
+        }
+        handle.shutdown();
+    }
+}
+
+#[test]
+fn tcp_streaming_round_trip() {
+    // wire-level framing: a {"stream":true} request gets dense token
+    // frames then exactly one "done" terminal carrying the full
+    // one-shot body, and the same connection still serves the legacy
+    // protocol afterwards (the idle read cadence is restored)
+    let server = Arc::new(Server::new(Arc::new(engine("main")), ServerConfig::default()));
+    let front = TcpFrontend::start(server, "127.0.0.1:0").unwrap();
+    let mut conn = std::net::TcpStream::connect(front.addr).unwrap();
+    writeln!(
+        conn,
+        r#"{{"id": 3, "prompt": "the quiet river ", "max_tokens": 6, "stream": true}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut tokens = Vec::new();
+    let done = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = nbl::util::json::Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 3);
+        let frame = j.get("frame").unwrap().as_str().unwrap().to_string();
+        if frame == "token" {
+            assert_eq!(
+                j.get("index").unwrap().as_usize().unwrap(),
+                tokens.len(),
+                "token frames must arrive dense and in order"
+            );
+            tokens.push(j.get("token").unwrap().as_usize().unwrap());
+        } else {
+            break j;
+        }
+    };
+    assert_eq!(done.get("frame").unwrap().as_str().unwrap(), "done");
+    let body: Vec<usize> = done
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(tokens.len(), 6);
+    assert_eq!(tokens, body, "token frames must reassemble the one-shot body");
+    writeln!(conn, r#"{{"id": 4, "prompt": "the quiet river ", "max_tokens": 4}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = nbl::util::json::Json::parse(&line).unwrap();
+    assert!(j.opt("frame").is_none(), "one-shot replies carry no frame tag");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    front.shutdown();
+}
+
+#[test]
+fn cancel_mid_decode_frees_the_slot_for_a_queued_request() {
+    // acceptance: with a one-row arena, B queues behind a long-running
+    // A. Cancelling A mid-decode must answer A with the typed error,
+    // free row 0 within one iteration, and admit B into the SAME row
+    // (the slot-reuse gauge sees it) — with the KV pool back to zero.
+    let engine = Arc::new(engine("main"));
+    let solo = Server::new(engine.clone(), ServerConfig::default())
+        .generate_one(&req(2, "a hidden garden of ", 8));
+    assert!(solo.error.is_none());
+    let cfg = ServerConfig { max_batch: 1, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let pool = server.pool.clone();
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx_a = handle.submit_streaming(stream_req(1, "the small robot ", 400), sink);
+    // A is mid-decode once its first committed token hits the sink
+    let first = srx.recv().expect("A must stream its first token");
+    assert_eq!((first.id, first.index), (1, 0));
+    let rx_b = handle.submit(req(2, "a hidden garden of ", 8));
+    handle.cancel(1);
+    let a = rx_a.recv().unwrap();
+    assert!(
+        a.error.as_deref().is_some_and(|e| e.contains("cancelled")),
+        "cancel must answer with the typed error: {:?}",
+        a.error
+    );
+    let b = rx_b.recv().unwrap();
+    assert!(b.error.is_none(), "{:?}", b.error);
+    assert_eq!(b.tokens, solo.tokens, "the admitted-after-cancel request diverged");
+    let g = metrics.gauges();
+    assert_eq!(g.cancelled, 1, "{g:?}");
+    assert!(g.slot_reuses >= 1, "B must admit into the row the cancel freed: {g:?}");
+    handle.shutdown();
+    assert_eq!(pool.in_use(), 0, "cancel leaked KV pool bytes");
+}
+
+#[test]
+fn cancel_during_chunked_prefill_releases_the_reservation() {
+    // a near-max-context prompt chunks its way in over ~14 iterations;
+    // a cancel sent after the second chunk lands mid-machine, so the
+    // reserved row and its KV lease must come back without the prompt
+    // ever producing a token — and the worker keeps serving afterwards
+    let engine = Arc::new(engine("main"));
+    let max_ctx = engine.config().max_ctx;
+    let prompt = long_text(max_ctx - 64);
+    let cfg = ServerConfig { prefill_chunk: 32, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let pool = server.pool.clone();
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx_a = handle.submit_streaming(stream_req(1, &prompt, 16), sink);
+    let t0 = std::time::Instant::now();
+    while metrics.gauges().prefill_chunks < 2 {
+        assert!(t0.elapsed().as_secs() < 60, "chunked machine never started");
+        std::thread::yield_now();
+    }
+    handle.cancel(1);
+    let a = rx_a.recv().unwrap();
+    assert!(
+        a.error.as_deref().is_some_and(|e| e.contains("cancelled")),
+        "{:?}",
+        a.error
+    );
+    assert!(
+        srx.try_recv().is_err(),
+        "the cancel landed mid-prefill: no token can have streamed"
+    );
+    let b = handle.submit(req(2, "the small robot ", 8)).recv().unwrap();
+    assert!(b.error.is_none(), "the worker must keep serving after the teardown");
+    assert_eq!(metrics.gauges().cancelled, 1);
+    handle.shutdown();
+    assert_eq!(pool.in_use(), 0, "a cancelled machine leaked its reservation");
+}
+
+#[test]
+fn cancel_in_spec_lockstep_releases_both_arenas() {
+    // cancelling between verify rounds must release the target row AND
+    // its lockstep draft row: the shared pool drops to zero bytes the
+    // moment the cancel is answered, and the next request decodes
+    // token-identically to the plain protocol on the same row
+    let engine = Arc::new(engine("main"));
+    let want = Server::new(engine.clone(), ServerConfig::default())
+        .generate_one(&req(2, "a hidden garden of ", 12));
+    assert!(want.error.is_none());
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(2);
+    let cfg = ServerConfig {
+        max_batch: 1,
+        spec: Some(SpecConfig { draft_plan, width: 4 }),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let pool = server.pool.clone();
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx_a = handle.submit_streaming(stream_req(1, "the small robot ", 400), sink);
+    let _ = srx.recv().expect("A must stream its first token");
+    handle.cancel(1);
+    let a = rx_a.recv().unwrap();
+    assert!(
+        a.error.as_deref().is_some_and(|e| e.contains("cancelled")),
+        "{:?}",
+        a.error
+    );
+    // the release runs before the reply is sent, so by now both the
+    // target and draft leases are gone
+    assert_eq!(pool.in_use(), 0, "a spec cancel must release BOTH arenas");
+    let b = handle.submit(req(2, "a hidden garden of ", 12)).recv().unwrap();
+    assert!(b.error.is_none(), "{:?}", b.error);
+    assert_eq!(b.tokens, want.tokens, "spec serving diverged after a lockstep cancel");
+    assert_eq!(metrics.gauges().cancelled, 1);
+    handle.shutdown();
+}
+
+#[test]
+fn cancel_while_parked_drops_the_snapshot_cleanly() {
+    // paged preemption parks the YOUNGEST resident (LIFO); cancelling
+    // the parked request must drop its host snapshots without touching
+    // the survivor, whose output still matches unconstrained serving.
+    // Budget: 6 blocks of 16 tokens against two 64-token requests
+    // (4 blocks peak each) — contention is guaranteed at ~3.5 blocks.
+    let engine = Arc::new(engine("main"));
+    let solo = Server::new(engine.clone(), ServerConfig::default())
+        .generate_one(&req(1, "the small robot ", 48));
+    assert!(solo.error.is_none());
+    let bt = 16usize;
+    let bpb = nbl::kvcache::kv_bytes(engine.config(), engine.plan.kv_layers(), 1, bt, 4);
+    let cfg = ServerConfig {
+        kv_block_tokens: bt,
+        kv_capacity_bytes: 6 * bpb,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let pool = server.pool.clone();
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx_a = handle.submit_streaming(stream_req(1, "the small robot ", 48), sink);
+    let _ = srx.recv().expect("A must stream its first token");
+    // B (younger) joins; when the pool runs dry it is the LIFO victim
+    let rx_b = handle.submit(req(2, "a hidden garden of ", 48));
+    let t0 = std::time::Instant::now();
+    while metrics.gauges().preemptions < 1 {
+        assert!(t0.elapsed().as_secs() < 60, "the block budget never forced a preemption");
+        std::thread::yield_now();
+    }
+    handle.cancel(2);
+    let b = rx_b.recv().unwrap();
+    assert!(
+        b.error.as_deref().is_some_and(|e| e.contains("cancelled")),
+        "{:?}",
+        b.error
+    );
+    let a = rx_a.recv().unwrap();
+    assert!(a.error.is_none(), "the survivor must be untouched: {:?}", a.error);
+    assert_eq!(a.tokens, solo.tokens, "the survivor diverged across the eviction");
+    let g = metrics.gauges();
+    assert_eq!(g.cancelled, 1, "{g:?}");
+    assert!(g.preemptions >= 1, "{g:?}");
+    handle.shutdown();
+    assert_eq!(pool.in_use(), 0, "a parked cancel leaked blocks or leases");
+}
+
+#[test]
+fn queued_request_past_its_deadline_is_shed_with_the_typed_error() {
+    // intake-side deadline shed: B can never admit while A holds the
+    // one-row arena, so its 1 ms budget blows in queue — the reply is
+    // the typed deadline error, the shed gauge sees it, and SLO
+    // attainment counts it as a miss (unlike a cancellation)
+    let engine = Arc::new(engine("main"));
+    let cfg = ServerConfig { max_batch: 1, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx_a = handle.submit_streaming(stream_req(1, "the small robot ", 300), sink);
+    let _ = srx.recv().expect("A must stream its first token");
+    let rx_b = handle.submit(GenRequest {
+        deadline_ms: Some(1),
+        ..req(2, "a hidden garden of ", 8)
+    });
+    let b = rx_b.recv().unwrap();
+    assert!(
+        b.error.as_deref().is_some_and(|e| e.contains("deadline")),
+        "queue shed must use the typed deadline error: {:?}",
+        b.error
+    );
+    let g = metrics.gauges();
+    assert_eq!(g.shed, 1, "{g:?}");
+    assert_eq!(g.expired, 0, "{g:?}");
+    assert_eq!(
+        metrics.summary().slo_attainment,
+        0.0,
+        "a shed IS a missed deadline and must count against attainment"
+    );
+    handle.cancel(1);
+    let a = rx_a.recv().unwrap();
+    assert!(a.error.is_some());
+    handle.shutdown();
+}
+
+#[test]
+fn mid_decode_deadline_expiry_frees_the_slot_and_counts_the_miss() {
+    // observe-side deadline enforcement: a 25 ms budget against a
+    // ~400-token decode expires mid-flight. The reply is the typed
+    // error, the expired gauge (not shed) sees it, the row frees for
+    // the next request, and nothing leaks.
+    let engine = Arc::new(engine("main"));
+    let solo = Server::new(engine.clone(), ServerConfig::default())
+        .generate_one(&req(2, "a hidden garden of ", 8));
+    assert!(solo.error.is_none());
+    let cfg = ServerConfig { max_batch: 1, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let metrics = server.metrics.clone();
+    let pool = server.pool.clone();
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx_a = handle.submit_streaming(
+        GenRequest { deadline_ms: Some(25), ..stream_req(1, "the small robot ", 400) },
+        sink,
+    );
+    let a = rx_a.recv().unwrap();
+    assert!(
+        a.error.as_deref().is_some_and(|e| e.contains("deadline")),
+        "mid-decode expiry must use the typed error: {:?}",
+        a.error
+    );
+    let streamed = drain_sink(1, &srx);
+    assert!(
+        streamed.len() < 400,
+        "the budget must cut the decode short, not let it run out"
+    );
+    let g = metrics.gauges();
+    assert_eq!(g.expired, 1, "{g:?}");
+    assert_eq!(g.shed, 0, "{g:?}");
+    assert_eq!(metrics.summary().slo_attainment, 0.0);
+    // the freed row serves the next request normally
+    let b = handle.submit(req(2, "a hidden garden of ", 8)).recv().unwrap();
+    assert!(b.error.is_none(), "{:?}", b.error);
+    assert_eq!(b.tokens, solo.tokens, "serving diverged after an expiry teardown");
+    handle.shutdown();
+    assert_eq!(pool.in_use(), 0, "an expiry teardown leaked KV bytes");
 }
