@@ -18,11 +18,17 @@ invariants the exporter guarantees by construction:
      complete-span ring emits both edges of a span or neither);
   5. (--require) every named span family actually occurred — the mixed
      trace workload must exercise admission, chunked prefill, decode,
-     speculation, and preemption, or a scheduler hook has regressed.
+     speculation, and preemption, or a scheduler hook has regressed;
+  6. (--worker-lanes N) the iteration-loop spans (cat == "worker")
+     occupy exactly N distinct (pid, tid) lanes — an N-replica server
+     exports one worker lane per replica, and a replica whose spans
+     collapse onto tid 0 (the pre-ISSUE-10 bug) or leak onto a request
+     lane fails here. Each lane is LIFO-balanced by check 4 already.
 
 Run from the repo root:
   python ci/check_trace.py rust/reports/serve_trace.json \
-      --require submit,queue,admit_warm,admit_chunked,prefill_chunk
+      --require submit,queue,admit_warm,admit_chunked,prefill_chunk \
+      --worker-lanes 1
 """
 
 import argparse
@@ -34,7 +40,7 @@ PHASES = {"B", "E", "i"}
 REQUIRED_FIELDS = ("name", "ph", "ts", "pid", "tid")
 
 
-def check_events(events, require):
+def check_events(events, require, worker_lanes=0):
     errors = []
     if not isinstance(events, list) or not events:
         return ["traceEvents is empty or not an array"]
@@ -42,6 +48,7 @@ def check_events(events, require):
     last_ts = None
     stacks = {}  # (pid, tid) -> [name, ...]
     seen = set()
+    worker = set()  # distinct (pid, tid) lanes carrying cat == "worker"
     spans = 0
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
@@ -66,6 +73,8 @@ def check_events(events, require):
         last_ts = ts
 
         lane = (ev["pid"], ev["tid"])
+        if ev.get("cat") == "worker":
+            worker.add(lane)
         stack = stacks.setdefault(lane, [])
         if ph == "B":
             stack.append(name)
@@ -95,6 +104,12 @@ def check_events(events, require):
             f"required span kind(s) never occurred: {missing} "
             f"(trace has {sorted(seen)})"
         )
+    if worker_lanes and len(worker) != worker_lanes:
+        errors.append(
+            f"expected exactly {worker_lanes} worker lane(s), found "
+            f"{len(worker)}: {sorted(worker)} — per-replica tids have "
+            "regressed"
+        )
     return errors, spans, seen
 
 
@@ -106,6 +121,12 @@ def main():
         default="",
         help="comma-separated span/instant names that must appear at least once",
     )
+    ap.add_argument(
+        "--worker-lanes",
+        type=int,
+        default=0,
+        help="require exactly N distinct worker (pid, tid) lanes; 0 = don't check",
+    )
     args = ap.parse_args()
 
     try:
@@ -116,7 +137,7 @@ def main():
         sys.exit(1)
 
     require = [r for r in args.require.split(",") if r]
-    result = check_events(data.get("traceEvents"), require)
+    result = check_events(data.get("traceEvents"), require, args.worker_lanes)
     if isinstance(result, list):  # early-out error shape
         errors, spans, seen = result, 0, set()
     else:

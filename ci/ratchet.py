@@ -107,6 +107,17 @@ def self_test():
         ("respect min-runs", "b.tok_s", 10.0, [20.0, 21.0], 3, None),
         ("ignore non-numeric observations", "b.tok_s", 10.0,
          [20.0, None, "n/a", 18.0], 3, None),
+        # ISSUE 10: the multi-replica scaling floor must ratchet upward
+        # as real multi-core trajectory accumulates (the committed 1.0
+        # baseline only asserts "no slower than one replica") ...
+        ("raise the replica scaling floor",
+         "serve_bench_replicas.replica_scaling_ratio", 1.0,
+         [1.8, 1.6, 2.1], 3, (1.6 * SAFETY, "raise")),
+        # ... and its record-only companion throughputs graduate to
+        # floors like any other higher-is-better tok_s key
+        ("promote record-only replica throughput",
+         "serve_bench_replicas.tok_s_single", 0.0,
+         [40.0, 35.0, 42.0], 3, (35.0 * SAFETY, "promote")),
     ]
     failures = 0
     for name, dotted, base, obs, min_runs, expected in cases:

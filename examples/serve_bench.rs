@@ -55,6 +55,21 @@
 //! captured verbatim to `path` for ci/check_stream.py's frame-order
 //! replay.
 //!
+//! `--replicas N` serves the workload through N data-parallel engine
+//! replicas behind the prefix-affinity dispatcher (ISSUE 10); plain
+//! continuous/spec loads and `--prefix-share` both honour it.
+//! `--replicas-compare` runs the ISSUE 10 scaling arm instead: the
+//! SAME decode-dominated workload served at 1 replica and at N
+//! (default: available parallelism), under ONE shared KV byte ceiling,
+//! asserting token-count parity and emitting `replica_scaling_ratio`
+//! (multi over single decode throughput) for ci/bench_baseline.json.
+//!
+//! `--arrivals poisson --seed S` paces the measured load on a
+//! deterministic seedable pseudo-Poisson schedule (`--mean-gap-ms`,
+//! default 30) instead of firing every request as fast as its
+//! connection allows — bursty like real traffic, bit-identical for any
+//! given seed.
+//!
 //!     cargo run --release --example serve_bench \
 //!         [-- --m 2 --requests 24 --max-tokens 48 \
 //!              --mode spec --spec-width 4 --draft-m 4 \
@@ -112,7 +127,10 @@ impl LoadResult {
 /// client connections, requests round-robin-chunked across them.
 /// `prime` prompts are served FIRST on a dedicated connection (the
 /// prefix-share arm warms the prompt cache with them) and excluded
-/// from the measured load's latency/TTFT vectors.
+/// from the measured load's latency/TTFT vectors. A non-empty
+/// `arrivals_ms` paces the measured load: request `i` (in global
+/// workload order) is not submitted before `arrivals_ms[i]`
+/// milliseconds after the load clock starts.
 fn run_load(
     engine: &Arc<Engine>,
     cfg: ServerConfig,
@@ -120,6 +138,7 @@ fn run_load(
     prompts: &[String],
     max_tokens: usize,
     fetch_trace: bool,
+    arrivals_ms: &[f64],
 ) -> anyhow::Result<LoadResult> {
     let server = Arc::new(Server::new(engine.clone(), cfg));
     let metrics = server.metrics.clone();
@@ -146,11 +165,20 @@ fn run_load(
 
     type ConnResult = anyhow::Result<(Vec<f64>, Vec<f64>)>;
     let t_all = Timer::start();
+    let load_start = std::time::Instant::now();
     let mut client_threads = Vec::new();
     let per_conn = prompts.len().div_ceil(4).max(1);
     for (c, chunk) in prompts.chunks(per_conn).enumerate() {
         let chunk: Vec<String> = chunk.to_vec();
         let addr = front.addr;
+        // this connection serves global requests [base, base+len): its
+        // slice of the (sorted) arrival schedule paces it independently
+        let base = c * per_conn;
+        let sched: Vec<f64> = if arrivals_ms.is_empty() {
+            Vec::new()
+        } else {
+            arrivals_ms[base..(base + chunk.len()).min(arrivals_ms.len())].to_vec()
+        };
         client_threads.push(std::thread::spawn(move || -> ConnResult {
             let mut latencies = Vec::new();
             let mut ttfts = Vec::new();
@@ -158,6 +186,14 @@ fn run_load(
             let mut writer = stream.try_clone()?;
             let mut reader = BufReader::new(stream);
             for (i, p) in chunk.iter().enumerate() {
+                if let Some(&at_ms) = sched.get(i) {
+                    let elapsed_ms = load_start.elapsed().as_secs_f64() * 1e3;
+                    if at_ms > elapsed_ms {
+                        std::thread::sleep(std::time::Duration::from_micros(
+                            ((at_ms - elapsed_ms) * 1e3) as u64,
+                        ));
+                    }
+                }
                 let id = c * 1000 + i;
                 let t = Timer::start();
                 writeln!(
@@ -280,9 +316,9 @@ fn run_paged_compare(
         prefix_cache_bytes: 64 << 20,
         ..ServerConfig::default()
     };
-    let cont = run_load(engine, contiguous_cfg, &[], &prompts, max_tokens, false)?;
+    let cont = run_load(engine, contiguous_cfg, &[], &prompts, max_tokens, false, &[])?;
     let prime = vec![prompts[0].clone()];
-    let paged = run_load(engine, paged_cfg, &prime, &prompts, max_tokens, false)?;
+    let paged = run_load(engine, paged_cfg, &prime, &prompts, max_tokens, false, &[])?;
 
     let cg = &cont.gauges;
     let pg = &paged.gauges;
@@ -447,7 +483,7 @@ fn run_trace(
         "{shared}{}",
         corpus_text(&wb.calib.tokens, prime_start, suffix_len)
     )];
-    let res = run_load(engine, cfg, &prime, &prompts, max_tokens, true)?;
+    let res = run_load(engine, cfg, &prime, &prompts, max_tokens, true, &[])?;
 
     let trace_text = res.trace_json.expect("trace arm always fetches the recorder");
     let out = std::path::Path::new(path);
@@ -534,6 +570,7 @@ fn run_prefix_share(
     n_requests: usize,
     max_tokens: usize,
     chunk: usize,
+    replicas: usize,
     m: usize,
 ) -> anyhow::Result<()> {
     let max_ctx = engine.config().max_ctx;
@@ -560,9 +597,21 @@ fn run_prefix_share(
         prefix_cache_bytes: 64 << 20,
         ..ServerConfig::default()
     };
-    let cold = run_load(engine, cold_cfg, &[], &prompts, max_tokens, false)?;
+    let cold = run_load(engine, cold_cfg, &[], &prompts, max_tokens, false, &[])?;
     let prime = vec![prompts[0].clone()];
-    let warm = run_load(engine, warm_cfg, &prime, &prompts, max_tokens, false)?;
+    // with --replicas N > 1, FIRST measure the single-replica hit rate,
+    // then re-serve through N replicas: the prefix-affinity dispatcher
+    // plus per-replica insert-on-miss must keep the replicated hit rate
+    // within 10% of the single-replica value (the ISSUE 10 criterion)
+    let single_hit_rate = if replicas > 1 {
+        let warm_one =
+            run_load(engine, warm_cfg.clone(), &prime, &prompts, max_tokens, false, &[])?;
+        Some(warm_one.gauges.prefix_hit_rate())
+    } else {
+        None
+    };
+    let warm_cfg = ServerConfig { replicas, ..warm_cfg };
+    let warm = run_load(engine, warm_cfg, &prime, &prompts, max_tokens, false, &[])?;
 
     let p50_cold = percentile(&cold.ttfts_ms, 50.0);
     let p50_warm = percentile(&warm.ttfts_ms, 50.0);
@@ -570,6 +619,9 @@ fn run_prefix_share(
     let hit_rate = g.prefix_hit_rate();
     println!("\n=== serve_bench results (Attn NBL-{m}, shared-prefix arm) ===");
     println!("requests (per run)       {}", prompts.len());
+    if replicas > 1 {
+        println!("replicas (warm run)      {}", g.replicas);
+    }
     println!("p50 TTFT cold            {p50_cold:.1} ms");
     println!("p50 TTFT warm            {p50_warm:.1} ms");
     println!("prefix hits / misses     {} / {}", g.prefix_hits, g.prefix_misses);
@@ -582,15 +634,30 @@ fn run_prefix_share(
 
     // the ISSUE 5 acceptance criteria, machine-checked
     assert!(hit_rate > 0.0, "shared-prefix workload must hit the cache");
-    assert!(
-        g.prefix_hits as usize >= n_requests,
-        "every measured request shares the primed prefix: {} hits for {n_requests} requests",
-        g.prefix_hits
-    );
+    if replicas <= 1 {
+        assert!(
+            g.prefix_hits as usize >= n_requests,
+            "every measured request shares the primed prefix: {} hits for {n_requests} requests",
+            g.prefix_hits
+        );
+    }
     assert!(
         p50_warm < p50_cold,
         "warm-hit p50 TTFT must beat cold prefill: {p50_warm:.1} vs {p50_cold:.1} ms"
     );
+    // the ISSUE 10 acceptance criterion, machine-checked: only one
+    // replica's cache is primed, so the affinity router plus
+    // insert-on-miss warm-up on the others must hold the replicated
+    // hit rate within 10% of the single-replica value
+    if let Some(single) = single_hit_rate {
+        println!("prefix hit rate @1       {:.1}%", single * 100.0);
+        assert!(
+            hit_rate >= 0.9 * single,
+            "replicated prefix hit rate must stay within 10% of the \
+             single-replica value: {hit_rate:.3} vs {single:.3} at \
+             {replicas} replicas"
+        );
+    }
 
     let metrics_json = Json::obj(vec![
         ("tok_s", Json::Num(warm_tok_s)),
@@ -604,6 +671,11 @@ fn run_prefix_share(
         ("prefix_inserts", Json::Num(g.prefix_inserts as f64)),
         ("prefix_evictions", Json::Num(g.prefix_evictions as f64)),
     ]);
+    let mut metrics_json = metrics_json;
+    if let Some(single) = single_hit_rate {
+        metrics_json.set("prefix_hit_rate_single_replica", Json::Num(single));
+        metrics_json.set("replicas", Json::Num(replicas as f64));
+    }
     let bench_json = Json::obj(vec![
         ("schema", Json::Str("nbl-bench/v1".into())),
         ("bench", Json::Str("serve_bench".into())),
@@ -626,6 +698,23 @@ fn run_prefix_share(
     println!("\nbench JSON written to {}", path.display());
     println!("serve_bench OK");
     Ok(())
+}
+
+/// Deterministic seedable pseudo-Poisson arrival schedule: LCG uniforms
+/// through the exponential quantile. Bursty like real traffic, yet
+/// bit-identical for a given seed across runs and machines — seed 0
+/// reproduces the burst arm's historical trickle exactly.
+fn poisson_arrivals(n: usize, mean_gap_ms: f64, seed: u64) -> Vec<f64> {
+    let mut state: u64 = seed ^ 0x9E37_79B9_7F4A_7C15;
+    let mut t_ms = 0.0f64;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = ((state >> 33) as f64 + 1.0) / (1u64 << 31) as f64;
+            t_ms += -u.ln() * mean_gap_ms;
+            t_ms
+        })
+        .collect()
 }
 
 /// Tagged one-shot client for the burst arm: waits out its arrival
@@ -775,19 +864,10 @@ fn run_burst(
     let live: Vec<String> = (0..n_requests)
         .map(|i| corpus_text(corpus, (7 + i * 131) % (corpus.len() - live_len - 1), live_len))
         .collect();
-    // deterministic pseudo-Poisson arrivals (LCG uniforms through an
-    // exponential quantile, mean gap 30ms): bursty like real traffic,
-    // yet identical across both runs and across machines — the two
-    // policies see the SAME offered load
-    let mut state: u64 = 0x9E37_79B9_7F4A_7C15;
-    let mut arrivals = Vec::with_capacity(n_requests);
-    let mut t_ms = 0.0f64;
-    for _ in 0..n_requests {
-        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-        let u = ((state >> 33) as f64 + 1.0) / (1u64 << 31) as f64;
-        t_ms += -u.ln() * 30.0;
-        arrivals.push(t_ms);
-    }
+    // deterministic pseudo-Poisson arrivals (mean gap 30ms): bursty
+    // like real traffic, yet identical across both runs and across
+    // machines — the two policies see the SAME offered load
+    let arrivals = poisson_arrivals(n_requests, 30.0, 0);
     println!(
         "burst workload: {n_requests} bulk ({bulk_len}-token prompts, {max_tokens} \
          tokens) at t=0 + {n_requests} live ({live_len}-token prompts, {live_max} \
@@ -1123,8 +1203,138 @@ fn run_stream_capture(
     Ok(())
 }
 
+/// The ISSUE 10 scaling arm (`--replicas-compare`): the SAME
+/// decode-dominated short-prompt workload served twice — one replica,
+/// then `replicas` — under ONE shared KV byte ceiling (the multi run
+/// gets no extra cache; it must win on loop concurrency alone). Greedy
+/// sampling over identical prompts must generate the exact same token
+/// count either way (the dispatcher is routing, not resampling), the
+/// `replicas` gauge must roll up to N, and the emitted
+/// `replica_scaling_ratio` (multi over single decode throughput) is
+/// floored in ci/bench_baseline.json. The ratio is a measurement, not
+/// an in-bench assert: on a single-core runner the honest value is
+/// ~1.0, and the committed floor is what gates it.
+#[allow(clippy::too_many_arguments)]
+fn run_replicas_compare(
+    engine: &Arc<Engine>,
+    wb: &Workbench,
+    n_requests: usize,
+    max_tokens: usize,
+    chunk: usize,
+    replicas: usize,
+    m: usize,
+    arrivals: &[f64],
+) -> anyhow::Result<()> {
+    // short mixed-length prompts only: scaling here is about running N
+    // decode loops concurrently, not about prefill head-of-line
+    let prompts: Vec<String> = (0..n_requests)
+        .map(|i| {
+            let len = 16 + (i % 4) * 16;
+            let start = (i * 997) % (wb.calib.tokens.len() - 128);
+            corpus_text(&wb.calib.tokens, start, len)
+        })
+        .collect();
+    let per_slot = nbl::kvcache::slot_bytes(engine.config(), &engine.plan);
+    // one shared ceiling, sized so neither run is KV-starved: the
+    // comparison isolates loop concurrency, not admission pressure
+    let budget = 2 * replicas * per_slot;
+    let base_cfg = ServerConfig {
+        kv_capacity_bytes: budget,
+        prefill_chunk: chunk,
+        ..ServerConfig::default()
+    };
+    println!(
+        "replicas-compare workload: {n_requests} short requests, \
+         {max_tokens} tokens, 1 vs {replicas} replicas, shared KV \
+         ceiling {budget} bytes"
+    );
+
+    let single_cfg = ServerConfig { replicas: 1, ..base_cfg.clone() };
+    let single = run_load(engine, single_cfg, &[], &prompts, max_tokens, false, arrivals)?;
+    let multi_cfg = ServerConfig { replicas, ..base_cfg };
+    let multi = run_load(engine, multi_cfg, &[], &prompts, max_tokens, false, arrivals)?;
+
+    let tok_s_single = single.summary.generated_tokens as f64 / single.wall_s;
+    let tok_s_multi = multi.summary.generated_tokens as f64 / multi.wall_s;
+    let ratio = tok_s_multi / tok_s_single.max(1e-9);
+    println!("\n=== serve_bench results (Attn NBL-{m}, replicas-compare arm) ===");
+    println!("requests (per run)       {}", prompts.len());
+    println!("replicas                 1 vs {}", multi.gauges.replicas);
+    println!("tok/s single             {tok_s_single:.1}");
+    println!("tok/s x{replicas:<3}              {tok_s_multi:.1}");
+    println!("replica scaling ratio    {ratio:.2}x");
+    println!(
+        "p50 TTFT single/multi    {:.1} / {:.1} ms",
+        single.summary.p50_ttft_s * 1e3,
+        multi.summary.p50_ttft_s * 1e3
+    );
+    println!(
+        "iterations single/multi  {} / {}",
+        single.gauges.iterations, multi.gauges.iterations
+    );
+    println!("prefix hits (multi)      {}", multi.gauges.prefix_hits);
+
+    // the ISSUE 10 sanity criteria, machine-checked: replication must
+    // not change WHAT is generated, only how fast
+    assert_eq!(single.summary.requests, n_requests, "single run must serve every request");
+    assert_eq!(multi.summary.requests, n_requests, "multi run must serve every request");
+    assert_eq!(
+        multi.gauges.replicas, replicas,
+        "the replicas gauge must roll up to the configured lane count"
+    );
+    assert_eq!(single.gauges.replicas, 1, "the N=1 path reports a single lane");
+    assert_eq!(
+        multi.summary.generated_tokens, single.summary.generated_tokens,
+        "greedy decoding must generate the same token count through \
+         {replicas} replicas as through 1"
+    );
+
+    let metrics_json = Json::obj(vec![
+        ("tok_s", Json::Num(tok_s_multi)),
+        ("tok_s_single", Json::Num(tok_s_single)),
+        ("tok_s_multi", Json::Num(tok_s_multi)),
+        ("replica_scaling_ratio", Json::Num(ratio)),
+        ("req_s", Json::Num(n_requests as f64 / multi.wall_s)),
+        ("generated_tokens", Json::Num(multi.summary.generated_tokens as f64)),
+        ("p50_ttft_ms", Json::Num(multi.summary.p50_ttft_s * 1e3)),
+        ("p95_ttft_ms", Json::Num(multi.summary.p95_ttft_s * 1e3)),
+        ("p50_itl_ms", Json::Num(multi.summary.p50_itl_s * 1e3)),
+        ("p95_itl_ms", Json::Num(multi.summary.p95_itl_s * 1e3)),
+        ("replicas", Json::Num(replicas as f64)),
+    ]);
+    let bench_json = Json::obj(vec![
+        ("schema", Json::Str("nbl-bench/v1".into())),
+        ("bench", Json::Str("serve_bench".into())),
+        ("mode", Json::Str("replicas".into())),
+        ("provenance", nbl::report::provenance()),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(n_requests as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("chunk", Json::Num(chunk as f64)),
+                ("replicas", Json::Num(replicas as f64)),
+                ("budget_bytes", Json::Num(budget as f64)),
+                ("m", Json::Num(m as f64)),
+            ]),
+        ),
+        ("metrics", metrics_json),
+    ]);
+    let path = nbl::report::save_json("serve_bench_replicas", &bench_json)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\nbench JSON written to {}", path.display());
+    println!("serve_bench OK");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["ttft-compare", "prefix-share", "paged-compare", "burst"])?;
+    let args = Args::from_env(&[
+        "ttft-compare",
+        "prefix-share",
+        "paged-compare",
+        "burst",
+        "replicas-compare",
+    ])?;
     let m = args.get_usize("m", 2)?;
     let n_requests = args.get_usize("requests", 24)?;
     let max_tokens = args.get_usize("max-tokens", 48)?;
@@ -1132,6 +1342,25 @@ fn main() -> anyhow::Result<()> {
     let chunk = args.get_usize("chunk", ServerConfig::default().prefill_chunk)?;
     let long_every = args.get_usize("long-every", 6)?;
     let ttft_compare = args.flag("ttft-compare");
+    let replicas = args.get_usize("replicas", 1)?.max(1);
+    // --arrivals poisson [--seed S --mean-gap-ms G]: pace the measured
+    // load on a seedable deterministic pseudo-Poisson schedule instead
+    // of firing each connection's requests back to back
+    let seed = args.get_usize("seed", 0)? as u64;
+    let mean_gap_ms = args.get_f64("mean-gap-ms", 30.0)?;
+    let arrivals: Vec<f64> = match args.get_or("arrivals", "none") {
+        "poisson" => {
+            let a = poisson_arrivals(n_requests, mean_gap_ms, seed);
+            println!(
+                "arrivals: poisson, seed {seed}, mean gap {mean_gap_ms:.0} ms, \
+                 last at {:.0} ms",
+                a.last().copied().unwrap_or(0.0)
+            );
+            a
+        }
+        "none" => Vec::new(),
+        other => anyhow::bail!("--arrivals must be 'poisson' or 'none', got '{other}'"),
+    };
     let mode_name = args.get_or("mode", "continuous").to_string();
     let (mode, spec_on) = match mode_name.as_str() {
         "grouped" => (BatchMode::ExactLength, false),
@@ -1172,9 +1401,30 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- ISSUE 5 shared-prefix arm: warm-vs-cold prefix reuse, then exit
+    // --- ISSUE 5 shared-prefix arm: warm-vs-cold prefix reuse (with
+    // --replicas N, also replicated-vs-single hit-rate parity), then exit
     if args.flag("prefix-share") {
-        return run_prefix_share(&engine, &wb, n_requests, max_tokens, chunk, m);
+        return run_prefix_share(&engine, &wb, n_requests, max_tokens, chunk, replicas, m);
+    }
+
+    // --- ISSUE 10 scaling arm: 1 vs N replicas under one shared KV
+    // ceiling, then exit
+    if args.flag("replicas-compare") {
+        let n = if replicas > 1 {
+            replicas
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).max(2)
+        };
+        return run_replicas_compare(
+            &engine,
+            &wb,
+            n_requests,
+            max_tokens,
+            chunk,
+            n,
+            m,
+            &arrivals,
+        );
     }
 
     // --- ISSUE 6 paged-vs-contiguous arm: block-pool admission under an
@@ -1233,9 +1483,10 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let has_long = long_every > 0 && prompts.iter().any(|p| p.len() >= max_ctx / 2);
 
-    let server_cfg = ServerConfig { mode, spec, prefill_chunk: chunk, ..ServerConfig::default() };
-    println!("mode: {mode:?}, prefill chunk: {chunk} (0 = whole-prompt)");
-    let res = run_load(&engine, server_cfg.clone(), &[], &prompts, max_tokens, false)?;
+    let server_cfg =
+        ServerConfig { mode, spec, prefill_chunk: chunk, replicas, ..ServerConfig::default() };
+    println!("mode: {mode:?}, prefill chunk: {chunk} (0 = whole-prompt), replicas: {replicas}");
+    let res = run_load(&engine, server_cfg.clone(), &[], &prompts, max_tokens, false, &arrivals)?;
 
     // --- report
     let s = &res.summary;
@@ -1271,6 +1522,9 @@ fn main() -> anyhow::Result<()> {
         percentile(&res.latencies, 90.0) * 1e3
     );
     if mode == BatchMode::Continuous {
+        if replicas > 1 {
+            println!("replicas                 {}", g.replicas);
+        }
         println!("decode iterations        {}", g.iterations);
         println!("mean rows/iteration      {:.2}", g.mean_rows_per_iteration());
         println!("batch occupancy          {:.1}%", g.mean_occupancy() * 100.0);
@@ -1312,7 +1566,7 @@ fn main() -> anyhow::Result<()> {
     let mut p50_short_unchunked = None;
     if ttft_compare && mode == BatchMode::Continuous {
         let whole_cfg = ServerConfig { prefill_chunk: 0, ..server_cfg };
-        let whole = run_load(&engine, whole_cfg, &[], &prompts, max_tokens, false)?;
+        let whole = run_load(&engine, whole_cfg, &[], &prompts, max_tokens, false, &arrivals)?;
         let p50_whole = whole.p50_short_ttft_ms();
         p50_short_unchunked = Some(p50_whole);
         println!("\n[ttft-compare] p50 short-request TTFT");

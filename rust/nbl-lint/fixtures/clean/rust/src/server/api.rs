@@ -47,6 +47,8 @@ pub fn stats_to_json(s: &Summary) -> String {
         ("tenants_active", s.tenants_active),
         ("goodput_tok_s", s.goodput_tok_s),
         ("slo_attainment", s.slo_attainment),
+        // data-parallel gauge lanes contributing to the rollup
+        ("replicas", s.replicas),
     ];
     render(&pairs)
 }

@@ -6,4 +6,5 @@ pub struct SchedulerGauges {
     pub iterations: u64,
     // nbl-lint: gauge(kv_in_use_bytes)
     pub kv_in_use: u64,
+    pub replicas: usize,
 }

@@ -235,6 +235,9 @@ pub fn stats_to_json(
         // over requests that carried a deadline (1.0 when none did)
         ("goodput_tok_s", Json::Num(s.goodput_tok_s)),
         ("slo_attainment", Json::Num(s.slo_attainment)),
+        // gauge lanes contributing to this rollup (1 = single worker,
+        // N = data-parallel replicas; DESIGN.md §Data parallelism)
+        ("replicas", Json::Num(g.replicas as f64)),
         ("queue_depth", Json::Num(g.queue_depth as f64)),
         ("iterations", Json::Num(g.iterations as f64)),
         ("mean_batch_occupancy", Json::Num(g.mean_occupancy())),

@@ -1,0 +1,411 @@
+//! Data-parallel dispatch (DESIGN.md §Data parallelism): N replicated
+//! continuous-batching loops over the SAME `Arc`-shared engine weights,
+//! behind one submission channel. Each replica owns its own iteration
+//! loop, target+draft slot arenas, paged block accounting, prefix
+//! cache slice, gauge lane, and trace tid; all replicas charge the one
+//! shared `KvPool` byte ceiling.
+//!
+//! Routing is prefix-affinity with join-shortest-queue fallback
+//! ([`pick`]): a stat-free `PrefixCache::covered` peek per replica
+//! finds the longest cached match for the incoming prompt, and
+//! shared-prefix traffic lands on the replica that already holds the
+//! prefix (ties broken toward the shortest queue). Prompts no replica
+//! has seen go join-shortest-queue on the dispatcher-visible inflight
+//! counts. A replica with every slot taken is never chosen while an
+//! open one exists.
+//!
+//! Each replica also gets a *host lane* ([`HostLane`]): a thread that
+//! drains deferred host-side work — terminal response sends, streaming
+//! frame emission, prefix-cache snapshot publication — so the work for
+//! iteration k overlaps the device compute of iteration k+1. The
+//! handoff is sequence-numbered (submitted vs processed counters); the
+//! worker quiesces the lane before probing its prefix cache so it
+//! always reads its own writes, and all of one request's frames and
+//! its terminal answer ride the same FIFO lane, which keeps the
+//! cancellation/deadline ordering of PR 9 intact across the buffer
+//! boundary.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Error;
+use crate::kvcache::prefix::PrefixCache;
+use crate::kvcache::KvState;
+use crate::server::api::{GenResponse, StreamToken};
+use crate::server::service::{
+    error_response, publish_prefix, run_replica, ReplicaCtx, Server, ServerHandle, Submission,
+};
+use crate::util::lock_unpoisoned;
+
+/// Dispatcher-visible load of one replica: requests routed to it that
+/// have not yet received their terminal answer (queued + chunk-
+/// prefilling + parked + decoding). Arrive happens on the dispatcher
+/// thread at routing time; depart happens on the replica (or its host
+/// lane teardown) when the reply sender is consumed — every routed
+/// request is answered exactly once, so the pairing is exact.
+#[derive(Default)]
+pub struct ReplicaStatus {
+    inflight: AtomicUsize,
+}
+
+impl ReplicaStatus {
+    pub fn arrive(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn depart(&self) {
+        // saturating: a spurious extra depart must not wrap to usize::MAX
+        // and blackhole the replica forever
+        let _ = self
+            .inflight
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// Route one request: prefix affinity first, join-shortest-queue as the
+/// fallback. `inflight[i]` is replica i's dispatcher-visible load,
+/// `coverage[i]` the longest cached prefix (tokens) its cache holds for
+/// this prompt, `max_batch` the per-replica slot count.
+///
+/// Candidates are the *open* replicas (`inflight < max_batch`, i.e. a
+/// free-or-preemptible slot exists); only when every replica is
+/// saturated does the whole set become eligible (the request must queue
+/// somewhere). Among candidates: the longest coverage wins (ties:
+/// lighter load, then lower index); zero coverage everywhere means pure
+/// JSQ (ties: lower index). Deterministic, so routing is replayable.
+pub fn pick(inflight: &[usize], coverage: &[usize], max_batch: usize) -> usize {
+    let n = inflight.len().min(coverage.len());
+    if n == 0 {
+        return 0;
+    }
+    let open: Vec<usize> = (0..n).filter(|&i| inflight[i] < max_batch).collect();
+    let all: Vec<usize> = (0..n).collect();
+    let cand: &[usize] = if open.is_empty() { &all } else { &open };
+    let affine = cand.iter().copied().filter(|&i| coverage[i] > 0).max_by(|&a, &b| {
+        coverage[a]
+            .cmp(&coverage[b])
+            .then(inflight[b].cmp(&inflight[a]))
+            .then(b.cmp(&a))
+    });
+    if let Some(i) = affine {
+        return i;
+    }
+    cand.iter().copied().min_by_key(|&i| (inflight[i], i)).unwrap_or(0)
+}
+
+/// One deferred unit of host-side work for a replica's host lane.
+/// Everything a worker wants off its critical path between device
+/// iterations: channel sends and multi-layer snapshot copies.
+pub(crate) enum HostWork {
+    /// Terminal answer (the reply sender was already removed from the
+    /// outbox, so the worker forgets the request immediately).
+    Respond(Sender<GenResponse>, GenResponse),
+    /// One committed streaming token.
+    Emit(Sender<StreamToken>, StreamToken),
+    /// Prefix-cache publication of a finished admission prefill: the
+    /// states moved here, so the snapshot host copies run off-worker.
+    Publish {
+        cache: Arc<Mutex<PrefixCache>>,
+        snap: usize,
+        block_tokens: Option<usize>,
+        prompt: Vec<u32>,
+        covered: usize,
+        target: KvState,
+        draft: Option<KvState>,
+    },
+    /// Lane teardown sentinel.
+    Stop,
+}
+
+/// Execute one unit of host work. Shared by the host-lane thread and
+/// the inline (single-worker / lane-down) path, so deferred and
+/// non-deferred execution cannot drift.
+pub(crate) fn run_host_work(w: HostWork) {
+    match w {
+        HostWork::Respond(tx, resp) => {
+            let _ = tx.send(resp);
+        }
+        HostWork::Emit(tx, t) => {
+            let _ = tx.send(t);
+        }
+        HostWork::Publish { cache, snap, block_tokens, prompt, covered, target, draft } => {
+            publish_prefix(&cache, snap, block_tokens, &prompt, covered, &target, draft.as_ref());
+        }
+        HostWork::Stop => {}
+    }
+}
+
+/// A replica's host-overlap lane: a FIFO queue drained by a dedicated
+/// thread. `submitted` (worker-only) and `processed` (thread-published)
+/// are the sequence numbers of the double-buffer handoff: the worker's
+/// [`Self::quiesce`] waits for `processed` to catch up before reading
+/// state the lane may still be writing (its prefix cache).
+pub(crate) struct HostLane {
+    tx: Sender<HostWork>,
+    /// Items handed to the lane (worker thread only — plain u64).
+    submitted: u64,
+    /// Items the lane thread finished (Release on write, Acquire on
+    /// read: quiesce observes the cache inserts that preceded the bump).
+    processed: Arc<AtomicU64>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HostLane {
+    pub(crate) fn spawn() -> HostLane {
+        let (tx, rx) = channel::<HostWork>();
+        let processed = Arc::new(AtomicU64::new(0));
+        let done = processed.clone();
+        let join = std::thread::spawn(move || {
+            while let Ok(w) = rx.recv() {
+                let stop = matches!(w, HostWork::Stop);
+                run_host_work(w);
+                done.fetch_add(1, Ordering::Release);
+                if stop {
+                    break;
+                }
+            }
+        });
+        HostLane { tx, submitted: 0, processed, join: Some(join) }
+    }
+
+    /// Hand one item to the lane. Returns the item back if the lane
+    /// thread is gone (the caller runs it inline — degraded but
+    /// correct, never dropped).
+    pub(crate) fn defer(&mut self, w: HostWork) -> Option<HostWork> {
+        match self.tx.send(w) {
+            Ok(()) => {
+                self.submitted += 1;
+                None
+            }
+            Err(e) => Some(e.0),
+        }
+    }
+
+    /// Block (spin-yield) until every deferred item has been processed.
+    /// Bounded: a wedged lane degrades to stale prefix reads, not a
+    /// hung scheduler.
+    pub(crate) fn quiesce(&self) {
+        let mut spins: u32 = 0;
+        while self.processed.load(Ordering::Acquire) < self.submitted {
+            spins += 1;
+            if spins > 5_000_000 {
+                return;
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for HostLane {
+    fn drop(&mut self) {
+        // FIFO guarantees everything queued before Stop is delivered
+        // before the join returns
+        let _ = self.tx.send(HostWork::Stop);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Dispatcher-side view of one spawned replica.
+struct ReplicaLink {
+    tx: Sender<Submission>,
+    join: Option<std::thread::JoinHandle<()>>,
+    status: Arc<ReplicaStatus>,
+    /// Affinity peek handle (None when prefix reuse is off).
+    cache: Option<Arc<Mutex<PrefixCache>>>,
+}
+
+/// Stand up `config.replicas` serving loops plus the dispatcher thread
+/// fronting them. The returned handle is indistinguishable from a
+/// single-worker one: submit/cancel/shutdown route transparently.
+pub(crate) fn spawn_replicated(server: Arc<Server>) -> ServerHandle {
+    let n = server.config.replicas.max(2);
+    // pre-register every gauge lane so the `replicas` rollup gauge
+    // reports N from the first stats scrape, not lazily
+    server.metrics.ensure_lanes(n);
+    let share_prefix =
+        server.config.prefix_cache_bytes > 0 && server.engine.supports_prefix_reuse();
+    let mut links: Vec<ReplicaLink> = Vec::with_capacity(n);
+    for lane in 0..n {
+        // each replica owns a slice of the prefix budget: affinity
+        // routing keeps a given prefix's traffic on one replica, so
+        // slicing (not sharing) the tree avoids cross-replica lock
+        // traffic on the hot probe path, and the gauge rollup SUMs the
+        // slices back into one capacity number
+        let cache = if share_prefix {
+            Some(Arc::new(Mutex::new(PrefixCache::new(
+                (server.config.prefix_cache_bytes / n).max(1),
+            ))))
+        } else {
+            None
+        };
+        let status = Arc::new(ReplicaStatus::default());
+        let (tx, rx) = channel::<Submission>();
+        let ctx = ReplicaCtx {
+            lane,
+            prefix: cache.clone(),
+            status: Some(status.clone()),
+            host: Some(HostLane::spawn()),
+        };
+        let srv = server.clone();
+        let join = std::thread::spawn(move || run_replica(&srv, &rx, ctx));
+        links.push(ReplicaLink { tx, join: Some(join), status, cache });
+    }
+    let (tx, rx) = channel::<Submission>();
+    let max_batch = server.config.max_batch;
+    let join = std::thread::spawn(move || run_dispatch(&rx, links, max_batch));
+    ServerHandle::from_parts(tx, join)
+}
+
+/// The dispatcher loop: route requests ([`pick`]), broadcast cancels
+/// (unknown ids are a no-op on every replica but the owning one), and
+/// fan shutdown out to every replica before joining them.
+fn run_dispatch(rx: &Receiver<Submission>, mut links: Vec<ReplicaLink>, max_batch: usize) {
+    loop {
+        match rx.recv() {
+            Ok(Submission::Request(req, reply, watch, sink)) => {
+                let inflight: Vec<usize> = links.iter().map(|l| l.status.inflight()).collect();
+                let coverage: Vec<usize> = links
+                    .iter()
+                    .map(|l| {
+                        l.cache.as_ref().map_or(0, |c| {
+                            // stat-free peek: routing must not touch LRU
+                            // order or the replica's hit counters
+                            lock_unpoisoned(c)
+                                .covered(&req.prompt, req.prompt.len().saturating_sub(1))
+                        })
+                    })
+                    .collect();
+                let chosen = pick(&inflight, &coverage, max_batch);
+                let Some(link) = links.get(chosen) else { continue };
+                link.status.arrive();
+                if let Err(e) = link.tx.send(Submission::Request(req, reply, watch, sink)) {
+                    // replica thread died: answer instead of hanging the
+                    // client, and rebalance the count we just took
+                    link.status.depart();
+                    if let Submission::Request(req, reply, _, _) = e.0 {
+                        let _ = reply.send(error_response(
+                            req.id,
+                            Error::Serving("replica unavailable".into()),
+                        ));
+                    }
+                }
+            }
+            Ok(Submission::Cancel(id)) => {
+                for l in &links {
+                    let _ = l.tx.send(Submission::Cancel(id));
+                }
+            }
+            Ok(Submission::Shutdown) | Err(_) => break,
+        }
+    }
+    for l in &links {
+        let _ = l.tx.send(Submission::Shutdown);
+    }
+    for l in links.iter_mut() {
+        if let Some(j) = l.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsq_routes_to_least_loaded() {
+        assert_eq!(pick(&[3, 1, 2], &[0, 0, 0], 8), 1);
+        // tie breaks toward the lower index
+        assert_eq!(pick(&[2, 1, 1], &[0, 0, 0], 8), 1);
+    }
+
+    #[test]
+    fn affinity_beats_jsq_when_open() {
+        // replica 2 holds the longest cached prefix: it wins even while
+        // busier than the JSQ choice
+        assert_eq!(pick(&[0, 1, 3], &[0, 0, 128], 8), 2);
+        // coverage ties break toward the lighter replica
+        assert_eq!(pick(&[5, 2, 3], &[0, 64, 64], 8), 1);
+    }
+
+    #[test]
+    fn saturated_replica_never_wins_affinity() {
+        // the covered replica is full: affinity must not override the
+        // free-slot requirement
+        assert_eq!(pick(&[4, 0], &[256, 0], 4), 1);
+    }
+
+    #[test]
+    fn all_saturated_falls_back_to_jsq_over_everyone() {
+        assert_eq!(pick(&[7, 5, 6], &[0, 0, 0], 4), 1);
+        // and affinity still orders the saturated set
+        assert_eq!(pick(&[7, 5, 6], &[0, 0, 9], 4), 2);
+    }
+
+    #[test]
+    fn empty_and_mismatched_inputs_are_safe() {
+        assert_eq!(pick(&[], &[], 4), 0);
+        assert_eq!(pick(&[1, 2, 3], &[0], 4), 0);
+    }
+
+    /// Property sweep (deterministic LCG): with at least one open
+    /// replica, the dispatcher never routes to a saturated one.
+    #[test]
+    fn never_routes_to_saturated_while_open_exists() {
+        let mut state: u64 = 0x9e37_79b9_7f4a_7c15;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        for _case in 0..2000 {
+            let n = 1 + next() % 8;
+            let max_batch = 1 + next() % 8;
+            let inflight: Vec<usize> = (0..n).map(|_| next() % (max_batch * 2)).collect();
+            let coverage: Vec<usize> = (0..n).map(|_| next() % 512).collect();
+            let chosen = pick(&inflight, &coverage, max_batch);
+            assert!(chosen < n, "pick out of range: {chosen} >= {n}");
+            if inflight.iter().any(|&f| f < max_batch) {
+                assert!(
+                    inflight[chosen] < max_batch,
+                    "routed to saturated replica {chosen} (inflight {inflight:?}, \
+                     coverage {coverage:?}, max_batch {max_batch})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn status_counts_saturate_at_zero() {
+        let st = ReplicaStatus::default();
+        st.depart();
+        assert_eq!(st.inflight(), 0);
+        st.arrive();
+        st.arrive();
+        st.depart();
+        assert_eq!(st.inflight(), 1);
+    }
+
+    #[test]
+    fn host_lane_quiesce_observes_all_work() {
+        let (sink_tx, sink_rx) = channel::<StreamToken>();
+        let mut lane = HostLane::spawn();
+        for i in 0..64u32 {
+            let w = HostWork::Emit(
+                sink_tx.clone(),
+                StreamToken { id: 1, index: i as usize, token: i },
+            );
+            assert!(lane.defer(w).is_none());
+        }
+        lane.quiesce();
+        // after quiesce every frame is already in the sink, in order
+        let got: Vec<u32> = sink_rx.try_iter().map(|t| t.token).collect();
+        assert_eq!(got, (0..64u32).collect::<Vec<u32>>());
+    }
+}

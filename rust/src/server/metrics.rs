@@ -323,6 +323,10 @@ pub struct SchedulerGauges {
     /// Decode-iteration seconds (draft + verify in spec mode).
     // nbl-lint: gauge(phase_decode_ms)
     pub phase_decode_s: f64,
+    /// Gauge lanes contributing to this snapshot: 1 for a single-worker
+    /// server, N for a replicated one (set by the rollup, not by any
+    /// mutator — a raw per-lane snapshot reports 0).
+    pub replicas: usize,
 }
 
 impl SchedulerGauges {
@@ -443,10 +447,21 @@ struct Agg {
 }
 
 /// Aggregates request timings across the server lifetime.
+///
+/// Gauges live in per-replica LANES: a single-worker server only ever
+/// touches lane 0 (every legacy `note_*` method is a lane-0 shorthand),
+/// while a replicated server gives each worker its own lane via the
+/// `*_at` variants so the replicas never contend on counter semantics.
+/// `gauges()` rolls the lanes up into one [`SchedulerGauges`] — sums
+/// for counters and per-replica residency, maxes for observations of
+/// shared state (the KV pool is ONE pool observed by every lane).
+/// Request timings (`record`) and the lifetime histograms stay
+/// hub-global: a finished request is a finished request regardless of
+/// which replica served it.
 pub struct MetricsHub {
     timings: Mutex<TimingStore>,
     agg: Mutex<Agg>,
-    gauges: Mutex<SchedulerGauges>,
+    gauges: Mutex<Vec<SchedulerGauges>>,
 }
 
 impl Default for MetricsHub {
@@ -469,7 +484,27 @@ impl MetricsHub {
                 dropped: 0,
             }),
             agg: Mutex::new(Agg::default()),
-            gauges: Mutex::new(SchedulerGauges::default()),
+            gauges: Mutex::new(vec![SchedulerGauges::default()]),
+        }
+    }
+
+    /// Run `f` over gauge lane `lane`, growing the lane vector on first
+    /// touch (replica workers register themselves implicitly — there is
+    /// no separate registration step to forget).
+    fn with_lane<R>(&self, lane: usize, f: impl FnOnce(&mut SchedulerGauges) -> R) -> R {
+        let mut lanes = lock_unpoisoned(&self.gauges);
+        if lanes.len() <= lane {
+            lanes.resize_with(lane + 1, SchedulerGauges::default);
+        }
+        f(&mut lanes[lane])
+    }
+
+    /// Pre-register `n` gauge lanes. The dispatcher calls this at spawn
+    /// so the `replicas` gauge reports N from the very first stats
+    /// scrape instead of growing lazily as lanes are first touched.
+    pub fn ensure_lanes(&self, n: usize) {
+        if n > 0 {
+            self.with_lane(n - 1, |_| {});
         }
     }
 
@@ -512,112 +547,180 @@ impl MetricsHub {
 
     /// One decode iteration ran with `occupied` of `bucket` rows live.
     pub fn note_iteration(&self, occupied: usize, bucket: usize) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.iterations += 1;
-        g.occupied_rows += occupied as u64;
-        g.bucket_rows += bucket as u64;
-        g.peak_rows = g.peak_rows.max(occupied);
+        self.note_iteration_at(0, occupied, bucket);
+    }
+
+    /// Lane-indexed [`Self::note_iteration`] (replicated workers).
+    pub fn note_iteration_at(&self, lane: usize, occupied: usize, bucket: usize) {
+        self.with_lane(lane, |g| {
+            g.iterations += 1;
+            g.occupied_rows += occupied as u64;
+            g.bucket_rows += bucket as u64;
+            g.peak_rows = g.peak_rows.max(occupied);
+        });
     }
 
     /// `layers` per-layer KvSnapshot expansion copies ran for one warm
     /// adoption (the legacy snapshot restore path; paged splices never
     /// call this, which is exactly what the zero-copy bench asserts).
     pub fn note_prefix_expand(&self, layers: usize) {
-        lock_unpoisoned(&self.gauges).prefix_expand_copies += layers as u64;
+        self.note_prefix_expand_at(0, layers);
+    }
+
+    /// Lane-indexed [`Self::note_prefix_expand`] (replicated workers).
+    pub fn note_prefix_expand_at(&self, lane: usize, layers: usize) {
+        self.with_lane(lane, |g| g.prefix_expand_copies += layers as u64);
     }
 
     /// Mirror the worker-local paged block-pool counters into the
     /// gauges (refreshed once per scheduler iteration, like
     /// `observe_prefix`).
     pub fn observe_paged(&self, s: &crate::kvcache::paged::PagedStats) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.paged_block_tokens = s.block_tokens;
-        g.blocks_capacity = s.capacity_blocks;
-        g.blocks_free = s.free_blocks;
-        g.blocks_used = s.used_blocks;
-        g.blocks_shared = s.shared_blocks;
-        g.blocks_live_tokens = s.live_tokens;
-        g.cow_copies = s.cow_copies;
-        g.preemptions = s.preemptions;
-        g.paged_splices = s.splices;
-        g.paged_splice_tokens = s.splice_tokens;
+        self.observe_paged_at(0, s);
+    }
+
+    /// Lane-indexed [`Self::observe_paged`] (replicated workers).
+    pub fn observe_paged_at(&self, lane: usize, s: &crate::kvcache::paged::PagedStats) {
+        self.with_lane(lane, |g| {
+            g.paged_block_tokens = s.block_tokens;
+            g.blocks_capacity = s.capacity_blocks;
+            g.blocks_free = s.free_blocks;
+            g.blocks_used = s.used_blocks;
+            g.blocks_shared = s.shared_blocks;
+            g.blocks_live_tokens = s.live_tokens;
+            g.cow_copies = s.cow_copies;
+            g.preemptions = s.preemptions;
+            g.paged_splices = s.splices;
+            g.paged_splice_tokens = s.splice_tokens;
+        });
     }
 
     /// `committed` tokens were emitted by the iteration that just ran;
     /// with speculation a single iteration commits 1..=W per row.
     pub fn note_committed(&self, committed: usize) {
-        lock_unpoisoned(&self.gauges).committed_tokens += committed as u64;
+        self.note_committed_at(0, committed);
+    }
+
+    /// Lane-indexed [`Self::note_committed`] (replicated workers).
+    pub fn note_committed_at(&self, lane: usize, committed: usize) {
+        self.with_lane(lane, |g| g.committed_tokens += committed as u64);
     }
 
     /// One speculative verify pass ran: `proposed` draft tokens entered
     /// verification and `accepted` of them matched the target.
     pub fn note_spec_round(&self, proposed: usize, accepted: usize) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.spec_rounds += 1;
-        g.spec_proposed += proposed as u64;
-        g.spec_accepted += accepted as u64;
+        self.note_spec_round_at(0, proposed, accepted);
+    }
+
+    /// Lane-indexed [`Self::note_spec_round`] (replicated workers).
+    pub fn note_spec_round_at(&self, lane: usize, proposed: usize, accepted: usize) {
+        self.with_lane(lane, |g| {
+            g.spec_rounds += 1;
+            g.spec_proposed += proposed as u64;
+            g.spec_accepted += accepted as u64;
+        });
     }
 
     /// One prefill chunk ran; `stalled` = decode rows were live and
     /// waited `dt_s` seconds for it (the interference gauge).
     pub fn note_prefill_chunk(&self, stalled: bool, dt_s: f64) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.prefill_chunks += 1;
-        if stalled {
-            g.chunk_stalls += 1;
-            g.chunk_stall_s += dt_s;
-        }
+        self.note_prefill_chunk_at(0, stalled, dt_s);
+    }
+
+    /// Lane-indexed [`Self::note_prefill_chunk`] (replicated workers).
+    pub fn note_prefill_chunk_at(&self, lane: usize, stalled: bool, dt_s: f64) {
+        self.with_lane(lane, |g| {
+            g.prefill_chunks += 1;
+            if stalled {
+                g.chunk_stalls += 1;
+                g.chunk_stall_s += dt_s;
+            }
+        });
     }
 
     /// An admission completed through the multi-chunk prefill machine.
     pub fn note_chunked_admission(&self) {
-        lock_unpoisoned(&self.gauges).chunked_admissions += 1;
+        self.note_chunked_admission_at(0);
+    }
+
+    /// Lane-indexed [`Self::note_chunked_admission`] (replicated workers).
+    pub fn note_chunked_admission_at(&self, lane: usize) {
+        self.with_lane(lane, |g| g.chunked_admissions += 1);
     }
 
     /// A request was admitted into a slot (`reused` = the row had served
     /// an earlier, now-finished request).
     pub fn note_admission(&self, reused: bool) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.admissions += 1;
-        if reused {
-            g.slot_reuses += 1;
-        }
+        self.note_admission_at(0, reused);
+    }
+
+    /// Lane-indexed [`Self::note_admission`] (replicated workers).
+    pub fn note_admission_at(&self, lane: usize, reused: bool) {
+        self.with_lane(lane, |g| {
+            g.admissions += 1;
+            if reused {
+                g.slot_reuses += 1;
+            }
+        });
     }
 
     /// Mirror the worker-local prefix-cache counters into the gauges
     /// (refreshed once per scheduler iteration, like `observe` — the
     /// radix tree itself stays single-threaded on the worker).
     pub fn observe_prefix(&self, s: &crate::kvcache::prefix::PrefixStats) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.prefix_hits = s.hits;
-        g.prefix_misses = s.misses;
-        g.prefix_hit_tokens = s.hit_tokens;
-        g.prefix_inserts = s.inserts;
-        g.prefix_evictions = s.evictions;
-        g.prefix_entries = s.entries;
-        g.prefix_bytes = s.bytes_in_use;
-        g.prefix_capacity_bytes = s.capacity_bytes;
-        g.prefix_publish_skips = s.publish_skips;
+        self.observe_prefix_at(0, s);
+    }
+
+    /// Lane-indexed [`Self::observe_prefix`] (replicated workers — each
+    /// replica owns its own radix tree, so the lanes SUM in the rollup).
+    pub fn observe_prefix_at(&self, lane: usize, s: &crate::kvcache::prefix::PrefixStats) {
+        self.with_lane(lane, |g| {
+            g.prefix_hits = s.hits;
+            g.prefix_misses = s.misses;
+            g.prefix_hit_tokens = s.hit_tokens;
+            g.prefix_inserts = s.inserts;
+            g.prefix_evictions = s.evictions;
+            g.prefix_entries = s.entries;
+            g.prefix_bytes = s.bytes_in_use;
+            g.prefix_capacity_bytes = s.capacity_bytes;
+            g.prefix_publish_skips = s.publish_skips;
+        });
     }
 
     /// A request was aborted by its client (cancel frame or writer-side
     /// disconnect). Cancellations are the client walking away, not an
     /// SLO miss, so they touch no deadline accounting.
     pub fn note_cancelled(&self) {
-        lock_unpoisoned(&self.gauges).cancelled += 1;
+        self.note_cancelled_at(0);
+    }
+
+    /// Lane-indexed [`Self::note_cancelled`] (replicated workers).
+    pub fn note_cancelled_at(&self, lane: usize) {
+        self.with_lane(lane, |g| g.cancelled += 1);
     }
 
     /// A deadline-carrying request blew its budget mid-flight and was
     /// terminated; counts as an SLO miss.
     pub fn note_expired(&self) {
-        lock_unpoisoned(&self.gauges).expired += 1;
+        self.note_expired_at(0);
+    }
+
+    /// Lane-indexed [`Self::note_expired`] (replicated workers). The
+    /// deadline-SLO denominator stays hub-global like `record`.
+    pub fn note_expired_at(&self, lane: usize) {
+        self.with_lane(lane, |g| g.expired += 1);
         lock_unpoisoned(&self.agg).deadline_total += 1;
     }
 
     /// A deadline-carrying request was dropped from the intake queue
     /// with its budget already blown; counts as an SLO miss.
     pub fn note_shed(&self) {
-        lock_unpoisoned(&self.gauges).shed += 1;
+        self.note_shed_at(0);
+    }
+
+    /// Lane-indexed [`Self::note_shed`] (replicated workers).
+    pub fn note_shed_at(&self, lane: usize) {
+        self.with_lane(lane, |g| g.shed += 1);
         lock_unpoisoned(&self.agg).deadline_total += 1;
     }
 
@@ -630,11 +733,27 @@ impl MetricsHub {
         kv_capacity: usize,
         tenants_active: usize,
     ) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.queue_depth = queue_depth;
-        g.kv_in_use = kv_in_use;
-        g.kv_capacity = kv_capacity;
-        g.tenants_active = tenants_active;
+        self.observe_at(0, queue_depth, kv_in_use, kv_capacity, tenants_active);
+    }
+
+    /// Lane-indexed [`Self::observe`] (replicated workers). Queue depth
+    /// is per-replica (the lanes SUM); the KV numbers observe the ONE
+    /// shared pool, so the rollup takes the MAX instead of adding the
+    /// same pool N times.
+    pub fn observe_at(
+        &self,
+        lane: usize,
+        queue_depth: usize,
+        kv_in_use: usize,
+        kv_capacity: usize,
+        tenants_active: usize,
+    ) {
+        self.with_lane(lane, |g| {
+            g.queue_depth = queue_depth;
+            g.kv_in_use = kv_in_use;
+            g.kv_capacity = kv_capacity;
+            g.tenants_active = tenants_active;
+        });
     }
 
     /// One worker-loop turn finished; charge its phase durations (one
@@ -647,15 +766,42 @@ impl MetricsHub {
         observe_s: f64,
         decode_s: f64,
     ) {
-        let mut g = lock_unpoisoned(&self.gauges);
-        g.phase_intake_s += intake_s;
-        g.phase_admission_s += admission_s;
-        g.phase_chunked_s += chunked_s;
-        g.phase_observe_s += observe_s;
-        g.phase_decode_s += decode_s;
+        self.note_phases_at(0, intake_s, admission_s, chunked_s, observe_s, decode_s);
     }
 
+    /// Lane-indexed [`Self::note_phases`] (replicated workers).
+    pub fn note_phases_at(
+        &self,
+        lane: usize,
+        intake_s: f64,
+        admission_s: f64,
+        chunked_s: f64,
+        observe_s: f64,
+        decode_s: f64,
+    ) {
+        self.with_lane(lane, |g| {
+            g.phase_intake_s += intake_s;
+            g.phase_admission_s += admission_s;
+            g.phase_chunked_s += chunked_s;
+            g.phase_observe_s += observe_s;
+            g.phase_decode_s += decode_s;
+        });
+    }
+
+    /// The aggregate gauge snapshot: lane 0 verbatim for a single-worker
+    /// server, the cross-lane rollup for a replicated one. Counters and
+    /// per-replica residency SUM; observations of shared or config-fixed
+    /// state (the one KV pool, block sizes, per-lane peaks) take the
+    /// MAX so N lanes observing the same pool cannot report it N times.
     pub fn gauges(&self) -> SchedulerGauges {
+        let lanes = lock_unpoisoned(&self.gauges);
+        rollup(&lanes)
+    }
+
+    /// Per-lane snapshots, lane index == replica id (replica-level
+    /// introspection; `gauges()` is the aggregate the stats endpoint
+    /// serves).
+    pub fn lane_gauges(&self) -> Vec<SchedulerGauges> {
         lock_unpoisoned(&self.gauges).clone()
     }
 
@@ -733,6 +879,125 @@ impl MetricsHub {
             },
         }
     }
+}
+
+/// Fold per-replica gauge lanes into one aggregate snapshot. The loop
+/// destructures every field by name (no `..` rest pattern), so adding a
+/// gauge without deciding its rollup rule is a compile error, not a
+/// silently-zero dashboard column. Rules:
+///
+///   - counters and per-replica residency SUM (each lane's work is
+///     disjoint: own iterations, own slots, own radix tree);
+///   - observations of SHARED state take the MAX — every lane observes
+///     the one KV pool, so summing would multiply it by N; per-lane
+///     peaks also MAX (concurrent peaks across lanes are not sampled
+///     at a common instant, so their sum would overclaim);
+///   - `replicas` = the lane count itself.
+fn rollup(lanes: &[SchedulerGauges]) -> SchedulerGauges {
+    let mut out = SchedulerGauges {
+        replicas: lanes.len(),
+        ..Default::default()
+    };
+    for g in lanes {
+        let SchedulerGauges {
+            iterations,
+            occupied_rows,
+            bucket_rows,
+            peak_rows,
+            admissions,
+            slot_reuses,
+            queue_depth,
+            kv_in_use,
+            kv_capacity,
+            committed_tokens,
+            prefill_chunks,
+            chunked_admissions,
+            chunk_stalls,
+            chunk_stall_s,
+            spec_rounds,
+            spec_proposed,
+            spec_accepted,
+            prefix_hits,
+            prefix_misses,
+            prefix_hit_tokens,
+            prefix_inserts,
+            prefix_evictions,
+            prefix_entries,
+            prefix_bytes,
+            prefix_capacity_bytes,
+            prefix_publish_skips,
+            prefix_expand_copies,
+            paged_block_tokens,
+            blocks_capacity,
+            blocks_free,
+            blocks_used,
+            blocks_shared,
+            blocks_live_tokens,
+            cow_copies,
+            preemptions,
+            paged_splices,
+            paged_splice_tokens,
+            cancelled,
+            expired,
+            shed,
+            tenants_active,
+            phase_intake_s,
+            phase_admission_s,
+            phase_chunked_s,
+            phase_observe_s,
+            phase_decode_s,
+            replicas: _, // set to 0 on raw lanes; the rollup owns it
+        } = g;
+        // sums: monotone counters + per-replica residency
+        out.iterations += iterations;
+        out.occupied_rows += occupied_rows;
+        out.bucket_rows += bucket_rows;
+        out.admissions += admissions;
+        out.slot_reuses += slot_reuses;
+        out.queue_depth += queue_depth;
+        out.committed_tokens += committed_tokens;
+        out.prefill_chunks += prefill_chunks;
+        out.chunked_admissions += chunked_admissions;
+        out.chunk_stalls += chunk_stalls;
+        out.chunk_stall_s += chunk_stall_s;
+        out.spec_rounds += spec_rounds;
+        out.spec_proposed += spec_proposed;
+        out.spec_accepted += spec_accepted;
+        out.prefix_hits += prefix_hits;
+        out.prefix_misses += prefix_misses;
+        out.prefix_hit_tokens += prefix_hit_tokens;
+        out.prefix_inserts += prefix_inserts;
+        out.prefix_evictions += prefix_evictions;
+        out.prefix_entries += prefix_entries;
+        out.prefix_bytes += prefix_bytes;
+        out.prefix_capacity_bytes += prefix_capacity_bytes;
+        out.prefix_publish_skips += prefix_publish_skips;
+        out.prefix_expand_copies += prefix_expand_copies;
+        out.blocks_used += blocks_used;
+        out.blocks_shared += blocks_shared;
+        out.blocks_live_tokens += blocks_live_tokens;
+        out.cow_copies += cow_copies;
+        out.preemptions += preemptions;
+        out.paged_splices += paged_splices;
+        out.paged_splice_tokens += paged_splice_tokens;
+        out.cancelled += cancelled;
+        out.expired += expired;
+        out.shed += shed;
+        out.phase_intake_s += phase_intake_s;
+        out.phase_admission_s += phase_admission_s;
+        out.phase_chunked_s += phase_chunked_s;
+        out.phase_observe_s += phase_observe_s;
+        out.phase_decode_s += phase_decode_s;
+        // maxes: shared-pool observations and per-lane high-water marks
+        out.peak_rows = out.peak_rows.max(*peak_rows);
+        out.kv_in_use = out.kv_in_use.max(*kv_in_use);
+        out.kv_capacity = out.kv_capacity.max(*kv_capacity);
+        out.paged_block_tokens = out.paged_block_tokens.max(*paged_block_tokens);
+        out.blocks_capacity = out.blocks_capacity.max(*blocks_capacity);
+        out.blocks_free = out.blocks_free.max(*blocks_free);
+        out.tenants_active = out.tenants_active.max(*tenants_active);
+    }
+    out
 }
 
 #[derive(Debug, Clone, Default)]
@@ -1176,6 +1441,63 @@ mod tests {
         }
         assert_eq!(unbounded.len(), 10);
         assert_eq!(unbounded.summary().timings_dropped, 0);
+    }
+
+    #[test]
+    fn gauge_lanes_roll_up_sums_and_maxes() {
+        let hub = MetricsHub::new();
+        // two replica lanes: counters sum, shared-pool observations max
+        hub.note_iteration_at(0, 2, 8);
+        hub.note_iteration_at(1, 6, 8);
+        hub.note_committed_at(0, 2);
+        hub.note_committed_at(1, 6);
+        hub.note_admission_at(0, false);
+        hub.note_admission_at(1, true);
+        hub.note_cancelled_at(1);
+        hub.note_phases_at(0, 0.1, 0.0, 0.0, 0.0, 0.2);
+        hub.note_phases_at(1, 0.3, 0.0, 0.0, 0.0, 0.4);
+        // both lanes observe the SAME shared pool; their own queues differ
+        hub.observe_at(0, 3, 500, 1000, 1);
+        hub.observe_at(1, 2, 700, 1000, 2);
+        let g = hub.gauges();
+        assert_eq!(g.replicas, 2);
+        assert_eq!(g.iterations, 2);
+        assert_eq!(g.occupied_rows, 8);
+        assert_eq!(g.committed_tokens, 8);
+        assert_eq!(g.admissions, 2);
+        assert_eq!(g.slot_reuses, 1);
+        assert_eq!(g.cancelled, 1);
+        assert_eq!(g.queue_depth, 5, "per-replica queues sum");
+        assert_eq!(g.peak_rows, 6, "per-lane peaks max");
+        assert_eq!(g.kv_in_use, 700, "shared pool maxes, never doubles");
+        assert_eq!(g.kv_capacity, 1000);
+        assert_eq!(g.tenants_active, 2);
+        assert!((g.phase_intake_s - 0.4).abs() < 1e-12);
+        assert!((g.phase_decode_s - 0.6).abs() < 1e-12);
+        // per-lane snapshots stay raw (replicas unset, own counters only)
+        let lanes = hub.lane_gauges();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].replicas, 0);
+        assert_eq!(lanes[0].occupied_rows, 2);
+        assert_eq!(lanes[1].occupied_rows, 6);
+    }
+
+    #[test]
+    fn single_lane_rollup_is_identity() {
+        // a single-worker hub reports exactly what lane 0 holds, plus
+        // replicas == 1 — the N=1 path is byte-identical in every gauge
+        let hub = MetricsHub::new();
+        hub.note_iteration(4, 8);
+        hub.note_spec_round(6, 3);
+        hub.observe(1, 256, 1024, 1);
+        let g = hub.gauges();
+        let lane0 = &hub.lane_gauges()[0];
+        assert_eq!(g.replicas, 1);
+        assert_eq!(g.iterations, lane0.iterations);
+        assert_eq!(g.occupied_rows, lane0.occupied_rows);
+        assert_eq!(g.spec_proposed, lane0.spec_proposed);
+        assert_eq!(g.kv_in_use, lane0.kv_in_use);
+        assert_eq!(g.queue_depth, lane0.queue_depth);
     }
 
     #[test]

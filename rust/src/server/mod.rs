@@ -17,6 +17,7 @@
 
 pub mod api;
 pub mod batcher;
+pub mod dispatch;
 pub mod metrics;
 pub mod service;
 pub mod tcp;

@@ -31,7 +31,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::data::tokenizer::ByteTokenizer;
 use crate::error::{Error, Result};
@@ -45,9 +45,11 @@ use crate::nbl::plan::ModelPlan;
 use crate::sampling::{argmax, Sampler};
 use crate::server::api::{GenRequest, GenResponse, StreamToken};
 use crate::server::batcher::{Batcher, Scheduler};
+use crate::server::dispatch::{self, HostLane, HostWork, ReplicaStatus};
 use crate::server::metrics::{MetricsHub, RequestTiming, Stopwatch};
 use crate::server::trace::{SpanKind, TraceRecorder};
 use crate::tensor::Tensor;
+use crate::util::lock_unpoisoned;
 use crate::util::timer::Timer;
 
 /// Worker-loop scheduling protocol.
@@ -126,6 +128,15 @@ pub struct ServerConfig {
     /// (0 = unbounded, for offline analysis runs). Summary percentiles
     /// come from the lifetime streaming histograms regardless.
     pub timing_retention: usize,
+    /// Data-parallel replica count (DESIGN.md §Data parallelism).
+    /// `> 1` spawns that many engine replicas over the SAME Arc-shared
+    /// weights — each with its own iteration loop, slot arenas, paged
+    /// accounting, and gauge/trace lane — behind a prefix-affinity
+    /// dispatcher, all charging one shared KV byte ceiling. 1 (the
+    /// default) runs the single-worker loop unchanged, byte-identical
+    /// to the pre-replication server. Continuous mode only; the legacy
+    /// exact-length worker ignores this.
+    pub replicas: usize,
 }
 
 impl Default for ServerConfig {
@@ -142,6 +153,7 @@ impl Default for ServerConfig {
             kv_block_tokens: 0,
             trace_events: 0,
             timing_retention: crate::server::metrics::DEFAULT_TIMING_RETENTION,
+            replicas: 1,
         }
     }
 }
@@ -300,7 +312,13 @@ impl Server {
     }
 
     /// Spawn the worker loop; returns a handle for async submission.
+    /// With `config.replicas > 1` (Continuous mode) the handle fronts a
+    /// prefix-affinity dispatcher over N replicated loops instead of
+    /// one worker — same submit/cancel/shutdown surface either way.
     pub fn spawn(self: Arc<Self>) -> ServerHandle {
+        if self.config.mode == BatchMode::Continuous && self.config.replicas > 1 {
+            return dispatch::spawn_replicated(self);
+        }
         let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
         let server = self.clone();
         let join = std::thread::spawn(move || match server.config.mode {
@@ -371,7 +389,12 @@ struct SpecState {
 /// the pair can never fall out of lockstep (the PR 4 chunk-lockstep
 /// rule, applied to snapshots).
 struct PrefixReuse {
-    cache: PrefixCache,
+    /// The tree lives behind a mutex because two other threads peek or
+    /// mutate it: the replica's host lane runs deferred publications,
+    /// and the dispatcher's prefix-affinity router peeks coverage when
+    /// routing intake. Every access is a short per-operation lock —
+    /// nothing holds the guard across engine calls or channel waits.
+    cache: Arc<Mutex<PrefixCache>>,
     /// Snapshot positions are multiples of this many tokens.
     snap: usize,
 }
@@ -381,23 +404,24 @@ impl PrefixReuse {
     /// suffix always yields first-token logits. The value is a legacy
     /// snapshot pair or a paged block-run entry, per the publish mode.
     fn probe(&mut self, prompt: &[u32]) -> Option<PrefixValue> {
-        self.cache.lookup(prompt, prompt.len().saturating_sub(1))
+        lock_unpoisoned(&self.cache).lookup(prompt, prompt.len().saturating_sub(1))
     }
 
     /// Stat-free coverage peek (the guard's slip test for queue heads
     /// waiting on the chunked machine — runs every iteration, so it
     /// must not touch LRU order or the probe counters).
     fn peek(&self, prompt: &[u32]) -> usize {
-        self.cache.covered(prompt, prompt.len().saturating_sub(1))
+        lock_unpoisoned(&self.cache).covered(prompt, prompt.len().saturating_sub(1))
     }
 
     /// Resolve a probe hit: `covered > 0` means the snapshot was really
     /// restored into a slot; 0 means the admission fell back cold.
     fn resolve(&mut self, covered: usize) {
+        let mut cache = lock_unpoisoned(&self.cache);
         if covered > 0 {
-            self.cache.note_adopted(covered);
+            cache.note_adopted(covered);
         } else {
-            self.cache.note_fallback();
+            cache.note_fallback();
         }
     }
 }
@@ -440,9 +464,138 @@ struct PendingPrefill {
 /// iterations without restarting the batch. With speculation enabled an
 /// iteration is draft-and-verify and commits up to W tokens per row.
 fn run_continuous(server: &Arc<Server>, rx: &Receiver<Submission>) {
-    let mut il = IterationLoop::new(server, rx);
+    run_replica(server, rx, ReplicaCtx::default());
+}
+
+/// One data-parallel replica's serving loop (DESIGN.md §Data
+/// parallelism): the continuous worker parameterized by its lane id,
+/// shared-cache handle, dispatcher status, and host lane. The default
+/// context (`lane` 0, everything else off) IS the single-worker server
+/// — `run_continuous` is just this with defaults, so N=1 behavior
+/// cannot drift from the replicated path.
+pub(crate) fn run_replica(server: &Arc<Server>, rx: &Receiver<Submission>, ctx: ReplicaCtx) {
+    let mut il = IterationLoop::with_ctx(server, rx, ctx);
     while il.turn() {}
     il.shutdown();
+}
+
+/// Everything that distinguishes replica k from the plain single
+/// worker. Built by [`dispatch::spawn_replicated`]; `Default` is the
+/// single-worker identity.
+#[derive(Default)]
+pub(crate) struct ReplicaCtx {
+    /// Gauge lane + worker-span tid this loop reports into.
+    pub lane: usize,
+    /// Replica-owned prefix cache, shared with the dispatcher for
+    /// affinity peeks (None = build a private one from config, or
+    /// prefix reuse is off).
+    pub prefix: Option<Arc<Mutex<PrefixCache>>>,
+    /// Dispatcher-visible inflight count (departs on terminal answer).
+    pub status: Option<Arc<ReplicaStatus>>,
+    /// Host-overlap lane: deferred sends and publications drain here
+    /// while the device runs the next iteration.
+    pub host: Option<HostLane>,
+}
+
+/// Per-worker output routing: terminal replies and streaming sinks,
+/// plus — on a replica — the host lane that overlaps response sends,
+/// frame emission, and prefix publication for iteration k with the
+/// device compute of iteration k+1, and the dispatcher-visible
+/// inflight count. All terminal paths answer through [`Self::respond`],
+/// so the depart accounting and the frames-before-terminal ordering
+/// (everything for one request rides one FIFO lane) hold everywhere.
+struct Outbox {
+    replies: HashMap<u64, Sender<GenResponse>>,
+    sinks: HashMap<u64, Sender<StreamToken>>,
+    host: Option<HostLane>,
+    status: Option<Arc<ReplicaStatus>>,
+}
+
+impl Outbox {
+    /// Answer (and forget) a request. No-op for unknown ids — exactly
+    /// the old `respond` free-function contract.
+    fn respond(&mut self, resp: GenResponse) {
+        if let Some(tx) = self.replies.remove(&resp.id) {
+            if let Some(st) = self.status.as_ref() {
+                st.depart();
+            }
+            self.dispatch_host(HostWork::Respond(tx, resp));
+        }
+    }
+
+    /// Forward one committed token on the request's streaming sink, if
+    /// it has one. Send failures (receiver gone) are ignored: client
+    /// disconnect is the front end's job to detect, and it answers
+    /// with a cancel submission — the scheduler never blocks on a slow
+    /// reader.
+    fn emit(&mut self, id: u64, index: usize, token: u32) {
+        if let Some(tx) = self.sinks.get(&id) {
+            let tx = tx.clone();
+            self.dispatch_host(HostWork::Emit(tx, StreamToken { id, index, token }));
+        }
+    }
+
+    /// Publish crossed snapshot boundaries of a finished admission
+    /// prefill. The states move INTO the work item (they are dead to
+    /// the worker once adopted into the arena), so on a replica the
+    /// whole multi-layer host copy runs on the host lane while the
+    /// device starts the next iteration.
+    fn publish(
+        &mut self,
+        px: &PrefixReuse,
+        block_tokens: Option<usize>,
+        prompt: &[u32],
+        covered: usize,
+        target: KvState,
+        draft: Option<KvState>,
+    ) {
+        self.dispatch_host(HostWork::Publish {
+            cache: px.cache.clone(),
+            snap: px.snap,
+            block_tokens,
+            prompt: prompt.to_vec(),
+            covered,
+            target,
+            draft,
+        });
+    }
+
+    /// Defer to the host lane when one exists (running inline if its
+    /// thread is gone), else run inline — the single-worker path.
+    fn dispatch_host(&mut self, w: HostWork) {
+        match self.host.as_mut() {
+            Some(lane) => {
+                if let Some(w) = lane.defer(w) {
+                    dispatch::run_host_work(w);
+                }
+            }
+            None => dispatch::run_host_work(w),
+        }
+    }
+
+    /// Drop sinks whose request was already answered (the once-per-turn
+    /// retain that keeps departure paths free of sink bookkeeping).
+    fn prune_sinks(&mut self) {
+        let replies = &self.replies;
+        self.sinks.retain(|id, _| replies.contains_key(id));
+    }
+
+    /// Wait until every deferred item has been processed — the
+    /// sequence-numbered handoff barrier. Called before the admission
+    /// phase probes the prefix cache, so a replica always sees its own
+    /// publications (the dispatcher's cross-replica peeks are
+    /// stale-tolerant and never wait).
+    fn quiesce(&self) {
+        if let Some(lane) = self.host.as_ref() {
+            lane.quiesce();
+        }
+    }
+
+    /// Tear down the host lane: drains the queue, stops, joins. After
+    /// this every send is inline (shutdown's terminal answers).
+    fn finish(&mut self) {
+        self.host.take();
+    }
 }
 
 /// The continuous worker's complete per-iteration state, extracted from
@@ -474,13 +627,13 @@ struct IterationLoop<'a> {
     /// waits, so eviction can never starve its victim (livelock guard).
     preempted: VecDeque<PreemptedSlot>,
     sched: Scheduler,
-    replies: HashMap<u64, Sender<GenResponse>>,
+    /// Terminal replies + streaming sinks + (on a replica) the
+    /// host-overlap lane and dispatcher status.
+    out: Outbox,
     /// Submission-time stopwatches (TTFT includes queue wait).
     watches: HashMap<u64, Stopwatch>,
-    /// Streaming sinks, keyed like `replies`: each committed token is
-    /// forwarded as it lands. Entries whose reply was already answered
-    /// are pruned once per turn in `observe`.
-    sinks: HashMap<u64, Sender<StreamToken>>,
+    /// Gauge lane and worker-span tid (replica index; 0 single-worker).
+    lane: usize,
     arena: Option<SlotArena>,
     slots: Vec<Option<ActiveSlot>>,
     /// Rows that served an earlier request (slot-reuse accounting).
@@ -493,7 +646,12 @@ struct IterationLoop<'a> {
 }
 
 impl<'a> IterationLoop<'a> {
-    fn new(server: &'a Arc<Server>, rx: &'a Receiver<Submission>) -> IterationLoop<'a> {
+    fn with_ctx(
+        server: &'a Arc<Server>,
+        rx: &'a Receiver<Submission>,
+        ctx: ReplicaCtx,
+    ) -> IterationLoop<'a> {
+        let ReplicaCtx { lane, prefix: shared_cache, status, host } = ctx;
         let engine = &server.engine;
         let spec: Option<SpecState> = match &server.config.spec {
             Some(sc) if sc.width >= 2 => {
@@ -570,7 +728,12 @@ impl<'a> IterationLoop<'a> {
                 // would, so the ragged tail's padded bucket can never cross
                 // the context boundary in a way cold admission could not
                 let snap = if chunk > 0 { want.div_ceil(chunk) * chunk } else { want };
-                Some(PrefixReuse { cache: PrefixCache::new(bytes), snap })
+                // a replica adopts the dispatcher-shared handle (its
+                // per-replica budget slice already applied); the single
+                // worker builds a private tree from config
+                let cache = shared_cache
+                    .unwrap_or_else(|| Arc::new(Mutex::new(PrefixCache::new(bytes))));
+                Some(PrefixReuse { cache, snap })
             }
             _ => {
                 eprintln!(
@@ -591,11 +754,11 @@ impl<'a> IterationLoop<'a> {
             pending: None,
             preempted: VecDeque::new(),
             sched: Scheduler::new(),
-            replies: HashMap::new(),
+            out: Outbox { replies: HashMap::new(), sinks: HashMap::new(), host, status },
             // stopwatches start at SUBMISSION so TTFT includes scheduler
             // queue wait (under load the queue is where latency lives)
             watches: HashMap::new(),
-            sinks: HashMap::new(),
+            lane,
             arena: None,
             slots: Vec::new(),
             row_used: Vec::new(),
@@ -613,26 +776,30 @@ impl<'a> IterationLoop<'a> {
         let server = self.server;
         self.turns += 1;
         let iter = self.turns;
+        // worker-lane spans carry the replica lane id in the `req`
+        // field (rendered as the Chrome tid; see trace.rs), and every
+        // gauge lands in this replica's lane of the hub
+        let lane = self.lane as u64;
         let timer = Timer::start();
         let t0 = server.trace.begin();
         if !self.intake_phase() {
             return false;
         }
-        server.trace.span(SpanKind::Intake, 0, iter, t0, 0);
+        server.trace.span(SpanKind::Intake, lane, iter, t0, 0);
         let intake_s = timer.elapsed_s();
         if !self.ensure_arena() {
-            server.metrics.note_phases(intake_s, 0.0, 0.0, 0.0, 0.0);
+            server.metrics.note_phases_at(self.lane, intake_s, 0.0, 0.0, 0.0, 0.0);
             return true;
         }
         let timer = Timer::start();
         let t0 = server.trace.begin();
         self.admission_phase();
-        server.trace.span(SpanKind::Admission, 0, iter, t0, 0);
+        server.trace.span(SpanKind::Admission, lane, iter, t0, 0);
         let admission_s = timer.elapsed_s();
         let timer = Timer::start();
         let t0 = server.trace.begin();
         self.advance_chunked();
-        server.trace.span(SpanKind::AdvanceChunked, 0, iter, t0, 0);
+        server.trace.span(SpanKind::AdvanceChunked, lane, iter, t0, 0);
         let chunked_s = timer.elapsed_s();
         // starvation relief and deadline enforcement are scheduler
         // bookkeeping passes; their (tiny) cost is charged to the
@@ -642,7 +809,7 @@ impl<'a> IterationLoop<'a> {
         self.expire_inflight();
         self.starvation_phase();
         self.observe();
-        server.trace.span(SpanKind::Observe, 0, iter, t0, 0);
+        server.trace.span(SpanKind::Observe, lane, iter, t0, 0);
         let observe_s = timer.elapsed_s();
         let occupied = self.slots.iter().filter(|s| s.is_some()).count() as u64;
         let timer = Timer::start();
@@ -651,10 +818,17 @@ impl<'a> IterationLoop<'a> {
         if occupied > 0 {
             // skip the span on empty turns (chunk-only iterations):
             // zero-row "decode" spans would only churn the ring
-            server.trace.span(SpanKind::Decode, 0, iter, t0, occupied);
+            server.trace.span(SpanKind::Decode, lane, iter, t0, occupied);
         }
         let decode_s = timer.elapsed_s();
-        server.metrics.note_phases(intake_s, admission_s, chunked_s, observe_s, decode_s);
+        server.metrics.note_phases_at(
+            self.lane,
+            intake_s,
+            admission_s,
+            chunked_s,
+            observe_s,
+            decode_s,
+        );
         true
     }
 
@@ -677,9 +851,9 @@ impl<'a> IterationLoop<'a> {
                     if !intake(
                         sub,
                         &mut self.sched,
-                        &mut self.replies,
+                        &mut self.out.replies,
                         &mut self.watches,
-                        &mut self.sinks,
+                        &mut self.out.sinks,
                         &mut cancels,
                         tr,
                     ) {
@@ -696,9 +870,9 @@ impl<'a> IterationLoop<'a> {
                     if !intake(
                         sub,
                         &mut self.sched,
-                        &mut self.replies,
+                        &mut self.out.replies,
                         &mut self.watches,
-                        &mut self.sinks,
+                        &mut self.out.sinks,
                         &mut cancels,
                         tr,
                     ) {
@@ -767,10 +941,7 @@ impl<'a> IterationLoop<'a> {
             Err(e) => {
                 for r in self.sched.drain() {
                     self.watches.remove(&r.id);
-                    respond(
-                        &mut self.replies,
-                        error_response(r.id, Error::msg(e.to_string())),
-                    );
+                    self.out.respond(error_response(r.id, Error::msg(e.to_string())));
                 }
                 false
             }
@@ -785,6 +956,14 @@ impl<'a> IterationLoop<'a> {
     /// charges the pool only its prompt's blocks (growth comes later,
     /// block by block); in contiguous mode the worst-case row pair.
     fn admission_phase(&mut self) {
+        // sequence-numbered handoff barrier: host work deferred during
+        // the previous iteration — in particular prefix publications —
+        // completes before this turn's cache probes, so a replica
+        // always reads its own writes (hit-rate parity with the
+        // single-worker loop; cross-replica peeks are stale-tolerant)
+        if self.prefix.is_some() {
+            self.out.quiesce();
+        }
         self.resume_preempted();
         if !self.preempted.is_empty() {
             // strict resume priority: fresh admissions would consume the
@@ -916,7 +1095,7 @@ impl<'a> IterationLoop<'a> {
             );
             if let Err(e) = arena.adopt(slot, &p.target) {
                 pk.release(slot);
-                respond(&mut self.replies, error_response(p.req.id, e));
+                self.out.respond(error_response(p.req.id, e));
                 continue;
             }
             if let Some(sp) = self.spec.as_mut() {
@@ -927,7 +1106,7 @@ impl<'a> IterationLoop<'a> {
                 if let Err(e) = adopted {
                     arena.release(slot);
                     pk.release(slot);
-                    respond(&mut self.replies, error_response(p.req.id, e));
+                    self.out.respond(error_response(p.req.id, e));
                     continue;
                 }
             }
@@ -953,7 +1132,7 @@ impl<'a> IterationLoop<'a> {
     /// sized in lockstep with `self.slots`.
     fn install_slot(&mut self, slot: usize, active: ActiveSlot) {
         let reused = self.row_used.get(slot).copied().unwrap_or(false);
-        self.server.metrics.note_admission(reused);
+        self.server.metrics.note_admission_at(self.lane, reused);
         if let Some(u) = self.row_used.get_mut(slot) {
             *u = true;
         }
@@ -997,10 +1176,10 @@ impl<'a> IterationLoop<'a> {
         // queued: drop from its tenant lane before it costs any prefill
         if let Some(r) = self.sched.remove(id) {
             self.watches.remove(&r.id);
-            self.sinks.remove(&id);
-            server.metrics.note_cancelled();
+            self.out.sinks.remove(&id);
+            server.metrics.note_cancelled_at(self.lane);
             server.trace.instant(SpanKind::Cancel, id, iter, 0);
-            respond(&mut self.replies, error_response(id, Error::Cancelled));
+            self.out.respond(error_response(id, Error::Cancelled));
             return;
         }
         // mid-chunked-prefill: the machine owns reserved row(s) and, in
@@ -1010,10 +1189,10 @@ impl<'a> IterationLoop<'a> {
                 if let Some(arena) = self.arena.as_mut() {
                     release_reservation(arena, self.spec.as_mut(), self.paged.as_mut(), p.slot);
                 }
-                self.sinks.remove(&id);
-                server.metrics.note_cancelled();
+                self.out.sinks.remove(&id);
+                server.metrics.note_cancelled_at(self.lane);
                 server.trace.instant(SpanKind::Cancel, id, iter, p.done as u64);
-                respond(&mut self.replies, error_response(id, Error::Cancelled));
+                self.out.respond(error_response(id, Error::Cancelled));
             }
             return;
         }
@@ -1021,10 +1200,10 @@ impl<'a> IterationLoop<'a> {
         // the host-side snapshots just drop
         if let Some(i) = self.preempted.iter().position(|p| p.req.id == id) {
             if let Some(p) = self.preempted.remove(i) {
-                self.sinks.remove(&id);
-                server.metrics.note_cancelled();
+                self.out.sinks.remove(&id);
+                server.metrics.note_cancelled_at(self.lane);
                 server.trace.instant(SpanKind::Cancel, id, iter, p.outputs.len() as u64);
-                respond(&mut self.replies, error_response(id, Error::Cancelled));
+                self.out.respond(error_response(id, Error::Cancelled));
             }
             return;
         }
@@ -1034,10 +1213,10 @@ impl<'a> IterationLoop<'a> {
             .iter()
             .position(|s| s.as_ref().is_some_and(|a| a.req.id == id));
         if let Some(a) = slot.and_then(|s| self.release_active(s)) {
-            self.sinks.remove(&id);
-            server.metrics.note_cancelled();
+            self.out.sinks.remove(&id);
+            server.metrics.note_cancelled_at(self.lane);
             server.trace.instant(SpanKind::Cancel, id, iter, a.outputs.len() as u64);
-            respond(&mut self.replies, error_response(id, Error::Cancelled));
+            self.out.respond(error_response(id, Error::Cancelled));
         }
     }
 
@@ -1054,12 +1233,12 @@ impl<'a> IterationLoop<'a> {
         });
         for r in shed {
             self.watches.remove(&r.id);
-            self.sinks.remove(&r.id);
-            self.server.metrics.note_shed();
+            self.out.sinks.remove(&r.id);
+            self.server.metrics.note_shed_at(self.lane);
             self.server
                 .trace
                 .instant(SpanKind::Shed, r.id, self.turns, r.deadline_ms.unwrap_or(0));
-            respond(&mut self.replies, error_response(r.id, Error::DeadlineExceeded));
+            self.out.respond(error_response(r.id, Error::DeadlineExceeded));
         }
     }
 
@@ -1084,12 +1263,12 @@ impl<'a> IterationLoop<'a> {
             .collect();
         for s in hit {
             if let Some(a) = self.release_active(s) {
-                self.sinks.remove(&a.req.id);
-                self.server.metrics.note_expired();
+                self.out.sinks.remove(&a.req.id);
+                self.server.metrics.note_expired_at(self.lane);
                 self.server
                     .trace
                     .instant(SpanKind::Expire, a.req.id, iter, a.outputs.len() as u64);
-                respond(&mut self.replies, error_response(a.req.id, Error::DeadlineExceeded));
+                self.out.respond(error_response(a.req.id, Error::DeadlineExceeded));
             }
         }
         if self.pending.as_ref().is_some_and(|p| over(p.req.deadline_ms, &p.watch)) {
@@ -1097,21 +1276,21 @@ impl<'a> IterationLoop<'a> {
                 if let Some(arena) = self.arena.as_mut() {
                     release_reservation(arena, self.spec.as_mut(), self.paged.as_mut(), p.slot);
                 }
-                self.sinks.remove(&p.req.id);
-                self.server.metrics.note_expired();
+                self.out.sinks.remove(&p.req.id);
+                self.server.metrics.note_expired_at(self.lane);
                 self.server.trace.instant(SpanKind::Expire, p.req.id, iter, p.done as u64);
-                respond(&mut self.replies, error_response(p.req.id, Error::DeadlineExceeded));
+                self.out.respond(error_response(p.req.id, Error::DeadlineExceeded));
             }
         }
         let mut keep = VecDeque::with_capacity(self.preempted.len());
         for p in self.preempted.drain(..) {
             if over(p.req.deadline_ms, &p.watch) {
-                self.sinks.remove(&p.req.id);
-                self.server.metrics.note_expired();
+                self.out.sinks.remove(&p.req.id);
+                self.server.metrics.note_expired_at(self.lane);
                 self.server
                     .trace
                     .instant(SpanKind::Expire, p.req.id, iter, p.outputs.len() as u64);
-                respond(&mut self.replies, error_response(p.req.id, Error::DeadlineExceeded));
+                self.out.respond(error_response(p.req.id, Error::DeadlineExceeded));
             } else {
                 keep.push_back(p);
             }
@@ -1154,15 +1333,12 @@ impl<'a> IterationLoop<'a> {
                 let cap = server.pool.capacity();
                 let Some(req) = self.sched.next_admission(1, &server.pool, 0) else { break };
                 self.watches.remove(&req.id);
-                respond(
-                    &mut self.replies,
-                    error_response(
-                        req.id,
-                        Error::Serving(format!(
-                            "KV pool exhausted: request needs {need} > capacity {cap}"
-                        )),
-                    ),
-                );
+                self.out.respond(error_response(
+                    req.id,
+                    Error::Serving(format!(
+                        "KV pool exhausted: request needs {need} > capacity {cap}"
+                    )),
+                ));
             }
             if self.sched.waiting() > 0 && server.pool.in_use() > 0 {
                 // an external lease holds the budget; yield briefly
@@ -1176,15 +1352,12 @@ impl<'a> IterationLoop<'a> {
                 let cap = server.pool.capacity();
                 for r in self.sched.drain() {
                     self.watches.remove(&r.id);
-                    respond(
-                        &mut self.replies,
-                        error_response(
-                            r.id,
-                            Error::Serving(format!(
-                                "KV pool exhausted: slot needs {per_slot} > capacity {cap}"
-                            )),
-                        ),
-                    );
+                    self.out.respond(error_response(
+                        r.id,
+                        Error::Serving(format!(
+                            "KV pool exhausted: slot needs {per_slot} > capacity {cap}"
+                        )),
+                    ));
                 }
             } else {
                 // an external lease holds the budget; yield briefly
@@ -1200,8 +1373,7 @@ impl<'a> IterationLoop<'a> {
     /// of sink bookkeeping).
     fn observe(&mut self) {
         let server = self.server;
-        let replies = &self.replies;
-        self.sinks.retain(|id, _| replies.contains_key(id));
+        self.out.prune_sinks();
         // distinct tenants with work anywhere in the system: queued,
         // decoding, chunk-prefilling, or parked
         let mut tenants: std::collections::HashSet<&str> = self.sched.tenant_names().collect();
@@ -1214,17 +1386,19 @@ impl<'a> IterationLoop<'a> {
         for p in &self.preempted {
             tenants.insert(p.req.tenant.as_str());
         }
-        server.metrics.observe(
+        server.metrics.observe_at(
+            self.lane,
             self.sched.waiting(),
             server.pool.in_use(),
             server.pool.capacity(),
             tenants.len(),
         );
         if let Some(px) = self.prefix.as_ref() {
-            server.metrics.observe_prefix(&px.cache.stats());
+            let stats = lock_unpoisoned(&px.cache).stats();
+            server.metrics.observe_prefix_at(self.lane, &stats);
         }
         if let Some(pk) = self.paged.as_ref() {
-            server.metrics.observe_paged(&pk.stats());
+            server.metrics.observe_paged_at(self.lane, &pk.stats());
         }
     }
 
@@ -1328,7 +1502,7 @@ impl<'a> IterationLoop<'a> {
             Ok(target) => {
                 if draft_required && draft.is_none() {
                     let err = Error::Serving("draft snapshot failed at preemption".into());
-                    respond(&mut self.replies, error_response(a.req.id, err));
+                    self.out.respond(error_response(a.req.id, err));
                     return;
                 }
                 // park starts only once the snapshot actually succeeded
@@ -1350,7 +1524,7 @@ impl<'a> IterationLoop<'a> {
                 });
             }
             Err(e) => {
-                respond(&mut self.replies, error_response(a.req.id, e));
+                self.out.respond(error_response(a.req.id, e));
             }
         }
     }
@@ -1360,30 +1534,33 @@ impl<'a> IterationLoop<'a> {
     /// client).
     fn shutdown(&mut self) {
         if let Some(p) = self.pending.take() {
-            respond(
-                &mut self.replies,
-                error_response(p.req.id, Error::Serving("server shut down".into())),
-            );
+            self.out
+                .respond(error_response(p.req.id, Error::Serving("server shut down".into())));
         }
-        for p in self.preempted.drain(..) {
-            respond(
-                &mut self.replies,
-                error_response(p.req.id, Error::Serving("server shut down".into())),
-            );
+        while let Some(p) = self.preempted.pop_front() {
+            self.out
+                .respond(error_response(p.req.id, Error::Serving("server shut down".into())));
         }
         for r in self.sched.drain() {
             let err = Error::Serving("server shut down".into());
-            respond(&mut self.replies, error_response(r.id, err));
+            self.out.respond(error_response(r.id, err));
         }
         for slot in self.slots.iter_mut() {
             if let Some(a) = slot.take() {
                 let err = Error::Serving("server shut down".into());
-                respond(&mut self.replies, error_response(a.req.id, err));
+                self.out.respond(error_response(a.req.id, err));
             }
         }
-        for (id, tx) in self.replies.drain() {
-            let _ = tx.send(error_response(id, Error::Serving("server shut down".into())));
+        // leftover reply channels (e.g. requests answered nowhere above)
+        // still go through the outbox, so the depart accounting and
+        // FIFO ordering hold to the very last answer
+        let ids: Vec<u64> = self.out.replies.keys().copied().collect();
+        for id in ids {
+            self.out.respond(error_response(id, Error::Serving("server shut down".into())));
         }
+        // drain + stop + join the host lane: every deferred frame and
+        // terminal answer is delivered before the worker thread exits
+        self.out.finish();
     }
 }
 
@@ -1403,6 +1580,7 @@ fn prefill_with_prefix(
     snap: Option<&KvSnapshot>,
     run: Option<&PagedRun>,
     metrics: &MetricsHub,
+    lane: usize,
 ) -> Result<(KvState, Tensor, usize, usize)> {
     if let Some(r) = run {
         let p = r.tokens;
@@ -1437,7 +1615,7 @@ fn prefill_with_prefix(
                 if let Ok(mut state) = s.restore_state(&engine.plan, engine.config()) {
                     // the restore just expanded one host copy per kept
                     // layer — exactly the copies a paged splice avoids
-                    metrics.note_prefix_expand(engine.plan.kv_layers());
+                    metrics.note_prefix_expand_at(lane, engine.plan.kv_layers());
                     if let Ok(hidden) = engine.prefill_suffix(&mut state, &prompt[p..]) {
                         return Ok((state, hidden, suffix - 1, p));
                     }
@@ -1455,22 +1633,28 @@ fn prefill_with_prefix(
 /// eviction can never separate them). Failures are swallowed — the
 /// cache is an accelerator, never a correctness dependency.
 fn publish_prefix_snapshots(
-    px: &mut PrefixReuse,
+    cache: &Mutex<PrefixCache>,
+    snap: usize,
     prompt: &[u32],
     covered: usize,
     target: &KvState,
     draft: Option<&KvState>,
 ) {
     let top = target.pos.min(prompt.len());
-    let mut p = (covered / px.snap + 1) * px.snap;
+    let mut p = (covered / snap + 1) * snap;
     while p <= top {
         // check-and-touch FIRST: a snapshot is a multi-layer host copy
         // of the whole covered prefix, far too expensive to build just
-        // for insert's dedup to throw away on every repeated prompt
-        if px.cache.touch(&prompt[..p]) {
-            px.cache.note_publish_skip();
-            p += px.snap;
-            continue;
+        // for insert's dedup to throw away on every repeated prompt.
+        // The lock is per-operation: the host copies below run with the
+        // tree unlocked, so probes on other threads never wait on them.
+        {
+            let mut c = lock_unpoisoned(cache);
+            if c.touch(&prompt[..p]) {
+                c.note_publish_skip();
+                p += snap;
+                continue;
+            }
         }
         let Ok(t) = KvSnapshot::from_state(target, p) else { return };
         let mut snaps = vec![t];
@@ -1478,21 +1662,23 @@ fn publish_prefix_snapshots(
             let Ok(ds) = KvSnapshot::from_state(d, p) else { return };
             snaps.push(ds);
         }
-        if !px.cache.insert(&prompt[..p], snaps) {
+        if !lock_unpoisoned(cache).insert(&prompt[..p], snaps) {
             // capacity refusal (dedup was already handled by touch):
             // every later boundary is strictly larger and equally
             // doomed, so stop paying the host copies for them
             return;
         }
-        p += px.snap;
+        p += snap;
     }
 }
 
 /// Publication dispatcher: refcounted block runs when the server runs a
 /// block pool (`block_tokens` set), legacy whole-prefix snapshots
-/// otherwise.
-fn publish_prefix(
-    px: &mut PrefixReuse,
+/// otherwise. Takes the raw cache handle + snap so it can run either
+/// inline on the worker or deferred on a replica's host lane.
+pub(crate) fn publish_prefix(
+    cache: &Mutex<PrefixCache>,
+    snap: usize,
     block_tokens: Option<usize>,
     prompt: &[u32],
     covered: usize,
@@ -1500,8 +1686,8 @@ fn publish_prefix(
     draft: Option<&KvState>,
 ) {
     match block_tokens {
-        Some(bt) => publish_prefix_paged(px, bt, prompt, covered, target, draft),
-        None => publish_prefix_snapshots(px, prompt, covered, target, draft),
+        Some(bt) => publish_prefix_paged(cache, snap, bt, prompt, covered, target, draft),
+        None => publish_prefix_snapshots(cache, snap, prompt, covered, target, draft),
     }
 }
 
@@ -1511,8 +1697,10 @@ fn publish_prefix(
 /// re-copied, and the cache budget is charged only the genuinely new
 /// bytes — so republishing a growing prefix costs one partial tail
 /// block, not the whole prefix again.
+#[allow(clippy::too_many_arguments)]
 fn publish_prefix_paged(
-    px: &mut PrefixReuse,
+    cache: &Mutex<PrefixCache>,
+    snap: usize,
     block_tokens: usize,
     prompt: &[u32],
     covered: usize,
@@ -1520,19 +1708,21 @@ fn publish_prefix_paged(
     draft: Option<&KvState>,
 ) {
     let top = target.pos.min(prompt.len());
-    let mut p = (covered / px.snap + 1) * px.snap;
+    let mut p = (covered / snap + 1) * snap;
     while p <= top {
-        if px.cache.touch(&prompt[..p]) {
-            // the covered block run is already resident: adopters
-            // splice it zero-copy, so rebuilding it is pure waste
-            px.cache.note_publish_skip();
-            p += px.snap;
-            continue;
-        }
-        let reuse = px
-            .cache
-            .peek_value(&prompt[..p], p)
-            .and_then(|v| v.paged().cloned());
+        // per-operation locks, same as the snapshot path: capture runs
+        // with the tree unlocked
+        let reuse = {
+            let mut c = lock_unpoisoned(cache);
+            if c.touch(&prompt[..p]) {
+                // the covered block run is already resident: adopters
+                // splice it zero-copy, so rebuilding it is pure waste
+                c.note_publish_skip();
+                p += snap;
+                continue;
+            }
+            c.peek_value(&prompt[..p], p).and_then(|v| v.paged().cloned())
+        };
         let Ok((trun, tnew)) =
             PagedRun::capture(target, p, block_tokens, reuse.as_ref().map(|e| &e.target))
         else {
@@ -1547,12 +1737,12 @@ fn publish_prefix_paged(
             drun = Some(dr);
         }
         let entry = Arc::new(PagedEntry { tokens: p, target: trun, draft: drun });
-        if !px.cache.insert_paged(&prompt[..p], entry, new_bytes) {
+        if !lock_unpoisoned(cache).insert_paged(&prompt[..p], entry, new_bytes) {
             // capacity refusal: every later boundary is strictly larger
             // and equally doomed
             return;
         }
-        p += px.snap;
+        p += snap;
     }
 }
 
@@ -1584,28 +1774,29 @@ impl<'a> IterationLoop<'a> {
         let admit_t0 = server.trace.begin();
         let Some(arena) = self.arena.as_mut() else {
             let err = Error::Serving("arena missing at admission".into());
-            respond(&mut self.replies, error_response(req.id, err));
+            self.out.respond(error_response(req.id, err));
             return;
         };
         let mut spec = self.spec.as_mut();
         let mut prefix = self.prefix.as_mut();
-        let replies = &mut self.replies;
+        let out = &mut self.out;
         let engine = &server.engine;
         let cfg = engine.config();
         let len = req.prompt.len();
         if req.max_new_tokens == 0 {
             let timing = watch.finish(len, 0);
-            respond(replies, ok_response(req.id, Vec::new(), &timing));
+            out.respond(ok_response(req.id, Vec::new(), &timing));
             return;
         }
         let tsnap = hit.as_ref().and_then(|v| v.snaps()).and_then(|s| s.first());
         let trun = hit.as_ref().and_then(|v| v.paged()).map(|e| &e.target);
         let prefill_timer = Timer::start();
         let (state, hidden, col, covered) =
-            match prefill_with_prefix(engine, &req.prompt, tsnap, trun, &server.metrics) {
+            match prefill_with_prefix(engine, &req.prompt, tsnap, trun, &server.metrics, self.lane)
+            {
                 Ok(t) => t,
                 Err(e) => {
-                    respond(replies, error_response(req.id, e));
+                    out.respond(error_response(req.id, e));
                     return;
                 }
             };
@@ -1623,14 +1814,14 @@ impl<'a> IterationLoop<'a> {
         let logits = match engine.head(&hidden) {
             Ok(l) => l,
             Err(e) => {
-                respond(replies, error_response(req.id, e));
+                out.respond(error_response(req.id, e));
                 return;
             }
         };
         let mut sampler = Sampler::new(req.params.clone());
         let first = sampler.sample(logits.at2(0, col));
         watch.mark_token();
-        emit_token(&self.sinks, req.id, 0, first);
+        out.emit(req.id, 0, first);
         let outputs = vec![first];
         // the prefill token is free and the k-th decode step writes cache
         // slot len+k-1, so max_ctx - len + 1 tokens fit in the context
@@ -1645,7 +1836,9 @@ impl<'a> IterationLoop<'a> {
             // the pair-lockstep invariant, so spec skips it.
             if spec.is_none() {
                 if let Some(px) = prefix {
-                    publish_prefix(px, block_tokens, &req.prompt, covered, &state, None);
+                    // the state is dead to the worker here — it moves
+                    // into the deferred publication
+                    out.publish(px, block_tokens, &req.prompt, covered, state, None);
                 }
             }
             let kind = if covered > 0 { SpanKind::AdmitWarm } else { SpanKind::AdmitCold };
@@ -1655,7 +1848,7 @@ impl<'a> IterationLoop<'a> {
             server.trace.instant(SpanKind::Finish, req.id, iter, outputs.len() as u64);
             let resp = ok_response(req.id, outputs, &timing);
             server.metrics.record(timing);
-            respond(replies, resp);
+            out.respond(resp);
             return;
         }
         // draft prefill BEFORE any adoption, so a draft failure leaves no
@@ -1664,16 +1857,23 @@ impl<'a> IterationLoop<'a> {
         if let Some(sp) = spec.as_deref() {
             let dsnap = hit.as_ref().and_then(|v| v.snaps()).and_then(|s| s.get(1));
             let drun = hit.as_ref().and_then(|v| v.paged()).and_then(|e| e.draft.as_ref());
-            match prefill_with_prefix(&sp.engine, &req.prompt, dsnap, drun, &server.metrics) {
+            match prefill_with_prefix(
+                &sp.engine,
+                &req.prompt,
+                dsnap,
+                drun,
+                &server.metrics,
+                self.lane,
+            ) {
                 Ok((ds, _, _, _)) => draft_state = Some(ds),
                 Err(e) => {
-                    respond(replies, error_response(req.id, e));
+                    out.respond(error_response(req.id, e));
                     return;
                 }
             }
         }
         if let Err(e) = arena.adopt(slot, &state) {
-            respond(replies, error_response(req.id, e));
+            out.respond(error_response(req.id, e));
             return;
         }
         if let Some(sp) = spec {
@@ -1684,7 +1884,7 @@ impl<'a> IterationLoop<'a> {
             };
             if let Err(e) = adopted {
                 arena.release(slot);
-                respond(replies, error_response(req.id, e));
+                out.respond(error_response(req.id, e));
                 return;
             }
         }
@@ -1699,7 +1899,11 @@ impl<'a> IterationLoop<'a> {
             }
         }
         if let Some(px) = prefix {
-            publish_prefix(px, block_tokens, &req.prompt, covered, &state, draft_state.as_ref());
+            // both states were just adopted (copied) into the arenas, so
+            // they move into the deferred publication: on a replica the
+            // multi-layer snapshot copies overlap the next device
+            // iteration instead of stalling this one
+            out.publish(px, block_tokens, &req.prompt, covered, state, draft_state);
         }
         let kind = if covered > 0 { SpanKind::AdmitWarm } else { SpanKind::AdmitCold };
         server.trace.span(kind, req.id, iter, admit_t0, covered as u64);
@@ -1742,21 +1946,21 @@ impl<'a> IterationLoop<'a> {
         let t0_us = server.trace.begin();
         let Some(arena) = self.arena.as_mut() else {
             let err = Error::Serving("arena missing at admission".into());
-            respond(&mut self.replies, error_response(req.id, err));
+            self.out.respond(error_response(req.id, err));
             return None;
         };
         let mut spec = self.spec.as_mut();
         let prefix = self.prefix.as_mut();
-        let replies = &mut self.replies;
+        let out = &mut self.out;
         let engine = &server.engine;
         let cfg = engine.config();
         if req.max_new_tokens == 0 {
             let timing = watch.finish(req.prompt.len(), 0);
-            respond(replies, ok_response(req.id, Vec::new(), &timing));
+            out.respond(ok_response(req.id, Vec::new(), &timing));
             return None;
         }
         if let Err(e) = arena.reserve(slot) {
-            respond(replies, error_response(req.id, e));
+            out.respond(error_response(req.id, e));
             return None;
         }
         if let Some(sp) = spec.as_deref_mut() {
@@ -1767,7 +1971,7 @@ impl<'a> IterationLoop<'a> {
                 .and_then(|da| da.reserve(slot));
             if let Err(e) = reserved {
                 arena.release(slot);
-                respond(replies, error_response(req.id, e));
+                out.respond(error_response(req.id, e));
                 return None;
             }
         }
@@ -1798,9 +2002,9 @@ impl<'a> IterationLoop<'a> {
                         }
                     });
                     if let Some((t, d)) = warm {
-                        server.metrics.note_prefix_expand(engine.plan.kv_layers());
+                        server.metrics.note_prefix_expand_at(self.lane, engine.plan.kv_layers());
                         if let (Some(dp), true) = (draft_plan, d.is_some()) {
-                            server.metrics.note_prefix_expand(dp.kv_layers());
+                            server.metrics.note_prefix_expand_at(self.lane, dp.kv_layers());
                         }
                         done = p;
                         state = t;
@@ -1906,7 +2110,7 @@ impl<'a> IterationLoop<'a> {
         // every chunk that runs while decode rows are live stalls the
         // whole group for its duration — the interference gauge
         // chunking bounds
-        server.metrics.note_prefill_chunk(arena.occupancy() > 0, timer.elapsed_s());
+        server.metrics.note_prefill_chunk_at(self.lane, arena.occupancy() > 0, timer.elapsed_s());
         server.trace.span(SpanKind::PrefillChunk, p.req.id, iter, c0, step as u64);
         // each chunk is pre-first-token prefill compute for THIS request
         p.watch.add_prefill(timer.elapsed_s());
@@ -1916,15 +2120,19 @@ impl<'a> IterationLoop<'a> {
                 let Some(p) = self.pending.take() else { return };
                 release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
                 server.trace.instant(SpanKind::ErrorEvt, p.req.id, iter, 0);
-                respond(&mut self.replies, error_response(p.req.id, e));
+                self.out.respond(error_response(p.req.id, e));
                 return;
             }
         };
         p.done += step;
-        if let Some(px) = self.prefix.as_mut() {
+        if let Some(px) = self.prefix.as_ref() {
+            // inline (not deferred): the machine still owns and keeps
+            // appending to `p.state`, so the boundary snapshot cannot
+            // move off-thread — chunk publications stay on the worker
             let before = p.done - step;
             publish_prefix(
-                px,
+                &px.cache,
+                px.snap,
                 block_tokens,
                 &p.req.prompt,
                 before,
@@ -1944,7 +2152,7 @@ impl<'a> IterationLoop<'a> {
         // the machine completed its prefill — counted here, not at
         // adoption: a max-context prompt whose budget is exactly the
         // prefill token (effective_max 1) still chunked its way in
-        server.metrics.note_chunked_admission();
+        server.metrics.note_chunked_admission_at(self.lane);
         // the whole machine's lifetime, start_chunked → final chunk
         server.trace.span(SpanKind::AdmitChunked, p.req.id, iter, p.t0_us, len as u64);
         let logits = match engine.head(&hidden) {
@@ -1952,7 +2160,7 @@ impl<'a> IterationLoop<'a> {
             Err(e) => {
                 release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
                 server.trace.instant(SpanKind::ErrorEvt, p.req.id, iter, 0);
-                respond(&mut self.replies, error_response(p.req.id, e));
+                self.out.respond(error_response(p.req.id, e));
                 return;
             }
         };
@@ -1960,7 +2168,7 @@ impl<'a> IterationLoop<'a> {
         let mut sampler = Sampler::new(p.req.params.clone());
         let first = sampler.sample(logits.at2(0, step - 1));
         watch.mark_token();
-        emit_token(&self.sinks, p.req.id, 0, first);
+        self.out.emit(p.req.id, 0, first);
         let outputs = vec![first];
         let cfg = engine.config();
         // same budget as whole-prompt admission: the prefill token is
@@ -1978,12 +2186,12 @@ impl<'a> IterationLoop<'a> {
             server.trace.instant(SpanKind::Finish, p.req.id, iter, outputs.len() as u64);
             let resp = ok_response(p.req.id, outputs, &timing);
             server.metrics.record(timing);
-            respond(&mut self.replies, resp);
+            self.out.respond(resp);
             return;
         }
         if let Err(e) = arena.adopt(p.slot, &p.state) {
             release_reservation(arena, spec.as_deref_mut(), self.paged.as_mut(), p.slot);
-            respond(&mut self.replies, error_response(p.req.id, e));
+            self.out.respond(error_response(p.req.id, e));
             return;
         }
         if let Some(sp) = spec.as_mut() {
@@ -1999,7 +2207,7 @@ impl<'a> IterationLoop<'a> {
                 if let Some(pk) = self.paged.as_mut() {
                     pk.release(p.slot);
                 }
-                respond(&mut self.replies, error_response(p.req.id, e));
+                self.out.respond(error_response(p.req.id, e));
                 return;
             }
         }
@@ -2072,13 +2280,12 @@ impl<'a> IterationLoop<'a> {
         let Some(arena) = self.arena.as_mut() else { return };
         let spec = self.spec.as_mut();
         let slots = &mut self.slots;
-        let replies = &mut self.replies;
-        let sinks = &self.sinks;
+        let out = &mut self.out;
         let engine = &server.engine;
         // one small copy per iteration: the loop below mutates the arena
         // (set_pos/release) while walking the occupied set
         let occ: Vec<usize> = arena.occupied().to_vec();
-        server.metrics.note_iteration(occ.len(), arena.bucket_batch);
+        server.metrics.note_iteration_at(self.lane, occ.len(), arena.bucket_batch);
 
         // ---- width selection: speculate only when every occupied row has
         // context room for a full verify (and the draft for its proposals);
@@ -2148,7 +2355,7 @@ impl<'a> IterationLoop<'a> {
                             self.paged.as_mut(),
                             &occ,
                             slots,
-                            replies,
+                            out,
                             &e,
                             &server.trace,
                             iter,
@@ -2169,7 +2376,7 @@ impl<'a> IterationLoop<'a> {
                 }
             }
             let proposed: u64 = proposals.iter().map(|p| p.len() as u64).sum();
-            server.trace.span(SpanKind::SpecDraft, 0, iter, d0, proposed);
+            server.trace.span(SpanKind::SpecDraft, self.lane as u64, iter, d0, proposed);
         }
 
         // ---- verify phase: one width-W target pass over every row
@@ -2204,7 +2411,7 @@ impl<'a> IterationLoop<'a> {
                     self.paged.as_mut(),
                     &occ,
                     slots,
-                    replies,
+                    out,
                     &e,
                     &server.trace,
                     iter,
@@ -2215,7 +2422,7 @@ impl<'a> IterationLoop<'a> {
         if width > 1 {
             // the verify pass proper (plain width-1 iterations are
             // already the decode phase span)
-            server.trace.span(SpanKind::SpecVerify, 0, iter, v0, n as u64);
+            server.trace.span(SpanKind::SpecVerify, self.lane as u64, iter, v0, n as u64);
         }
 
         // ---- acceptance: commit the longest sampled prefix that agrees
@@ -2232,7 +2439,7 @@ impl<'a> IterationLoop<'a> {
                 for j in 0..width {
                     let tok = a.sampler.sample(vl.at2(i, j));
                     a.outputs.push(tok);
-                    emit_token(sinks, a.req.id, a.outputs.len() - 1, tok);
+                    out.emit(a.req.id, a.outputs.len() - 1, tok);
                     a.next = tok;
                     committed += 1;
                     if Some(tok) == server.config.eos || a.outputs.len() >= a.effective_max {
@@ -2293,12 +2500,12 @@ impl<'a> IterationLoop<'a> {
                     .instant(SpanKind::Finish, a.req.id, iter, a.outputs.len() as u64);
                 let resp = ok_response(a.req.id, a.outputs, &timing);
                 server.metrics.record(timing);
-                respond(replies, resp);
+                out.respond(resp);
             }
         }
-        server.metrics.note_committed(total_committed);
+        server.metrics.note_committed_at(self.lane, total_committed);
         if width > 1 {
-            server.metrics.note_spec_round(total_proposed, total_accepted);
+            server.metrics.note_spec_round_at(self.lane, total_proposed, total_accepted);
         }
     }
 }
@@ -2313,7 +2520,7 @@ fn fail_iteration(
     paged: Option<&mut PagedKv>,
     occ: &[usize],
     slots: &mut [Option<ActiveSlot>],
-    replies: &mut HashMap<u64, Sender<GenResponse>>,
+    out: &mut Outbox,
     e: &Error,
     trace: &TraceRecorder,
     iter: u64,
@@ -2322,7 +2529,7 @@ fn fail_iteration(
         if let Some(a) = slots[s].take() {
             arena.release(s);
             trace.instant(SpanKind::ErrorEvt, a.req.id, iter, 0);
-            respond(replies, error_response(a.req.id, Error::msg(e.to_string())));
+            out.respond(error_response(a.req.id, Error::msg(e.to_string())));
         }
     }
     if let Some(da) = draft {
@@ -2464,16 +2671,6 @@ fn respond(replies: &mut HashMap<u64, Sender<GenResponse>>, resp: GenResponse) {
     }
 }
 
-/// Forward one committed token on the request's streaming sink, if it
-/// has one. Send failures (receiver gone) are ignored: client
-/// disconnect is the front end's job to detect, and it answers with a
-/// cancel submission — the scheduler never blocks on a slow reader.
-fn emit_token(sinks: &HashMap<u64, Sender<StreamToken>>, id: u64, index: usize, token: u32) {
-    if let Some(tx) = sinks.get(&id) {
-        let _ = tx.send(StreamToken { id, index, token });
-    }
-}
-
 /// Did a finished request meet its submission-relative deadline? None
 /// when it never carried one: SLO attainment divides over deadlined
 /// requests only, while goodput counts deadline-free requests
@@ -2482,7 +2679,7 @@ fn deadline_met(deadline_ms: Option<u64>, t: &RequestTiming) -> Option<bool> {
     deadline_ms.map(|d| t.total_s * 1e3 <= d as f64)
 }
 
-enum Submission {
+pub(crate) enum Submission {
     // the stopwatch is started by the SUBMITTING thread, so TTFT always
     // includes channel + scheduler queue wait in every mode; the
     // optional sink receives each committed token as the scheduler
@@ -2500,6 +2697,16 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// Assemble a handle around an already-spawned front thread (the
+    /// replicated dispatcher); same submit/cancel/shutdown surface as a
+    /// single-worker handle — callers cannot tell N replicas apart.
+    pub(crate) fn from_parts(
+        tx: Sender<Submission>,
+        join: std::thread::JoinHandle<()>,
+    ) -> ServerHandle {
+        ServerHandle { tx, join: Some(join) }
+    }
+
     /// Submit a request; returns a receiver for the response. The TTFT
     /// stopwatch starts here, on the submitting thread.
     pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
@@ -2567,7 +2774,7 @@ fn ok_response(id: u64, tokens: Vec<u32>, timing: &RequestTiming) -> GenResponse
     }
 }
 
-fn error_response(id: u64, e: Error) -> GenResponse {
+pub(crate) fn error_response(id: u64, e: Error) -> GenResponse {
     GenResponse {
         id,
         tokens: vec![],

@@ -29,8 +29,12 @@ use crate::util::json::Json;
 use crate::util::lock_unpoisoned;
 
 /// Typed event vocabulary. Spans carry a duration; instants are
-/// zero-width markers. Request-lane events render under `tid = request
-/// id`; worker-lane events (the iteration loop's phases) under `tid = 0`.
+/// zero-width markers. Request-lane events render under `pid = 1,
+/// tid = request id`; worker-lane events (the iteration loop's phases)
+/// under `pid = 0, tid = replica lane` — the `req` field of a
+/// worker-lane record carries the replica's lane id, so an N-replica
+/// server exports N distinct worker lanes that never collide with
+/// request ids (DESIGN.md §Data parallelism).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SpanKind {
     // request lane: spans
@@ -112,7 +116,8 @@ impl SpanKind {
     }
 
     /// Worker-lane events describe the iteration loop itself and render
-    /// on tid 0; everything else renders on the request's own lane.
+    /// under pid 0 with `tid = replica lane` (carried in `req`);
+    /// everything else renders on the request's own lane under pid 1.
     fn worker_lane(self) -> bool {
         matches!(
             self,
@@ -132,7 +137,8 @@ impl SpanKind {
 #[derive(Clone, Copy, Debug)]
 pub struct SpanRecord {
     pub kind: SpanKind,
-    /// request id (0 for worker-lane events not tied to one request)
+    /// request id — except for worker-lane kinds, where this field
+    /// carries the replica lane id instead (0 for a single worker)
     pub req: u64,
     /// iteration-loop turn counter at record time
     pub iter: u64,
@@ -302,8 +308,12 @@ impl TraceRecorder {
         // B still precedes their E.
         let mut events: Vec<(u64, u8, u64, u64, Json)> = Vec::with_capacity(records.len() * 2);
         for (idx, r) in records.iter().enumerate() {
-            let tid = if r.kind.worker_lane() { 0 } else { r.req };
-            let cat = if r.kind.worker_lane() { "worker" } else { "request" };
+            // worker-lane records carry the replica lane id in `req`
+            // and render under their own pid so replica lane ids can
+            // never collide with request ids on the request pid
+            let worker = r.kind.worker_lane();
+            let (pid, tid) = if worker { (0u64, r.req) } else { (1u64, r.req) };
+            let cat = if worker { "worker" } else { "request" };
             let args = Json::obj(vec![
                 ("req", Json::Num(r.req as f64)),
                 ("iter", Json::Num(r.iter as f64)),
@@ -315,7 +325,7 @@ impl TraceRecorder {
                     ("cat", Json::Str(cat.into())),
                     ("ph", Json::Str(ph.into())),
                     ("ts", Json::Num(ts as f64)),
-                    ("pid", Json::Num(1.0)),
+                    ("pid", Json::Num(pid as f64)),
                     ("tid", Json::Num(tid as f64)),
                     ("args", args.clone()),
                 ])
@@ -535,6 +545,53 @@ mod tests {
         t.instant(SpanKind::Shed, 11, 2, 0);
         let j = t.export_chrome();
         assert_eq!(names(&j, "i"), vec!["cancel", "expire", "shed"]);
+    }
+
+    #[test]
+    fn worker_lanes_export_per_replica_tids() {
+        // two replicas interleave iteration phases; each replica's
+        // worker spans must land on its own (pid=0, tid=lane) lane and
+        // stay LIFO-balanced there, while request events keep pid=1
+        let t = TraceRecorder::new(32);
+        for lane in 0..2u64 {
+            let t0 = t.begin();
+            t.span(SpanKind::Intake, lane, 1, t0, 0);
+            let t1 = t.begin();
+            t.span(SpanKind::Decode, lane, 1, t1, 4);
+        }
+        t.instant(SpanKind::Submit, 41, 0, 0);
+        let j = t.export_chrome();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let mut worker_tids = std::collections::BTreeSet::new();
+        for ev in &evs {
+            let pid = ev.get("pid").unwrap().as_f64().unwrap() as u64;
+            let tid = ev.get("tid").unwrap().as_f64().unwrap() as u64;
+            let cat = ev.get("cat").unwrap().as_str().unwrap();
+            if cat == "worker" {
+                assert_eq!(pid, 0, "worker lanes render under pid 0");
+                worker_tids.insert(tid);
+            } else {
+                assert_eq!(pid, 1, "request lanes render under pid 1");
+                assert_eq!(tid, 41);
+            }
+        }
+        assert_eq!(worker_tids.into_iter().collect::<Vec<_>>(), vec![0, 1]);
+        // per-(pid,tid) LIFO balance, as ci/check_trace.py enforces
+        let mut stacks: std::collections::HashMap<(u64, u64), Vec<String>> =
+            std::collections::HashMap::new();
+        for ev in &evs {
+            let key = (
+                ev.get("pid").unwrap().as_f64().unwrap() as u64,
+                ev.get("tid").unwrap().as_f64().unwrap() as u64,
+            );
+            let name = ev.get("name").unwrap().as_str().unwrap().to_string();
+            match ev.get("ph").unwrap().as_str().unwrap() {
+                "B" => stacks.entry(key).or_default().push(name),
+                "E" => assert_eq!(stacks.entry(key).or_default().pop(), Some(name)),
+                _ => {}
+            }
+        }
+        assert!(stacks.values().all(|s| s.is_empty()));
     }
 
     #[test]

@@ -1961,3 +1961,122 @@ fn mid_decode_deadline_expiry_frees_the_slot_and_counts_the_miss() {
     handle.shutdown();
     assert_eq!(pool.in_use(), 0, "an expiry teardown leaked KV bytes");
 }
+
+// ---------------------------------------------------------------------------
+// data-parallel replication (ISSUE 10)
+
+#[test]
+fn replicated_continuous_matches_single_replica_under_churn() {
+    // cross-replica token parity: the same churn workload through 4
+    // engine replicas behind the dispatcher must produce the exact
+    // greedy outputs of the single-worker loop, plain AND
+    // self-speculative — replication decides WHERE a request decodes,
+    // never WHAT it decodes.
+    let engine = Arc::new(engine("main"));
+    let single = Arc::new(Server::new(engine.clone(), ServerConfig::default()));
+    let want = churn_workload(&single);
+    for r in &want {
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+
+    let mut draft_plan = nbl::nbl::plan::ModelPlan::baseline(engine.config().n_layers);
+    draft_plan.drop_attn(1);
+    let configs = [
+        ("plain", ServerConfig { replicas: 4, ..ServerConfig::default() }),
+        (
+            "spec",
+            ServerConfig {
+                replicas: 4,
+                spec: Some(SpecConfig { draft_plan, width: 4 }),
+                ..ServerConfig::default()
+            },
+        ),
+    ];
+    for (label, cfg) in configs {
+        let server = Arc::new(Server::new(engine.clone(), cfg));
+        let metrics = server.metrics.clone();
+        let pool = server.pool.clone();
+        let got = churn_workload(&server);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(g.error.is_none(), "[{label}] {:?}", g.error);
+            assert_eq!(
+                g.tokens, w.tokens,
+                "[{label}] replicated serving diverged from the single \
+                 worker on request {}",
+                w.id
+            );
+        }
+        let g = metrics.gauges();
+        assert_eq!(g.replicas, 4, "[{label}] gauge rollup must report 4 lanes");
+        let busy = metrics
+            .lane_gauges()
+            .iter()
+            .filter(|l| l.admissions > 0)
+            .count();
+        assert!(
+            busy >= 2,
+            "[{label}] 12 concurrent requests must spread over more than \
+             one replica, got {busy} busy lane(s)"
+        );
+        assert_eq!(pool.in_use(), 0, "[{label}] replicated shutdown leaked KV bytes");
+    }
+}
+
+#[test]
+fn replicated_streaming_keeps_frame_order_and_cancel_works() {
+    // the host lane defers frame emission off the decode thread; the
+    // per-request FIFO must still deliver dense in-order indices with
+    // every frame before the terminal, and a cancel must tear down
+    // mid-decode exactly as on the single worker.
+    let engine = Arc::new(engine("main"));
+    let solo = Server::new(engine.clone(), ServerConfig::default())
+        .generate_one(&req(5, "the quiet river ", 16));
+    assert!(solo.error.is_none());
+
+    let cfg = ServerConfig { replicas: 2, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let handle = server.clone().spawn();
+    let (sink, srx) = mpsc::channel();
+    let rx = handle.submit_streaming(stream_req(5, "the quiet river ", 16), sink);
+    let r = rx.recv().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.tokens, solo.tokens, "replicated stream diverged from solo");
+    let streamed = drain_sink(5, &srx);
+    assert_eq!(streamed, r.tokens, "streamed frames must mirror the terminal reply");
+
+    let (sink2, srx2) = mpsc::channel();
+    let rx2 = handle.submit_streaming(stream_req(6, "the small robot ", 400), sink2);
+    let _ = srx2.recv().expect("request 6 must stream its first token");
+    handle.cancel(6);
+    let r2 = rx2.recv().unwrap();
+    assert!(
+        r2.error.as_deref().is_some_and(|e| e.contains("cancelled")),
+        "cancel through the dispatcher must use the typed error: {:?}",
+        r2.error
+    );
+    assert!(drain_sink(6, &srx2).len() < 400, "cancel must cut the decode short");
+    handle.shutdown();
+}
+
+#[test]
+fn replicated_shutdown_answers_every_pending_request() {
+    // shutdown broadcast: every replica drains its queue/slots through
+    // its outbox, so no submitted request is left hanging even when the
+    // server dies mid-decode.
+    let engine = Arc::new(engine("main"));
+    let cfg = ServerConfig { replicas: 3, ..ServerConfig::default() };
+    let server = Arc::new(Server::new(engine, cfg));
+    let handle = server.clone().spawn();
+    let rxs: Vec<_> = (0..9u64)
+        .map(|i| handle.submit(req(i, "the small robot walked ", 200)))
+        .collect();
+    handle.shutdown();
+    for rx in rxs {
+        let r = rx.recv().expect("every pending request must be answered");
+        assert!(
+            r.error.is_none() || r.error.as_deref().is_some_and(|e| e.contains("shut down")),
+            "pending requests either finish or get the shutdown error: {:?}",
+            r.error
+        );
+    }
+}
